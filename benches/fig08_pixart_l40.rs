@@ -1,0 +1,16 @@
+//! Fig 8: scalability of all parallel approaches, Pixart on 2x8xL40
+//! (PCIe + 100Gb Ethernet), 20-step DPM, 1024/2048/4096px.
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::ModelSpec;
+use xdit::perf::figures::{scalability_figure, SINGLE_METHODS};
+use xdit::util::bench::bench;
+
+fn main() {
+    let m = ModelSpec::by_name("pixart").unwrap();
+    let c = l40_cluster(2);
+    println!("{}", scalability_figure("Fig 8", &m, &c, &[1024, 2048, 4096], 20, &SINGLE_METHODS));
+    let s = bench("fig08 series generation", || {
+        std::hint::black_box(scalability_figure("Fig 8", &m, &c, &[1024, 2048, 4096], 20, &SINGLE_METHODS));
+    });
+    eprintln!("{}", s.report());
+}

@@ -1,0 +1,15 @@
+//! Fig 9: latency of hybrid parallel configurations, Pixart on 16xL40.
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::ModelSpec;
+use xdit::perf::figures::hybrid_sweep_figure;
+use xdit::util::bench::bench;
+
+fn main() {
+    let m = ModelSpec::by_name("pixart").unwrap();
+    let c = l40_cluster(2);
+    println!("{}", hybrid_sweep_figure("Fig 9", &m, &c, 16, &[1024, 2048, 4096], 20));
+    let s = bench("fig09 hybrid sweep", || {
+        std::hint::black_box(hybrid_sweep_figure("Fig 9", &m, &c, 16, &[1024], 20));
+    });
+    eprintln!("{}", s.report());
+}

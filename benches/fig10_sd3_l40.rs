@@ -1,0 +1,13 @@
+//! Fig 10: SD3 scalability on 2x8xL40 (TP/DistriFusion excluded per the
+//! paper: time/memory-infeasible), 20-step FlowMatch.
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::ModelSpec;
+use xdit::perf::figures::scalability_figure;
+use xdit::perf::latency::Method;
+
+fn main() {
+    let m = ModelSpec::by_name("sd3").unwrap();
+    let c = l40_cluster(2);
+    let methods = [Method::SpUlysses, Method::SpRing, Method::PipeFusion];
+    println!("{}", scalability_figure("Fig 10", &m, &c, &[1024, 2048], 20, &methods));
+}

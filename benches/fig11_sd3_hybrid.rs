@@ -1,0 +1,9 @@
+//! Fig 11: SD3 hybrid configurations on 16xL40.
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::ModelSpec;
+use xdit::perf::figures::hybrid_sweep_figure;
+
+fn main() {
+    let m = ModelSpec::by_name("sd3").unwrap();
+    println!("{}", hybrid_sweep_figure("Fig 11", &m, &l40_cluster(2), 16, &[1024, 2048], 20));
+}

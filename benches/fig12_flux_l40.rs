@@ -1,0 +1,14 @@
+//! Fig 12: Flux.1-dev scalability on 2x8xL40 (no CFG: cfg parallel n/a;
+//! PipeFusion bridges the nodes), 28-step FlowMatch.
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::ModelSpec;
+use xdit::perf::figures::scalability_figure;
+use xdit::perf::latency::Method;
+
+fn main() {
+    let m = ModelSpec::by_name("flux").unwrap();
+    assert!(!m.uses_cfg);
+    let c = l40_cluster(2);
+    let methods = [Method::SpUlysses, Method::SpRing, Method::PipeFusion];
+    println!("{}", scalability_figure("Fig 12", &m, &c, &[1024, 2048, 4096], 28, &methods));
+}

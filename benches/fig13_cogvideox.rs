@@ -1,0 +1,8 @@
+//! Fig 13: CogVideoX-5B best hybrid per degree on 2x8xL40 (SP+CFG only;
+//! heads=30 and height=480 divisibility limits), 50-step DDIM.
+use xdit::config::hardware::l40_cluster;
+use xdit::perf::figures::cogvideox_figure;
+
+fn main() {
+    println!("{}", cogvideox_figure(&l40_cluster(2), 50));
+}

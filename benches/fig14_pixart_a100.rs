@@ -1,0 +1,9 @@
+//! Fig 14: Pixart scalability on 8xA100 NVLink, 20-step DPM.
+use xdit::config::hardware::a100_node;
+use xdit::config::model::ModelSpec;
+use xdit::perf::figures::{scalability_figure, SINGLE_METHODS};
+
+fn main() {
+    let m = ModelSpec::by_name("pixart").unwrap();
+    println!("{}", scalability_figure("Fig 14", &m, &a100_node(), &[1024, 2048, 4096], 20, &SINGLE_METHODS));
+}

@@ -1,0 +1,11 @@
+//! Fig 16: Flux.1-dev scalability on 8xA100, 28-step FlowMatch.
+use xdit::config::hardware::a100_node;
+use xdit::config::model::ModelSpec;
+use xdit::perf::figures::scalability_figure;
+use xdit::perf::latency::Method;
+
+fn main() {
+    let m = ModelSpec::by_name("flux").unwrap();
+    let methods = [Method::SpUlysses, Method::SpRing, Method::PipeFusion];
+    println!("{}", scalability_figure("Fig 16", &m, &a100_node(), &[1024, 2048], 28, &methods));
+}

@@ -1,0 +1,19 @@
+//! Fig 17: HunyuanDiT (skip-connected blocks) on 8xA100, 50-step DPM —
+//! shows the PipeFusion penalty from non-adjacent skip P2P at 2048px.
+use xdit::config::hardware::a100_node;
+use xdit::config::model::ModelSpec;
+use xdit::perf::figures::scalability_figure;
+use xdit::perf::latency::{predict_latency, Method};
+
+fn main() {
+    let m = ModelSpec::by_name("hunyuan").unwrap();
+    let c = a100_node();
+    let methods = [Method::SpUlysses, Method::SpRing, Method::PipeFusion];
+    println!("{}", scalability_figure("Fig 17", &m, &c, &[1024, 2048], 50, &methods));
+    // the skip penalty, explicitly:
+    for px in [1024usize, 2048] {
+        let pf = predict_latency(&m, px, &c, Method::PipeFusion, &Method::PipeFusion.single_config(8), 50);
+        let ul = predict_latency(&m, px, &c, Method::SpUlysses, &Method::SpUlysses.single_config(8), 50);
+        println!("{}px: pipefusion/ulysses latency ratio = {:.2} (skip-connection P2P penalty)", px, pf.total / ul.total);
+    }
+}

@@ -1,0 +1,6 @@
+//! Fig 18: max GPU memory of parallel approaches (Pixart/SD3/Flux).
+use xdit::perf::figures::memory_figure;
+
+fn main() {
+    println!("{}", memory_figure(&[1024, 2048]));
+}

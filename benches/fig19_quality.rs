@@ -1,0 +1,51 @@
+//! Fig 19: generation quality under parallelism. The paper reports FID on
+//! 30k COCO images; with no COCO/Inception offline we report the direct
+//! divergence (MSE / PSNR of the final latent) of every parallel method
+//! against the serial baseline over a fixed prompt set — exact methods
+//! must be ~bit-exact, staleness methods bounded (see DESIGN.md §2).
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::BlockVariant;
+use xdit::config::parallel::ParallelConfig;
+use xdit::parallel::{driver, GenParams, Session};
+use xdit::runtime::Runtime;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::load(dir).unwrap();
+    let prompts = ["a kid wearing headphones and using a laptop", "a red fox in snow"];
+    println!("# Fig 19 analogue: divergence vs serial baseline (tiny-adaln, 6-step DPM)");
+    println!("{:<26} {:>12} {:>10}", "config", "latent MSE", "PSNR dB");
+    for (label, method, pc) in [
+        ("baseline(serial)", driver::Method::Serial, ParallelConfig::serial()),
+        ("ulysses=2", driver::Method::Sp, ParallelConfig::new(1, 1, 2, 1)),
+        ("ring=2", driver::Method::Sp, ParallelConfig::new(1, 1, 1, 2)),
+        ("usp(2x2)", driver::Method::Sp, ParallelConfig::new(1, 1, 2, 2)),
+        ("pipefusion=2,M=4", driver::Method::PipeFusion, ParallelConfig::new(1, 2, 1, 1).with_patches(4)),
+        ("pp=2,sp=2 (hybrid)", driver::Method::Hybrid, ParallelConfig::new(1, 2, 2, 1).with_patches(2)),
+        ("pp=2,sp=2 standard-sp", driver::Method::HybridStandardSp, ParallelConfig::new(1, 2, 2, 1).with_patches(2)),
+        ("distrifusion n=4", driver::Method::DistriFusion, ParallelConfig::new(1, 1, 1, 4).with_patches(4)),
+    ] {
+        let mut mse_acc = 0.0;
+        let mut psnr_acc = 0.0;
+        for (i, prompt) in prompts.iter().enumerate() {
+            let p = GenParams {
+                prompt: prompt.to_string(),
+                steps: 6,
+                seed: 100 + i as u64,
+                guidance: 3.0,
+                scheduler: "dpm".into(),
+            };
+            let reference = driver::generate_reference(&rt, BlockVariant::AdaLn, &p).unwrap();
+            let mut sess = Session::new(&rt, BlockVariant::AdaLn, l40_cluster(1), pc).unwrap();
+            let r = driver::generate(&mut sess, method, &p).unwrap();
+            mse_acc += r.latent.mse(&reference).unwrap();
+            psnr_acc += r.latent.psnr(&reference).unwrap();
+        }
+        let n = prompts.len() as f64;
+        println!("{:<26} {:>12.3e} {:>10.1}", label, mse_acc / n, psnr_acc / n);
+    }
+}

@@ -1,0 +1,96 @@
+//! L3 hot-path micro-benchmarks (§Perf): PJRT call overhead + marshalling,
+//! KV scatter, tensor split/concat, collectives data path, per-step
+//! strategy wall time. Criterion is unavailable offline; `util::bench`
+//! provides warmup + median/p10/p90.
+
+use xdit::comm::{Clocks, Communicator};
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::BlockVariant;
+use xdit::config::parallel::ParallelConfig;
+use xdit::model::KvBuffer;
+use xdit::parallel::{driver, GenParams, Session};
+use xdit::runtime::{ArgValue, Runtime};
+use xdit::tensor::Tensor;
+use xdit::util::bench::bench;
+use xdit::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::load(dir).unwrap();
+    let mut rng = Rng::new(0);
+
+    // --- tensor ops ---------------------------------------------------------
+    let big = Tensor::randn(&[8, 256, 192], &mut rng);
+    println!("{}", bench("tensor: split_rows(4) of [8,256,192]", || {
+        std::hint::black_box(big.split_rows(4).unwrap());
+    }).report());
+
+    let mut kv = KvBuffer::zeros(8, 288, 192);
+    let rows = Tensor::randn(&[8, 64, 192], &mut rng);
+    let vrows = rows.clone();
+    println!("{}", bench("kv: scatter_stage 8x64 rows", || {
+        kv.scatter_stage(128, &rows, &vrows).unwrap();
+    }).report());
+
+    // --- collectives data path ----------------------------------------------
+    let cluster = l40_cluster(1);
+    let parts: Vec<Tensor> = (0..4).map(|i| Tensor::randn(&[64, 192], &mut Rng::new(i))).collect();
+    println!("{}", bench("comm: all_gather 4x[64,192]", || {
+        let mut clocks = Clocks::new(8);
+        let mut comm = Communicator::new(&cluster, &mut clocks);
+        std::hint::black_box(comm.all_gather(&[0, 1, 2, 3], &parts).unwrap());
+    }).report());
+
+    // --- PJRT call overhead ---------------------------------------------------
+    let t = Tensor::scalar(500.0);
+    rt.call("adaln_t_embed", 0, &[ArgValue::F32(&t)]).unwrap(); // warm compile
+    println!("{}", bench("pjrt: t_embed call (tiny)", || {
+        std::hint::black_box(rt.call("adaln_t_embed", 0, &[ArgValue::F32(&t)]).unwrap());
+    }).report());
+
+    let x = Tensor::randn(&[32, 192], &mut rng);
+    let cond = Tensor::randn(&[192], &mut rng);
+    let kb = Tensor::zeros(&[2, 256, 192]);
+    let args = vec![
+        ArgValue::F32(&x),
+        ArgValue::F32(&cond),
+        ArgValue::F32(&kb),
+        ArgValue::F32(&kb),
+        ArgValue::I32(0),
+    ];
+    rt.call("adaln_stage_L2_p8", 0, &args).unwrap();
+    println!("{}", bench("pjrt: stage L2 p8 call", || {
+        std::hint::black_box(rt.call("adaln_stage_L2_p8", 0, &args).unwrap());
+    }).report());
+    {
+        let st = rt.stats.borrow();
+        println!(
+            "pjrt stats: {} calls, exec {:.1} ms, marshal {:.1} ms ({:.1}% marshalling)",
+            st.calls,
+            st.exec_ns as f64 / 1e6,
+            st.marshal_ns as f64 / 1e6,
+            100.0 * st.marshal_ns as f64 / (st.exec_ns + st.marshal_ns).max(1) as f64
+        );
+    }
+
+    // --- end-to-end steps ------------------------------------------------------
+    for (label, method, pc) in [
+        ("e2e: serial 2-step", driver::Method::Serial, ParallelConfig::serial()),
+        ("e2e: sp(2) 2-step", driver::Method::Sp, ParallelConfig::new(1, 1, 2, 1)),
+        (
+            "e2e: pipefusion(2,M=4) 2-step",
+            driver::Method::PipeFusion,
+            ParallelConfig::new(1, 2, 1, 1).with_patches(4),
+        ),
+    ] {
+        let p = GenParams { steps: 2, guidance: 0.0, ..Default::default() };
+        println!("{}", bench(label, || {
+            let mut sess = Session::new(&rt, BlockVariant::AdaLn, cluster.clone(), pc).unwrap();
+            std::hint::black_box(driver::generate(&mut sess, method, &p).unwrap());
+        }).report());
+    }
+}

@@ -1,0 +1,6 @@
+//! Table 2: disk usage of the five models' components.
+use xdit::perf::figures::table2;
+
+fn main() {
+    println!("{}", table2());
+}

@@ -1,0 +1,33 @@
+//! Table 3: parallel VAE elapsed time / OOM boundaries, plus a live
+//! exactness + timing run of the tiny patch-parallel VAE.
+use xdit::comm::Clocks;
+use xdit::config::hardware::l40_cluster;
+use xdit::perf::figures::table3;
+use xdit::runtime::Runtime;
+use xdit::tensor::Tensor;
+use xdit::util::bench::bench;
+use xdit::util::rng::Rng;
+use xdit::vae::ParallelVae;
+
+fn main() {
+    println!("{}", table3());
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::load(dir).unwrap();
+    let vae = ParallelVae::new(&rt).unwrap();
+    let z = Tensor::randn(&[16, 16, 4], &mut Rng::new(0));
+    let cluster = l40_cluster(1);
+    let full = vae.decode_full(&z).unwrap();
+    for n in [1usize, 2, 4, 8] {
+        let mut clocks = Clocks::new(8);
+        let out = vae.decode_parallel(&z, n, &cluster, &mut clocks).unwrap();
+        assert!(out.allclose(&full, 1e-4));
+        let s = bench(&format!("tiny vae decode n={n}"), || {
+            let mut c = Clocks::new(8);
+            std::hint::black_box(vae.decode_parallel(&z, n, &cluster, &mut c).unwrap());
+        });
+        eprintln!("{}  (simulated {:.2} ms)", s.report(), clocks.makespan() * 1e3);
+    }
+}

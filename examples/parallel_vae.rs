@@ -1,0 +1,52 @@
+//! Parallel VAE demo (paper §4.3 / Table 3): live patch-parallel decode of
+//! the tiny VAE (exact vs. full decode) plus the analytic OOM-boundary grid
+//! at SD-VAE scale.
+
+use xdit::comm::Clocks;
+use xdit::config::hardware::l40_cluster;
+use xdit::runtime::Runtime;
+use xdit::tensor::Tensor;
+use xdit::util::rng::Rng;
+use xdit::vae::{vae_decode_time, vae_fits, ParallelVae};
+
+fn main() -> xdit::Result<()> {
+    let rt = Runtime::load(std::env::args().nth(1).unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))))?;
+    let vae = ParallelVae::new(&rt)?;
+    let cluster = l40_cluster(1);
+    let z = Tensor::randn(&[16, 16, 4], &mut Rng::new(5));
+    let full = vae.decode_full(&z)?;
+
+    println!("live tiny VAE (latent 16x16x4 -> 128x128x3):");
+    for n in [1usize, 2, 4, 8] {
+        let mut clocks = Clocks::new(8);
+        let t0 = std::time::Instant::now();
+        let out = vae.decode_parallel(&z, n, &cluster, &mut clocks)?;
+        let err = out.max_abs_diff(&full)?;
+        println!(
+            "  {n} device(s): max|Δ| vs full = {err:.2e}, wall {:?}, simulated {:.3} ms",
+            t0.elapsed(),
+            clocks.makespan() * 1e3
+        );
+        assert!(err < 1e-4, "patch decode must be exact");
+    }
+
+    println!("\nSD-VAE-scale resolution ceiling (48GB L40, chunked convs):");
+    println!("{:<8} {:>10} {:>14}", "devices", "max px", "time @max (s)");
+    for n in [1usize, 2, 4, 8] {
+        let mut max_px = 0;
+        for px in (1024..=9216).step_by(512) {
+            if vae_fits(px, 4, n, 4, 48e9) {
+                max_px = px;
+            }
+        }
+        println!(
+            "{:<8} {:>10} {:>14.2}",
+            n,
+            max_px,
+            vae_decode_time(max_px, n, 90.0, 24e9, 8e-6)
+        );
+    }
+    println!("\nParallel VAE lifts the OOM ceiling (~12x area at 8 devices) but does not");
+    println!("accelerate small decodes — comm-bound convs, exactly the paper's Table 3.");
+    Ok(())
+}

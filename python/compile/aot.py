@@ -1,0 +1,565 @@
+"""AOT pipeline: lower every entrypoint of the tiny DiT family to HLO text,
+write artifacts/manifest.json + artifacts/weights.bin.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Python runs ONLY here (build time). The Rust binary is self-contained after
+`make artifacts`.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, params
+
+C = configs.TINY
+D, S_IMG, S_TXT, CL = C["d"], C["s_img"], C["s_txt"], C["c_latent"]
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(dims, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(dims), dtype)
+
+
+class Entry:
+    """One AOT entrypoint: fn(*data, *weights) plus its manifest record."""
+
+    def __init__(self, name, kind, fn, data_specs, weight_refs, meta=None):
+        self.name = name
+        self.kind = kind
+        self.fn = fn
+        self.data_specs = data_specs  # list of (name, dims, dtype-str)
+        self.weight_refs = weight_refs  # list of manifest weight refs
+        self.meta = meta or {}
+
+    def arg_specs(self, shapes):
+        out = []
+        for _, dims, dt in self.data_specs:
+            out.append(spec(dims, I32 if dt == "i32" else F32))
+        for ref in self.weight_refs:
+            out.append(spec(shapes[_ref_shape_key(ref)]))
+        return out
+
+
+def _ref_shape_key(ref):
+    """Weight refs resolve to a concrete tensor name for shape lookup; layer
+    refs use layer 0 unless the param only exists in decoder layers."""
+    if "layer_rel" in ref:
+        v = ref["variant"]
+        base = C["layers"] // 2 if ref.get("dec") else 0
+        return f"{v}.L{base + ref['layer_rel']}.{ref['param']}"
+    if "global" in ref:
+        return f"{ref['variant']}.{ref['global']}"
+    if "shared" in ref:
+        return f"shared.{ref['shared']}"
+    return f"vae.{ref['vae']}"
+
+
+def _layer_refs(variant, ls, names, dec=False):
+    refs = []
+    for rel in range(ls):
+        for n in names:
+            refs.append({"variant": variant, "layer_rel": rel, "param": n, "dec": dec})
+    return refs
+
+
+def _unflatten_layers(args, ls, names):
+    per = len(names)
+    out = []
+    for i in range(ls):
+        out.append(dict(zip(names, args[i * per : (i + 1) * per])))
+    return out
+
+
+def build_entries():
+    """The full entrypoint grid (see DESIGN.md §3 L2)."""
+    entries = []
+    w = params.all_weights()  # for shapes only
+    shapes = {k: v.shape for k, v in w.items()}
+
+    names_adaln = params.layer_param_names("adaln", 0)
+    names_cross = params.layer_param_names("cross", 0)
+    names_mmdit = params.layer_param_names("mmdit", 0)
+    names_skip_enc = params.layer_param_names("skip", 0)
+    names_skip_dec = params.layer_param_names("skip", C["layers"] - 1)
+
+    # pf=1 exists at every depth for stage-composition testing and for the
+    # serial baseline; deeper-pipelined stages pair with patch factors >= 2
+    # in actual PipeFusion runs.
+    stage_pfs = {8: [1, 2, 4, 8], 4: [1, 2, 4, 8], 2: [1, 2, 4, 8]}
+
+    # ---- stage entrypoints -------------------------------------------------
+    for ls, pfs in stage_pfs.items():
+        for pf in pfs:
+            p_img, p_txt = S_IMG // pf, S_TXT // pf
+
+            # adaln
+            def fn_adaln(x, cond, kb, vb, off, *ws, _ls=ls, _n=names_adaln):
+                lp = _unflatten_layers(ws, _ls, _n)
+                return model.stage_adaln(x, cond, kb, vb, off, lp)
+
+            entries.append(
+                Entry(
+                    f"adaln_stage_L{ls}_p{pf}",
+                    "stage",
+                    fn_adaln,
+                    [
+                        ("x", [p_img, D], "f32"),
+                        ("cond", [D], "f32"),
+                        ("k_buf", [ls, S_IMG, D], "f32"),
+                        ("v_buf", [ls, S_IMG, D], "f32"),
+                        ("off", [], "i32"),
+                    ],
+                    _layer_refs("adaln", ls, names_adaln),
+                    {"variant": "adaln", "layers_per_stage": ls, "patch_factor": pf},
+                )
+            )
+
+            # cross
+            def fn_cross(x, cond, txt, kb, vb, off, *ws, _ls=ls, _n=names_cross):
+                lp = _unflatten_layers(ws, _ls, _n)
+                return model.stage_cross(x, cond, txt, kb, vb, off, lp)
+
+            entries.append(
+                Entry(
+                    f"cross_stage_L{ls}_p{pf}",
+                    "stage",
+                    fn_cross,
+                    [
+                        ("x", [p_img, D], "f32"),
+                        ("cond", [D], "f32"),
+                        ("txt_mem", [S_TXT, D], "f32"),
+                        ("k_buf", [ls, S_IMG, D], "f32"),
+                        ("v_buf", [ls, S_IMG, D], "f32"),
+                        ("off", [], "i32"),
+                    ],
+                    _layer_refs("cross", ls, names_cross),
+                    {"variant": "cross", "layers_per_stage": ls, "patch_factor": pf},
+                )
+            )
+
+            # mmdit (sequence = [text; image])
+            s_all = S_TXT + S_IMG
+
+            def fn_mmdit(xt, xi, cond, kb, vb, ot, oi, *ws, _ls=ls, _n=names_mmdit):
+                lp = _unflatten_layers(ws, _ls, _n)
+                return model.stage_mmdit(xt, xi, cond, kb, vb, ot, oi, lp)
+
+            entries.append(
+                Entry(
+                    f"mmdit_stage_L{ls}_p{pf}",
+                    "stage",
+                    fn_mmdit,
+                    [
+                        ("x_txt", [p_txt, D], "f32"),
+                        ("x_img", [p_img, D], "f32"),
+                        ("cond", [D], "f32"),
+                        ("k_buf", [ls, s_all, D], "f32"),
+                        ("v_buf", [ls, s_all, D], "f32"),
+                        ("off_txt", [], "i32"),
+                        ("off_img", [], "i32"),
+                    ],
+                    _layer_refs("mmdit", ls, names_mmdit),
+                    {"variant": "mmdit", "layers_per_stage": ls, "patch_factor": pf},
+                )
+            )
+
+    # skip variant: full (pipe=1), enc/dec halves (pipe=2)
+    for pf in [1, 2, 4, 8]:
+        p_img = S_IMG // pf
+        L = C["layers"]
+
+        def fn_skipf(x, cond, kb, vb, off, *ws, _n1=names_skip_enc, _n2=names_skip_dec):
+            half = L // 2
+            per1 = len(_n1)
+            lp = _unflatten_layers(ws[: half * per1], half, _n1)
+            lp += _unflatten_layers(ws[half * per1 :], half, _n2)
+            return model.stage_skip_full(x, cond, kb, vb, off, lp)
+
+        refs = _layer_refs("skip", L // 2, names_skip_enc) + _layer_refs(
+            "skip", L // 2, names_skip_dec, dec=True
+        )
+        entries.append(
+            Entry(
+                f"skip_full_L{L}_p{pf}",
+                "stage",
+                fn_skipf,
+                [
+                    ("x", [p_img, D], "f32"),
+                    ("cond", [D], "f32"),
+                    ("k_buf", [L, S_IMG, D], "f32"),
+                    ("v_buf", [L, S_IMG, D], "f32"),
+                    ("off", [], "i32"),
+                ],
+                refs,
+                {"variant": "skip", "layers_per_stage": L, "patch_factor": pf},
+            )
+        )
+
+    for pf in [2, 4, 8]:
+        p_img = S_IMG // pf
+        half = C["layers"] // 2
+
+        def fn_enc(x, cond, kb, vb, off, *ws, _n=names_skip_enc):
+            lp = _unflatten_layers(ws, half, _n)
+            return model.stage_skip_enc(x, cond, kb, vb, off, lp)
+
+        entries.append(
+            Entry(
+                f"skip_enc_L{half}_p{pf}",
+                "stage",
+                fn_enc,
+                [
+                    ("x", [p_img, D], "f32"),
+                    ("cond", [D], "f32"),
+                    ("k_buf", [half, S_IMG, D], "f32"),
+                    ("v_buf", [half, S_IMG, D], "f32"),
+                    ("off", [], "i32"),
+                ],
+                _layer_refs("skip", half, names_skip_enc),
+                {"variant": "skip", "layers_per_stage": half, "patch_factor": pf},
+            )
+        )
+
+        def fn_dec(x, skips, cond, kb, vb, off, *ws, _n=names_skip_dec):
+            lp = _unflatten_layers(ws, half, _n)
+            return model.stage_skip_dec(x, skips, cond, kb, vb, off, lp)
+
+        entries.append(
+            Entry(
+                f"skip_dec_L{half}_p{pf}",
+                "stage",
+                fn_dec,
+                [
+                    ("x", [p_img, D], "f32"),
+                    ("skips", [half, p_img, D], "f32"),
+                    ("cond", [D], "f32"),
+                    ("k_buf", [half, S_IMG, D], "f32"),
+                    ("v_buf", [half, S_IMG, D], "f32"),
+                    ("off", [], "i32"),
+                ],
+                _layer_refs("skip", half, names_skip_dec, dec=True),
+                {"variant": "skip", "layers_per_stage": half, "patch_factor": pf},
+            )
+        )
+
+    # ---- per-layer two-phase entrypoints (exact SP) ------------------------
+    for pf in [2, 4, 8]:
+        p_img, p_txt = S_IMG // pf, S_TXT // pf
+        s_all = S_TXT + S_IMG
+
+        def fn_qkv_a(x, cond, *ws, _n=names_adaln):
+            return model.layer_qkv_adaln(x, cond, dict(zip(_n, ws)))
+
+        def fn_post_a(x, q, K, V, cond, *ws, _n=names_adaln):
+            return (model.layer_post_adaln(x, q, K, V, cond, dict(zip(_n, ws))),)
+
+        for variant, names in (("adaln", names_adaln), ("skip_enc", names_skip_enc)):
+            vkey = "skip" if variant == "skip_enc" else variant
+            entries.append(
+                Entry(
+                    f"{variant}_qkv_p{pf}",
+                    "qkv",
+                    fn_qkv_a,
+                    [("x", [p_img, D], "f32"), ("cond", [D], "f32")],
+                    _layer_refs(vkey, 1, names),
+                    {"variant": vkey, "patch_factor": pf},
+                )
+            )
+            entries.append(
+                Entry(
+                    f"{variant}_post_p{pf}",
+                    "post",
+                    fn_post_a,
+                    [
+                        ("x", [p_img, D], "f32"),
+                        ("q", [p_img, D], "f32"),
+                        ("K", [S_IMG, D], "f32"),
+                        ("V", [S_IMG, D], "f32"),
+                        ("cond", [D], "f32"),
+                    ],
+                    _layer_refs(vkey, 1, names),
+                    {"variant": vkey, "patch_factor": pf},
+                )
+            )
+
+        def fn_post_c(x, q, K, V, cond, txt, *ws, _n=names_cross):
+            return (
+                model.layer_post_cross(x, q, K, V, cond, txt, dict(zip(_n, ws))),
+            )
+
+        entries.append(
+            Entry(
+                f"cross_qkv_p{pf}",
+                "qkv",
+                lambda x, cond, *ws, _n=names_cross: model.layer_qkv_adaln(
+                    x, cond, dict(zip(_n, ws))
+                ),
+                [("x", [p_img, D], "f32"), ("cond", [D], "f32")],
+                _layer_refs("cross", 1, names_cross),
+                {"variant": "cross", "patch_factor": pf},
+            )
+        )
+        entries.append(
+            Entry(
+                f"cross_post_p{pf}",
+                "post",
+                fn_post_c,
+                [
+                    ("x", [p_img, D], "f32"),
+                    ("q", [p_img, D], "f32"),
+                    ("K", [S_IMG, D], "f32"),
+                    ("V", [S_IMG, D], "f32"),
+                    ("cond", [D], "f32"),
+                    ("txt_mem", [S_TXT, D], "f32"),
+                ],
+                _layer_refs("cross", 1, names_cross),
+                {"variant": "cross", "patch_factor": pf},
+            )
+        )
+
+        def fn_qkv_m(xt, xi, cond, *ws, _n=names_mmdit):
+            return model.layer_qkv_mmdit(xt, xi, cond, dict(zip(_n, ws)))
+
+        def fn_post_m(xt, xi, qt, qi, K, V, cond, *ws, _n=names_mmdit):
+            return model.layer_post_mmdit(xt, xi, qt, qi, K, V, cond, dict(zip(_n, ws)))
+
+        entries.append(
+            Entry(
+                f"mmdit_qkv_p{pf}",
+                "qkv",
+                fn_qkv_m,
+                [
+                    ("x_txt", [p_txt, D], "f32"),
+                    ("x_img", [p_img, D], "f32"),
+                    ("cond", [D], "f32"),
+                ],
+                _layer_refs("mmdit", 1, names_mmdit),
+                {"variant": "mmdit", "patch_factor": pf},
+            )
+        )
+        entries.append(
+            Entry(
+                f"mmdit_post_p{pf}",
+                "post",
+                fn_post_m,
+                [
+                    ("x_txt", [p_txt, D], "f32"),
+                    ("x_img", [p_img, D], "f32"),
+                    ("q_txt", [p_txt, D], "f32"),
+                    ("q_img", [p_img, D], "f32"),
+                    ("K", [s_all, D], "f32"),
+                    ("V", [s_all, D], "f32"),
+                    ("cond", [D], "f32"),
+                ],
+                _layer_refs("mmdit", 1, names_mmdit),
+                {"variant": "mmdit", "patch_factor": pf},
+            )
+        )
+
+        def fn_qkv_sd(x, skip, cond, *ws, _n=names_skip_dec):
+            return model.layer_qkv_skip_dec(x, skip, cond, dict(zip(_n, ws)))
+
+        entries.append(
+            Entry(
+                f"skip_dec_qkv_p{pf}",
+                "qkv",
+                fn_qkv_sd,
+                [
+                    ("x", [p_img, D], "f32"),
+                    ("skip", [p_img, D], "f32"),
+                    ("cond", [D], "f32"),
+                ],
+                _layer_refs("skip", 1, names_skip_dec, dec=True),
+                {"variant": "skip", "patch_factor": pf},
+            )
+        )
+        def fn_post_sd(x, q, K, V, cond, *ws, _n=names_skip_dec):
+            return (model.layer_post_adaln(x, q, K, V, cond, dict(zip(_n, ws))),)
+
+        entries.append(
+            Entry(
+                f"skip_dec_post_p{pf}",
+                "post",
+                fn_post_sd,
+                [
+                    ("x", [p_img, D], "f32"),
+                    ("q", [p_img, D], "f32"),
+                    ("K", [S_IMG, D], "f32"),
+                    ("V", [S_IMG, D], "f32"),
+                    ("cond", [D], "f32"),
+                ],
+                _layer_refs("skip", 1, names_skip_dec, dec=True),
+                {"variant": "skip", "patch_factor": pf},
+            )
+        )
+
+    # ---- embed / final / t_embed -------------------------------------------
+    for pf in [1, 2, 4, 8]:
+        p_img = S_IMG // pf
+        for variant in configs.VARIANTS:
+            entries.append(
+                Entry(
+                    f"{variant}_embed_p{pf}",
+                    "embed",
+                    lambda lp, pp, We, be: (model.embed(lp, pp, We, be),),
+                    [("latent_patch", [p_img, CL], "f32"), ("pos_patch", [p_img, D], "f32")],
+                    [
+                        {"variant": variant, "global": "We"},
+                        {"variant": variant, "global": "be"},
+                    ],
+                    {"variant": variant, "patch_factor": pf},
+                )
+            )
+            entries.append(
+                Entry(
+                    f"{variant}_final_p{pf}",
+                    "final",
+                    lambda x, cond, a, b, c2, d2: (
+                        model.final_layer(x, cond, a, b, c2, d2),
+                    ),
+                    [("x", [p_img, D], "f32"), ("cond", [D], "f32")],
+                    [
+                        {"variant": variant, "global": g}
+                        for g in ["Wmodf", "bmodf", "Wf", "bf"]
+                    ],
+                    {"variant": variant, "patch_factor": pf},
+                )
+            )
+    for variant in configs.VARIANTS:
+        entries.append(
+            Entry(
+                f"{variant}_t_embed",
+                "t_embed",
+                lambda t, a, b, c2, d2: (model.t_embed(t, a, b, c2, d2),),
+                [("t", [], "f32")],
+                [
+                    {"variant": variant, "global": g}
+                    for g in ["Wt1", "bt1", "Wt2", "bt2"]
+                ],
+                {"variant": variant},
+            )
+        )
+
+    # ---- VAE ----------------------------------------------------------------
+    hw = C["latent_hw"]
+    vae_ref = [{"vae": k} for k in ["k0", "b0", "k1", "b1", "k2", "b2", "k3", "b3"]]
+
+    def fn_vae(z, *ws):
+        ks = dict(zip(["k0", "b0", "k1", "b1", "k2", "b2", "k3", "b3"], ws))
+        return (model.vae_decode(z, ks),)
+
+    entries.append(
+        Entry(
+            "vae_decode",
+            "vae",
+            fn_vae,
+            [("z", [hw, hw, CL], "f32")],
+            vae_ref,
+            {},
+        )
+    )
+    halo = configs.VAE["halo"]
+    for hp in [8, 4, 2]:
+        for edge, extra in (("top", halo), ("mid", 2 * halo), ("bot", halo)):
+
+            def fn_vae_rows(z, *ws, _e=edge):
+                ks = dict(zip(["k0", "b0", "k1", "b1", "k2", "b2", "k3", "b3"], ws))
+                return (model.vae_decode_rows(z, ks, edge=_e),)
+
+            entries.append(
+                Entry(
+                    f"vae_decode_rows{hp}_{edge}",
+                    "vae",
+                    fn_vae_rows,
+                    [("z_pad", [hp + extra, hw, CL], "f32")],
+                    vae_ref,
+                    {"patch_rows": hp, "edge": edge},
+                )
+            )
+
+    return entries, shapes
+
+
+def lower_entry(entry, shapes, outdir):
+    argspecs = entry.arg_specs(shapes)
+    # keep_unused: the Rust runtime passes every manifest-listed arg
+    # positionally; jit must not prune params an entrypoint doesn't touch.
+    lowered = jax.jit(entry.fn, keep_unused=True).lower(*argspecs)
+    text = to_hlo_text(lowered)
+    fname = f"{entry.name}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    out_shapes = [list(o.shape) for o in jax.eval_shape(entry.fn, *argspecs)]
+    rec = {
+        "name": entry.name,
+        "file": fname,
+        "kind": entry.kind,
+        "data_inputs": [
+            {"name": n, "dims": list(d), "dtype": dt} for n, d, dt in entry.data_specs
+        ],
+        "weights": entry.weight_refs,
+        "outputs": out_shapes,
+    }
+    rec.update(entry.meta)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    t0 = time.time()
+    w = params.all_weights()
+    params.save_weights(os.path.join(outdir, "weights.bin"), w)
+    print(f"weights.bin: {len(w)} tensors, "
+          f"{sum(v.size for v in w.values()) * 4 / 1e6:.1f} MB", flush=True)
+
+    entries, shapes = build_entries()
+    if args.only:
+        entries = [e for e in entries if args.only in e.name]
+    records = []
+    for i, e in enumerate(entries):
+        t1 = time.time()
+        records.append(lower_entry(e, shapes, outdir))
+        print(f"[{i + 1}/{len(entries)}] {e.name} ({time.time() - t1:.1f}s)", flush=True)
+
+    manifest = {
+        "version": configs.MANIFEST_VERSION,
+        "model": C,
+        "vae": {k: (list(v) if isinstance(v, (tuple, list)) else v)
+                for k, v in configs.VAE.items()},
+        "weights_file": "weights.bin",
+        "entrypoints": records,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"AOT done: {len(records)} entrypoints in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

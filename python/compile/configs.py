@@ -1,0 +1,45 @@
+"""Model/grid configuration shared between the AOT pipeline and the Rust
+coordinator (via artifacts/manifest.json).
+
+The runnable "tiny" DiT family keeps the *architecture* of the paper's five
+models (adaLN-Zero / cross-attention / MM-DiT in-context / U-ViT skip
+connections) at CPU-friendly dimensions. The paper-scale models exist as
+analytic specs on the Rust side (rust/src/config/model.rs) and are used by
+the performance model only.
+"""
+
+# Tiny runnable DiT (see DESIGN.md §2 substitutions).
+TINY = dict(
+    d=192,           # hidden size
+    heads=6,
+    head_dim=32,
+    layers=8,        # transformer depth (divisible by every pipe degree)
+    mlp_ratio=4,
+    s_img=256,       # image tokens = latent 16x16
+    s_txt=32,        # text tokens (in-context / cross-attn memory)
+    latent_hw=16,    # latent spatial side
+    c_latent=4,      # latent channels
+    vocab=256,       # byte-level tokenizer vocabulary
+    freq_dim=128,    # sinusoidal timestep embedding width
+)
+
+# Patch factors: product of pipefusion patch count M and sp degree. The
+# stage entrypoint sees the per-device patch, so only the product matters.
+PATCH_FACTORS = [1, 2, 4, 8]
+
+# Pipefusion degree -> layers per stage.
+STAGE_DEPTHS = {1: 8, 2: 4, 4: 2}
+
+# Block variants, mirroring the paper's architecture diversity (Fig 1):
+#   adaln  - original DiT / Pixart-style adaLN-Zero conditioning
+#   cross  - cross-attention conditioning (Pixart, HunyuanDiT blocks)
+#   mmdit  - SD3/Flux MM-DiT in-context conditioning (text+image sequence)
+#   skip   - U-ViT / HunyuanDiT long skip connections between blocks
+VARIANTS = ["adaln", "cross", "mmdit", "skip"]
+
+# VAE decoder: latent 16x16x4 -> pixel 128x128x3 (3 nearest-neighbor x2
+# upsample stages). HALO latent rows suffice for the receptive field
+# (1 + 1/2 + 1/4 rows); see python/tests/test_vae.py for the exactness proof.
+VAE = dict(ch=(48, 24, 12), halo=2, patch_rows=[16, 8, 4, 2])
+
+MANIFEST_VERSION = 3

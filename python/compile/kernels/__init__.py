@@ -1,0 +1,9 @@
+"""L1 Pallas kernels: the paper's compute hot-spots, block-tiled for TPU
+(VMEM/MXU); executed via interpret=True on CPU. See DESIGN.md
+§Hardware-Adaptation."""
+
+from .attention import attention
+from .modulate import ln_modulate
+from . import ref
+
+__all__ = ["attention", "ln_modulate", "ref"]

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: fused multi-head attention (FlashAttention-style).
+
+TPU adaptation of the paper's CUDA hot spot (see DESIGN.md
+§Hardware-Adaptation): the S×S score matrix is never materialized in slow
+memory. The grid tiles (head, q-block); K/V stream through VMEM in blocks
+with an online-softmax accumulator resident in VMEM. On CPU we run with
+``interpret=True`` (a real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute); the BlockSpec structure is what carries over.
+
+VMEM footprint per grid step (f32):
+    q block  bq*Dh + kv blocks 2*bkv*Dh + acc bq*Dh + m/l 2*bq
+At paper scale (bq=bkv=128, Dh=128) this is ~0.4 MB << 16 MB VMEM, leaving
+room for double buffering; the MXU sees [bq,Dh]x[Dh,bkv] matmuls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, preferred=(64, 48, 32, 16, 8)) -> int:
+    """Largest preferred tile that divides n (falls back to n itself)."""
+    for b in preferred:
+        if n % b == 0 and b <= n:
+            return b
+    return n
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, bkv, skv):
+    # q_ref: [bq, Dh]; k_ref, v_ref: [Skv, Dh] (one head); o_ref: [bq, Dh]
+    bq, dh = q_ref.shape
+    q = q_ref[...] * scale
+
+    nkv = skv // bkv
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[pl.dslice(i * bkv, bkv), :]
+        v = v_ref[pl.dslice(i * bkv, bkv), :]
+        s = q @ k.T  # [bq, bkv]
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l_fin = jax.lax.fori_loop(0, nkv, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l_fin[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv"))
+def attention(q, k, v, bq=None, bkv=None):
+    """Fused attention. q: [Sq, H, Dh]; k, v: [Skv, H, Dh] -> [Sq, H, Dh]."""
+    sq, h, dh = q.shape
+    skv = k.shape[0]
+    if bq is None:
+        bq = _pick_block(sq)
+    if bkv is None:
+        bkv = _pick_block(skv)
+    scale = 1.0 / (dh**0.5)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, bkv=bkv, skv=skv)
+    # Grid: (head, q-block). K/V: the full per-head sequence is resident and
+    # streamed block-wise inside the kernel (online softmax).
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda hh, iq: (hh, iq, 0)),
+            pl.BlockSpec((None, skv, dh), lambda hh, iq: (hh, 0, 0)),
+            pl.BlockSpec((None, skv, dh), lambda hh, iq: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda hh, iq: (hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, dh), q.dtype),
+        interpret=True,
+    )(
+        q.transpose(1, 0, 2),  # [H, Sq, Dh]
+        k.transpose(1, 0, 2),
+        v.transpose(1, 0, 2),
+    )
+    return out.transpose(1, 0, 2)

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: fused LayerNorm + adaLN-Zero modulation.
+
+Fuses the parameter-free LayerNorm with the ``x * (1 + scale) + shift``
+modulation that DiT applies before attention and MLP. Row-tiled grid; the
+(shift, scale) vectors are broadcast per tile from VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_rows(n: int) -> int:
+    for b in (64, 48, 32, 16, 8):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _ln_modulate_kernel(x_ref, shift_ref, scale_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = xn * (1.0 + scale_ref[...][None, :]) + shift_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def ln_modulate(x, shift, scale, eps=1e-6):
+    """LayerNorm(x) * (1 + scale) + shift. x: [S, d]; shift, scale: [d]."""
+    s, d = x.shape
+    br = _pick_rows(s)
+    kernel = functools.partial(_ln_modulate_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(s // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        interpret=True,
+    )(x, shift, scale)

@@ -1,0 +1,33 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness)."""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale=None):
+    """Full (non-causal) multi-head attention.
+
+    q: [Sq, H, Dh]; k, v: [Skv, H, Dh] -> [Sq, H, Dh]
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    # [H, Sq, Skv]
+    logits = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", probs, v)
+
+
+def modulate_ref(x, shift, scale):
+    """adaLN-Zero modulation: x * (1 + scale) + shift.
+
+    x: [S, d]; shift, scale: [d]
+    """
+    return x * (1.0 + scale)[None, :] + shift[None, :]
+
+
+def layer_norm_ref(x, eps=1e-6):
+    """Parameter-free LayerNorm over the last axis (DiT convention: the
+    learned affine is folded into the adaLN modulation)."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)

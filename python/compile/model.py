@@ -1,0 +1,330 @@
+"""L2: the DiT compute graph in JAX, built on the L1 Pallas kernels.
+
+Every function here is an AOT *entrypoint*: a pure function of
+(data tensors..., weight tensors...) lowered once by `aot.py` to HLO text and
+executed from the Rust coordinator. The partitioning contract:
+
+* ``*_stage``  — forward a *patch* of tokens through a stage of consecutive
+  layers, given the **full-sequence per-layer KV buffers** as inputs. At each
+  layer the patch's fresh K/V rows are written into the buffer copy
+  (``dynamic_update_slice``) before attention, and returned so the engine can
+  scatter them into its persistent buffer. One entrypoint implements the
+  paper's three staleness regimes: fresh buffers = exact (SP/serial
+  composition), one-step-stale = DistriFusion, mixed fresh/stale = PipeFusion.
+* ``*_qkv`` / ``*_post`` — the per-layer two-phase split used for *exact*
+  sequence parallelism: qkv projection on the local patch, K/V exchange in
+  Rust (Ulysses all2all / Ring P2P cost-modelled there), then attention+MLP.
+* ``embed`` / ``final`` / ``t_embed`` / ``vae_decode*`` — the non-block parts.
+
+Token layout (mmdit / in-context conditioning, Fig 3 of the paper): the full
+sequence is ``[text (s_txt); image (s_img)]``; under SP *both* segments are
+split so every device holds a balanced ``[text shard; image shard]`` local
+sequence.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import configs
+from .kernels import attention, ln_modulate
+
+C = configs.TINY
+D = C["d"]
+H = C["heads"]
+DH = C["head_dim"]
+S_IMG = C["s_img"]
+S_TXT = C["s_txt"]
+
+
+def _heads(x):
+    return x.reshape(x.shape[0], H, DH)
+
+
+def _unheads(x):
+    return x.reshape(x.shape[0], D)
+
+
+def _mlp(h, W1, b1, W2, b2):
+    return jax.nn.gelu(h @ W1 + b1) @ W2 + b2
+
+
+def _mod6(cond, Wmod, bmod):
+    m = cond @ Wmod + bmod
+    return jnp.split(m, 6)
+
+
+# ---------------------------------------------------------------------------
+# Core blocks. Each returns (x_out, k_fresh, v_fresh) where k/v are the
+# patch's rows of this layer's K/V (written into the full buffer copy before
+# attention so self-rows are always fresh — PipeFusion semantics).
+# ---------------------------------------------------------------------------
+
+
+def block_adaln(p, x, cond, k_full, v_full, off):
+    sh1, sc1, g1, sh2, sc2, g2 = _mod6(cond, p["Wmod"], p["bmod"])
+    h = ln_modulate(x, sh1, sc1)
+    qkv = h @ p["Wqkv"] + p["bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    K = lax.dynamic_update_slice(k_full, k, (off, 0))
+    V = lax.dynamic_update_slice(v_full, v, (off, 0))
+    o = _unheads(attention(_heads(q), _heads(K), _heads(V)))
+    x = x + g1[None, :] * (o @ p["Wo"] + p["bo"])
+    h2 = ln_modulate(x, sh2, sc2)
+    x = x + g2[None, :] * _mlp(h2, p["W1"], p["b1"], p["W2"], p["b2"])
+    return x, k, v
+
+
+def block_cross(p, x, cond, txt_mem, k_full, v_full, off):
+    x, k, v = block_adaln(p, x, cond, k_full, v_full, off)
+    # Cross-attention to the (replicated) text memory — the paper's point is
+    # that this conditioning path does not need sequence splitting.
+    q = (x @ p["Wq_c"] + p["bq_c"])
+    kv = txt_mem @ p["Wkv_c"] + p["bkv_c"]
+    kc, vc = jnp.split(kv, 2, axis=-1)
+    o = _unheads(attention(_heads(q), _heads(kc), _heads(vc)))
+    x = x + o @ p["Wo_c"] + p["bo_c"]
+    return x, k, v
+
+
+def block_mmdit(p, x_txt, x_img, cond, k_full, v_full, off_txt, off_img):
+    """MM-DiT block (SD3/Flux): separate text/image streams, joint attention
+    over the concatenated sequence. k_full/v_full cover [text; image]."""
+    outs = {}
+    qs = {}
+    for s, x in (("txt", x_txt), ("img", x_img)):
+        sh1, sc1, g1, sh2, sc2, g2 = _mod6(cond, p[f"{s}_Wmod"], p[f"{s}_bmod"])
+        h = ln_modulate(x, sh1, sc1)
+        qkv = h @ p[f"{s}_Wqkv"] + p[f"{s}_bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        qs[s] = q
+        outs[s] = (k, v, g1, sh2, sc2, g2)
+    k_t, v_t = outs["txt"][0], outs["txt"][1]
+    k_i, v_i = outs["img"][0], outs["img"][1]
+    K = lax.dynamic_update_slice(k_full, k_t, (off_txt, 0))
+    K = lax.dynamic_update_slice(K, k_i, (off_img, 0))
+    V = lax.dynamic_update_slice(v_full, v_t, (off_txt, 0))
+    V = lax.dynamic_update_slice(V, v_i, (off_img, 0))
+    q = jnp.concatenate([qs["txt"], qs["img"]], axis=0)
+    o = _unheads(attention(_heads(q), _heads(K), _heads(V)))
+    pt = x_txt.shape[0]
+    o_by = {"txt": o[:pt], "img": o[pt:]}
+    xs = {"txt": x_txt, "img": x_img}
+    for s in ("txt", "img"):
+        _, _, g1, sh2, sc2, g2 = outs[s]
+        x = xs[s] + g1[None, :] * (o_by[s] @ p[f"{s}_Wo"] + p[f"{s}_bo"])
+        h2 = ln_modulate(x, sh2, sc2)
+        x = x + g2[None, :] * _mlp(
+            h2, p[f"{s}_W1"], p[f"{s}_b1"], p[f"{s}_W2"], p[f"{s}_b2"]
+        )
+        xs[s] = x
+    k_fresh = jnp.concatenate([k_t, k_i], axis=0)
+    v_fresh = jnp.concatenate([v_t, v_i], axis=0)
+    return xs["txt"], xs["img"], k_fresh, v_fresh
+
+
+def block_skip_dec(p, x, skip, cond, k_full, v_full, off):
+    """U-ViT/HunyuanDiT decoder block: fuse the long skip, then adaLN block."""
+    x = jnp.concatenate([x, skip], axis=-1) @ p["Wskip"] + p["bskip"]
+    return block_adaln(p, x, cond, k_full, v_full, off)
+
+
+# ---------------------------------------------------------------------------
+# Stage entrypoints (PipeFusion / DistriFusion / serial composition).
+# ---------------------------------------------------------------------------
+
+
+def stage_adaln(x, cond, k_buf, v_buf, off, layer_params):
+    ks, vs = [], []
+    for i, p in enumerate(layer_params):
+        x, k, v = block_adaln(p, x, cond, k_buf[i], v_buf[i], off)
+        ks.append(k)
+        vs.append(v)
+    return x, jnp.stack(ks), jnp.stack(vs)
+
+
+def stage_cross(x, cond, txt_mem, k_buf, v_buf, off, layer_params):
+    ks, vs = [], []
+    for i, p in enumerate(layer_params):
+        x, k, v = block_cross(p, x, cond, txt_mem, k_buf[i], v_buf[i], off)
+        ks.append(k)
+        vs.append(v)
+    return x, jnp.stack(ks), jnp.stack(vs)
+
+
+def stage_mmdit(x_txt, x_img, cond, k_buf, v_buf, off_txt, off_img, layer_params):
+    ks, vs = [], []
+    for i, p in enumerate(layer_params):
+        x_txt, x_img, k, v = block_mmdit(
+            p, x_txt, x_img, cond, k_buf[i], v_buf[i], off_txt, off_img
+        )
+        ks.append(k)
+        vs.append(v)
+    return x_txt, x_img, jnp.stack(ks), jnp.stack(vs)
+
+
+def stage_skip_enc(x, cond, k_buf, v_buf, off, layer_params):
+    """Encoder half: plain adaLN blocks, also emit per-layer skips."""
+    ks, vs, skips = [], [], []
+    for i, p in enumerate(layer_params):
+        x, k, v = block_adaln(p, x, cond, k_buf[i], v_buf[i], off)
+        ks.append(k)
+        vs.append(v)
+        skips.append(x)
+    return x, jnp.stack(skips), jnp.stack(ks), jnp.stack(vs)
+
+
+def stage_skip_dec(x, skips, cond, k_buf, v_buf, off, layer_params):
+    """Decoder half: consumes encoder skips in reverse order."""
+    n = len(layer_params)
+    ks, vs = [], []
+    for i, p in enumerate(layer_params):
+        x, k, v = block_skip_dec(p, x, skips[n - 1 - i], cond, k_buf[i], v_buf[i], off)
+        ks.append(k)
+        vs.append(v)
+    return x, jnp.stack(ks), jnp.stack(vs)
+
+
+def stage_skip_full(x, cond, k_buf, v_buf, off, layer_params):
+    """The whole skip model in one stage (pipe degree 1)."""
+    half = len(layer_params) // 2
+    x, skips, ks1, vs1 = stage_skip_enc(x, cond, k_buf[:half], v_buf[:half], off, layer_params[:half])
+    x, ks2, vs2 = stage_skip_dec(
+        x, skips, cond, k_buf[half:], v_buf[half:], off, layer_params[half:]
+    )
+    return x, jnp.concatenate([ks1, ks2]), jnp.concatenate([vs1, vs2])
+
+
+# ---------------------------------------------------------------------------
+# Per-layer two-phase entrypoints (exact sequence parallelism).
+# ---------------------------------------------------------------------------
+
+
+def layer_qkv_adaln(x, cond, p):
+    sh1, sc1, _, _, _, _ = _mod6(cond, p["Wmod"], p["bmod"])
+    h = ln_modulate(x, sh1, sc1)
+    q, k, v = jnp.split(h @ p["Wqkv"] + p["bqkv"], 3, axis=-1)
+    return q, k, v
+
+
+def layer_post_adaln(x, q, K, V, cond, p):
+    _, _, g1, sh2, sc2, g2 = _mod6(cond, p["Wmod"], p["bmod"])
+    o = _unheads(attention(_heads(q), _heads(K), _heads(V)))
+    x = x + g1[None, :] * (o @ p["Wo"] + p["bo"])
+    h2 = ln_modulate(x, sh2, sc2)
+    x = x + g2[None, :] * _mlp(h2, p["W1"], p["b1"], p["W2"], p["b2"])
+    return x
+
+
+def layer_post_cross(x, q, K, V, cond, txt_mem, p):
+    x = layer_post_adaln(x, q, K, V, cond, p)
+    qc = x @ p["Wq_c"] + p["bq_c"]
+    kc, vc = jnp.split(txt_mem @ p["Wkv_c"] + p["bkv_c"], 2, axis=-1)
+    o = _unheads(attention(_heads(qc), _heads(kc), _heads(vc)))
+    return x + o @ p["Wo_c"] + p["bo_c"]
+
+
+def layer_qkv_mmdit(x_txt, x_img, cond, p):
+    outs = []
+    for s, x in (("txt", x_txt), ("img", x_img)):
+        sh1, sc1, _, _, _, _ = _mod6(cond, p[f"{s}_Wmod"], p[f"{s}_bmod"])
+        h = ln_modulate(x, sh1, sc1)
+        q, k, v = jnp.split(h @ p[f"{s}_Wqkv"] + p[f"{s}_bqkv"], 3, axis=-1)
+        outs.extend([q, k, v])
+    return tuple(outs)  # q_t, k_t, v_t, q_i, k_i, v_i
+
+
+def layer_post_mmdit(x_txt, x_img, q_txt, q_img, K, V, cond, p):
+    q = jnp.concatenate([q_txt, q_img], axis=0)
+    o = _unheads(attention(_heads(q), _heads(K), _heads(V)))
+    pt = x_txt.shape[0]
+    o_by = {"txt": o[:pt], "img": o[pt:]}
+    xs = {"txt": x_txt, "img": x_img}
+    for s in ("txt", "img"):
+        _, _, g1, sh2, sc2, g2 = _mod6(cond, p[f"{s}_Wmod"], p[f"{s}_bmod"])
+        x = xs[s] + g1[None, :] * (o_by[s] @ p[f"{s}_Wo"] + p[f"{s}_bo"])
+        h2 = ln_modulate(x, sh2, sc2)
+        xs[s] = x + g2[None, :] * _mlp(
+            h2, p[f"{s}_W1"], p[f"{s}_b1"], p[f"{s}_W2"], p[f"{s}_b2"]
+        )
+    return xs["txt"], xs["img"]
+
+
+def layer_qkv_skip_dec(x, skip, cond, p):
+    x = jnp.concatenate([x, skip], axis=-1) @ p["Wskip"] + p["bskip"]
+    q, k, v = layer_qkv_adaln(x, cond, p)
+    return x, q, k, v  # x after skip-fuse must be carried forward
+
+
+# ---------------------------------------------------------------------------
+# Non-block parts.
+# ---------------------------------------------------------------------------
+
+
+def embed(latent_patch, pos_patch, We, be):
+    """Patchify (1 token per latent pixel) + positional embedding."""
+    return latent_patch @ We + be + pos_patch
+
+
+def final_layer(x, cond, Wmodf, bmodf, Wf, bf):
+    m = cond @ Wmodf + bmodf
+    sh, sc = jnp.split(m, 2)
+    h = ln_modulate(x, sh, sc)
+    return h @ Wf + bf
+
+
+def t_embed(t, Wt1, bt1, Wt2, bt2):
+    """Sinusoidal timestep embedding + 2-layer MLP -> conditioning vector."""
+    half = C["freq_dim"] // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t * freqs
+    emb = jnp.concatenate([jnp.cos(ang), jnp.sin(ang)])
+    return jax.nn.silu(emb @ Wt1 + bt1) @ Wt2 + bt2
+
+
+# ---------------------------------------------------------------------------
+# VAE decoder (latent [h,16,4] -> pixels [8h,128,3]).
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, k, b):
+    return (
+        lax.conv_general_dilated(
+            x, k, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        + b
+    )
+
+
+def _up2(x):
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def vae_decode(z, ks):
+    """z: [h, w, C] latent -> [8h, 8w, 3] pixels."""
+    x = z[None]
+    x = jax.nn.silu(_conv(x, ks["k0"], ks["b0"]))
+    x = jax.nn.silu(_conv(_up2(x), ks["k1"], ks["b1"]))
+    x = jax.nn.silu(_conv(_up2(x), ks["k2"], ks["b2"]))
+    x = _conv(_up2(x), ks["k3"], ks["b3"])
+    return x[0]
+
+
+def vae_decode_rows(z_pad, ks, halo=None, edge="mid"):
+    """Patch-parallel decode: z_pad carries `halo` extra latent rows of
+    *neighbour* data on interior sides (exchanged by the Rust halo
+    allgather); the halo region is cropped from the output.
+
+    Exact w.r.t. the full decode because the receptive field
+    (1 + 1/2 + 1/4 latent rows) is < halo. Image borders must use the
+    ``top``/``bot`` edge variants: at a true border the full decode applies
+    SAME zero padding at *every* conv, which differs from carrying halo rows
+    (nonzero after one conv) — so border sides receive no halo and rely on
+    the convs' own SAME padding instead.
+    """
+    if halo is None:
+        halo = configs.VAE["halo"]
+    y = vae_decode(z_pad, ks)
+    top = 0 if edge in ("top", "full") else 8 * halo
+    bot = y.shape[0] if edge in ("bot", "full") else y.shape[0] - 8 * halo
+    return y[top:bot]

@@ -1,0 +1,202 @@
+"""Deterministic parameter initialization + weights.bin serialization.
+
+Weights are runtime *inputs* to every HLO entrypoint (baking them as
+constants would blow up HLO text size); the Rust runtime uploads them once
+per simulated device as resident PJRT buffers (`runtime::weights`).
+
+Binary format "XTW1" (little-endian):
+    magic   4 bytes  b"XTW1"
+    count   u32
+    per tensor:
+        name_len u16, name utf-8
+        ndim     u8,  dims u32 * ndim
+        data     f32 * prod(dims)
+"""
+
+import struct
+
+import numpy as np
+
+from . import configs
+
+C = configs.TINY
+
+
+def _rng(tag: str) -> np.random.Generator:
+    # Stable per-tag seed so adding variants never reshuffles existing init.
+    seed = abs(hash(tag)) % (2**31)
+    # hash() is salted per-process; use a deterministic fold instead.
+    seed = sum((i + 1) * b for i, b in enumerate(tag.encode())) % (2**31)
+    return np.random.default_rng(seed)
+
+
+def _w(rng, shape, std=0.02):
+    return rng.normal(0.0, std, size=shape).astype(np.float32)
+
+
+def _z(shape):
+    return np.zeros(shape, np.float32)
+
+
+# Per-layer parameter shapes for the core (adaLN) block.
+def _adaln_layer(rng, d, mlp):
+    return {
+        "W1": _w(rng, (d, mlp * d)),
+        "W2": _w(rng, (mlp * d, d), std=0.02 / np.sqrt(2 * C["layers"])),
+        "Wmod": _w(rng, (d, 6 * d)),
+        "Wo": _w(rng, (d, d), std=0.02 / np.sqrt(2 * C["layers"])),
+        "Wqkv": _w(rng, (d, 3 * d)),
+        "b1": _z((mlp * d,)),
+        "b2": _z((d,)),
+        "bmod": _z((6 * d,)),
+        "bo": _z((d,)),
+        "bqkv": _z((3 * d,)),
+    }
+
+
+def _cross_layer(rng, d, mlp):
+    p = _adaln_layer(rng, d, mlp)
+    p.update(
+        {
+            "Wkv_c": _w(rng, (d, 2 * d)),
+            "Wq_c": _w(rng, (d, d)),
+            "Wo_c": _w(rng, (d, d), std=0.02 / np.sqrt(2 * C["layers"])),
+            "bkv_c": _z((2 * d,)),
+            "bq_c": _z((d,)),
+            "bo_c": _z((d,)),
+        }
+    )
+    return p
+
+
+def _mmdit_layer(rng, d, mlp):
+    p = {}
+    for stream in ("img", "txt"):
+        for k, v in _adaln_layer(rng, d, mlp).items():
+            p[f"{stream}_{k}"] = v
+    return p
+
+
+def _skip_layer(rng, d, mlp, is_dec):
+    p = _adaln_layer(rng, d, mlp)
+    if is_dec:
+        p["Wskip"] = _w(rng, (2 * d, d))
+        p["bskip"] = _z((d,))
+    return p
+
+
+def layer_param_names(variant: str, layer_idx: int) -> list:
+    """Sorted parameter names for one layer (the positional arg order)."""
+    d, mlp = 4, 4  # shapes irrelevant, only the key set
+    rng = np.random.default_rng(0)
+    if variant == "adaln":
+        keys = _adaln_layer(rng, 8, 2).keys()
+    elif variant == "cross":
+        keys = _cross_layer(rng, 8, 2).keys()
+    elif variant == "mmdit":
+        keys = _mmdit_layer(rng, 8, 2).keys()
+    elif variant == "skip":
+        is_dec = layer_idx >= C["layers"] // 2
+        keys = _skip_layer(rng, 8, 2, is_dec).keys()
+    else:
+        raise ValueError(variant)
+    return sorted(keys)
+
+
+def init_variant(variant: str):
+    """-> (layers: list[dict name->np.ndarray], globals: dict)."""
+    d, mlp, L = C["d"], C["mlp_ratio"], C["layers"]
+    layers = []
+    for i in range(L):
+        rng = _rng(f"{variant}.L{i}")
+        if variant == "adaln":
+            layers.append(_adaln_layer(rng, d, mlp))
+        elif variant == "cross":
+            layers.append(_cross_layer(rng, d, mlp))
+        elif variant == "mmdit":
+            layers.append(_mmdit_layer(rng, d, mlp))
+        elif variant == "skip":
+            layers.append(_skip_layer(rng, d, mlp, is_dec=i >= L // 2))
+        else:
+            raise ValueError(variant)
+    g = _rng(f"{variant}.globals")
+    gl = {
+        "We": _w(g, (C["c_latent"], d)),
+        "be": _z((d,)),
+        "pos": _w(g, (C["s_img"], d)),
+        "Wmodf": _w(g, (d, 2 * d)),
+        "bmodf": _z((2 * d,)),
+        "Wf": _w(g, (d, C["c_latent"])),
+        "bf": _z((C["c_latent"],)),
+        "Wt1": _w(g, (C["freq_dim"], d)),
+        "bt1": _z((d,)),
+        "Wt2": _w(g, (d, d)),
+        "bt2": _z((d,)),
+    }
+    return layers, gl
+
+
+def init_shared():
+    g = _rng("shared.globals")
+    return {"txt_table": _w(g, (C["vocab"], C["d"]))}
+
+
+def init_vae():
+    g = _rng("vae")
+    ch = configs.VAE["ch"]
+    c0 = C["c_latent"]
+    ks = {}
+    chain = [c0, ch[0], ch[1], ch[2], 3]
+    for i in range(4):
+        ks[f"k{i}"] = _w(g, (3, 3, chain[i], chain[i + 1]), std=0.1)
+        ks[f"b{i}"] = _z((chain[i + 1],))
+    return ks
+
+
+def all_weights():
+    """Full name -> array map, as written to weights.bin."""
+    out = {}
+    for v in configs.VARIANTS:
+        layers, gl = init_variant(v)
+        for i, lp in enumerate(layers):
+            for k, arr in lp.items():
+                out[f"{v}.L{i}.{k}"] = arr
+        for k, arr in gl.items():
+            out[f"{v}.{k}"] = arr
+    for k, arr in init_shared().items():
+        out[f"shared.{k}"] = arr
+    for k, arr in init_vae().items():
+        out[f"vae.{k}"] = arr
+    return out
+
+
+def save_weights(path: str, weights: dict):
+    with open(path, "wb") as f:
+        f.write(b"XTW1")
+        f.write(struct.pack("<I", len(weights)))
+        for name in sorted(weights):
+            arr = np.ascontiguousarray(weights[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.tobytes())
+
+
+def load_weights(path: str) -> dict:
+    """Reader used by python tests to verify the round-trip."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"XTW1"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode()
+            (nd,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            out[name] = data
+    return out

@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core correctness signal for the compute layer — every stage
+entrypoint lowers these kernels into its HLO.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ln_modulate, ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("sq", [8, 32, 36, 64, 72, 128, 144, 256, 288])
+@pytest.mark.parametrize("skv", [32, 256, 288])
+def test_attention_matches_ref(sq, skv):
+    rng = np.random.default_rng(sq * 1000 + skv)
+    q = _rand(rng, sq, 6, 32)
+    k = _rand(rng, skv, 6, 32)
+    v = _rand(rng, skv, 6, 32)
+    out = attention(q, k, v)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_single_head():
+    rng = np.random.default_rng(7)
+    q, k, v = (_rand(rng, 16, 1, 8) for _ in range(3))
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention_ref(q, k, v), atol=2e-5
+    )
+
+
+def test_attention_large_magnitudes_stable():
+    """Online softmax must not overflow for large logits."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, 32, 2, 16) * 30.0
+    k = _rand(rng, 64, 2, 16) * 30.0
+    v = _rand(rng, 64, 2, 16)
+    out = np.asarray(attention(q, k, v))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), atol=1e-4, rtol=1e-4)
+
+
+def test_attention_identity_value_recovery():
+    """With one-hot attention (huge scale on matching keys) output ~= v row."""
+    s, h, dh = 8, 1, 8
+    q = jnp.eye(s, dh)[:, None, :] * 100.0
+    k = jnp.eye(s, dh)[:, None, :] * 100.0
+    rng = np.random.default_rng(0)
+    v = _rand(rng, s, h, dh)
+    out = attention(q, k, v)
+    np.testing.assert_allclose(out, v, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sq=st.sampled_from([4, 8, 16, 24, 32, 48, 96]),
+    skv=st.sampled_from([8, 16, 32, 64, 96, 288]),
+    h=st.sampled_from([1, 2, 6]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_hypothesis_sweep(sq, skv, h, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, sq, h, dh)
+    k = _rand(rng, skv, h, dh)
+    v = _rand(rng, skv, h, dh)
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention_ref(q, k, v), atol=3e-5, rtol=3e-5
+    )
+
+
+@pytest.mark.parametrize("s,d", [(8, 16), (32, 192), (96, 192), (256, 192)])
+def test_ln_modulate_matches_ref(s, d):
+    rng = np.random.default_rng(s + d)
+    x = _rand(rng, s, d)
+    shift = _rand(rng, d)
+    scale = _rand(rng, d)
+    out = ln_modulate(x, shift, scale)
+    expect = ref.modulate_ref(ref.layer_norm_ref(x), shift, scale)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([4, 8, 12, 32, 64, 100]),
+    d=st.sampled_from([8, 64, 192]),
+    seed=st.integers(0, 2**16),
+)
+def test_ln_modulate_hypothesis_sweep(s, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, s, d)
+    shift = _rand(rng, d)
+    scale = _rand(rng, d)
+    np.testing.assert_allclose(
+        ln_modulate(x, shift, scale),
+        ref.modulate_ref(ref.layer_norm_ref(x), shift, scale),
+        atol=2e-5,
+        rtol=2e-5,
+    )
+
+
+def test_ln_modulate_zero_mod_is_layernorm():
+    rng = np.random.default_rng(11)
+    x = _rand(rng, 16, 32)
+    z = jnp.zeros((32,))
+    np.testing.assert_allclose(
+        ln_modulate(x, z, z), ref.layer_norm_ref(x), atol=1e-5
+    )

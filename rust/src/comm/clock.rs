@@ -1,0 +1,79 @@
+//! Per-device virtual clocks for the deterministic event model.
+
+/// Virtual time per device, in seconds.
+#[derive(Debug, Clone)]
+pub struct Clocks {
+    t: Vec<f64>,
+}
+
+impl Clocks {
+    pub fn new(n: usize) -> Clocks {
+        Clocks { t: vec![0.0; n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn get(&self, dev: usize) -> f64 {
+        self.t[dev]
+    }
+
+    /// Charge `dt` seconds of local work to `dev`.
+    pub fn advance(&mut self, dev: usize, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative time charge");
+        self.t[dev] += dt;
+    }
+
+    /// Block `dev` until at least `time` (message arrival, dependency).
+    pub fn wait_until(&mut self, dev: usize, time: f64) {
+        if time > self.t[dev] {
+            self.t[dev] = time;
+        }
+    }
+
+    /// Barrier: every device in `group` reaches the max clock of the group.
+    pub fn sync(&mut self, group: &[usize]) -> f64 {
+        let m = group.iter().map(|&d| self.t[d]).fold(0.0, f64::max);
+        for &d in group {
+            self.t[d] = m;
+        }
+        m
+    }
+
+    /// Makespan: the time the slowest device finishes.
+    pub fn makespan(&self) -> f64 {
+        self.t.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn reset(&mut self) {
+        self.t.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_and_sync() {
+        let mut c = Clocks::new(4);
+        c.advance(0, 1.0);
+        c.advance(1, 3.0);
+        let m = c.sync(&[0, 1]);
+        assert_eq!(m, 3.0);
+        assert_eq!(c.get(0), 3.0);
+        assert_eq!(c.get(2), 0.0);
+        assert_eq!(c.makespan(), 3.0);
+    }
+
+    #[test]
+    fn wait_until_never_rewinds() {
+        let mut c = Clocks::new(1);
+        c.advance(0, 5.0);
+        c.wait_until(0, 2.0);
+        assert_eq!(c.get(0), 5.0);
+        c.wait_until(0, 7.0);
+        assert_eq!(c.get(0), 7.0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Collectives over the simulated cluster: data really moves, virtual time
+//! is charged per the link model.
+//!
+//! Algorithm-bandwidth factors (paper §4.1.3, nccl-tests PERFORMANCE.md):
+//! AllReduce 2(n-1)/n, AllGather/ReduceScatter (n-1)/n, AllToAll ~(n-1)/n
+//! per rank, ring P2P 1.
+
+use crate::config::hardware::ClusterSpec;
+use crate::comm::clock::Clocks;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// A recorded communication event (for accounting, tests, Table-1
+/// validation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommOp {
+    pub kind: &'static str,
+    pub group: Vec<usize>,
+    /// Payload bytes per rank.
+    pub bytes: usize,
+    /// Virtual seconds charged (group completion - start max).
+    pub time: f64,
+}
+
+/// Ledger of all communication performed in a run.
+#[derive(Debug, Default, Clone)]
+pub struct CommLedger {
+    pub ops: Vec<CommOp>,
+}
+
+impl CommLedger {
+    pub fn total_bytes(&self) -> usize {
+        self.ops.iter().map(|o| o.bytes * o.group.len().max(1)).sum()
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.ops.iter().map(|o| o.time).sum()
+    }
+
+    pub fn count(&self, kind: &str) -> usize {
+        self.ops.iter().filter(|o| o.kind == kind).count()
+    }
+
+    pub fn bytes_of(&self, kind: &str) -> usize {
+        self.ops
+            .iter()
+            .filter(|o| o.kind == kind)
+            .map(|o| o.bytes * o.group.len().max(1))
+            .sum()
+    }
+}
+
+/// Communicator: collectives + async P2P over a cluster, charging clocks.
+pub struct Communicator<'a> {
+    pub cluster: &'a ClusterSpec,
+    pub clocks: &'a mut Clocks,
+    pub ledger: CommLedger,
+}
+
+impl<'a> Communicator<'a> {
+    pub fn new(cluster: &'a ClusterSpec, clocks: &'a mut Clocks) -> Self {
+        Communicator { cluster, clocks, ledger: CommLedger::default() }
+    }
+
+    fn record(&mut self, kind: &'static str, group: &[usize], bytes: usize, time: f64) {
+        self.ledger.ops.push(CommOp { kind, group: group.to_vec(), bytes, time });
+    }
+
+    /// AllGather over `group`: each device contributes `parts[i]`; every
+    /// device receives the row-concatenation in group order.
+    pub fn all_gather(&mut self, group: &[usize], parts: &[Tensor]) -> Result<Vec<Tensor>> {
+        if group.len() != parts.len() {
+            return Err(Error::Comm("all_gather: group/parts mismatch".into()));
+        }
+        let bytes = parts.iter().map(|p| p.size_bytes()).max().unwrap_or(0);
+        let n = group.len();
+        let t = self
+            .cluster
+            .collective_time(group, bytes as f64, (n as f64 - 1.0) / n as f64 * n as f64);
+        // note: per-rank payload is `bytes`; total moved per rank is
+        // (n-1)/n * n * bytes = (n-1) * bytes.
+        let start = self.clocks.sync(group);
+        for &d in group {
+            self.clocks.wait_until(d, start + t);
+        }
+        self.record("all_gather", group, bytes, t);
+        let gathered = Tensor::concat_rows(parts)?;
+        Ok(vec![gathered; n])
+    }
+
+    /// AllReduce (sum) over `group`.
+    pub fn all_reduce(&mut self, group: &[usize], parts: &[Tensor]) -> Result<Vec<Tensor>> {
+        if group.len() != parts.len() {
+            return Err(Error::Comm("all_reduce: group/parts mismatch".into()));
+        }
+        let bytes = parts[0].size_bytes();
+        let n = group.len() as f64;
+        let t = self.cluster.collective_time(group, bytes as f64, 2.0 * (n - 1.0) / n);
+        let start = self.clocks.sync(group);
+        for &d in group {
+            self.clocks.wait_until(d, start + t);
+        }
+        self.record("all_reduce", group, bytes, t);
+        let mut acc = parts[0].clone();
+        for p in &parts[1..] {
+            acc = acc.add(p)?;
+        }
+        Ok(vec![acc; group.len()])
+    }
+
+    /// AllToAll over `group`: `mat[i][j]` is the chunk rank i sends to rank
+    /// j; returns per-rank received chunks (concatenated in sender order).
+    /// This is SP-Ulysses' head/sequence re-partitioning primitive.
+    pub fn all_to_all(&mut self, group: &[usize], mat: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+        let n = group.len();
+        if mat.len() != n || mat.iter().any(|row| row.len() != n) {
+            return Err(Error::Comm("all_to_all: matrix shape mismatch".into()));
+        }
+        // per-rank payload: everything it sends to others
+        let bytes: usize = mat[0].iter().enumerate().map(|(j, t)| if j == 0 { 0 } else { t.size_bytes() }).sum();
+        let t = self.cluster.collective_time(group, bytes as f64, 1.0);
+        let start = self.clocks.sync(group);
+        for &d in group {
+            self.clocks.wait_until(d, start + t);
+        }
+        self.record("all_to_all", group, bytes, t);
+        let mut out = Vec::with_capacity(n);
+        for j in 0..n {
+            let col: Vec<Tensor> = (0..n).map(|i| mat[i][j].clone()).collect();
+            out.push(Tensor::concat_rows(&col)?);
+        }
+        Ok(out)
+    }
+
+    /// Cost-only collective: charge virtual time + record the op without
+    /// moving data (used where the numeric result is computed elsewhere,
+    /// e.g. TP whose math is identical to serial, or layer-granular SP
+    /// whose gathered tensors are assembled directly).
+    pub fn charge(&mut self, kind: &'static str, group: &[usize], bytes: usize, algbw: f64) {
+        let t = self.cluster.collective_time(group, bytes as f64, algbw);
+        let start = self.clocks.sync(group);
+        for &d in group {
+            self.clocks.wait_until(d, start + t);
+        }
+        self.record(kind, group, bytes, t);
+    }
+
+    /// Blocking point-to-point send: the receiver's clock advances to
+    /// arrival.
+    pub fn p2p(&mut self, src: usize, dst: usize, data: Tensor) -> Tensor {
+        let t = self.cluster.p2p_time(src, dst, data.size_bytes() as f64);
+        let arrive = self.clocks.get(src) + t;
+        self.clocks.wait_until(dst, arrive);
+        self.record("p2p", &[src, dst], data.size_bytes(), t);
+        data
+    }
+
+    /// Asynchronous point-to-point send (PipeFusion's overlapped patch
+    /// transfer): returns (data, arrival_time); the receiver calls
+    /// `wait_until` only when it consumes the message, so transfer overlaps
+    /// with whatever the receiver is doing meanwhile.
+    pub fn p2p_async(&mut self, src: usize, dst: usize, data: Tensor) -> (Tensor, f64) {
+        let t = self.cluster.p2p_time(src, dst, data.size_bytes() as f64);
+        let arrive = self.clocks.get(src) + t;
+        self.record("p2p_async", &[src, dst], data.size_bytes(), t);
+        (data, arrive)
+    }
+
+    /// One ring hop for every rank simultaneously (SP-Ring's per-block K/V
+    /// rotation): rank i sends `blocks[i]` to rank (i+1) % n. Overlapped
+    /// with attention compute per the paper — callers charge compute
+    /// separately and take max.
+    pub fn ring_shift(&mut self, group: &[usize], blocks: Vec<Tensor>) -> Vec<Tensor> {
+        let n = group.len();
+        let bytes = blocks.iter().map(|b| b.size_bytes()).max().unwrap_or(0);
+        // slowest link in the ring bounds the step
+        let mut t = 0.0f64;
+        for i in 0..n {
+            let s = group[i];
+            let d = group[(i + 1) % n];
+            t = t.max(self.cluster.p2p_time(s, d, bytes as f64));
+        }
+        let start = self.clocks.sync(group);
+        for &d in group {
+            self.clocks.wait_until(d, start + t);
+        }
+        self.record("ring_shift", group, bytes, t);
+        let mut out = blocks;
+        out.rotate_right(1);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::l40_cluster;
+
+    fn mk(v: &[f32]) -> Tensor {
+        Tensor::new(vec![v.len(), 1], v.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn all_gather_data_and_time() {
+        let c = l40_cluster(1);
+        let mut clocks = Clocks::new(8);
+        let mut comm = Communicator::new(&c, &mut clocks);
+        let parts = vec![mk(&[1.0]), mk(&[2.0]), mk(&[3.0]), mk(&[4.0])];
+        let out = comm.all_gather(&[0, 1, 2, 3], &parts).unwrap();
+        assert_eq!(out.len(), 4);
+        for o in &out {
+            assert_eq!(o.data, vec![1.0, 2.0, 3.0, 4.0]);
+        }
+        assert!(comm.clocks.get(0) > 0.0);
+        assert_eq!(comm.clocks.get(0), comm.clocks.get(3));
+        assert_eq!(comm.ledger.count("all_gather"), 1);
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let c = l40_cluster(1);
+        let mut clocks = Clocks::new(8);
+        let mut comm = Communicator::new(&c, &mut clocks);
+        let parts = vec![mk(&[1.0, 2.0]), mk(&[10.0, 20.0])];
+        let out = comm.all_reduce(&[0, 1], &parts).unwrap();
+        assert_eq!(out[0].data, vec![11.0, 22.0]);
+        assert_eq!(out[1].data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        let c = l40_cluster(1);
+        let mut clocks = Clocks::new(8);
+        let mut comm = Communicator::new(&c, &mut clocks);
+        // rank i sends value 10*i+j to rank j
+        let mat: Vec<Vec<Tensor>> = (0..2)
+            .map(|i| (0..2).map(|j| mk(&[(10 * i + j) as f32])).collect())
+            .collect();
+        let out = comm.all_to_all(&[0, 1], &mat).unwrap();
+        assert_eq!(out[0].data, vec![0.0, 10.0]); // from ranks 0,1 to rank 0
+        assert_eq!(out[1].data, vec![1.0, 11.0]);
+    }
+
+    #[test]
+    fn async_p2p_overlaps() {
+        let c = l40_cluster(1);
+        let mut clocks = Clocks::new(8);
+        clocks.advance(0, 1.0);
+        let mut comm = Communicator::new(&c, &mut clocks);
+        let (data, arrive) = comm.p2p_async(0, 1, mk(&[5.0; 1000]));
+        assert!(arrive > 1.0);
+        // receiver busy past arrival: no extra wait when consuming
+        comm.clocks.advance(1, 10.0);
+        comm.clocks.wait_until(1, arrive);
+        assert_eq!(comm.clocks.get(1), 10.0);
+        assert_eq!(data.data[0], 5.0);
+    }
+
+    #[test]
+    fn ring_shift_rotates() {
+        let c = l40_cluster(1);
+        let mut clocks = Clocks::new(8);
+        let mut comm = Communicator::new(&c, &mut clocks);
+        let blocks = vec![mk(&[0.0]), mk(&[1.0]), mk(&[2.0])];
+        let out = comm.ring_shift(&[0, 1, 2], blocks);
+        // rank 1 now holds rank 0's block
+        assert_eq!(out[1].data, vec![0.0]);
+        assert_eq!(out[0].data, vec![2.0]);
+    }
+
+    #[test]
+    fn cross_node_costs_more() {
+        let c = l40_cluster(2);
+        let mut clocks = Clocks::new(16);
+        let mut comm = Communicator::new(&c, &mut clocks);
+        let parts: Vec<Tensor> = (0..2).map(|_| mk(&[0.0; 4096])).collect();
+        comm.all_gather(&[0, 1], &parts).unwrap();
+        let intra = comm.clocks.get(0);
+        let mut clocks2 = Clocks::new(16);
+        let mut comm2 = Communicator::new(&c, &mut clocks2);
+        comm2.all_gather(&[0, 8], &parts).unwrap();
+        assert!(comm2.clocks.get(0) > intra);
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated interconnect.
+//!
+//! Devices are *simulated*: data really moves (between per-device slots on
+//! the leader thread) and virtual time is charged according to the cluster's
+//! link model with NCCL-style algorithm-bandwidth factors (paper Table 1,
+//! nccl-tests PERFORMANCE.md). The event model is deterministic: per-device
+//! clocks advance monotonically; collectives synchronize the group clock;
+//! async P2P (PipeFusion/DistriFusion overlap) produces a completion time
+//! that the receiver observes only when it consumes the message.
+
+pub mod clock;
+pub mod collectives;
+
+pub use clock::Clocks;
+pub use collectives::{CommLedger, CommOp, Communicator};

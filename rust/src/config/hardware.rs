@@ -1,0 +1,256 @@
+//! Hardware cluster specifications for the performance model and the
+//! virtual-time interconnect simulator.
+//!
+//! Mirrors the paper's two testbeds:
+//! * `l40_cluster(n_nodes)` — nodes of 8×L40-48GB on PCIe Gen4 x16 (two
+//!   4-GPU groups bridged by the CPU QPI), nodes connected by 100 Gbps
+//!   Ethernet;
+//! * `a100_node()` — 8×A100-80GB, full NVLink (600 GB/s any-to-any).
+
+use crate::{Error, Result};
+
+/// GPU compute/memory spec.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Dense fp16/bf16 TFLOP/s actually achievable on DiT workloads
+    /// (sustained, not peak marketing numbers).
+    pub tflops: f64,
+    /// HBM/GDDR capacity in bytes.
+    pub mem_bytes: f64,
+}
+
+/// Classes of links between two devices, ordered by bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// NVLink (A100: 600 GB/s bidirectional any-to-any in the node).
+    NvLink,
+    /// PCIe Gen4 x16 within one CPU root complex.
+    Pcie,
+    /// PCIe crossing the CPU-interconnect (QPI/UPI) — the paper calls out
+    /// the All2All collapse across this hop.
+    PcieQpi,
+    /// Inter-node Ethernet.
+    Ethernet,
+}
+
+/// One homogeneous simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub gpu: GpuSpec,
+    pub n_gpus: usize,
+    pub gpus_per_node: usize,
+    /// GPUs per PCIe root complex (QPI boundary); == gpus_per_node when the
+    /// node has a single switch (NVLink systems).
+    pub gpus_per_numa: usize,
+    /// Unidirectional bandwidth in bytes/s per link kind.
+    pub bw: fn(LinkKind) -> f64,
+    /// Per-message latency in seconds per link kind.
+    pub lat: fn(LinkKind) -> f64,
+    pub has_nvlink: bool,
+}
+
+impl ClusterSpec {
+    pub fn node_of(&self, dev: usize) -> usize {
+        dev / self.gpus_per_node
+    }
+
+    pub fn numa_of(&self, dev: usize) -> usize {
+        dev / self.gpus_per_numa
+    }
+
+    /// Link class between two devices.
+    pub fn link(&self, a: usize, b: usize) -> LinkKind {
+        if self.node_of(a) != self.node_of(b) {
+            LinkKind::Ethernet
+        } else if self.has_nvlink {
+            LinkKind::NvLink
+        } else if self.numa_of(a) != self.numa_of(b) {
+            LinkKind::PcieQpi
+        } else {
+            LinkKind::Pcie
+        }
+    }
+
+    /// Time to move `bytes` point-to-point between devices a and b.
+    pub fn p2p_time(&self, a: usize, b: usize, bytes: f64) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let k = self.link(a, b);
+        (self.lat)(k) + bytes / (self.bw)(k)
+    }
+
+    /// The slowest link class inside a device group (collectives are
+    /// bottlenecked by it).
+    pub fn worst_link(&self, group: &[usize]) -> LinkKind {
+        let mut worst = LinkKind::NvLink;
+        for (i, &a) in group.iter().enumerate() {
+            for &b in &group[i + 1..] {
+                let k = self.link(a, b);
+                if link_rank(k) > link_rank(worst) {
+                    worst = k;
+                }
+            }
+        }
+        worst
+    }
+
+    /// Ring-based collective time for `bytes` per rank over `group`,
+    /// with the NCCL algorithm-bandwidth factor `algbw_factor(n)` applied
+    /// (2(n-1)/n for AllReduce, (n-1)/n for AllGather/ReduceScatter).
+    ///
+    /// When the group spans nodes, every rank's cross-node traffic funnels
+    /// through its node's single NIC, dividing the effective per-rank
+    /// Ethernet bandwidth — this is what collapses collective-heavy methods
+    /// from 8 to 16 GPUs in the paper's §5.2.1.
+    pub fn collective_time(&self, group: &[usize], bytes: f64, algbw_factor: f64) -> f64 {
+        let n = group.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        let k = self.worst_link(group);
+        let mut bw = (self.bw)(k);
+        if k == LinkKind::Ethernet {
+            // ranks per node sharing the NIC
+            let mut per_node = std::collections::BTreeMap::new();
+            for &d in group {
+                *per_node.entry(self.node_of(d)).or_insert(0usize) += 1;
+            }
+            let sharing = per_node.values().copied().max().unwrap_or(1) as f64;
+            bw /= sharing;
+        }
+        let steps = (n - 1) as f64;
+        (self.lat)(k) * steps + bytes * algbw_factor / bw
+    }
+
+    pub fn by_name(name: &str) -> Result<ClusterSpec> {
+        match name {
+            "l40x8" => Ok(l40_cluster(1)),
+            "l40x16" => Ok(l40_cluster(2)),
+            "a100x8" => Ok(a100_node()),
+            _ => Err(Error::config(format!(
+                "unknown cluster '{name}' (l40x8, l40x16, a100x8)"
+            ))),
+        }
+    }
+}
+
+fn link_rank(k: LinkKind) -> u8 {
+    match k {
+        LinkKind::NvLink => 0,
+        LinkKind::Pcie => 1,
+        LinkKind::PcieQpi => 2,
+        LinkKind::Ethernet => 3,
+    }
+}
+
+fn l40_bw(k: LinkKind) -> f64 {
+    match k {
+        LinkKind::NvLink => unreachable!("L40 nodes have no NVLink"),
+        LinkKind::Pcie => 24e9,     // PCIe Gen4 x16 ~ 24 GB/s effective
+        LinkKind::PcieQpi => 12e9,  // QPI-crossing penalty (paper §4.1.4)
+        LinkKind::Ethernet => 10e9, // 100 Gbps ~ 10 GB/s effective (RoCE-less)
+    }
+}
+
+fn l40_lat(k: LinkKind) -> f64 {
+    match k {
+        LinkKind::NvLink => unreachable!(),
+        LinkKind::Pcie => 8e-6,
+        LinkKind::PcieQpi => 12e-6,
+        LinkKind::Ethernet => 50e-6,
+    }
+}
+
+fn a100_bw(k: LinkKind) -> f64 {
+    match k {
+        LinkKind::NvLink => 250e9, // 600 GB/s bidir marketing ~ 250 GB/s algo
+        LinkKind::Pcie => 24e9,
+        LinkKind::PcieQpi => 12e9,
+        LinkKind::Ethernet => 10e9,
+    }
+}
+
+fn a100_lat(k: LinkKind) -> f64 {
+    match k {
+        LinkKind::NvLink => 3e-6,
+        LinkKind::Pcie => 8e-6,
+        LinkKind::PcieQpi => 12e-6,
+        LinkKind::Ethernet => 50e-6,
+    }
+}
+
+/// `n_nodes` nodes of 8×L40 (PCIe Gen4, two NUMA domains of 4), 100 Gbps
+/// Ethernet between nodes.
+pub fn l40_cluster(n_nodes: usize) -> ClusterSpec {
+    ClusterSpec {
+        name: format!("l40x{}", 8 * n_nodes),
+        gpu: GpuSpec { name: "L40-48GB".into(), tflops: 90.0, mem_bytes: 48e9 },
+        n_gpus: 8 * n_nodes,
+        gpus_per_node: 8,
+        gpus_per_numa: 4,
+        bw: l40_bw,
+        lat: l40_lat,
+        has_nvlink: false,
+    }
+}
+
+/// One node of 8×A100-80GB with NVLink.
+pub fn a100_node() -> ClusterSpec {
+    ClusterSpec {
+        name: "a100x8".into(),
+        gpu: GpuSpec { name: "A100-80GB".into(), tflops: 250.0, mem_bytes: 80e9 },
+        n_gpus: 8,
+        gpus_per_node: 8,
+        gpus_per_numa: 8,
+        bw: a100_bw,
+        lat: a100_lat,
+        has_nvlink: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l40_topology() {
+        let c = l40_cluster(2);
+        assert_eq!(c.n_gpus, 16);
+        assert_eq!(c.link(0, 1), LinkKind::Pcie);
+        assert_eq!(c.link(0, 5), LinkKind::PcieQpi);
+        assert_eq!(c.link(0, 8), LinkKind::Ethernet);
+        assert_eq!(c.link(9, 15), LinkKind::PcieQpi);
+    }
+
+    #[test]
+    fn a100_topology() {
+        let c = a100_node();
+        assert_eq!(c.link(0, 7), LinkKind::NvLink);
+    }
+
+    #[test]
+    fn p2p_monotone_in_bytes() {
+        let c = l40_cluster(1);
+        assert!(c.p2p_time(0, 1, 2e6) > c.p2p_time(0, 1, 1e6));
+        assert_eq!(c.p2p_time(3, 3, 1e9), 0.0);
+    }
+
+    #[test]
+    fn worst_link_dominates_collective() {
+        let c = l40_cluster(2);
+        let intra = c.collective_time(&[0, 1, 2, 3], 1e6, 1.0);
+        let cross = c.collective_time(&[0, 1, 8, 9], 1e6, 1.0);
+        assert!(cross > intra);
+    }
+
+    #[test]
+    fn nvlink_much_faster_than_ethernet() {
+        let a = a100_node();
+        let l = l40_cluster(2);
+        let b = 100e6;
+        assert!(a.p2p_time(0, 1, b) * 10.0 < l.p2p_time(0, 8, b));
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration system: model specs (the paper's five DiTs + the runnable
+//! tiny family), hardware cluster specs (2×8×L40 PCIe/Ethernet, 8×A100
+//! NVLink), and the parallel configuration `cfg × pipefusion × ulysses ×
+//! ring` with the paper's divisibility constraints.
+
+pub mod hardware;
+pub mod model;
+pub mod parallel;
+
+pub use hardware::{ClusterSpec, GpuSpec, LinkKind};
+pub use model::{BlockVariant, ModelSpec};
+pub use parallel::ParallelConfig;

@@ -1,0 +1,293 @@
+//! Model specifications.
+//!
+//! Two families:
+//! * `tiny-*` — the runnable models whose AOT artifacts live in
+//!   `artifacts/` (executed through PJRT by the numeric engine);
+//! * the paper's five evaluation models (Pixart, SD3, Flux.1, HunyuanDiT,
+//!   CogVideoX) — analytic specs with the real dimensions, consumed by the
+//!   performance model that regenerates the paper's figures.
+
+use crate::{Error, Result};
+
+/// DiT block architecture variants (paper Fig 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BlockVariant {
+    /// adaLN-Zero conditioning (original DiT).
+    AdaLn,
+    /// Cross-attention conditioning (Pixart, HunyuanDiT).
+    Cross,
+    /// MM-DiT in-context conditioning (SD3, Flux.1, CogVideoX).
+    MmDit,
+    /// U-ViT-style long skip connections (HunyuanDiT topology).
+    Skip,
+}
+
+impl BlockVariant {
+    pub fn key(&self) -> &'static str {
+        match self {
+            BlockVariant::AdaLn => "adaln",
+            BlockVariant::Cross => "cross",
+            BlockVariant::MmDit => "mmdit",
+            BlockVariant::Skip => "skip",
+        }
+    }
+
+    /// Does the full attention sequence include the text tokens?
+    pub fn in_context_text(&self) -> bool {
+        matches!(self, BlockVariant::MmDit)
+    }
+}
+
+/// A DiT model: either runnable (tiny) or analytic (paper-scale).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub hidden: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub layers: usize,
+    pub mlp_ratio: usize,
+    pub variant: BlockVariant,
+    /// Latent channels.
+    pub c_latent: usize,
+    /// Text sequence length (in-context tokens or cross-attn memory).
+    pub s_txt: usize,
+    /// Parameter count of the transformer (for memory model), in units.
+    pub params: f64,
+    /// Text-encoder bytes on disk (Table 2).
+    pub text_encoder_bytes: f64,
+    /// VAE bytes on disk (Table 2).
+    pub vae_bytes: f64,
+    /// Whether the model uses classifier-free guidance (Flux.1 does not).
+    pub uses_cfg: bool,
+    /// True for the runnable tiny family (artifacts exist).
+    pub runnable: bool,
+    /// Video models: frames per clip (1 for images).
+    pub frames: usize,
+    /// Diffusion steps of the paper's benchmark scheduler.
+    pub default_steps: usize,
+    pub scheduler: &'static str,
+}
+
+impl ModelSpec {
+    /// Image-token sequence length for a generation at `px` resolution
+    /// (square). DiTs patchify the 8×-downsampled latent with patch size 2:
+    /// tokens = (px/16)^2 per frame.
+    pub fn seq_len(&self, px: usize) -> usize {
+        (px / 16) * (px / 16) * self.frames
+    }
+
+    /// Total attention sequence (image + in-context text).
+    pub fn attn_seq_len(&self, px: usize) -> usize {
+        self.seq_len(px) + if self.variant.in_context_text() { self.s_txt } else { 0 }
+    }
+
+    /// Transformer parameter bytes (fp16 on GPUs, as deployed).
+    pub fn param_bytes(&self) -> f64 {
+        self.params * 2.0
+    }
+
+    /// FLOPs of one denoising forward at resolution `px` (per image in the
+    /// batch). Standard transformer accounting: 2*P*S for the dense part +
+    /// attention 4*S^2*hidden per layer (QK^T and PV, fwd only, x2 MACs).
+    pub fn step_flops(&self, px: usize) -> f64 {
+        let s = self.attn_seq_len(px) as f64;
+        let h = self.hidden as f64;
+        let dense = 2.0 * self.params * s;
+        let attn = 4.0 * s * s * h * self.layers as f64;
+        dense + attn
+    }
+
+    /// Per-layer K+V bytes for the full sequence (fp16) — the unit of the
+    /// paper's Table-1 memory analysis.
+    pub fn kv_bytes_per_layer(&self, px: usize) -> f64 {
+        2.0 * self.attn_seq_len(px) as f64 * self.hidden as f64 * 2.0
+    }
+
+    /// Activation bytes (hidden state for the sequence, fp16).
+    pub fn act_bytes(&self, px: usize) -> f64 {
+        self.attn_seq_len(px) as f64 * self.hidden as f64 * 2.0
+    }
+
+    pub fn by_name(name: &str) -> Result<ModelSpec> {
+        all_models()
+            .into_iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "unknown model '{name}' (available: {})",
+                    all_models().iter().map(|m| m.name.clone()).collect::<Vec<_>>().join(", ")
+                ))
+            })
+    }
+}
+
+fn base(name: &str, variant: BlockVariant) -> ModelSpec {
+    ModelSpec {
+        name: name.into(),
+        hidden: 0,
+        heads: 0,
+        head_dim: 0,
+        layers: 0,
+        mlp_ratio: 4,
+        variant,
+        c_latent: 4,
+        s_txt: 0,
+        params: 0.0,
+        text_encoder_bytes: 0.0,
+        vae_bytes: 320e6,
+        uses_cfg: true,
+        runnable: false,
+        frames: 1,
+        default_steps: 20,
+        scheduler: "dpm",
+    }
+}
+
+/// The paper's five evaluation models (Table 2 dims) + the tiny family.
+pub fn all_models() -> Vec<ModelSpec> {
+    let mut v = Vec::new();
+
+    // Pixart-alpha/sigma: 0.6B, d=1152, 28 layers, 16 heads, cross-attn.
+    let mut m = base("pixart", BlockVariant::Cross);
+    m.hidden = 1152;
+    m.heads = 16;
+    m.head_dim = 72;
+    m.layers = 28;
+    m.s_txt = 120;
+    m.params = 0.6e9;
+    m.text_encoder_bytes = 18e9;
+    m.scheduler = "dpm";
+    v.push(m);
+
+    // SD3-medium: 2B MM-DiT, d=1536, 24 layers, 24 heads.
+    let mut m = base("sd3", BlockVariant::MmDit);
+    m.hidden = 1536;
+    m.heads = 24;
+    m.head_dim = 64;
+    m.layers = 24;
+    m.s_txt = 160; // 154 CLIP+T5 tokens, padded to an SP-divisible multiple
+    m.params = 2.0e9;
+    m.text_encoder_bytes = 19e9;
+    m.scheduler = "flow_match";
+    v.push(m);
+
+    // Flux.1-dev: 12B MM-DiT (19 dual + 38 single blocks ~ 57), d=3072,
+    // 24 heads; no CFG.
+    let mut m = base("flux", BlockVariant::MmDit);
+    m.hidden = 3072;
+    m.heads = 24;
+    m.head_dim = 128;
+    m.layers = 57;
+    m.s_txt = 512;
+    m.params = 12.0e9;
+    m.text_encoder_bytes = 9.1e9;
+    m.uses_cfg = false;
+    m.default_steps = 28;
+    m.scheduler = "flow_match";
+    v.push(m);
+
+    // HunyuanDiT: 1.5B, d=1408, 40 blocks with long skip connections.
+    let mut m = base("hunyuan", BlockVariant::Skip);
+    m.hidden = 1408;
+    m.heads = 16;
+    m.head_dim = 88;
+    m.layers = 40;
+    m.s_txt = 256;
+    m.params = 1.5e9;
+    m.text_encoder_bytes = 7.7e9;
+    m.default_steps = 50;
+    m.scheduler = "dpm";
+    v.push(m);
+
+    // CogVideoX-5B: video MM-DiT, d=3072, 30 heads, 42 layers;
+    // 49 frames at 480x720 (13 latent frames after 4x temporal compress).
+    let mut m = base("cogvideox", BlockVariant::MmDit);
+    m.hidden = 3072;
+    m.heads = 30;
+    m.head_dim = 102;
+    m.layers = 42;
+    m.s_txt = 226;
+    m.params = 5.0e9;
+    m.text_encoder_bytes = 8.9e9;
+    m.vae_bytes = 412e6;
+    m.frames = 13;
+    m.default_steps = 50;
+    m.scheduler = "ddim";
+    v.push(m);
+
+    // Runnable tiny family (matches python/compile/configs.py TINY).
+    for (suffix, variant) in [
+        ("adaln", BlockVariant::AdaLn),
+        ("cross", BlockVariant::Cross),
+        ("mmdit", BlockVariant::MmDit),
+        ("skip", BlockVariant::Skip),
+    ] {
+        let mut m = base(&format!("tiny-{suffix}"), variant);
+        m.hidden = 192;
+        m.heads = 6;
+        m.head_dim = 32;
+        m.layers = 8;
+        m.s_txt = 32;
+        // ~ per-layer param estimate x layers (exact value irrelevant for
+        // the tiny family; the numeric path uses real weights).
+        m.params = match variant {
+            BlockVariant::MmDit => 10.6e6,
+            BlockVariant::Cross => 6.5e6,
+            _ => 5.5e6,
+        };
+        m.text_encoder_bytes = (256 * 192 * 4) as f64;
+        m.vae_bytes = 80e3;
+        m.runnable = true;
+        m.default_steps = 8;
+        m.scheduler = "ddim";
+        v.push(m);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(ModelSpec::by_name("pixart").is_ok());
+        assert!(ModelSpec::by_name("tiny-mmdit").unwrap().runnable);
+        assert!(ModelSpec::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn seq_lengths_match_paper() {
+        let pixart = ModelSpec::by_name("pixart").unwrap();
+        // Paper §3: 1024px -> 4K tokens; 4096px -> 64K image tokens.
+        assert_eq!(pixart.seq_len(1024), 4096);
+        assert_eq!(pixart.seq_len(4096), 65536);
+        let flux = ModelSpec::by_name("flux").unwrap();
+        assert!(flux.variant.in_context_text());
+        assert_eq!(flux.attn_seq_len(1024), 4096 + 512);
+    }
+
+    #[test]
+    fn flops_scale_superlinearly_with_resolution() {
+        let m = ModelSpec::by_name("sd3").unwrap();
+        let f1 = m.step_flops(1024);
+        let f2 = m.step_flops(2048);
+        // 4x tokens -> >4x flops (attention quadratic term).
+        assert!(f2 > 4.0 * f1);
+    }
+
+    #[test]
+    fn flux_has_no_cfg() {
+        assert!(!ModelSpec::by_name("flux").unwrap().uses_cfg);
+        assert!(ModelSpec::by_name("sd3").unwrap().uses_cfg);
+    }
+
+    #[test]
+    fn video_model_sequence() {
+        let m = ModelSpec::by_name("cogvideox").unwrap();
+        // 480x720 -> (30*45) tokens/frame x 13 latent frames ~ 17K (paper §3)
+        let tokens = (480 / 16) * (720 / 16) * m.frames;
+        assert!((15_000..20_000).contains(&tokens), "{tokens}");
+    }
+}

@@ -1,0 +1,266 @@
+//! The hybrid parallel configuration: `cfg × pipefusion × ulysses × ring`
+//! (paper §4.1.4), with validation of the paper's divisibility constraints
+//! (heads % ulysses, sequence % shards, layers % pipefusion, CFG usability).
+
+use crate::config::model::{BlockVariant, ModelSpec};
+use crate::{Error, Result};
+
+/// Degrees of each parallel dimension. The world size is their product.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelConfig {
+    /// CFG (inter-image) parallel degree: 1 or 2.
+    pub cfg: usize,
+    /// PipeFusion (patch-level pipeline) degree.
+    pub pipefusion: usize,
+    /// SP-Ulysses degree.
+    pub ulysses: usize,
+    /// SP-Ring degree.
+    pub ring: usize,
+    /// PipeFusion patch count M (>= pipefusion when pipefusion > 1).
+    pub patches: usize,
+    /// Synchronous warmup diffusion steps before pipelining (paper: 1).
+    pub warmup_steps: usize,
+}
+
+impl ParallelConfig {
+    pub fn serial() -> Self {
+        ParallelConfig { cfg: 1, pipefusion: 1, ulysses: 1, ring: 1, patches: 1, warmup_steps: 0 }
+    }
+
+    pub fn new(cfg: usize, pipefusion: usize, ulysses: usize, ring: usize) -> Self {
+        let patches = if pipefusion > 1 { pipefusion } else { 1 };
+        ParallelConfig { cfg, pipefusion, ulysses, ring, patches, warmup_steps: 1 }
+    }
+
+    pub fn with_patches(mut self, m: usize) -> Self {
+        self.patches = m;
+        self
+    }
+
+    pub fn world(&self) -> usize {
+        self.cfg * self.pipefusion * self.ulysses * self.ring
+    }
+
+    pub fn sp_degree(&self) -> usize {
+        self.ulysses * self.ring
+    }
+
+    /// Total sequence shards per image: patches × sp (each patch is further
+    /// split across the SP group — paper Fig 7).
+    pub fn seq_shards(&self) -> usize {
+        self.patches * self.sp_degree()
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.world() == 1
+    }
+
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if self.cfg > 1 {
+            parts.push(format!("cfg={}", self.cfg));
+        }
+        if self.pipefusion > 1 {
+            parts.push(format!("pipefusion={}(M={})", self.pipefusion, self.patches));
+        }
+        if self.ulysses > 1 {
+            parts.push(format!("ulysses={}", self.ulysses));
+        }
+        if self.ring > 1 {
+            parts.push(format!("ring={}", self.ring));
+        }
+        if parts.is_empty() {
+            "serial".into()
+        } else {
+            parts.join(",")
+        }
+    }
+
+    /// Validate against a model + sequence length (paper constraints):
+    /// * `cfg ∈ {1,2}`, and 2 only when the model uses CFG;
+    /// * heads divisible by ulysses (SP-Ulysses head partitioning);
+    /// * layers divisible by pipefusion;
+    /// * image sequence divisible by patches × sp;
+    /// * text sequence divisible by sp for in-context models (Fig 3);
+    /// * PipeFusion needs M >= pipefusion.
+    pub fn validate(&self, model: &ModelSpec, s_img: usize) -> Result<()> {
+        if self.cfg > 2 || self.cfg == 0 {
+            return Err(Error::config(format!("cfg degree must be 1 or 2, got {}", self.cfg)));
+        }
+        if self.cfg == 2 && !model.uses_cfg {
+            return Err(Error::config(format!(
+                "model '{}' does not use CFG; cfg parallel not applicable",
+                model.name
+            )));
+        }
+        if [self.pipefusion, self.ulysses, self.ring, self.patches].contains(&0) {
+            return Err(Error::config("parallel degrees must be >= 1"));
+        }
+        if model.heads % self.ulysses != 0 {
+            return Err(Error::config(format!(
+                "heads ({}) not divisible by ulysses degree {}",
+                model.heads, self.ulysses
+            )));
+        }
+        // The runnable tiny family needs exact stage shapes (AOT grid);
+        // paper-scale analytic models tolerate uneven stages (real xDiT
+        // balances them) as long as there is at least one layer per stage.
+        if model.runnable && model.layers % self.pipefusion != 0 {
+            return Err(Error::config(format!(
+                "layers ({}) not divisible by pipefusion degree {}",
+                model.layers, self.pipefusion
+            )));
+        }
+        if self.pipefusion > model.layers {
+            return Err(Error::config(format!(
+                "pipefusion degree {} exceeds layer count {}",
+                self.pipefusion, model.layers
+            )));
+        }
+        if self.pipefusion > 1 && self.patches < self.pipefusion {
+            return Err(Error::config(format!(
+                "patches (M={}) must be >= pipefusion degree {}",
+                self.patches, self.pipefusion
+            )));
+        }
+        if self.pipefusion > 1 && model.variant == BlockVariant::Skip && self.pipefusion > 2 {
+            return Err(Error::config(
+                "skip-connection models support pipefusion degree <= 2 \
+                 (enc/dec stage split)",
+            ));
+        }
+        let shards = self.seq_shards();
+        if s_img % shards != 0 {
+            return Err(Error::config(format!(
+                "image sequence {s_img} not divisible by patches*sp = {shards}"
+            )));
+        }
+        if model.variant.in_context_text() && model.s_txt % self.sp_degree() != 0 {
+            return Err(Error::config(format!(
+                "text sequence {} not divisible by sp degree {} (in-context split)",
+                model.s_txt,
+                self.sp_degree()
+            )));
+        }
+        // SP-Ring needs at least 1 KV block per rank.
+        if self.ring > 1 && s_img / shards == 0 {
+            return Err(Error::config("ring degree too large for sequence"));
+        }
+        Ok(())
+    }
+
+    /// Enumerate all valid configs for a world size (used by the router and
+    /// the hybrid-sweep figures).
+    pub fn enumerate(world: usize, model: &ModelSpec, s_img: usize) -> Vec<ParallelConfig> {
+        let mut out = Vec::new();
+        for cfg in [1, 2] {
+            if world % cfg != 0 {
+                continue;
+            }
+            let rest = world / cfg;
+            for pf in divisors(rest) {
+                let rest2 = rest / pf;
+                for ul in divisors(rest2) {
+                    let ring = rest2 / ul;
+                    // try a few patch counts for pipefusion
+                    let m_opts: &[usize] = if pf > 1 { &[0, 2] } else { &[0] };
+                    for &mul in m_opts {
+                        let mut c = ParallelConfig::new(cfg, pf, ul, ring);
+                        if mul > 0 {
+                            c = c.with_patches(pf * mul);
+                        }
+                        if c.validate(model, s_img).is_ok() && !out.contains(&c) {
+                            out.push(c);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::ModelSpec;
+
+    fn tiny() -> ModelSpec {
+        ModelSpec::by_name("tiny-mmdit").unwrap()
+    }
+
+    #[test]
+    fn world_product() {
+        let c = ParallelConfig::new(2, 2, 2, 1);
+        assert_eq!(c.world(), 8);
+        assert_eq!(c.sp_degree(), 2);
+        assert_eq!(c.seq_shards(), 4);
+    }
+
+    #[test]
+    fn validate_divisibility() {
+        let m = tiny(); // heads=6, layers=8, s_txt=32
+        assert!(ParallelConfig::new(1, 1, 2, 1).validate(&m, 256).is_ok());
+        assert!(ParallelConfig::new(1, 1, 4, 1).validate(&m, 256).is_err()); // 6 % 4
+        assert!(ParallelConfig::new(1, 1, 3, 1).validate(&m, 256).is_err()); // 256 % 3
+        assert!(ParallelConfig::new(1, 3, 1, 1).validate(&m, 256).is_err()); // 8 % 3
+        assert!(ParallelConfig::new(1, 2, 1, 1).validate(&m, 256).is_ok());
+    }
+
+    #[test]
+    fn cfg_rules() {
+        let mut m = tiny();
+        assert!(ParallelConfig::new(2, 1, 1, 1).validate(&m, 256).is_ok());
+        m.uses_cfg = false; // Flux-like
+        assert!(ParallelConfig::new(2, 1, 1, 1).validate(&m, 256).is_err());
+    }
+
+    #[test]
+    fn paper_constraints_sd3_ulysses16() {
+        // Paper §5.2.1: SP-Ulysses degree 16 impossible on SD3 (24 heads).
+        let sd3 = ModelSpec::by_name("sd3").unwrap();
+        let c = ParallelConfig::new(1, 1, 16, 1);
+        assert!(c.validate(&sd3, sd3.seq_len(1024)).is_err());
+        let c8 = ParallelConfig::new(2, 1, 8, 1);
+        assert!(c8.validate(&sd3, sd3.seq_len(1024)).is_ok());
+    }
+
+    #[test]
+    fn paper_constraints_cogvideo_ulysses4() {
+        // Paper §5.2.1: heads=30 forbids ulysses=4 on CogVideoX.
+        let m = ModelSpec::by_name("cogvideox").unwrap();
+        assert!(ParallelConfig::new(1, 1, 4, 1).validate(&m, 17550).is_err());
+        assert!(ParallelConfig::new(1, 1, 2, 1).validate(&m, 17550).is_ok());
+    }
+
+    #[test]
+    fn skip_model_pipe_limit() {
+        let m = ModelSpec::by_name("tiny-skip").unwrap();
+        assert!(ParallelConfig::new(1, 2, 1, 1).validate(&m, 256).is_ok());
+        assert!(ParallelConfig::new(1, 4, 1, 1).validate(&m, 256).is_err());
+    }
+
+    #[test]
+    fn enumerate_yields_valid_unique() {
+        let m = tiny();
+        let all = ParallelConfig::enumerate(8, &m, 256);
+        assert!(!all.is_empty());
+        for c in &all {
+            assert_eq!(c.world(), 8);
+            c.validate(&m, 256).unwrap();
+        }
+        // contains the paper's favourite: cfg=2 x pipefusion=4
+        assert!(all.iter().any(|c| c.cfg == 2 && c.pipefusion == 4));
+    }
+
+    #[test]
+    fn patches_at_least_pipe() {
+        let m = tiny();
+        let c = ParallelConfig::new(1, 4, 1, 1).with_patches(2);
+        assert!(c.validate(&m, 256).is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Compatibility batcher: groups queued requests that can share compiled
+//! shapes (same variant / steps / CFG usage) into batches up to
+//! `max_batch`, preserving arrival order within a group.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::request::GenRequest;
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<GenRequest>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+pub struct Batcher {
+    pub max_batch: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Batcher {
+        Batcher { max_batch: max_batch.max(1) }
+    }
+
+    /// Partition a drained request window into compatible batches.
+    /// Returns batches in order of the earliest request they contain.
+    pub fn form(&self, window: Vec<GenRequest>) -> Vec<Batch> {
+        let mut groups: BTreeMap<String, Vec<GenRequest>> = BTreeMap::new();
+        let mut order: Vec<(u64, String)> = Vec::new();
+        for r in window {
+            let key = format!("{:?}", r.batch_key());
+            if !groups.contains_key(&key) {
+                order.push((r.id, key.clone()));
+            }
+            groups.entry(key).or_default().push(r);
+        }
+        order.sort_by_key(|(id, _)| *id);
+        let mut out = Vec::new();
+        for (_, key) in order {
+            let mut reqs = groups.remove(&key).unwrap();
+            while !reqs.is_empty() {
+                let take = reqs.len().min(self.max_batch);
+                out.push(Batch { requests: reqs.drain(..take).collect() });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::BlockVariant;
+    use crate::testing;
+
+    fn req(id: u64, variant: BlockVariant, steps: usize) -> GenRequest {
+        let mut r = GenRequest::new(id, "p");
+        r.variant = variant;
+        r.steps = steps;
+        r
+    }
+
+    #[test]
+    fn groups_by_compatibility() {
+        let b = Batcher::new(8);
+        let window = vec![
+            req(0, BlockVariant::AdaLn, 4),
+            req(1, BlockVariant::MmDit, 4),
+            req(2, BlockVariant::AdaLn, 4),
+            req(3, BlockVariant::AdaLn, 8),
+        ];
+        let batches = b.form(window);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn splits_at_max_batch() {
+        let b = Batcher::new(2);
+        let window = (0..5).map(|i| req(i, BlockVariant::AdaLn, 4)).collect();
+        let batches = b.form(window);
+        assert_eq!(batches.iter().map(Batch::len).collect::<Vec<_>>(), vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn prop_batches_never_mix_incompatible_and_conserve() {
+        testing::check("batcher invariants", 40, |rng| {
+            let b = Batcher::new(1 + rng.below(4));
+            let n = rng.below(16);
+            let variants = [BlockVariant::AdaLn, BlockVariant::MmDit, BlockVariant::Cross];
+            let window: Vec<GenRequest> = (0..n as u64)
+                .map(|i| req(i, *rng.pick(&variants), *rng.pick(&[4usize, 8])))
+                .collect();
+            let keys: Vec<_> = window.iter().map(|r| (r.id, r.batch_key())).collect();
+            let batches = b.form(window);
+            let mut seen = std::collections::BTreeSet::new();
+            for batch in &batches {
+                if batch.is_empty() || batch.len() > b.max_batch {
+                    return Err(format!("bad batch size {}", batch.len()));
+                }
+                let k0 = batch.requests[0].batch_key();
+                for r in &batch.requests {
+                    if r.batch_key() != k0 {
+                        return Err("mixed batch".into());
+                    }
+                    if !seen.insert(r.id) {
+                        return Err(format!("duplicated request {}", r.id));
+                    }
+                }
+            }
+            if seen.len() != keys.len() {
+                return Err(format!("lost requests: {} of {}", seen.len(), keys.len()));
+            }
+            Ok(())
+        });
+    }
+}

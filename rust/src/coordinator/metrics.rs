@@ -1,0 +1,123 @@
+//! Serving metrics: latency histogram (log buckets), throughput counters,
+//! per-stage timing.
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// log2 buckets over seconds: (-inf,1ms], (1,2ms], ... up to >= ~1000s
+    buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { buckets: vec![0; 32], count: 0, sum: 0.0, max: 0.0 }
+    }
+
+    fn bucket(v: f64) -> usize {
+        let ms = (v * 1e3).max(1e-9);
+        (ms.log2().floor().max(0.0) as usize).min(31)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.buckets[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from the log buckets (upper bound of the
+    /// containing bucket).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            acc += b;
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64 / 1e3;
+            }
+        }
+        self.max
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Engine metrics snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+    pub served: u64,
+    pub rejected: u64,
+    /// Total simulated device-seconds of model compute.
+    pub model_seconds: f64,
+    /// Virtual end-to-end seconds of the serving run.
+    pub horizon: f64,
+}
+
+impl Metrics {
+    pub fn throughput(&self) -> f64 {
+        if self.horizon > 0.0 {
+            self.served as f64 / self.horizon
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "served={} rejected={} throughput={:.2} img/s  latency mean={:.3}s p50={:.3}s p90={:.3}s max={:.3}s",
+            self.served,
+            self.rejected,
+            self.throughput(),
+            self.latency.mean(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.9),
+            self.latency.max,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let mut h = Histogram::new();
+        for v in [0.001, 0.002, 0.004, 0.008, 0.1, 1.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count, 6);
+        assert!(h.mean() > 0.0);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert_eq!(h.max, 1.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut m = Metrics::default();
+        m.served = 10;
+        m.horizon = 5.0;
+        assert!((m.throughput() - 2.0).abs() < 1e-9);
+    }
+}

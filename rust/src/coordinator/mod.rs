@@ -1,0 +1,22 @@
+//! The serving coordinator: request queue with backpressure, compatibility
+//! batcher, the §5.2.4 routing policy (pick the hybrid parallel config for
+//! the hardware + model at hand), the generation engine, and metrics.
+//!
+//! Rust owns the event loop and process topology; PJRT execution is pinned
+//! to the leader thread (the `xla` client is `Rc`-based), so the engine
+//! drains the queue on the leader while producers submit from any thread
+//! through the `RequestQueue`'s mpsc front.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod router;
+
+pub use batcher::Batcher;
+pub use engine::Engine;
+pub use metrics::Metrics;
+pub use queue::RequestQueue;
+pub use request::{GenRequest, GenResponse, RequestId};
+pub use router::route;

@@ -1,0 +1,187 @@
+//! Bounded FIFO request queue with backpressure.
+//!
+//! Producers (API threads) push through a thread-safe handle; the leader
+//! drains. Capacity bounds memory; a full queue rejects with `Backpressure`
+//! so callers can shed or retry — the paper's engine must keep latency
+//! bounded rather than buffer unboundedly.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::coordinator::request::GenRequest;
+
+#[derive(Debug)]
+pub enum PushError {
+    /// Queue at capacity.
+    Backpressure(GenRequest),
+    /// Queue closed for shutdown.
+    Closed(GenRequest),
+}
+
+struct Inner {
+    q: VecDeque<GenRequest>,
+    closed: bool,
+    accepted: u64,
+    rejected: u64,
+}
+
+/// Thread-safe bounded FIFO.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    notify: Condvar,
+    pub capacity: usize,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                closed: false,
+                accepted: 0,
+                rejected: 0,
+            }),
+            notify: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking push; fails with backpressure when full.
+    pub fn push(&self, req: GenRequest) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(req));
+        }
+        if g.q.len() >= self.capacity {
+            g.rejected += 1;
+            return Err(PushError::Backpressure(req));
+        }
+        g.q.push_back(req);
+        g.accepted += 1;
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Pop one request; `None` when closed and drained.
+    pub fn pop(&self) -> Option<GenRequest> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.q.pop_front() {
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.notify.wait(g).unwrap();
+        }
+    }
+
+    /// Drain up to `max` requests without blocking (batch window).
+    pub fn drain_upto(&self, max: usize) -> Vec<GenRequest> {
+        let mut g = self.inner.lock().unwrap();
+        let n = max.min(g.q.len());
+        g.q.drain(..n).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.notify.notify_all();
+    }
+
+    /// (accepted, rejected) counters for conservation checks.
+    pub fn counters(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.accepted, g.rejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(10);
+        for i in 0..5 {
+            q.push(GenRequest::new(i, "p")).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap().id, i);
+        }
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let q = RequestQueue::new(2);
+        q.push(GenRequest::new(0, "a")).unwrap();
+        q.push(GenRequest::new(1, "b")).unwrap();
+        match q.push(GenRequest::new(2, "c")) {
+            Err(PushError::Backpressure(r)) => assert_eq!(r.id, 2),
+            other => panic!("expected backpressure, got {other:?}"),
+        }
+        assert_eq!(q.counters(), (2, 1));
+    }
+
+    #[test]
+    fn closed_queue_rejects_and_drains() {
+        let q = RequestQueue::new(4);
+        q.push(GenRequest::new(0, "a")).unwrap();
+        q.close();
+        assert!(matches!(q.push(GenRequest::new(1, "b")), Err(PushError::Closed(_))));
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn cross_thread_producers() {
+        let q = std::sync::Arc::new(RequestQueue::new(100));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let q2 = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10 {
+                    q2.push(GenRequest::new(t * 100 + i, "p")).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(q.len(), 40);
+    }
+
+    #[test]
+    fn prop_conservation_no_loss_no_dup() {
+        testing::check("queue conservation", 30, |rng| {
+            let cap = 1 + rng.below(8);
+            let q = RequestQueue::new(cap);
+            let n = rng.below(20) + 1;
+            let mut pushed = Vec::new();
+            for i in 0..n as u64 {
+                if q.push(GenRequest::new(i, "p")).is_ok() {
+                    pushed.push(i);
+                }
+            }
+            let drained = q.drain_upto(usize::MAX);
+            let got: Vec<u64> = drained.iter().map(|r| r.id).collect();
+            if got != pushed {
+                return Err(format!("expected {pushed:?}, got {got:?}"));
+            }
+            let (acc, rej) = q.counters();
+            if acc as usize != pushed.len() || (acc + rej) as usize != n {
+                return Err(format!("counter mismatch acc={acc} rej={rej} n={n}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,74 @@
+//! Request/response types of the serving API.
+
+use crate::config::model::BlockVariant;
+
+pub type RequestId = u64;
+
+/// One image-generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: RequestId,
+    pub prompt: String,
+    /// Model variant to serve (tiny family; paper-scale models are
+    /// analytic-only).
+    pub variant: BlockVariant,
+    pub steps: usize,
+    pub seed: u64,
+    pub guidance: f32,
+    /// Arrival time (seconds since engine start) for latency accounting.
+    pub arrival: f64,
+    /// Decode the latent to pixels with the parallel VAE.
+    pub decode: bool,
+}
+
+impl GenRequest {
+    pub fn new(id: RequestId, prompt: impl Into<String>) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: prompt.into(),
+            variant: BlockVariant::AdaLn,
+            steps: 4,
+            seed: id,
+            guidance: 3.0,
+            arrival: 0.0,
+            decode: false,
+        }
+    }
+
+    /// Two requests can share a batch iff their compiled shapes and step
+    /// counts coincide (same variant, steps, guidance-usage).
+    pub fn batch_key(&self) -> (BlockVariant, usize, bool) {
+        (self.variant, self.steps, self.guidance != 1.0 && self.guidance != 0.0)
+    }
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: RequestId,
+    /// Final latent (and optionally decoded image).
+    pub latent: crate::tensor::Tensor,
+    pub image: Option<crate::tensor::Tensor>,
+    /// Simulated cluster seconds spent on the denoising loop.
+    pub model_seconds: f64,
+    /// End-to-end virtual latency including queueing.
+    pub latency: f64,
+    pub parallel_config: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_key_groups_compatible() {
+        let a = GenRequest::new(1, "x");
+        let mut b = GenRequest::new(2, "y");
+        assert_eq!(a.batch_key(), b.batch_key());
+        b.steps = 8;
+        assert_ne!(a.batch_key(), b.batch_key());
+        let mut c = GenRequest::new(3, "z");
+        c.guidance = 1.0; // no CFG
+        assert_ne!(a.batch_key(), c.batch_key());
+    }
+}

@@ -1,0 +1,121 @@
+//! The routing policy of §5.2.4: pick a hybrid parallel configuration for
+//! (model, cluster, world size).
+//!
+//! Paper recommendation, implemented verbatim:
+//! 1. prioritize CFG parallel (when the model uses CFG and world is even);
+//! 2. on low-bandwidth interconnects (PCIe/Ethernet): PipeFusion first,
+//!    then SP-Ring;
+//! 3. on NVLink: SP-Ulysses first, then PipeFusion;
+//! all subject to the divisibility constraints (`ParallelConfig::validate`).
+
+use crate::config::hardware::ClusterSpec;
+use crate::config::model::ModelSpec;
+use crate::config::parallel::ParallelConfig;
+
+/// Choose the parallel config for `world` devices.
+pub fn route(model: &ModelSpec, s_img: usize, cluster: &ClusterSpec, world: usize) -> ParallelConfig {
+    let mut best = ParallelConfig::serial();
+    if world <= 1 {
+        return best;
+    }
+    let cfg = if model.uses_cfg && world % 2 == 0 { 2 } else { 1 };
+    let mut intra = world / cfg;
+
+    // allocate the intra-image degrees by the bandwidth-priority order
+    let (mut pipe, mut ulysses, mut ring) = (1usize, 1usize, 1usize);
+    let prefer_sp_first = cluster.has_nvlink;
+
+    let try_cfg = |pipe: usize, ulysses: usize, ring: usize| -> Option<ParallelConfig> {
+        let pc = ParallelConfig::new(cfg, pipe, ulysses, ring);
+        pc.validate(model, s_img).ok().map(|_| pc)
+    };
+
+    // greedy: grow the preferred dimension by factors of 2 while valid
+    let grow = |dim: char, pipe: &mut usize, ulysses: &mut usize, ring: &mut usize,
+                    intra: &mut usize| {
+        while *intra % 2 == 0 {
+            let (p2, u2, r2) = match dim {
+                'p' => (*pipe * 2, *ulysses, *ring),
+                'u' => (*pipe, *ulysses * 2, *ring),
+                _ => (*pipe, *ulysses, *ring * 2),
+            };
+            if try_cfg(p2, u2, r2).is_some() {
+                *pipe = p2;
+                *ulysses = u2;
+                *ring = r2;
+                *intra /= 2;
+            } else {
+                break;
+            }
+        }
+    };
+
+    if prefer_sp_first {
+        grow('u', &mut pipe, &mut ulysses, &mut ring, &mut intra);
+        // skip models scale pipefusion poorly (Fig 17): cap at 2
+        grow('p', &mut pipe, &mut ulysses, &mut ring, &mut intra);
+        grow('r', &mut pipe, &mut ulysses, &mut ring, &mut intra);
+    } else {
+        grow('p', &mut pipe, &mut ulysses, &mut ring, &mut intra);
+        grow('r', &mut pipe, &mut ulysses, &mut ring, &mut intra);
+        grow('u', &mut pipe, &mut ulysses, &mut ring, &mut intra);
+    }
+
+    if let Some(pc) = try_cfg(pipe, ulysses, ring) {
+        best = pc;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::{a100_node, l40_cluster};
+
+    #[test]
+    fn prioritizes_cfg() {
+        let m = ModelSpec::by_name("tiny-adaln").unwrap();
+        let pc = route(&m, 256, &l40_cluster(1), 8);
+        assert_eq!(pc.cfg, 2, "{}", pc.describe());
+        assert_eq!(pc.world(), 8);
+    }
+
+    #[test]
+    fn pcie_prefers_pipefusion() {
+        let m = ModelSpec::by_name("tiny-adaln").unwrap();
+        let pc = route(&m, 256, &l40_cluster(1), 8);
+        assert!(pc.pipefusion >= pc.ulysses, "{}", pc.describe());
+    }
+
+    #[test]
+    fn nvlink_prefers_ulysses() {
+        let m = ModelSpec::by_name("tiny-adaln").unwrap();
+        let pc = route(&m, 256, &a100_node(), 8);
+        assert!(pc.ulysses >= pc.pipefusion, "{}", pc.describe());
+    }
+
+    #[test]
+    fn no_cfg_for_flux_like() {
+        let mut m = ModelSpec::by_name("tiny-mmdit").unwrap();
+        m.uses_cfg = false;
+        let pc = route(&m, 256, &l40_cluster(1), 8);
+        assert_eq!(pc.cfg, 1);
+        assert_eq!(pc.world(), 8);
+    }
+
+    #[test]
+    fn always_valid_and_full_world() {
+        for world in [1, 2, 4, 8] {
+            for name in ["tiny-adaln", "tiny-mmdit", "tiny-cross", "tiny-skip"] {
+                let m = ModelSpec::by_name(name).unwrap();
+                for cluster in [l40_cluster(1), a100_node()] {
+                    let pc = route(&m, 256, &cluster, world);
+                    pc.validate(&m, 256).unwrap_or_else(|e| {
+                        panic!("router produced invalid config for {name} w={world}: {e}")
+                    });
+                    assert_eq!(pc.world(), world, "{name} w={world}: {}", pc.describe());
+                }
+            }
+        }
+    }
+}

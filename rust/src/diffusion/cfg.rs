@@ -1,0 +1,38 @@
+//! Classifier-free guidance (paper §4.2): the conditional and unconditional
+//! branches are combined after each denoising forward; under CFG
+//! parallelism the branches live on disjoint device groups and exchange
+//! latents with one AllGather per step.
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// eps = eps_uncond + scale * (eps_cond - eps_uncond)
+pub fn combine_cfg(eps_cond: &Tensor, eps_uncond: &Tensor, scale: f32) -> Result<Tensor> {
+    eps_uncond.zip(eps_cond, move |u, c| u + scale * (c - u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_one_is_cond() {
+        let c = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let u = Tensor::new(vec![3], vec![0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(combine_cfg(&c, &u, 1.0).unwrap().data, c.data);
+    }
+
+    #[test]
+    fn scale_zero_is_uncond() {
+        let c = Tensor::new(vec![2], vec![5.0, 5.0]).unwrap();
+        let u = Tensor::new(vec![2], vec![1.0, -1.0]).unwrap();
+        assert_eq!(combine_cfg(&c, &u, 0.0).unwrap().data, u.data);
+    }
+
+    #[test]
+    fn extrapolates_beyond_cond() {
+        let c = Tensor::new(vec![1], vec![2.0]).unwrap();
+        let u = Tensor::new(vec![1], vec![1.0]).unwrap();
+        assert_eq!(combine_cfg(&c, &u, 3.0).unwrap().data, vec![4.0]);
+    }
+}

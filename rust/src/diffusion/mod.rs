@@ -1,0 +1,11 @@
+//! Diffusion samplers: the `Update(x_t, t, eps_t)` functions of Eq. (1) in
+//! the paper, plus classifier-free guidance combination.
+//!
+//! Three schedulers matching the paper's benchmarks: DDIM (CogVideoX runs),
+//! DPM-Solver (Pixart/HunyuanDiT runs), FlowMatch-Euler (SD3/Flux runs).
+
+pub mod cfg;
+pub mod scheduler;
+
+pub use cfg::combine_cfg;
+pub use scheduler::{make_scheduler, Scheduler};

@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("weights error: {0}")]
+    Weights(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error("comm error: {0}")]
+    Comm(String),
+
+    #[error("engine error: {0}")]
+    Engine(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+}

@@ -1,0 +1,34 @@
+//! # xDiT — a parallel inference engine for Diffusion Transformers
+//!
+//! Reproduction of *xDiT: an Inference Engine for Diffusion Transformers
+//! (DiTs) with Massive Parallelism* (Fang et al., 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: simulated multi-device cluster,
+//!   the five parallel strategies (TP, SP-Ulysses, SP-Ring, DistriFusion,
+//!   PipeFusion), CFG parallelism, the hybrid mesh with the KV-consistency
+//!   fix, the patch-parallel VAE, a serving front-end
+//!   (router/batcher/engine), and the analytic performance model that
+//!   regenerates every figure/table of the paper.
+//! * **L2/L1 (build-time Python)** — the DiT compute graph and Pallas
+//!   kernels, AOT-lowered to HLO text in `artifacts/` and executed here via
+//!   the PJRT CPU client (`runtime`). Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod diffusion;
+pub mod error;
+pub mod mesh;
+pub mod model;
+pub mod parallel;
+pub mod perf;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+pub mod vae;
+
+pub use error::{Error, Result};

@@ -1,0 +1,310 @@
+//! xDiT command-line launcher.
+//!
+//! Subcommands:
+//!   generate  — generate one image with a chosen parallel config
+//!   serve     — run the serving engine on a synthetic request workload
+//!   route     — show the §5.2.4 routing decision for a model/cluster
+//!   figures   — regenerate the paper's figure/table series (analytic)
+//!   inspect   — list AOT artifacts and model dims
+
+use xdit::comm::Clocks;
+use xdit::config::hardware::ClusterSpec;
+use xdit::config::model::{BlockVariant, ModelSpec};
+use xdit::config::parallel::ParallelConfig;
+use xdit::coordinator::{Engine, GenRequest};
+use xdit::parallel::{driver, GenParams, Session};
+use xdit::perf::latency::{best_hybrid, predict_latency, serial_latency, Method};
+use xdit::runtime::Runtime;
+use xdit::util::cli::Args;
+use xdit::util::pgm;
+use xdit::util::rng::Rng;
+use xdit::vae::ParallelVae;
+
+const USAGE: &str = "xdit <command> [--flags]
+
+commands:
+  generate  --model tiny-adaln --method hybrid --gpus 8 --steps 8
+            --prompt '...' --seed 0 --guidance 3 --cluster l40x8
+            --out image.ppm
+  serve     --gpus 8 --requests 16 --rate 0.5 --steps 4 --cluster l40x8
+  route     --model pixart --cluster l40x16 --gpus 16 --px 2048
+  figures   --which fig8|fig14|table1|table3|memory [--px 1024]
+  inspect   [--artifacts artifacts]
+";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> xdit::Result<()> {
+    match cmd {
+        "generate" => generate(args),
+        "serve" => serve(args),
+        "route" => route_cmd(args),
+        "figures" => figures(args),
+        "inspect" => inspect(args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cluster_of(args: &Args) -> xdit::Result<ClusterSpec> {
+    ClusterSpec::by_name(args.str_or("cluster", "l40x8"))
+}
+
+fn variant_of(name: &str) -> xdit::Result<BlockVariant> {
+    Ok(match name {
+        "tiny-adaln" => BlockVariant::AdaLn,
+        "tiny-cross" => BlockVariant::Cross,
+        "tiny-mmdit" => BlockVariant::MmDit,
+        "tiny-skip" => BlockVariant::Skip,
+        _ => {
+            return Err(xdit::Error::config(format!(
+                "runnable models: tiny-adaln|tiny-cross|tiny-mmdit|tiny-skip (got {name})"
+            )))
+        }
+    })
+}
+
+fn generate(args: &Args) -> xdit::Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    let cluster = cluster_of(args)?;
+    let model = args.str_or("model", "tiny-adaln").to_string();
+    let variant = variant_of(&model)?;
+    let gpus = args.usize_or("gpus", 1)?;
+    let method = driver::Method::parse(args.str_or("method", "serial"))?;
+    let spec = ModelSpec::by_name(&model)?;
+    let pc = if args.has("pipefusion") || args.has("ulysses") || args.has("ring") || args.has("cfg")
+    {
+        ParallelConfig::new(
+            args.usize_or("cfg", 1)?,
+            args.usize_or("pipefusion", 1)?,
+            args.usize_or("ulysses", 1)?,
+            args.usize_or("ring", 1)?,
+        )
+        .with_patches(args.usize_or("patches", args.usize_or("pipefusion", 1)?.max(1))?)
+    } else {
+        xdit::coordinator::route(&spec, 256, &cluster, gpus)
+    };
+    println!(
+        "model={model} method={:?} config=[{}] cluster={}",
+        method,
+        pc.describe(),
+        cluster.name
+    );
+
+    let mut sess = Session::new(&rt, variant, cluster.clone(), pc)?;
+    let params = GenParams {
+        prompt: args.str_or("prompt", "a photo of a mountain lake at dawn").into(),
+        steps: args.usize_or("steps", 8)?,
+        seed: args.usize_or("seed", 0)? as u64,
+        guidance: args.f64_or("guidance", 3.0)? as f32,
+        scheduler: args.str_or("scheduler", "ddim").into(),
+    };
+    let t0 = std::time::Instant::now();
+    let r = driver::generate(&mut sess, method, &params)?;
+    println!(
+        "done: simulated latency {:.3}s on {} GPUs, comm {:.1} MB, wall {:?}",
+        r.makespan,
+        pc.world(),
+        r.comm_bytes as f64 / 1e6,
+        t0.elapsed()
+    );
+
+    // decode and write the image
+    let vae = ParallelVae::new(&rt)?;
+    let z = r.latent.reshape(&[16, 16, 4])?;
+    let mut clocks = Clocks::new(cluster.n_gpus);
+    let img = vae.decode_parallel(&z, pc.world().min(8), &cluster, &mut clocks)?;
+    let out = args.str_or("out", "xdit_out.ppm");
+    pgm::write_ppm(out, &img.data, img.dims[0], img.dims[1])?;
+    println!("image written to {out} ({}x{})", img.dims[0], img.dims[1]);
+    Ok(())
+}
+
+fn serve(args: &Args) -> xdit::Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    let cluster = cluster_of(args)?;
+    let gpus = args.usize_or("gpus", 8)?;
+    let n = args.usize_or("requests", 16)?;
+    let rate = args.f64_or("rate", 0.5)?;
+    let steps = args.usize_or("steps", 4)?;
+
+    let mut eng = Engine::new(&rt, cluster, gpus);
+    let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
+    let mut t = 0.0;
+    let prompts =
+        ["a red fox in snow", "city skyline at dusk", "an astronaut sketch", "a bowl of fruit"];
+    let mut window = Vec::new();
+    for i in 0..n as u64 {
+        t += rng.exp(rate);
+        let mut r = GenRequest::new(i, *rng.pick(&prompts));
+        r.steps = steps;
+        r.arrival = t;
+        r.variant = variant_of(args.str_or("model", "tiny-adaln"))?;
+        window.push(r);
+    }
+    let t0 = std::time::Instant::now();
+    let out = eng.serve(window)?;
+    println!("{}", eng.metrics.report());
+    println!("(host wall time {:?} for {} generations)", t0.elapsed(), out.len());
+    Ok(())
+}
+
+fn route_cmd(args: &Args) -> xdit::Result<()> {
+    let model = ModelSpec::by_name(args.str_or("model", "pixart"))?;
+    let cluster = cluster_of(args)?;
+    let gpus = args.usize_or("gpus", cluster.n_gpus)?;
+    let px = args.usize_or("px", 1024)?;
+    let pc = xdit::coordinator::route(&model, model.seq_len(px), &cluster, gpus);
+    println!("{} @ {}px on {} x{}: [{}]", model.name, px, cluster.name, gpus, pc.describe());
+    let lb = predict_latency(&model, px, &cluster, Method::Hybrid, &pc, model.default_steps);
+    println!(
+        "predicted: {:.2}s total ({:.2}s compute, {:.2}s exposed comm) vs serial {:.2}s",
+        lb.total,
+        lb.compute,
+        lb.comm_exposed,
+        serial_latency(&model, px, &cluster, model.default_steps)
+    );
+    Ok(())
+}
+
+fn figures(args: &Args) -> xdit::Result<()> {
+    let which = args.str_or("which", "fig8");
+    let px = args.usize_or("px", 1024)?;
+    match which {
+        "fig8" | "fig14" => {
+            let cluster = if which == "fig8" {
+                xdit::config::hardware::l40_cluster(2)
+            } else {
+                xdit::config::hardware::a100_node()
+            };
+            let m = ModelSpec::by_name("pixart")?;
+            println!("# {} Pixart {}px latency (s) on {}", which, px, cluster.name);
+            println!("{:<14} {:>6} {:>6} {:>6} {:>6}", "method", "2", "4", "8", "16");
+            for meth in [
+                Method::Tp,
+                Method::SpUlysses,
+                Method::SpRing,
+                Method::DistriFusion,
+                Method::PipeFusion,
+            ] {
+                print!("{:<14}", meth.label());
+                for n in [2usize, 4, 8, 16] {
+                    if n > cluster.n_gpus {
+                        print!(" {:>6}", "-");
+                        continue;
+                    }
+                    let pc = meth.single_config(n);
+                    let lb = predict_latency(&m, px, &cluster, meth, &pc, 20);
+                    print!(" {:>6.1}", lb.total);
+                }
+                println!();
+            }
+            print!("{:<14}", "hybrid(best)");
+            for n in [2usize, 4, 8, 16] {
+                if n > cluster.n_gpus {
+                    print!(" {:>6}", "-");
+                    continue;
+                }
+                let (_, lb) = best_hybrid(&m, px, &cluster, n, 20);
+                print!(" {:>6.1}", lb.total);
+            }
+            println!();
+            println!("serial: {:.1}s", serial_latency(&m, px, &cluster, 20));
+        }
+        "table1" => {
+            let m = ModelSpec::by_name("sd3")?;
+            let s = m.seq_len(px);
+            println!("# Table 1: per-step comm volume (GB) at {px}px (SD3), n=8");
+            for row in [
+                xdit::perf::comm_model::Row::TensorParallel,
+                xdit::perf::comm_model::Row::DistriFusion,
+                xdit::perf::comm_model::Row::SpRing,
+                xdit::perf::comm_model::Row::SpUlysses,
+                xdit::perf::comm_model::Row::PipeFusion,
+            ] {
+                println!(
+                    "{:<22} {:>8.3} GB  overlap={}",
+                    row.label(),
+                    xdit::perf::comm_model::comm_bytes(row, &m, s, 8) / 1e9,
+                    row.overlaps()
+                );
+            }
+        }
+        "table3" => {
+            println!("# Table 3: parallel VAE time (s) / OOM, L40 48GB, c=4");
+            println!("{:<6} {:>8} {:>8} {:>8} {:>8}", "GPUs", "1k", "2k", "4k", "7k");
+            for n in [1usize, 2, 4, 8] {
+                print!("{:<6}", n);
+                for px in [1024usize, 2048, 4096, 7168] {
+                    if xdit::vae::vae_fits(px, 4, n, 4, 48e9) {
+                        print!(" {:>8.2}", xdit::vae::vae_decode_time(px, n, 90.0, 24e9, 8e-6));
+                    } else {
+                        print!(" {:>8}", "OOM");
+                    }
+                }
+                println!();
+            }
+        }
+        "memory" => {
+            println!("# Fig 18: max memory (GB/device) at {px}px, n=8");
+            for name in ["pixart", "sd3", "flux"] {
+                let m = ModelSpec::by_name(name)?;
+                println!("{name}:");
+                for row in [
+                    xdit::perf::comm_model::Row::SpUlysses,
+                    xdit::perf::comm_model::Row::DistriFusion,
+                    xdit::perf::comm_model::Row::PipeFusion,
+                ] {
+                    let f = xdit::perf::memory_model::backbone_memory(&m, px, row, 8);
+                    println!(
+                        "  {:<14} params {:>6.1} GB, others {:>6.1} GB",
+                        row.label(),
+                        f.parameters_gb(),
+                        f.others_gb()
+                    );
+                }
+            }
+        }
+        _ => println!("figures: fig8 fig14 table1 table3 memory (see benches/ for the full set)"),
+    }
+    Ok(())
+}
+
+fn inspect(args: &Args) -> xdit::Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    println!(
+        "manifest v{} — {} entrypoints, model dims: {:?}",
+        rt.manifest.version,
+        rt.manifest.entries.len(),
+        rt.manifest.model
+    );
+    println!(
+        "weights: {} tensors, {:.1} MB",
+        rt.host_weights.tensors.len(),
+        rt.host_weights.total_bytes() as f64 / 1e6
+    );
+    for (name, e) in &rt.manifest.entries {
+        println!(
+            "  {:<28} kind={:<6} inputs={} weights={} outs={}",
+            name,
+            e.kind,
+            e.data_inputs.len(),
+            e.weights.len(),
+            e.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! Process mesh for hybrid parallelism (paper §4.1.4).
+//!
+//! World devices are arranged as a 4-D mesh `cfg × pipefusion × ring ×
+//! ulysses` (outermost to innermost). Innermost dimensions map to adjacent
+//! device ids, which on real clusters keeps the highest-frequency
+//! communication (Ulysses All2All) on the fastest links — exactly the
+//! paper's recommendation (CFG outermost / inter-node, then PipeFusion,
+//! then SP).
+
+use crate::config::parallel::ParallelConfig;
+
+/// Coordinates of a device in the hybrid mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeshCoord {
+    pub cfg: usize,
+    pub pipe: usize,
+    pub ring: usize,
+    pub ulysses: usize,
+}
+
+/// The process mesh: bijection world-rank <-> coordinates, plus the process
+/// groups each parallel dimension communicates over.
+#[derive(Debug, Clone)]
+pub struct Mesh {
+    pub pc: ParallelConfig,
+}
+
+impl Mesh {
+    pub fn new(pc: ParallelConfig) -> Mesh {
+        Mesh { pc }
+    }
+
+    pub fn world(&self) -> usize {
+        self.pc.world()
+    }
+
+    /// rank -> coordinates (ulysses fastest-varying).
+    pub fn coord(&self, rank: usize) -> MeshCoord {
+        let u = self.pc.ulysses;
+        let r = self.pc.ring;
+        let p = self.pc.pipefusion;
+        let ulysses = rank % u;
+        let ring = (rank / u) % r;
+        let pipe = (rank / (u * r)) % p;
+        let cfg = rank / (u * r * p);
+        MeshCoord { cfg, pipe, ring, ulysses }
+    }
+
+    /// coordinates -> rank.
+    pub fn rank(&self, c: MeshCoord) -> usize {
+        let u = self.pc.ulysses;
+        let r = self.pc.ring;
+        let p = self.pc.pipefusion;
+        ((c.cfg * p + c.pipe) * r + c.ring) * u + c.ulysses
+    }
+
+    /// The SP group (ulysses × ring flattened) containing `rank`.
+    pub fn sp_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coord(rank);
+        let mut g = Vec::new();
+        for ring in 0..self.pc.ring {
+            for ulysses in 0..self.pc.ulysses {
+                g.push(self.rank(MeshCoord { ring, ulysses, ..c }));
+            }
+        }
+        g
+    }
+
+    /// Ulysses subgroup of `rank`.
+    pub fn ulysses_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coord(rank);
+        (0..self.pc.ulysses).map(|ulysses| self.rank(MeshCoord { ulysses, ..c })).collect()
+    }
+
+    /// Ring subgroup of `rank`.
+    pub fn ring_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coord(rank);
+        (0..self.pc.ring).map(|ring| self.rank(MeshCoord { ring, ..c })).collect()
+    }
+
+    /// The pipeline group of `rank` (same cfg/sp coordinates, all stages,
+    /// ordered by stage).
+    pub fn pipe_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coord(rank);
+        (0..self.pc.pipefusion).map(|pipe| self.rank(MeshCoord { pipe, ..c })).collect()
+    }
+
+    /// The CFG pair group of `rank` (ordered by cfg coordinate).
+    pub fn cfg_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coord(rank);
+        (0..self.pc.cfg).map(|cfg| self.rank(MeshCoord { cfg, ..c })).collect()
+    }
+
+    /// Sequence-shard index of a device within its image replica: patches
+    /// are split over the SP group; the shard index orders [ring, ulysses].
+    pub fn sp_index(&self, rank: usize) -> usize {
+        let c = self.coord(rank);
+        c.ring * self.pc.ulysses + c.ulysses
+    }
+
+    /// All ranks that work on CFG branch `b` (b in 0..cfg).
+    pub fn cfg_branch_ranks(&self, b: usize) -> Vec<usize> {
+        (0..self.world()).filter(|&r| self.coord(r).cfg == b).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh(cfg: usize, pipe: usize, ulysses: usize, ring: usize) -> Mesh {
+        Mesh::new(ParallelConfig::new(cfg, pipe, ulysses, ring))
+    }
+
+    #[test]
+    fn coord_rank_bijection() {
+        let m = mesh(2, 2, 2, 2);
+        for r in 0..16 {
+            assert_eq!(m.rank(m.coord(r)), r);
+        }
+    }
+
+    #[test]
+    fn ulysses_innermost_adjacent() {
+        let m = mesh(2, 2, 2, 1);
+        assert_eq!(m.ulysses_group(0), vec![0, 1]);
+        assert_eq!(m.ulysses_group(3), vec![2, 3]);
+    }
+
+    #[test]
+    fn cfg_outermost() {
+        let m = mesh(2, 2, 2, 1);
+        // cfg pairs are world/2 apart (inter-node on a 2-node cluster)
+        assert_eq!(m.cfg_group(0), vec![0, 4]);
+        assert_eq!(m.cfg_branch_ranks(0), vec![0, 1, 2, 3]);
+        assert_eq!(m.cfg_branch_ranks(1), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        let m = mesh(2, 2, 2, 2);
+        // SP groups partition the world into world/(u*r) disjoint groups
+        let mut seen = std::collections::BTreeSet::new();
+        for r in 0..16 {
+            for d in m.sp_group(r) {
+                if m.sp_group(d) == m.sp_group(r) {
+                    seen.insert(d);
+                }
+            }
+        }
+        assert_eq!(seen.len(), 16);
+    }
+
+    #[test]
+    fn sp_index_orders_shards() {
+        let m = mesh(1, 1, 2, 2);
+        let idx: Vec<usize> = (0..4).map(|r| m.sp_index(r)).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pipe_group_ordered_by_stage() {
+        let m = mesh(1, 4, 2, 1);
+        let g = m.pipe_group(1);
+        assert_eq!(g.len(), 4);
+        for (stage, &r) in g.iter().enumerate() {
+            assert_eq!(m.coord(r).pipe, stage);
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Stage/layer call assembly for the tiny DiT over the AOT entrypoints.
+//!
+//! This is the glue between the parallel strategies and the `Runtime`: it
+//! knows the entrypoint naming grid (`{variant}_{kind}_L{ls}_p{pf}`), the
+//! per-variant argument layouts and the sequence layout (`[text; image]`
+//! for MM-DiT in-context conditioning).
+
+use crate::config::model::BlockVariant;
+use crate::model::kvbuffer::KvBuffer;
+use crate::runtime::{ArgValue, Runtime};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Which stage entrypoint of a skip model (U-ViT halves) — `Whole` for the
+/// non-skip variants and pipe=1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    Whole,
+    SkipEnc,
+    SkipDec,
+}
+
+/// Inputs of one stage call (one patch micro-step on one device).
+pub struct StageIn<'a> {
+    pub x_img: &'a Tensor,
+    /// MM-DiT text-stream patch.
+    pub x_txt: Option<&'a Tensor>,
+    /// Skip tensors for `SkipDec` stages: `[ls, p, d]`.
+    pub skips: Option<&'a Tensor>,
+    pub cond: &'a Tensor,
+    /// Cross-attention text memory (replicated), `cross` variant only.
+    pub txt_mem: Option<&'a Tensor>,
+    pub kv: &'a KvBuffer,
+    /// Image-row offset within the *image* sequence.
+    pub off_img: usize,
+    /// Text-row offset within the text sequence (MM-DiT).
+    pub off_txt: usize,
+}
+
+/// Outputs of one stage call.
+pub struct StageOut {
+    pub y_img: Tensor,
+    pub y_txt: Option<Tensor>,
+    /// `[ls, p, d]` fresh K/V rows (MM-DiT: text rows first within p).
+    pub k_new: Tensor,
+    pub v_new: Tensor,
+    /// `SkipEnc` stages: `[ls, p, d]` skip activations for the decoder.
+    pub skips: Option<Tensor>,
+}
+
+/// Model-level constants resolved from the manifest.
+#[derive(Debug, Clone)]
+pub struct DitModel {
+    pub variant: BlockVariant,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub s_img: usize,
+    pub s_txt: usize,
+    pub c_latent: usize,
+    pub latent_hw: usize,
+}
+
+impl DitModel {
+    pub fn from_manifest(rt: &Runtime, variant: BlockVariant) -> Result<DitModel> {
+        let m = &rt.manifest;
+        Ok(DitModel {
+            variant,
+            d: m.model_dim("d")?,
+            heads: m.model_dim("heads")?,
+            layers: m.model_dim("layers")?,
+            s_img: m.model_dim("s_img")?,
+            s_txt: m.model_dim("s_txt")?,
+            c_latent: m.model_dim("c_latent")?,
+            latent_hw: m.model_dim("latent_hw")?,
+        })
+    }
+
+    pub fn key(&self) -> &'static str {
+        self.variant.key()
+    }
+
+    /// Attention sequence length (image + in-context text).
+    pub fn attn_seq(&self) -> usize {
+        self.s_img + if self.variant.in_context_text() { self.s_txt } else { 0 }
+    }
+
+    /// Absolute buffer offset of image row `off_img` (MM-DiT keeps
+    /// `[text; image]`).
+    pub fn img_buf_off(&self, off_img: usize) -> usize {
+        off_img + if self.variant.in_context_text() { self.s_txt } else { 0 }
+    }
+
+    /// Positional-embedding rows for an image patch.
+    pub fn pos_rows(&self, rt: &Runtime, off: usize, p: usize) -> Result<Tensor> {
+        let pos = rt.host_weights.get(&format!("{}.pos", self.key()))?;
+        pos.slice_rows(off, off + p)
+    }
+
+    /// Timestep conditioning vector.
+    pub fn t_cond(&self, rt: &Runtime, t: f32) -> Result<Tensor> {
+        let ts = Tensor::scalar(t);
+        let out = rt.call(&format!("{}_t_embed", self.key()), 0, &[ArgValue::F32(&ts)])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Embed an image-latent patch (patchify + positional embedding).
+    pub fn embed_patch(
+        &self,
+        rt: &Runtime,
+        pf: usize,
+        latent_patch: &Tensor,
+        off: usize,
+    ) -> Result<Tensor> {
+        let p = latent_patch.dims[0];
+        let pos = self.pos_rows(rt, off, p)?;
+        let out = rt.call(
+            &format!("{}_embed_p{pf}", self.key()),
+            0,
+            &[ArgValue::F32(latent_patch), ArgValue::F32(&pos)],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Final layer: hidden patch -> epsilon patch.
+    pub fn final_patch(&self, rt: &Runtime, pf: usize, x: &Tensor, cond: &Tensor) -> Result<Tensor> {
+        let out = rt.call(
+            &format!("{}_final_p{pf}", self.key()),
+            0,
+            &[ArgValue::F32(x), ArgValue::F32(cond)],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    fn stage_entry(&self, kind: StageKind, ls: usize, pf: usize) -> String {
+        match (self.variant, kind) {
+            (BlockVariant::Skip, StageKind::Whole) => format!("skip_full_L{ls}_p{pf}"),
+            (BlockVariant::Skip, StageKind::SkipEnc) => format!("skip_enc_L{ls}_p{pf}"),
+            (BlockVariant::Skip, StageKind::SkipDec) => format!("skip_dec_L{ls}_p{pf}"),
+            (v, StageKind::Whole) => format!("{}_stage_L{ls}_p{pf}", v.key()),
+            _ => unreachable!("enc/dec stages only exist for the skip variant"),
+        }
+    }
+
+    /// Run one stage over a patch. `stage` indexes the pipeline stage
+    /// (`SkipDec` uses decoder-relative 0 per the WeightRef convention).
+    pub fn run_stage(
+        &self,
+        rt: &Runtime,
+        kind: StageKind,
+        ls: usize,
+        pf: usize,
+        stage: usize,
+        i: &StageIn,
+    ) -> Result<StageOut> {
+        let name = self.stage_entry(kind, ls, pf);
+        let kv_k = ArgValue::F32(&i.kv.k);
+        let kv_v = ArgValue::F32(&i.kv.v);
+        let cond = ArgValue::F32(i.cond);
+        let x = ArgValue::F32(i.x_img);
+
+        let outs = match self.variant {
+            BlockVariant::AdaLn => rt.call(
+                &name,
+                stage,
+                &[x, cond, kv_k, kv_v, ArgValue::I32(i.off_img as i32)],
+            )?,
+            BlockVariant::Cross => {
+                let txt = i
+                    .txt_mem
+                    .ok_or_else(|| Error::Engine("cross variant needs txt_mem".into()))?;
+                rt.call(
+                    &name,
+                    stage,
+                    &[
+                        x,
+                        cond,
+                        ArgValue::F32(txt),
+                        kv_k,
+                        kv_v,
+                        ArgValue::I32(i.off_img as i32),
+                    ],
+                )?
+            }
+            BlockVariant::MmDit => {
+                let xt = i
+                    .x_txt
+                    .ok_or_else(|| Error::Engine("mmdit variant needs x_txt".into()))?;
+                rt.call(
+                    &name,
+                    stage,
+                    &[
+                        ArgValue::F32(xt),
+                        x,
+                        cond,
+                        kv_k,
+                        kv_v,
+                        ArgValue::I32(i.off_txt as i32),
+                        ArgValue::I32(self.img_buf_off(i.off_img) as i32),
+                    ],
+                )?
+            }
+            BlockVariant::Skip => match kind {
+                StageKind::SkipDec => {
+                    let skips = i
+                        .skips
+                        .ok_or_else(|| Error::Engine("skip decoder needs skips".into()))?;
+                    rt.call(
+                        &name,
+                        stage,
+                        &[
+                            x,
+                            ArgValue::F32(skips),
+                            cond,
+                            kv_k,
+                            kv_v,
+                            ArgValue::I32(i.off_img as i32),
+                        ],
+                    )?
+                }
+                _ => rt.call(
+                    &name,
+                    stage,
+                    &[x, cond, kv_k, kv_v, ArgValue::I32(i.off_img as i32)],
+                )?,
+            },
+        };
+
+        // unpack per variant/kind
+        let mut it = outs.into_iter();
+        match (self.variant, kind) {
+            (BlockVariant::MmDit, _) => {
+                let y_txt = it.next().unwrap();
+                let y_img = it.next().unwrap();
+                let k_new = it.next().unwrap();
+                let v_new = it.next().unwrap();
+                Ok(StageOut { y_img, y_txt: Some(y_txt), k_new, v_new, skips: None })
+            }
+            (BlockVariant::Skip, StageKind::SkipEnc) => {
+                let y_img = it.next().unwrap();
+                let skips = it.next().unwrap();
+                let k_new = it.next().unwrap();
+                let v_new = it.next().unwrap();
+                Ok(StageOut { y_img, y_txt: None, k_new, v_new, skips: Some(skips) })
+            }
+            _ => {
+                let y_img = it.next().unwrap();
+                let k_new = it.next().unwrap();
+                let v_new = it.next().unwrap();
+                Ok(StageOut { y_img, y_txt: None, k_new, v_new, skips: None })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rt() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::load(dir).unwrap())
+    }
+
+    #[test]
+    fn full_forward_adaln() {
+        let Some(rt) = rt() else { return };
+        let m = DitModel::from_manifest(&rt, BlockVariant::AdaLn).unwrap();
+        let mut rng = Rng::new(0);
+        let latent = Tensor::randn(&[m.s_img, m.c_latent], &mut rng);
+        let x = m.embed_patch(&rt, 1, &latent, 0).unwrap();
+        assert_eq!(x.dims, vec![m.s_img, m.d]);
+        let cond = m.t_cond(&rt, 500.0).unwrap();
+        let kv = KvBuffer::zeros(m.layers, m.s_img, m.d);
+        let sin = StageIn {
+            x_img: &x,
+            x_txt: None,
+            skips: None,
+            cond: &cond,
+            txt_mem: None,
+            kv: &kv,
+            off_img: 0,
+            off_txt: 0,
+        };
+        let out = m.run_stage(&rt, StageKind::Whole, m.layers, 1, 0, &sin).unwrap();
+        assert_eq!(out.y_img.dims, vec![m.s_img, m.d]);
+        assert_eq!(out.k_new.dims, vec![m.layers, m.s_img, m.d]);
+        let eps = m.final_patch(&rt, 1, &out.y_img, &cond).unwrap();
+        assert_eq!(eps.dims, vec![m.s_img, m.c_latent]);
+        assert!(eps.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn stage_composition_matches_full() {
+        // two stages of L4 == one stage of L8, given fresh-buffer scatter
+        let Some(rt) = rt() else { return };
+        let m = DitModel::from_manifest(&rt, BlockVariant::AdaLn).unwrap();
+        let mut rng = Rng::new(1);
+        let latent = Tensor::randn(&[m.s_img, m.c_latent], &mut rng);
+        let x0 = m.embed_patch(&rt, 1, &latent, 0).unwrap();
+        let cond = m.t_cond(&rt, 300.0).unwrap();
+
+        let kv8 = KvBuffer::zeros(m.layers, m.s_img, m.d);
+        let base = StageIn {
+            x_img: &x0, x_txt: None, skips: None, cond: &cond, txt_mem: None,
+            kv: &kv8, off_img: 0, off_txt: 0,
+        };
+        let full = m.run_stage(&rt, StageKind::Whole, 8, 1, 0, &base).unwrap();
+
+        let kv4 = KvBuffer::zeros(4, m.s_img, m.d);
+        let s0 = m
+            .run_stage(&rt, StageKind::Whole, 4, 1, 0, &StageIn { kv: &kv4, ..StageIn {
+                x_img: &x0, x_txt: None, skips: None, cond: &cond, txt_mem: None,
+                kv: &kv4, off_img: 0, off_txt: 0 } })
+            .unwrap();
+        let s1 = m
+            .run_stage(&rt, StageKind::Whole, 4, 1, 1, &StageIn {
+                x_img: &s0.y_img, x_txt: None, skips: None, cond: &cond, txt_mem: None,
+                kv: &kv4, off_img: 0, off_txt: 0 })
+            .unwrap();
+        assert!(
+            s1.y_img.allclose(&full.y_img, 1e-4),
+            "staged != full: {}",
+            s1.y_img.max_abs_diff(&full.y_img).unwrap()
+        );
+    }
+
+    #[test]
+    fn mmdit_stage_shapes() {
+        let Some(rt) = rt() else { return };
+        let m = DitModel::from_manifest(&rt, BlockVariant::MmDit).unwrap();
+        let mut rng = Rng::new(2);
+        let x_img = Tensor::randn(&[m.s_img / 2, m.d], &mut rng);
+        let x_txt = Tensor::randn(&[m.s_txt / 2, m.d], &mut rng);
+        let cond = m.t_cond(&rt, 100.0).unwrap();
+        let kv = KvBuffer::zeros(4, m.attn_seq(), m.d);
+        let out = m
+            .run_stage(&rt, StageKind::Whole, 4, 2, 0, &StageIn {
+                x_img: &x_img, x_txt: Some(&x_txt), skips: None, cond: &cond,
+                txt_mem: None, kv: &kv, off_img: 0, off_txt: 0 })
+            .unwrap();
+        assert_eq!(out.y_txt.as_ref().unwrap().dims, vec![m.s_txt / 2, m.d]);
+        assert_eq!(out.k_new.dims, vec![4, (m.s_img + m.s_txt) / 2, m.d]);
+    }
+}

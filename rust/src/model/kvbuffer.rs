@@ -1,0 +1,141 @@
+//! Per-device KV buffers: the state PipeFusion / DistriFusion / the hybrid
+//! SP+PipeFusion scheme keep between diffusion steps (paper §4.1.2, §4.1.4).
+//!
+//! Layout: one dense tensor `[layers, seq, d]` for K and V each, matching
+//! the stage entrypoints' buffer inputs (zero-copy pass-through). The
+//! engine scatters *fresh* rows back after each stage/layer call; which rows
+//! get scattered encodes the paper's Fig-6/7 consistency rule (full
+//! SP-group sequence vs. the broken own-shard-only variant).
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct KvBuffer {
+    pub k: Tensor, // [layers, seq, d]
+    pub v: Tensor,
+    pub layers: usize,
+    pub seq: usize,
+    pub d: usize,
+}
+
+impl KvBuffer {
+    pub fn zeros(layers: usize, seq: usize, d: usize) -> KvBuffer {
+        KvBuffer {
+            k: Tensor::zeros(&[layers, seq, d]),
+            v: Tensor::zeros(&[layers, seq, d]),
+            layers,
+            seq,
+            d,
+        }
+    }
+
+    /// Scatter fresh K/V rows for one layer at sequence offset `off`.
+    /// `k_rows`/`v_rows`: `[p, d]`.
+    pub fn scatter_layer(
+        &mut self,
+        layer: usize,
+        off: usize,
+        k_rows: &Tensor,
+        v_rows: &Tensor,
+    ) -> Result<()> {
+        let p = k_rows.dims[0];
+        if layer >= self.layers || off + p > self.seq {
+            return Err(Error::shape(format!(
+                "kv scatter out of range: layer {layer}, rows {off}..{}",
+                off + p
+            )));
+        }
+        let base = layer * self.seq * self.d + off * self.d;
+        self.k.data[base..base + p * self.d].copy_from_slice(&k_rows.data);
+        self.v.data[base..base + p * self.d].copy_from_slice(&v_rows.data);
+        Ok(())
+    }
+
+    /// Scatter a stage output (`[layers, p, d]` fresh rows for every layer
+    /// of this buffer) at offset `off` — the PipeFusion post-micro-step
+    /// update.
+    pub fn scatter_stage(&mut self, off: usize, k_new: &Tensor, v_new: &Tensor) -> Result<()> {
+        if k_new.dims.len() != 3 || k_new.dims[0] != self.layers || k_new.dims[2] != self.d {
+            return Err(Error::shape(format!(
+                "scatter_stage expects [{}, p, {}], got {:?}",
+                self.layers, self.d, k_new.dims
+            )));
+        }
+        let p = k_new.dims[1];
+        for l in 0..self.layers {
+            let src = l * p * self.d;
+            let dst = l * self.seq * self.d + off * self.d;
+            self.k.data[dst..dst + p * self.d]
+                .copy_from_slice(&k_new.data[src..src + p * self.d]);
+            self.v.data[dst..dst + p * self.d]
+                .copy_from_slice(&v_new.data[src..src + p * self.d]);
+        }
+        Ok(())
+    }
+
+    /// Read one layer's K/V rows (used by the per-layer SP path to assemble
+    /// the attention inputs, and by tests).
+    pub fn layer_rows(&self, layer: usize, off: usize, p: usize) -> Result<(Tensor, Tensor)> {
+        if layer >= self.layers || off + p > self.seq {
+            return Err(Error::shape("kv read out of range"));
+        }
+        let base = layer * self.seq * self.d + off * self.d;
+        let k = Tensor::new(
+            vec![p, self.d],
+            self.k.data[base..base + p * self.d].to_vec(),
+        )?;
+        let v = Tensor::new(
+            vec![p, self.d],
+            self.v.data[base..base + p * self.d].to_vec(),
+        )?;
+        Ok((k, v))
+    }
+
+    /// Full K/V of one layer as `[seq, d]` tensors.
+    pub fn layer_full(&self, layer: usize) -> Result<(Tensor, Tensor)> {
+        self.layer_rows(layer, 0, self.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_and_read_roundtrip() {
+        let mut b = KvBuffer::zeros(2, 8, 3);
+        let k = Tensor::from_fn(&[2, 3], |i| i as f32 + 1.0);
+        let v = k.scale(10.0);
+        b.scatter_layer(1, 4, &k, &v).unwrap();
+        let (rk, rv) = b.layer_rows(1, 4, 2).unwrap();
+        assert_eq!(rk, k);
+        assert_eq!(rv, v);
+        // other layer untouched
+        let (ok, _) = b.layer_rows(0, 4, 2).unwrap();
+        assert!(ok.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scatter_stage_layout() {
+        let mut b = KvBuffer::zeros(2, 6, 2);
+        // k_new [2 layers, 3 rows, 2]
+        let k_new = Tensor::from_fn(&[2, 3, 2], |i| i as f32);
+        let v_new = k_new.scale(-1.0);
+        b.scatter_stage(3, &k_new, &v_new).unwrap();
+        let (k0, _) = b.layer_rows(0, 3, 3).unwrap();
+        assert_eq!(k0.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let (k1, v1) = b.layer_rows(1, 3, 3).unwrap();
+        assert_eq!(k1.data, vec![6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(v1.data, vec![-6.0, -7.0, -8.0, -9.0, -10.0, -11.0]);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut b = KvBuffer::zeros(1, 4, 2);
+        let k = Tensor::zeros(&[3, 2]);
+        assert!(b.scatter_layer(0, 2, &k, &k).is_err());
+        assert!(b.scatter_layer(1, 0, &k, &k).is_err());
+        assert!(b.layer_rows(0, 3, 2).is_err());
+    }
+}

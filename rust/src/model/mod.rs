@@ -1,0 +1,10 @@
+//! Coordinator-side view of the tiny DiT: text embedding, KV buffers, and
+//! the stage/layer call assembly over the AOT entrypoints.
+
+pub mod dit;
+pub mod kvbuffer;
+pub mod text;
+
+pub use dit::{DitModel, StageIn, StageKind, StageOut};
+pub use kvbuffer::KvBuffer;
+pub use text::TextEncoder;

@@ -1,0 +1,93 @@
+//! Byte-level text "encoder": tokenize the prompt to byte ids, look up the
+//! shared embedding table (weights.bin `shared.txt_table`). Stands in for
+//! the paper models' T5/CLIP encoders (Table 2) — the parallelism work never
+//! touches encoder internals, only the embedded sequence.
+
+use crate::runtime::HostWeights;
+use crate::tensor::Tensor;
+use crate::Result;
+
+pub struct TextEncoder {
+    table: Tensor, // [vocab, d]
+    pub s_txt: usize,
+    pub d: usize,
+}
+
+impl TextEncoder {
+    pub fn new(weights: &HostWeights, s_txt: usize) -> Result<TextEncoder> {
+        let table = weights.get("shared.txt_table")?.clone();
+        let d = table.dims[1];
+        Ok(TextEncoder { table, s_txt, d })
+    }
+
+    /// Byte tokenizer: truncate/pad (id 0) to `s_txt`.
+    pub fn tokenize(&self, prompt: &str) -> Vec<usize> {
+        let vocab = self.table.dims[0];
+        let mut ids: Vec<usize> =
+            prompt.bytes().take(self.s_txt).map(|b| b as usize % vocab).collect();
+        ids.resize(self.s_txt, 0);
+        ids
+    }
+
+    /// Embed a prompt -> [s_txt, d].
+    pub fn embed(&self, prompt: &str) -> Tensor {
+        let ids = self.tokenize(prompt);
+        let d = self.d;
+        let mut data = Vec::with_capacity(self.s_txt * d);
+        for id in ids {
+            data.extend_from_slice(&self.table.data[id * d..(id + 1) * d]);
+        }
+        Tensor { dims: vec![self.s_txt, d], data }
+    }
+
+    /// Pooled text conditioning vector (mean of token embeddings).
+    pub fn pool(&self, embedded: &Tensor) -> Tensor {
+        embedded.mean_rows()
+    }
+
+    /// The unconditional (empty prompt) embedding for CFG.
+    pub fn embed_uncond(&self) -> Tensor {
+        self.embed("")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostWeights;
+
+    fn enc() -> Option<TextEncoder> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights.bin");
+        if !p.exists() {
+            return None;
+        }
+        let w = HostWeights::load(p).unwrap();
+        Some(TextEncoder::new(&w, 32).unwrap())
+    }
+
+    #[test]
+    fn tokenize_pads_and_truncates() {
+        let Some(e) = enc() else { return };
+        assert_eq!(e.tokenize("hi").len(), 32);
+        assert_eq!(e.tokenize(&"x".repeat(100)).len(), 32);
+        assert_eq!(e.tokenize("")[0], 0);
+    }
+
+    #[test]
+    fn embed_deterministic_and_distinct() {
+        let Some(e) = enc() else { return };
+        let a = e.embed("a photo of a cat");
+        let b = e.embed("a photo of a cat");
+        let c = e.embed("a watercolor of a dog");
+        assert_eq!(a, b);
+        assert!(a.max_abs_diff(&c).unwrap() > 1e-4);
+        assert_eq!(a.dims, vec![32, 192]);
+    }
+
+    #[test]
+    fn pool_shape() {
+        let Some(e) = enc() else { return };
+        let p = e.pool(&e.embed("prompt"));
+        assert_eq!(p.dims, vec![192]);
+    }
+}

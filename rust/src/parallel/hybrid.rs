@@ -1,0 +1,356 @@
+//! Hybrid parallelism (paper §4.1.4): `cfg × pipefusion × (ulysses × ring)`.
+//!
+//! The intra-image mesh is `pipefusion_degree × sp_degree`: PipeFusion on
+//! the outer dimension (stages of layers), USP (Ulysses × Ring) on the
+//! inner. Each PipeFusion patch is further split into `sp_degree` shards;
+//! inside a micro-step every layer runs the exact two-phase SP pass whose
+//! exchanged K/V covers the whole patch.
+//!
+//! The correctness-critical piece is the **KV buffer update rule** (Fig 6/7):
+//! after the SP exchange, every device in the SP group stores the K/V of
+//! the *entire patch* (the intermediate tensors standard SP would discard)
+//! into its PipeFusion buffer, keeping buffers consistent across the group.
+//! `KvUpdateRule::StandardSp` reproduces the broken variant — each device
+//! only updates its own shard's rows — which this repo's tests/benches show
+//! diverging, reproducing the paper's argument.
+
+use crate::config::model::BlockVariant;
+use crate::mesh::MeshCoord;
+use crate::model::KvBuffer;
+use crate::parallel::{
+    flops, split_offsets, sp_layer, BranchCtx, Session, Strategy,
+};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// How fresh patch K/V lands in the PipeFusion buffers of an SP group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvUpdateRule {
+    /// xDiT's rule: store the whole patch's exchanged K/V on every device.
+    Consistent,
+    /// The naive rule (Fig 7 "standard SP"): own shard only — buffers
+    /// desynchronize and later steps read half-stale K/V.
+    StandardSp,
+}
+
+pub struct Hybrid {
+    pub rule: KvUpdateRule,
+    /// (branch, stage, sp_index) -> per-device buffer for its stage layers.
+    buffers: std::collections::HashMap<(usize, usize, usize), KvBuffer>,
+}
+
+impl Hybrid {
+    pub fn new(rule: KvUpdateRule) -> Hybrid {
+        Hybrid { rule, buffers: std::collections::HashMap::new() }
+    }
+}
+
+impl Strategy for Hybrid {
+    fn name(&self) -> String {
+        match self.rule {
+            KvUpdateRule::Consistent => "hybrid".into(),
+            KvUpdateRule::StandardSp => "hybrid-standard-sp".into(),
+        }
+    }
+
+    fn denoise(
+        &mut self,
+        sess: &mut Session,
+        x: &Tensor,
+        t: f32,
+        step: usize,
+        branch: &BranchCtx,
+    ) -> Result<Tensor> {
+        let model = sess.model.clone();
+        if model.variant == BlockVariant::Skip {
+            return Err(Error::config(
+                "hybrid SP+PipeFusion does not support skip models (use pipefusion or sp)",
+            ));
+        }
+        let n_stages = sess.pc.pipefusion;
+        let nsp = sess.pc.sp_degree();
+        let m_patches = sess.pc.patches;
+        let pf = m_patches * nsp; // entrypoint patch factor = per-device rows
+        let ls = model.layers / n_stages;
+        let warmup = step < sess.pc.warmup_steps;
+        let is_mmdit = model.variant == BlockVariant::MmDit;
+        let mesh = sess.mesh.clone();
+
+        let t_emb = model.t_cond(sess.rt, t)?;
+        let cond = branch.cond(model.variant, &t_emb)?;
+        let txt_mem =
+            if model.variant == BlockVariant::Cross { Some(branch.txt.clone()) } else { None };
+
+        // device grid for this branch: ranks by (stage, sp-index)
+        let grid: Vec<Vec<usize>> = (0..n_stages)
+            .map(|s| {
+                (0..nsp)
+                    .map(|i| {
+                        let ring = i / sess.pc.ulysses;
+                        let ulysses = i % sess.pc.ulysses;
+                        mesh.rank(MeshCoord { cfg: branch.idx.min(sess.pc.cfg - 1), pipe: s, ring, ulysses })
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // lazily created buffers
+        for s in 0..n_stages {
+            for i in 0..nsp {
+                self.buffers
+                    .entry((branch.idx, s, i))
+                    .or_insert_with(|| KvBuffer::zeros(ls, model.attn_seq(), model.d));
+            }
+        }
+
+        if warmup {
+            let (eps, k_new, v_new) = crate::parallel::exact_step(sess, branch, x, &cond)?;
+            let serial_fl = crate::parallel::flops_stage(
+                &model,
+                model.layers,
+                model.s_img,
+                model.s_txt,
+                model.attn_seq(),
+            );
+            let all: Vec<usize> = grid.iter().flatten().copied().collect();
+            for &d in &all {
+                sess.charge_compute(d, serial_fl / all.len() as f64);
+            }
+            sess.clocks.sync(&all);
+            for s in 0..n_stages {
+                for i in 0..nsp {
+                    let buf = self.buffers.get_mut(&(branch.idx, s, i)).unwrap();
+                    buf.k = k_new.slice_rows(s * ls, (s + 1) * ls)?;
+                    buf.v = v_new.slice_rows(s * ls, (s + 1) * ls)?;
+                }
+            }
+            return Ok(eps);
+        }
+
+        let patch_offs = split_offsets(model.s_img, m_patches);
+        let patch_toffs = split_offsets(model.s_txt, m_patches);
+        let p_img_shard = model.s_img / pf;
+        let p_txt_shard = if is_mmdit { model.s_txt / pf } else { 0 };
+
+        let mut eps_parts: Vec<Tensor> = Vec::with_capacity(m_patches);
+
+        for m in 0..m_patches {
+            let (off_img, len_img) = patch_offs[m];
+            let (off_txt, len_txt) = patch_toffs[m];
+
+            // stage-0 SP group embeds its shards
+            let shard_offs = split_offsets(len_img, nsp);
+            let mut x_img: Vec<Tensor> = Vec::with_capacity(nsp);
+            for (i, &dev) in grid[0].iter().enumerate() {
+                let (so, sl) = shard_offs[i];
+                let latent = x.slice_rows(off_img + so, off_img + so + sl)?;
+                x_img.push(model.embed_patch(sess.rt, pf, &latent, off_img + so)?);
+                sess.charge_compute(dev, flops::embed_flops(sl, model.c_latent, model.d));
+            }
+            let mut x_txt: Option<Vec<Tensor>> = if is_mmdit {
+                let offs = split_offsets(len_txt, nsp);
+                Some(
+                    offs.iter()
+                        .map(|&(o, l)| branch.txt.slice_rows(off_txt + o, off_txt + o + l))
+                        .collect::<Result<Vec<_>>>()?,
+                )
+            } else {
+                None
+            };
+
+            for s in 0..n_stages {
+                let ranks = grid[s].clone();
+                for lr in 0..ls {
+                    let layer_abs = s * ls + lr;
+                    // per-rank bases from the (possibly desynchronized)
+                    // buffers
+                    let bases: Vec<(Tensor, Tensor)> = (0..nsp)
+                        .map(|i| self.buffers[&(branch.idx, s, i)].layer_full(lr))
+                        .collect::<Result<Vec<_>>>()?;
+                    let out = sp_layer(
+                        sess,
+                        &ranks,
+                        layer_abs,
+                        pf,
+                        &x_img,
+                        x_txt.as_deref(),
+                        None,
+                        &cond,
+                        txt_mem.as_ref(),
+                        &bases,
+                        off_img,
+                        off_txt,
+                    )?;
+                    x_img = out.x_img;
+                    if let Some(tn) = out.x_txt {
+                        x_txt = Some(tn);
+                    }
+                    // KV buffer update rule (Fig 6/7)
+                    for i in 0..nsp {
+                        let buf = self.buffers.get_mut(&(branch.idx, s, i)).unwrap();
+                        match self.rule {
+                            KvUpdateRule::Consistent => {
+                                // whole-patch rows on every device
+                                if let (Some(kt), Some(vt)) = (&out.k_txt, &out.v_txt) {
+                                    buf.scatter_layer(lr, off_txt, kt, vt)?;
+                                }
+                                buf.scatter_layer(
+                                    lr,
+                                    model.img_buf_off(off_img),
+                                    &out.k_img,
+                                    &out.v_img,
+                                )?;
+                            }
+                            KvUpdateRule::StandardSp => {
+                                // own shard only — the broken variant
+                                let (so, sl) = shard_offs[i];
+                                let k_own = out.k_img.slice_rows(
+                                    i * p_img_shard,
+                                    i * p_img_shard + sl.min(p_img_shard),
+                                )?;
+                                let v_own = out
+                                    .v_img
+                                    .slice_rows(i * p_img_shard, i * p_img_shard + sl.min(p_img_shard))?;
+                                buf.scatter_layer(
+                                    lr,
+                                    model.img_buf_off(off_img + so),
+                                    &k_own,
+                                    &v_own,
+                                )?;
+                                if let (Some(kt), Some(vt)) = (&out.k_txt, &out.v_txt) {
+                                    let kt_own =
+                                        kt.slice_rows(i * p_txt_shard, (i + 1) * p_txt_shard)?;
+                                    let vt_own =
+                                        vt.slice_rows(i * p_txt_shard, (i + 1) * p_txt_shard)?;
+                                    buf.scatter_layer(
+                                        lr,
+                                        off_txt + i * p_txt_shard,
+                                        &kt_own,
+                                        &vt_own,
+                                    )?;
+                                }
+                            }
+                        }
+                    }
+                }
+                // hand the patch shards to the next stage (async P2P,
+                // shard i -> shard i of stage s+1)
+                if s + 1 < n_stages {
+                    for i in 0..nsp {
+                        let bytes = x_img[i].size_bytes()
+                            + x_txt.as_ref().map(|t| t[i].size_bytes()).unwrap_or(0);
+                        let (src, dst) = (grid[s][i], grid[s + 1][i]);
+                        let arrive = sess.with_comm(|comm| {
+                            let payload = Tensor::zeros(&[bytes / 4]);
+                            Ok(comm.p2p_async(src, dst, payload).1)
+                        })?;
+                        sess.clocks.wait_until(dst, arrive);
+                    }
+                }
+            }
+
+            // final layer on the last stage's SP group, shard-wise
+            let last = &grid[n_stages - 1];
+            let mut parts = Vec::with_capacity(nsp);
+            for (i, &dev) in last.iter().enumerate() {
+                parts.push(model.final_patch(sess.rt, pf, &x_img[i], &cond)?);
+                sess.charge_compute(
+                    dev,
+                    flops::final_flops(p_img_shard, model.c_latent, model.d),
+                );
+            }
+            // result patch returns to stage 0 for the next step
+            if n_stages > 1 {
+                for i in 0..nsp {
+                    let (src, dst) = (grid[n_stages - 1][i], grid[0][i]);
+                    let arrive = sess.with_comm(|comm| {
+                        Ok(comm.p2p_async(src, dst, parts[i].clone()).1)
+                    })?;
+                    sess.clocks.wait_until(dst, arrive);
+                }
+            }
+            eps_parts.push(Tensor::concat_rows(&parts)?);
+        }
+
+        Tensor::concat_rows(&eps_parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::l40_cluster;
+    use crate::config::parallel::ParallelConfig;
+    use crate::model::TextEncoder;
+    use crate::parallel::serial::Serial;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+
+    fn setup() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::load(dir).unwrap())
+    }
+
+    fn branch(rt: &Runtime, n: usize) -> BranchCtx {
+        let enc = TextEncoder::new(&rt.host_weights, 32).unwrap();
+        let txt = enc.embed("hybrid parallel test");
+        BranchCtx { idx: 0, ranks: (0..n).collect(), txt_pool: txt.mean_rows(), txt }
+    }
+
+    /// The Fig-6/7 reproduction: along an *evolving* latent trajectory
+    /// (stale != fresh), the consistent rule stays near the serial result
+    /// while the standard-SP rule reads half-stale K/V and drifts further.
+    /// (With a constant latent both rules are trivially exact — stale
+    /// values equal fresh ones — so the trajectory must move.)
+    #[test]
+    fn consistent_rule_beats_standard_sp() {
+        let Some(rt) = setup() else { return };
+        let mut rng = Rng::new(21);
+        let xs: Vec<Tensor> = (0..3)
+            .map(|i| {
+                let base = Tensor::randn(&[256, 4], &mut Rng::new(21));
+                let drift = Tensor::randn(&[256, 4], &mut rng).scale(0.08 * i as f32);
+                base.add(&drift).unwrap()
+            })
+            .collect();
+        let mut s0 = Session::new(&rt, BlockVariant::AdaLn, l40_cluster(1), ParallelConfig::serial())
+            .unwrap();
+        // serial reference on the final latent (fresh everything)
+        let e_serial = Serial.denoise(&mut s0, &xs[2], 420.0, 0, &branch(&rt, 1)).unwrap();
+
+        let pc = ParallelConfig::new(1, 2, 2, 1).with_patches(2);
+        let run = |rule: KvUpdateRule| {
+            let mut sess = Session::new(&rt, BlockVariant::AdaLn, l40_cluster(1), pc).unwrap();
+            let mut h = Hybrid::new(rule);
+            let b = branch(&rt, 4);
+            let _ = h.denoise(&mut sess, &xs[0], 420.0, 0, &b).unwrap(); // warmup
+            let _ = h.denoise(&mut sess, &xs[1], 420.0, 1, &b).unwrap();
+            h.denoise(&mut sess, &xs[2], 420.0, 2, &b).unwrap()
+        };
+        let e_good = run(KvUpdateRule::Consistent);
+        let e_bad = run(KvUpdateRule::StandardSp);
+        let d_good = e_good.max_abs_diff(&e_serial).unwrap();
+        let d_bad = e_bad.max_abs_diff(&e_serial).unwrap();
+        assert!(d_good > 0.0, "trajectory should expose staleness");
+        assert!(d_bad > d_good, "standard-SP should be worse: good={d_good} bad={d_bad}");
+    }
+
+    #[test]
+    fn hybrid_mmdit_runs_all_dims() {
+        let Some(rt) = setup() else { return };
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(22));
+        let pc = ParallelConfig::new(1, 2, 2, 1).with_patches(2);
+        let mut sess = Session::new(&rt, BlockVariant::MmDit, l40_cluster(1), pc).unwrap();
+        let mut h = Hybrid::new(KvUpdateRule::Consistent);
+        let b = branch(&rt, 4);
+        let e = h.denoise(&mut sess, &x, 350.0, 0, &b).unwrap();
+        assert_eq!(e.dims, vec![256, 4]);
+        let e2 = h.denoise(&mut sess, &x, 350.0, 1, &b).unwrap();
+        assert!(e2.data.iter().all(|v| v.is_finite()));
+        assert!(sess.ledger.count("all_to_all") > 0);
+        assert!(sess.ledger.count("p2p_async") > 0);
+    }
+}

@@ -1,0 +1,460 @@
+//! The parallel strategies of xDiT (paper §4): intra-image SP-Ulysses /
+//! SP-Ring / PipeFusion plus the TP and DistriFusion baselines, CFG
+//! (inter-image) parallelism, and the hybrid mesh combining them with the
+//! KV-consistency rule of Fig 6/7.
+//!
+//! Every strategy runs in *numeric + virtual-time* mode: activations really
+//! flow through the AOT HLO executables and between simulated devices,
+//! while per-device clocks are charged with analytic compute time (target
+//! GPU TFLOP/s) and link-model communication time. The figures use the
+//! closed-form `perf` models at paper scale; these strategies validate the
+//! semantics (exactness, staleness, buffer consistency) bit-for-bit.
+
+pub mod distrifusion;
+pub mod driver;
+pub mod hybrid;
+pub mod pipefusion;
+pub mod serial;
+pub mod sp;
+pub mod tp;
+
+use crate::comm::{Clocks, CommLedger, Communicator};
+use crate::config::hardware::ClusterSpec;
+use crate::config::model::BlockVariant;
+use crate::config::parallel::ParallelConfig;
+use crate::mesh::Mesh;
+use crate::model::DitModel;
+use crate::perf::flops;
+use crate::runtime::{ArgValue, Runtime};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+pub use driver::{generate, GenParams, GenResult};
+
+/// Shared generation session: runtime + model + simulated cluster state.
+pub struct Session<'a> {
+    pub rt: &'a Runtime,
+    pub model: DitModel,
+    pub cluster: ClusterSpec,
+    pub pc: ParallelConfig,
+    pub mesh: Mesh,
+    pub clocks: Clocks,
+    pub ledger: CommLedger,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        variant: BlockVariant,
+        cluster: ClusterSpec,
+        pc: ParallelConfig,
+    ) -> Result<Session<'a>> {
+        let model = DitModel::from_manifest(rt, variant)?;
+        let spec = crate::config::model::ModelSpec::by_name(&format!("tiny-{}", variant.key()))?;
+        pc.validate(&spec, model.s_img)?;
+        if pc.world() > cluster.n_gpus {
+            return Err(Error::config(format!(
+                "config needs {} devices, cluster '{}' has {}",
+                pc.world(),
+                cluster.name,
+                cluster.n_gpus
+            )));
+        }
+        let n = cluster.n_gpus;
+        Ok(Session {
+            rt,
+            model,
+            cluster,
+            pc,
+            mesh: Mesh::new(pc),
+            clocks: Clocks::new(n),
+            ledger: CommLedger::default(),
+        })
+    }
+
+    /// Charge analytic compute time to a device.
+    pub fn charge_compute(&mut self, dev: usize, fl: f64) {
+        let t = flops::compute_time(fl, self.cluster.gpu.tflops);
+        self.clocks.advance(dev, t);
+    }
+
+    /// Run `f` with a communicator and fold its ledger back.
+    pub fn with_comm<T>(&mut self, f: impl FnOnce(&mut Communicator) -> Result<T>) -> Result<T> {
+        let mut comm = Communicator::new(&self.cluster, &mut self.clocks);
+        let out = f(&mut comm);
+        let ops = std::mem::take(&mut comm.ledger.ops);
+        self.ledger.ops.extend(ops);
+        out
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.clocks.makespan()
+    }
+}
+
+/// Per-branch (CFG cond/uncond) context.
+pub struct BranchCtx {
+    /// Branch index: 0 = conditional, 1 = unconditional.
+    pub idx: usize,
+    /// Devices this branch runs on (all devices when cfg degree is 1).
+    pub ranks: Vec<usize>,
+    /// Embedded text sequence [s_txt, d].
+    pub txt: Tensor,
+    /// Pooled text vector [d].
+    pub txt_pool: Tensor,
+}
+
+impl BranchCtx {
+    /// Conditioning vector for the variant at timestep embedding `t_emb`.
+    pub fn cond(&self, variant: BlockVariant, t_emb: &Tensor) -> Result<Tensor> {
+        match variant {
+            // cross-attention injects text via attention; cond is time-only
+            BlockVariant::Cross => Ok(t_emb.clone()),
+            _ => t_emb.add(&self.txt_pool),
+        }
+    }
+}
+
+/// A parallel denoising strategy.
+pub trait Strategy {
+    fn name(&self) -> String;
+
+    /// Predict the model output for one branch at diffusion step `step`
+    /// (timestep value `t`), over the full latent `x` `[s_img, c]`.
+    fn denoise(
+        &mut self,
+        sess: &mut Session,
+        x: &Tensor,
+        t: f32,
+        step: usize,
+        branch: &BranchCtx,
+    ) -> Result<Tensor>;
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers.
+// ---------------------------------------------------------------------------
+
+/// Contiguous equal split offsets: [(off, len); shards].
+pub fn split_offsets(total: usize, shards: usize) -> Vec<(usize, usize)> {
+    let per = total / shards;
+    (0..shards).map(|i| (i * per, per)).collect()
+}
+
+/// qkv-projection FLOPs for a patch (per layer).
+pub fn flops_qkv(model: &DitModel, p_img: usize, p_txt: usize) -> f64 {
+    let d = model.d as f64;
+    let mut f = 2.0 * p_img as f64 * d * 3.0 * d;
+    if model.variant == BlockVariant::MmDit {
+        f += 2.0 * p_txt as f64 * d * 3.0 * d;
+    }
+    f
+}
+
+/// post-phase FLOPs (attention + out-proj + MLP) for a patch (per layer).
+pub fn flops_post(model: &DitModel, p_img: usize, p_txt: usize, s_kv: usize) -> f64 {
+    let d = model.d as f64;
+    let m = 4.0;
+    let p = (p_img + if model.variant == BlockVariant::MmDit { p_txt } else { 0 }) as f64;
+    let attn = 2.0 * 2.0 * p * s_kv as f64 * d;
+    let proj = 2.0 * p * d * d;
+    let mlp = 2.0 * 2.0 * p * d * m * d;
+    let cross = if model.variant == BlockVariant::Cross {
+        flops::cross_extra_flops(1, p_img, model.s_txt, model.d)
+    } else {
+        0.0
+    };
+    attn + proj + mlp + cross
+}
+
+/// Full-stage FLOPs for `ls` layers over a patch.
+pub fn flops_stage(model: &DitModel, ls: usize, p_img: usize, p_txt: usize, s_kv: usize) -> f64 {
+    ls as f64 * (flops_qkv(model, p_img, p_txt) + flops_post(model, p_img, p_txt, s_kv))
+}
+
+/// Result of one exact SP layer pass.
+pub struct SpLayerOut {
+    pub x_img: Vec<Tensor>,
+    pub x_txt: Option<Vec<Tensor>>,
+    /// Fresh K/V of the whole patch (concatenated over SP ranks).
+    pub k_img: Tensor,
+    pub v_img: Tensor,
+    pub k_txt: Option<Tensor>,
+    pub v_txt: Option<Tensor>,
+}
+
+/// One exact SP layer pass over a *patch* (the whole image for pure SP; one
+/// PipeFusion patch in hybrid mode) split across an SP group.
+///
+/// `bases`: per-rank attention base K/V `[s_attn, d]` (the PipeFusion
+/// buffers in hybrid mode — identical across ranks iff the Fig-6/7
+/// consistent update rule is active; zeros for pure SP where the patch
+/// covers the whole sequence). The patch's fresh K/V rows — produced by
+/// *all* ranks and exchanged (Ulysses All2All / Ring rotation, charged on
+/// the clocks) — replace the patch rows before attention.
+#[allow(clippy::too_many_arguments)]
+pub fn sp_layer(
+    sess: &mut Session,
+    sp_ranks: &[usize],
+    layer_abs: usize,
+    pf: usize,
+    x_img: &[Tensor],
+    x_txt: Option<&[Tensor]>,
+    skip_rows: Option<&[Tensor]>,
+    cond: &Tensor,
+    txt_mem: Option<&Tensor>,
+    bases: &[(Tensor, Tensor)],
+    patch_off_img: usize,
+    patch_off_txt: usize,
+) -> Result<SpLayerOut> {
+    let model = sess.model.clone();
+    let nsp = sp_ranks.len();
+    debug_assert_eq!(bases.len(), nsp);
+    let d = model.d;
+    let half = model.layers / 2;
+    let is_skip_dec = model.variant == BlockVariant::Skip && layer_abs >= half;
+    let p_img = x_img[0].dims[0];
+    let p_txt = x_txt.map(|t| t[0].dims[0]).unwrap_or(0);
+
+    // ---- phase 1: local qkv on every rank --------------------------------
+    let mut qs_img = Vec::with_capacity(nsp);
+    let mut ks_img = Vec::with_capacity(nsp);
+    let mut vs_img = Vec::with_capacity(nsp);
+    let mut qs_txt = Vec::new();
+    let mut ks_txt = Vec::new();
+    let mut vs_txt = Vec::new();
+    let mut x_img_new = x_img.to_vec();
+
+    for (i, &dev) in sp_ranks.iter().enumerate() {
+        sess.charge_compute(dev, flops_qkv(&model, p_img, p_txt));
+        match model.variant {
+            BlockVariant::MmDit => {
+                let out = sess.rt.call(
+                    &format!("mmdit_qkv_p{pf}"),
+                    layer_abs,
+                    &[
+                        ArgValue::F32(&x_txt.unwrap()[i]),
+                        ArgValue::F32(&x_img[i]),
+                        ArgValue::F32(&cond),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                qs_txt.push(it.next().unwrap());
+                ks_txt.push(it.next().unwrap());
+                vs_txt.push(it.next().unwrap());
+                qs_img.push(it.next().unwrap());
+                ks_img.push(it.next().unwrap());
+                vs_img.push(it.next().unwrap());
+            }
+            BlockVariant::Skip if is_skip_dec => {
+                let out = sess.rt.call(
+                    &format!("skip_dec_qkv_p{pf}"),
+                    layer_abs - half,
+                    &[
+                        ArgValue::F32(&x_img[i]),
+                        ArgValue::F32(&skip_rows.unwrap()[i]),
+                        ArgValue::F32(&cond),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                x_img_new[i] = it.next().unwrap(); // x after skip-fuse
+                qs_img.push(it.next().unwrap());
+                ks_img.push(it.next().unwrap());
+                vs_img.push(it.next().unwrap());
+            }
+            _ => {
+                let entry = match model.variant {
+                    BlockVariant::AdaLn => format!("adaln_qkv_p{pf}"),
+                    BlockVariant::Cross => format!("cross_qkv_p{pf}"),
+                    BlockVariant::Skip => format!("skip_enc_qkv_p{pf}"),
+                    BlockVariant::MmDit => unreachable!(),
+                };
+                let out = sess.rt.call(
+                    &entry,
+                    layer_abs,
+                    &[ArgValue::F32(&x_img[i]), ArgValue::F32(&cond)],
+                )?;
+                let mut it = out.into_iter();
+                qs_img.push(it.next().unwrap());
+                ks_img.push(it.next().unwrap());
+                vs_img.push(it.next().unwrap());
+            }
+        }
+    }
+
+    // ---- phase 2: SP exchange (data + cost) -------------------------------
+    let k_img = Tensor::concat_rows(&ks_img)?;
+    let v_img = Tensor::concat_rows(&vs_img)?;
+    let (k_txt, v_txt) = if model.variant == BlockVariant::MmDit {
+        (Some(Tensor::concat_rows(&ks_txt)?), Some(Tensor::concat_rows(&vs_txt)?))
+    } else {
+        (None, None)
+    };
+    charge_sp_exchange(sess, sp_ranks, (p_img + p_txt) * d * 4);
+
+    // ---- phase 3: attention + MLP with the exchanged K/V ------------------
+    let mut x_txt_new = x_txt.map(|t| t.to_vec());
+    for (i, &dev) in sp_ranks.iter().enumerate() {
+        let (mut kf, mut vf) = bases[i].clone();
+        if let (Some(kt), Some(vt)) = (&k_txt, &v_txt) {
+            kf.scatter_rows(patch_off_txt, kt)?;
+            vf.scatter_rows(patch_off_txt, vt)?;
+        }
+        let img_base = model.img_buf_off(patch_off_img);
+        kf.scatter_rows(img_base, &k_img)?;
+        vf.scatter_rows(img_base, &v_img)?;
+
+        sess.charge_compute(dev, flops_post(&model, p_img, p_txt, model.attn_seq()));
+        match model.variant {
+            BlockVariant::MmDit => {
+                let out = sess.rt.call(
+                    &format!("mmdit_post_p{pf}"),
+                    layer_abs,
+                    &[
+                        ArgValue::F32(&x_txt.unwrap()[i]),
+                        ArgValue::F32(&x_img[i]),
+                        ArgValue::F32(&qs_txt[i]),
+                        ArgValue::F32(&qs_img[i]),
+                        ArgValue::F32(&kf),
+                        ArgValue::F32(&vf),
+                        ArgValue::F32(&cond),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                x_txt_new.as_mut().unwrap()[i] = it.next().unwrap();
+                x_img_new[i] = it.next().unwrap();
+            }
+            BlockVariant::Cross => {
+                let out = sess.rt.call(
+                    &format!("cross_post_p{pf}"),
+                    layer_abs,
+                    &[
+                        ArgValue::F32(&x_img[i]),
+                        ArgValue::F32(&qs_img[i]),
+                        ArgValue::F32(&kf),
+                        ArgValue::F32(&vf),
+                        ArgValue::F32(&cond),
+                        ArgValue::F32(txt_mem.unwrap()),
+                    ],
+                )?;
+                x_img_new[i] = out.into_iter().next().unwrap();
+            }
+            _ => {
+                let entry = if is_skip_dec {
+                    format!("skip_dec_post_p{pf}")
+                } else if model.variant == BlockVariant::Skip {
+                    format!("skip_enc_post_p{pf}")
+                } else {
+                    format!("adaln_post_p{pf}")
+                };
+                let stage = if is_skip_dec { layer_abs - half } else { layer_abs };
+                let out = sess.rt.call(
+                    &entry,
+                    stage,
+                    &[
+                        ArgValue::F32(&x_img_new[i]),
+                        ArgValue::F32(&qs_img[i]),
+                        ArgValue::F32(&kf),
+                        ArgValue::F32(&vf),
+                        ArgValue::F32(&cond),
+                    ],
+                )?;
+                x_img_new[i] = out.into_iter().next().unwrap();
+            }
+        }
+    }
+
+    Ok(SpLayerOut { x_img: x_img_new, x_txt: x_txt_new, k_img, v_img, k_txt, v_txt })
+}
+
+/// One *exact* full-sequence forward (the synchronous warmup step of
+/// PipeFusion / DistriFusion): embed -> whole model in one stage -> final.
+/// Returns `(eps, k_new, v_new)` with `k_new: [L, s_attn, d]` fresh for the
+/// entire sequence, which the caller scatters into its staleness buffers.
+pub fn exact_step(
+    sess: &mut Session,
+    branch: &BranchCtx,
+    x: &Tensor,
+    cond: &Tensor,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let model = sess.model.clone();
+    let x_emb = model.embed_patch(sess.rt, 1, x, 0)?;
+    let kv = crate::model::KvBuffer::zeros(model.layers, model.attn_seq(), model.d);
+    let is_mmdit = model.variant == BlockVariant::MmDit;
+    let sin = crate::model::StageIn {
+        x_img: &x_emb,
+        x_txt: if is_mmdit { Some(&branch.txt) } else { None },
+        skips: None,
+        cond,
+        txt_mem: if model.variant == BlockVariant::Cross { Some(&branch.txt) } else { None },
+        kv: &kv,
+        off_img: 0,
+        off_txt: 0,
+    };
+    let out = model.run_stage(sess.rt, crate::model::StageKind::Whole, model.layers, 1, 0, &sin)?;
+    let eps = model.final_patch(sess.rt, 1, &out.y_img, cond)?;
+    Ok((eps, out.k_new, out.v_new))
+}
+
+/// Charge the SP exchange for one layer: Ulysses All2All on the ulysses
+/// subgroups (4 ops: q,k,v out + o back, paper Table 1) and Ring rotation on
+/// the ring subgroups ((n-1) K/V block hops; overlap with attention is what
+/// distinguishes Ring and is modelled in `perf::latency` — the live
+/// simulator charges the transfers).
+fn charge_sp_exchange(sess: &mut Session, sp_ranks: &[usize], shard_bytes: usize) {
+    let mesh = sess.mesh.clone();
+    let u = sess.pc.ulysses;
+    let r = sess.pc.ring;
+    if u > 1 {
+        let mut seen = std::collections::BTreeSet::new();
+        for &rank in sp_ranks {
+            let g = mesh.ulysses_group(rank);
+            if seen.insert(g.clone()) {
+                let _ = sess.with_comm(|comm| {
+                    comm.charge("all_to_all", &g, 4 * shard_bytes, 1.0);
+                    Ok(())
+                });
+            }
+        }
+    }
+    if r > 1 {
+        let mut seen = std::collections::BTreeSet::new();
+        for &rank in sp_ranks {
+            let g = mesh.ring_group(rank);
+            if seen.insert(g.clone()) {
+                let _ = sess.with_comm(|comm| {
+                    comm.charge("ring_kv", &g, 2 * shard_bytes * (r - 1), 1.0);
+                    Ok(())
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_offsets_cover() {
+        let o = split_offsets(256, 4);
+        assert_eq!(o, vec![(0, 64), (64, 64), (128, 64), (192, 64)]);
+    }
+
+    #[test]
+    fn flops_helpers_positive_and_additive() {
+        let m = DitModel {
+            variant: BlockVariant::AdaLn,
+            d: 192,
+            heads: 6,
+            layers: 8,
+            s_img: 256,
+            s_txt: 32,
+            c_latent: 4,
+            latent_hw: 16,
+        };
+        let s = flops_stage(&m, 2, 64, 0, 256);
+        let per = flops_qkv(&m, 64, 0) + flops_post(&m, 64, 0, 256);
+        assert!((s - 2.0 * per).abs() < 1.0);
+    }
+}

@@ -1,0 +1,311 @@
+//! PipeFusion: patch-level pipeline parallelism (paper §4.1.2).
+//!
+//! The model is split into `N = pc.pipefusion` stages of consecutive
+//! layers; the image into `M = pc.patches` patches. Each device keeps a
+//! per-layer **full-sequence KV buffer** for its stage; a patch micro-step
+//! computes with its own rows fresh and the other patches' rows *stale*
+//! (current step for earlier patches, previous step for later ones — the
+//! input-temporal-redundancy bet). Activations of one patch (`p × d`) flow
+//! stage-to-stage over async P2P, overlapped with compute; this is the
+//! `2·O(p·hs)` communication row of Table 1 — no per-layer collectives.
+//!
+//! Warmup steps (paper: 1) run the patches with synchronous stage barriers
+//! to initialize the buffers.
+
+use crate::config::model::BlockVariant;
+use crate::model::{KvBuffer, StageIn, StageKind, StageOut};
+use crate::parallel::{flops_stage, split_offsets, BranchCtx, Session, Strategy};
+use crate::perf::flops;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+pub struct PipeFusion {
+    /// Per (branch, stage) KV buffers, created lazily.
+    buffers: std::collections::HashMap<(usize, usize), KvBuffer>,
+}
+
+impl PipeFusion {
+    pub fn new() -> PipeFusion {
+        PipeFusion { buffers: std::collections::HashMap::new() }
+    }
+
+    fn buffer(&mut self, branch: usize, stage: usize, ls: usize, s: usize, d: usize) -> &mut KvBuffer {
+        self.buffers.entry((branch, stage)).or_insert_with(|| KvBuffer::zeros(ls, s, d))
+    }
+
+    fn ensure_buffers(&mut self, branch: usize, stages: usize, ls: usize, s: usize, d: usize) {
+        for st in 0..stages {
+            self.buffer(branch, st, ls, s, d);
+        }
+    }
+}
+
+impl Default for PipeFusion {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Scatter a stage output's fresh K/V (`[ls, p, d]`, text rows first for
+/// MM-DiT) into a buffer at the patch's offsets.
+pub fn scatter_patch_kv(
+    buf: &mut KvBuffer,
+    k_new: &Tensor,
+    v_new: &Tensor,
+    p_txt: usize,
+    off_txt: usize,
+    off_img_abs: usize,
+) -> Result<()> {
+    let ls = k_new.dims[0];
+    let p = k_new.dims[1];
+    let d = k_new.dims[2];
+    for l in 0..ls {
+        let k_l = k_new.slice_rows(l, l + 1)?.reshape(&[p, d])?;
+        let v_l = v_new.slice_rows(l, l + 1)?.reshape(&[p, d])?;
+        if p_txt > 0 {
+            buf.scatter_layer(l, off_txt, &k_l.slice_rows(0, p_txt)?, &v_l.slice_rows(0, p_txt)?)?;
+            buf.scatter_layer(
+                l,
+                off_img_abs,
+                &k_l.slice_rows(p_txt, p)?,
+                &v_l.slice_rows(p_txt, p)?,
+            )?;
+        } else {
+            buf.scatter_layer(l, off_img_abs, &k_l, &v_l)?;
+        }
+    }
+    Ok(())
+}
+
+impl Strategy for PipeFusion {
+    fn name(&self) -> String {
+        "pipefusion".into()
+    }
+
+    fn denoise(
+        &mut self,
+        sess: &mut Session,
+        x: &Tensor,
+        t: f32,
+        step: usize,
+        branch: &BranchCtx,
+    ) -> Result<Tensor> {
+        let model = sess.model.clone();
+        let n_stages = sess.pc.pipefusion;
+        let m_patches = sess.pc.patches;
+        let pf = sess.pc.seq_shards();
+        let ls = model.layers / n_stages;
+        let warmup = step < sess.pc.warmup_steps;
+        let is_skip = model.variant == BlockVariant::Skip;
+        if is_skip && n_stages > 2 {
+            return Err(Error::config("skip models support pipefusion <= 2"));
+        }
+        let stage_ranks: Vec<usize> = branch.ranks[..n_stages].to_vec();
+
+        let t_emb = model.t_cond(sess.rt, t)?;
+        let cond = branch.cond(model.variant, &t_emb)?;
+        let txt_mem =
+            if model.variant == BlockVariant::Cross { Some(branch.txt.clone()) } else { None };
+        let is_mmdit = model.variant == BlockVariant::MmDit;
+
+        let img_offs = split_offsets(model.s_img, m_patches);
+        let txt_offs = split_offsets(model.s_txt, m_patches);
+        let p_img = model.s_img / m_patches;
+        let p_txt = if is_mmdit { model.s_txt / m_patches } else { 0 };
+
+        if warmup {
+            // Synchronous warmup (paper §4.1.2): no pipelining, buffers
+            // initialized with the exact full-sequence K/V. Costs ~one
+            // serial step on the whole pipeline group.
+            let (eps, k_new, v_new) = crate::parallel::exact_step(sess, branch, x, &cond)?;
+            let serial_fl = flops_stage(&model, model.layers, model.s_img, model.s_txt, model.attn_seq());
+            for &d in &stage_ranks {
+                sess.charge_compute(d, serial_fl / n_stages as f64);
+            }
+            sess.clocks.sync(&stage_ranks);
+            for s in 0..n_stages {
+                let buf = self.buffer(branch.idx, s, ls, model.attn_seq(), model.d);
+                buf.k = k_new.slice_rows(s * ls, (s + 1) * ls)?;
+                buf.v = v_new.slice_rows(s * ls, (s + 1) * ls)?;
+            }
+            return Ok(eps);
+        }
+
+        self.ensure_buffers(branch.idx, n_stages, ls, model.attn_seq(), model.d);
+        let mut eps_parts: Vec<Option<Tensor>> = vec![None; m_patches];
+
+        for m in 0..m_patches {
+            let (off_img, len_img) = img_offs[m];
+            let (off_txt, _) = txt_offs[m];
+            // stage 0 embeds the arriving latent patch
+            let latent = x.slice_rows(off_img, off_img + len_img)?;
+            let mut x_img = model.embed_patch(sess.rt, pf, &latent, off_img)?;
+            sess.charge_compute(
+                stage_ranks[0],
+                flops::embed_flops(len_img, model.c_latent, model.d),
+            );
+            let mut x_txt: Option<Tensor> = if is_mmdit {
+                Some(branch.txt.slice_rows(off_txt, off_txt + p_txt)?)
+            } else {
+                None
+            };
+            let mut skips: Option<Tensor> = None;
+
+            for s in 0..n_stages {
+                let dev = stage_ranks[s];
+                let kind = if !is_skip || n_stages == 1 {
+                    StageKind::Whole
+                } else if s == 0 {
+                    StageKind::SkipEnc
+                } else {
+                    StageKind::SkipDec
+                };
+                // decoder-relative stage index per the WeightRef convention
+                let w_stage = if kind == StageKind::SkipDec { 0 } else { s };
+                // borrow the persistent buffer directly (no deep copy —
+                // §Perf iteration 5); the mutable scatter below re-borrows
+                // after the stage call completes.
+                let buf = &self.buffers[&(branch.idx, s)];
+                let sin = StageIn {
+                    x_img: &x_img,
+                    x_txt: x_txt.as_ref(),
+                    skips: skips.as_ref(),
+                    cond: &cond,
+                    txt_mem: txt_mem.as_ref(),
+                    kv: &buf,
+                    off_img,
+                    off_txt,
+                };
+                let out: StageOut = model.run_stage(sess.rt, kind, ls, pf, w_stage, &sin)?;
+                sess.charge_compute(
+                    dev,
+                    flops_stage(&model, ls, p_img, p_txt, model.attn_seq()),
+                );
+                // persist the fresh rows into this stage's buffer
+                let buf_mut = self.buffer(branch.idx, s, ls, model.attn_seq(), model.d);
+                scatter_patch_kv(
+                    buf_mut,
+                    &out.k_new,
+                    &out.v_new,
+                    p_txt,
+                    off_txt,
+                    model.img_buf_off(off_img),
+                )?;
+
+                x_img = out.y_img;
+                if let Some(t) = out.y_txt {
+                    x_txt = Some(t);
+                }
+                if out.skips.is_some() {
+                    skips = out.skips;
+                }
+
+                // forward the activation patch to the next stage
+                if s + 1 < n_stages {
+                    let next = stage_ranks[s + 1];
+                    let mut bytes = x_img.size_bytes()
+                        + x_txt.as_ref().map(|t| t.size_bytes()).unwrap_or(0);
+                    // skip tensors ride along enc->dec (the Fig-17 penalty)
+                    if kind == StageKind::SkipEnc {
+                        bytes += skips.as_ref().map(|t| t.size_bytes()).unwrap_or(0);
+                    }
+                    let arrive = sess.with_comm(|comm| {
+                        let payload = Tensor::zeros(&[bytes / 4]);
+                        let (_, arrive) = comm.p2p_async(dev, next, payload);
+                        Ok(arrive)
+                    })?;
+                    sess.clocks.wait_until(next, arrive);
+                }
+            }
+
+            // final layer on the last stage
+            let last = stage_ranks[n_stages - 1];
+            let eps = model.final_patch(sess.rt, pf, &x_img, &cond)?;
+            sess.charge_compute(last, flops::final_flops(p_img, model.c_latent, model.d));
+            // result patch returns to stage 0 for the next step's input
+            if n_stages > 1 {
+                sess.with_comm(|comm| {
+                    let (_, arrive) = comm.p2p_async(last, stage_ranks[0], eps.clone());
+                    comm.clocks.wait_until(stage_ranks[0], arrive);
+                    Ok(())
+                })?;
+            }
+            eps_parts[m] = Some(eps);
+        }
+
+        Tensor::concat_rows(&eps_parts.into_iter().map(Option::unwrap).collect::<Vec<_>>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::l40_cluster;
+    use crate::config::parallel::ParallelConfig;
+    use crate::model::TextEncoder;
+    use crate::parallel::serial::Serial;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+
+    fn setup() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::load(dir).unwrap())
+    }
+
+    fn branch(rt: &Runtime, n: usize) -> BranchCtx {
+        let enc = TextEncoder::new(&rt.host_weights, 32).unwrap();
+        let txt = enc.embed("pipefusion test");
+        BranchCtx { idx: 0, ranks: (0..n).collect(), txt_pool: txt.mean_rows(), txt }
+    }
+
+    /// Warmup step 0 processes patches sequentially, so after warmup the
+    /// buffers hold fresh values; step-0 output should be close to serial
+    /// (later patches saw earlier fresh rows; earlier patches saw stale
+    /// zeros for later rows — the expected warmup discrepancy).
+    #[test]
+    fn pipefusion_bounded_divergence_after_warmup() {
+        let Some(rt) = setup() else { return };
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(9));
+        let mut s0 =
+            Session::new(&rt, BlockVariant::AdaLn, l40_cluster(1), ParallelConfig::serial())
+                .unwrap();
+        let e_serial = Serial.denoise(&mut s0, &x, 800.0, 0, &branch(&rt, 1)).unwrap();
+
+        let pc = ParallelConfig::new(1, 2, 1, 1).with_patches(4);
+        let mut s1 = Session::new(&rt, BlockVariant::AdaLn, l40_cluster(1), pc).unwrap();
+        let mut pf = PipeFusion::new();
+        // warmup step
+        let _ = pf.denoise(&mut s1, &x, 800.0, 0, &branch(&rt, 2)).unwrap();
+        // pipelined step on the *same* latent: buffers now fresh for x
+        let e_pf = pf.denoise(&mut s1, &x, 800.0, 1, &branch(&rt, 2)).unwrap();
+        let diff = e_pf.max_abs_diff(&e_serial).unwrap();
+        assert!(diff < 5e-3, "post-warmup divergence too large: {diff}");
+        assert!(s1.ledger.count("p2p_async") > 0);
+    }
+
+    #[test]
+    fn pipefusion_mmdit_runs() {
+        let Some(rt) = setup() else { return };
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(10));
+        let pc = ParallelConfig::new(1, 4, 1, 1).with_patches(4);
+        let mut s = Session::new(&rt, BlockVariant::MmDit, l40_cluster(1), pc).unwrap();
+        let mut pf = PipeFusion::new();
+        let e = pf.denoise(&mut s, &x, 500.0, 0, &branch(&rt, 4)).unwrap();
+        assert_eq!(e.dims, vec![256, 4]);
+        assert!(e.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pipefusion_skip_enc_dec() {
+        let Some(rt) = setup() else { return };
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(11));
+        let pc = ParallelConfig::new(1, 2, 1, 1).with_patches(2);
+        let mut s = Session::new(&rt, BlockVariant::Skip, l40_cluster(1), pc).unwrap();
+        let mut pf = PipeFusion::new();
+        let e = pf.denoise(&mut s, &x, 500.0, 0, &branch(&rt, 2)).unwrap();
+        assert_eq!(e.dims, vec![256, 4]);
+    }
+}

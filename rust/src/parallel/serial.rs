@@ -1,0 +1,84 @@
+//! Serial (1-GPU) baseline: the reference every parallel strategy is
+//! checked against. Full sequence through the whole model in one stage
+//! call, fresh zero buffers (fully overwritten) — exact by construction.
+
+use crate::config::model::BlockVariant;
+use crate::model::{KvBuffer, StageIn, StageKind};
+use crate::parallel::{flops_stage, BranchCtx, Session, Strategy};
+use crate::tensor::Tensor;
+use crate::Result;
+
+#[derive(Default)]
+pub struct Serial;
+
+impl Strategy for Serial {
+    fn name(&self) -> String {
+        "serial".into()
+    }
+
+    fn denoise(
+        &mut self,
+        sess: &mut Session,
+        x: &Tensor,
+        t: f32,
+        _step: usize,
+        branch: &BranchCtx,
+    ) -> Result<Tensor> {
+        let model = sess.model.clone();
+        let dev = branch.ranks[0];
+        let t_emb = model.t_cond(sess.rt, t)?;
+        let cond = branch.cond(model.variant, &t_emb)?;
+
+        let x_emb = model.embed_patch(sess.rt, 1, x, 0)?;
+        let kv = KvBuffer::zeros(model.layers, model.attn_seq(), model.d);
+        let is_mmdit = model.variant == BlockVariant::MmDit;
+        let sin = StageIn {
+            x_img: &x_emb,
+            x_txt: if is_mmdit { Some(&branch.txt) } else { None },
+            skips: None,
+            cond: &cond,
+            txt_mem: if model.variant == BlockVariant::Cross { Some(&branch.txt) } else { None },
+            kv: &kv,
+            off_img: 0,
+            off_txt: 0,
+        };
+        let out = model.run_stage(sess.rt, StageKind::Whole, model.layers, 1, 0, &sin)?;
+        sess.charge_compute(
+            dev,
+            flops_stage(&model, model.layers, model.s_img, model.s_txt, model.attn_seq()),
+        );
+        let eps = model.final_patch(sess.rt, 1, &out.y_img, &cond)?;
+        Ok(eps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::a100_node;
+    use crate::config::parallel::ParallelConfig;
+    use crate::model::TextEncoder;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn serial_denoise_runs_and_is_deterministic() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::load(dir).unwrap();
+        let mut sess =
+            Session::new(&rt, BlockVariant::AdaLn, a100_node(), ParallelConfig::serial()).unwrap();
+        let enc = TextEncoder::new(&rt.host_weights, sess.model.s_txt).unwrap();
+        let txt = enc.embed("a red fox");
+        let branch = BranchCtx { idx: 0, ranks: vec![0], txt_pool: txt.mean_rows(), txt };
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(0));
+        let mut s = Serial;
+        let e1 = s.denoise(&mut sess, &x, 500.0, 0, &branch).unwrap();
+        let e2 = s.denoise(&mut sess, &x, 500.0, 0, &branch).unwrap();
+        assert_eq!(e1, e2);
+        assert_eq!(e1.dims, vec![256, 4]);
+        assert!(sess.makespan() > 0.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Sequence parallelism: SP-Ulysses and SP-Ring (paper §4.1.1), including
+//! the in-context-conditioning split of Fig 3 (both text and image are
+//! sharded along the sequence so MM-DiT models stay load-balanced).
+//!
+//! Numerics are *exact*: each layer runs the two-phase qkv/exchange/post
+//! entrypoints so every rank attends to the current step's full-sequence
+//! K/V — the property the paper relies on for SP correctness. The two
+//! flavours share the execution path; they differ in the communication
+//! charged (Ulysses: 4 All2All per layer; Ring: (n-1) K/V block rotations
+//! overlapped with attention) — set by `ParallelConfig::{ulysses, ring}`.
+
+use crate::config::model::BlockVariant;
+use crate::parallel::{
+    flops, split_offsets, sp_layer, BranchCtx, Session, Strategy,
+};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Pure sequence parallelism (degree = pc.ulysses * pc.ring).
+pub struct SequenceParallel;
+
+impl Strategy for SequenceParallel {
+    fn name(&self) -> String {
+        "sp".into()
+    }
+
+    fn denoise(
+        &mut self,
+        sess: &mut Session,
+        x: &Tensor,
+        t: f32,
+        _step: usize,
+        branch: &BranchCtx,
+    ) -> Result<Tensor> {
+        let model = sess.model.clone();
+        let nsp = sess.pc.sp_degree();
+        let pf = nsp; // patch factor = sp shards (whole image is the patch)
+        let ranks: Vec<usize> = branch.ranks[..nsp].to_vec();
+        let t_emb = model.t_cond(sess.rt, t)?;
+        let cond = branch.cond(model.variant, &t_emb)?;
+
+        // shard image (and text for in-context models) — Fig 3
+        let img_offs = split_offsets(model.s_img, nsp);
+        let mut x_img: Vec<Tensor> = Vec::with_capacity(nsp);
+        for (i, &dev) in ranks.iter().enumerate() {
+            let (off, len) = img_offs[i];
+            let latent = x.slice_rows(off, off + len)?;
+            x_img.push(model.embed_patch(sess.rt, pf, &latent, off)?);
+            sess.charge_compute(dev, flops::embed_flops(len, model.c_latent, model.d));
+        }
+        let mut x_txt: Option<Vec<Tensor>> = if model.variant == BlockVariant::MmDit {
+            let offs = split_offsets(model.s_txt, nsp);
+            Some(
+                offs.iter()
+                    .map(|&(o, l)| branch.txt.slice_rows(o, o + l))
+                    .collect::<Result<Vec<_>>>()?,
+            )
+        } else {
+            None
+        };
+        let txt_mem =
+            if model.variant == BlockVariant::Cross { Some(branch.txt.clone()) } else { None };
+
+        // per-layer two-phase SP; skip variant carries the U-ViT skip stack
+        let zero_base = (
+            Tensor::zeros(&[model.attn_seq(), model.d]),
+            Tensor::zeros(&[model.attn_seq(), model.d]),
+        );
+        let bases: Vec<(Tensor, Tensor)> = vec![zero_base; nsp];
+        let mut skip_stack: Vec<Vec<Tensor>> = Vec::new();
+        let half = model.layers / 2;
+        for layer in 0..model.layers {
+            let is_skip = model.variant == BlockVariant::Skip;
+            let skip_rows: Option<Vec<Tensor>> = if is_skip && layer >= half {
+                Some(skip_stack.pop().expect("skip stack underflow"))
+            } else {
+                None
+            };
+            let out = sp_layer(
+                sess,
+                &ranks,
+                layer,
+                pf,
+                &x_img,
+                x_txt.as_deref(),
+                skip_rows.as_deref(),
+                &cond,
+                txt_mem.as_ref(),
+                &bases,
+                0,
+                0,
+            )?;
+            x_img = out.x_img;
+            if let Some(t) = out.x_txt {
+                x_txt = Some(t);
+            }
+            if is_skip && layer < half {
+                skip_stack.push(x_img.clone());
+            }
+        }
+
+        // final layer per shard; assemble eps (element-wise scheduler update
+        // is shard-local in the real system; assembling here is free)
+        let mut eps_parts = Vec::with_capacity(nsp);
+        for (i, &dev) in ranks.iter().enumerate() {
+            eps_parts.push(model.final_patch(sess.rt, pf, &x_img[i], &cond)?);
+            sess.charge_compute(
+                dev,
+                flops::final_flops(img_offs[i].1, model.c_latent, model.d),
+            );
+        }
+        Tensor::concat_rows(&eps_parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::{a100_node, l40_cluster};
+    use crate::config::parallel::ParallelConfig;
+    use crate::model::TextEncoder;
+    use crate::parallel::serial::Serial;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+
+    fn setup() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::load(dir).unwrap())
+    }
+
+    fn branch(rt: &Runtime, n: usize) -> BranchCtx {
+        let enc = TextEncoder::new(&rt.host_weights, 32).unwrap();
+        let txt = enc.embed("sp test prompt");
+        BranchCtx { idx: 0, ranks: (0..n).collect(), txt_pool: txt.mean_rows(), txt }
+    }
+
+    #[test]
+    fn ulysses_exact_vs_serial_adaln() {
+        let Some(rt) = setup() else { return };
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(3));
+        let mut s = Session::new(&rt, BlockVariant::AdaLn, a100_node(), ParallelConfig::serial())
+            .unwrap();
+        let e0 = Serial.denoise(&mut s, &x, 700.0, 0, &branch(&rt, 1)).unwrap();
+
+        let pc = ParallelConfig::new(1, 1, 2, 1);
+        let mut s2 = Session::new(&rt, BlockVariant::AdaLn, a100_node(), pc).unwrap();
+        let e1 = SequenceParallel.denoise(&mut s2, &x, 700.0, 0, &branch(&rt, 2)).unwrap();
+        assert!(
+            e1.allclose(&e0, 5e-4),
+            "ulysses(2) != serial: {}",
+            e1.max_abs_diff(&e0).unwrap()
+        );
+        assert!(s2.ledger.count("all_to_all") >= 8);
+    }
+
+    #[test]
+    fn ring_exact_vs_serial_mmdit() {
+        let Some(rt) = setup() else { return };
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(4));
+        let mut s = Session::new(&rt, BlockVariant::MmDit, a100_node(), ParallelConfig::serial())
+            .unwrap();
+        let e0 = Serial.denoise(&mut s, &x, 300.0, 0, &branch(&rt, 1)).unwrap();
+
+        let pc = ParallelConfig::new(1, 1, 1, 4);
+        let mut s2 = Session::new(&rt, BlockVariant::MmDit, l40_cluster(1), pc).unwrap();
+        let e1 = SequenceParallel.denoise(&mut s2, &x, 300.0, 0, &branch(&rt, 4)).unwrap();
+        assert!(
+            e1.allclose(&e0, 5e-4),
+            "ring(4) != serial: {}",
+            e1.max_abs_diff(&e0).unwrap()
+        );
+        assert!(s2.ledger.count("ring_kv") >= 8);
+    }
+
+    #[test]
+    fn usp_exact_vs_serial_cross() {
+        // hybrid ulysses x ring (USP) on the cross-attention variant
+        let Some(rt) = setup() else { return };
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(5));
+        let mut s = Session::new(&rt, BlockVariant::Cross, a100_node(), ParallelConfig::serial())
+            .unwrap();
+        let e0 = Serial.denoise(&mut s, &x, 200.0, 0, &branch(&rt, 1)).unwrap();
+
+        let pc = ParallelConfig::new(1, 1, 2, 2);
+        let mut s2 = Session::new(&rt, BlockVariant::Cross, a100_node(), pc).unwrap();
+        let e1 = SequenceParallel.denoise(&mut s2, &x, 200.0, 0, &branch(&rt, 4)).unwrap();
+        assert!(
+            e1.allclose(&e0, 5e-4),
+            "usp(2x2) != serial: {}",
+            e1.max_abs_diff(&e0).unwrap()
+        );
+        assert!(s2.ledger.count("all_to_all") > 0);
+        assert!(s2.ledger.count("ring_kv") > 0);
+    }
+
+    #[test]
+    fn skip_variant_sp_exact() {
+        let Some(rt) = setup() else { return };
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(6));
+        let mut s = Session::new(&rt, BlockVariant::Skip, a100_node(), ParallelConfig::serial())
+            .unwrap();
+        let e0 = Serial.denoise(&mut s, &x, 600.0, 0, &branch(&rt, 1)).unwrap();
+
+        let pc = ParallelConfig::new(1, 1, 2, 1);
+        let mut s2 = Session::new(&rt, BlockVariant::Skip, a100_node(), pc).unwrap();
+        let e1 = SequenceParallel.denoise(&mut s2, &x, 600.0, 0, &branch(&rt, 2)).unwrap();
+        assert!(
+            e1.allclose(&e0, 5e-4),
+            "skip sp(2) != serial: {}",
+            e1.max_abs_diff(&e0).unwrap()
+        );
+    }
+}

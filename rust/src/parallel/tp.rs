@@ -1,0 +1,126 @@
+//! Tensor parallelism baseline (Megatron-style head/FFN sharding).
+//!
+//! TP's math is *identical* to serial — each device computes a head/FFN
+//! shard and two AllReduces per layer restore the full activations — so the
+//! numeric path reuses the serial computation while the virtual-time path
+//! charges the real TP costs: compute/N per device plus per-layer
+//! 2×AllReduce of the full activation (paper Table 1: 4·O(p·hs)·L with the
+//! 2(n-1)/n ring factor, no overlap). The paper keeps TP only as the
+//! baseline it consistently beats (Fig 9: always the highest latency).
+
+use crate::config::model::BlockVariant;
+use crate::model::{KvBuffer, StageIn, StageKind};
+use crate::parallel::{flops_stage, BranchCtx, Session, Strategy};
+use crate::tensor::Tensor;
+use crate::Result;
+
+pub struct TensorParallel;
+
+impl Strategy for TensorParallel {
+    fn name(&self) -> String {
+        "tp".into()
+    }
+
+    fn denoise(
+        &mut self,
+        sess: &mut Session,
+        x: &Tensor,
+        t: f32,
+        _step: usize,
+        branch: &BranchCtx,
+    ) -> Result<Tensor> {
+        let model = sess.model.clone();
+        let group = branch.ranks.clone();
+        let n = group.len();
+        let t_emb = model.t_cond(sess.rt, t)?;
+        let cond = branch.cond(model.variant, &t_emb)?;
+
+        // numeric result == serial (TP is an exact decomposition)
+        let x_emb = model.embed_patch(sess.rt, 1, x, 0)?;
+        let kv = KvBuffer::zeros(model.layers, model.attn_seq(), model.d);
+        let is_mmdit = model.variant == BlockVariant::MmDit;
+        let sin = StageIn {
+            x_img: &x_emb,
+            x_txt: if is_mmdit { Some(&branch.txt) } else { None },
+            skips: None,
+            cond: &cond,
+            txt_mem: if model.variant == BlockVariant::Cross { Some(&branch.txt) } else { None },
+            kv: &kv,
+            off_img: 0,
+            off_txt: 0,
+        };
+        let out = model.run_stage(sess.rt, StageKind::Whole, model.layers, 1, 0, &sin)?;
+        let eps = model.final_patch(sess.rt, 1, &out.y_img, &cond)?;
+
+        // virtual-time: compute/N per device, 2 AllReduce of the full
+        // activation per layer (attention out + MLP out)
+        let full =
+            flops_stage(&model, model.layers, model.s_img, model.s_txt, model.attn_seq());
+        for &d in &group {
+            sess.charge_compute(d, full / n as f64);
+        }
+        let act_bytes = model.attn_seq() * model.d * 4;
+        let nf = n as f64;
+        for _layer in 0..model.layers {
+            for _ in 0..2 {
+                sess.with_comm(|c| {
+                    c.charge("all_reduce", &group, act_bytes, 2.0 * (nf - 1.0) / nf);
+                    Ok(())
+                })?;
+            }
+        }
+        Ok(eps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::l40_cluster;
+    use crate::config::parallel::ParallelConfig;
+    use crate::model::TextEncoder;
+    use crate::parallel::serial::Serial;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tp_matches_serial_but_pays_comm() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::load(dir).unwrap();
+        let enc = TextEncoder::new(&rt.host_weights, 32).unwrap();
+        let txt = enc.embed("city at night");
+        let x = Tensor::randn(&[256, 4], &mut Rng::new(7));
+
+        let mut s_sess = Session::new(
+            &rt,
+            BlockVariant::AdaLn,
+            l40_cluster(1),
+            ParallelConfig::serial(),
+        )
+        .unwrap();
+        let b0 = BranchCtx { idx: 0, ranks: vec![0], txt_pool: txt.mean_rows(), txt: txt.clone() };
+        let e_serial = Serial.denoise(&mut s_sess, &x, 400.0, 0, &b0).unwrap();
+
+        // TP over 4 devices: exact numerics, nonzero all_reduce traffic
+        let mut t_sess = Session::new(
+            &rt,
+            BlockVariant::AdaLn,
+            l40_cluster(1),
+            ParallelConfig::serial(),
+        )
+        .unwrap();
+        let b4 = BranchCtx {
+            idx: 0,
+            ranks: vec![0, 1, 2, 3],
+            txt_pool: txt.mean_rows(),
+            txt: txt.clone(),
+        };
+        let e_tp = TensorParallel.denoise(&mut t_sess, &x, 400.0, 0, &b4).unwrap();
+        assert_eq!(e_tp, e_serial);
+        assert_eq!(t_sess.ledger.count("all_reduce"), 2 * 8);
+        assert!(t_sess.makespan() > 0.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Closed-form per-step communication volumes — the paper's Table 1.
+//!
+//! Volumes are bytes *per device per diffusion step* (fp16 activations, as
+//! deployed), before the algorithm-bandwidth factor. `O(p×hs)` in the paper
+//! is `seq × hidden × 2 bytes` here.
+
+use crate::config::model::ModelSpec;
+
+/// Paper Table 1 rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Row {
+    TensorParallel,
+    DistriFusion,
+    SpRing,
+    SpUlysses,
+    PipeFusion,
+}
+
+impl Row {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Row::TensorParallel => "Tensor Parallelism",
+            Row::DistriFusion => "DistriFusion",
+            Row::SpRing => "SP-Ring",
+            Row::SpUlysses => "SP-Ulysses",
+            Row::PipeFusion => "PipeFusion",
+        }
+    }
+
+    pub fn overlaps(&self) -> bool {
+        matches!(self, Row::DistriFusion | Row::SpRing | Row::PipeFusion)
+    }
+}
+
+/// Communication bytes per device per step (excluding algbw factors), for
+/// intra-image parallel degree `n` at sequence length `s`.
+pub fn comm_bytes(row: Row, m: &ModelSpec, s: usize, n: usize) -> f64 {
+    let hs = s as f64 * m.hidden as f64 * 2.0; // O(p x hs) in fp16
+    let l = m.layers as f64;
+    match row {
+        // 2 AllReduce/layer, each moving ~2x the activation (ring factor
+        // folded into the time model): 4 O(p·hs) L
+        Row::TensorParallel => 4.0 * hs * l,
+        // K+V AllGather per layer: 2 O(p·hs) L
+        Row::DistriFusion => 2.0 * hs * l,
+        // K/V blocks circulate the full ring per layer: 2 O(p·hs) L
+        Row::SpRing => 2.0 * hs * l,
+        // 4 All2All per layer, each 1/n of the activation: 4/n O(p·hs) L
+        Row::SpUlysses => 4.0 / n as f64 * hs * l,
+        // one activation patch in + out per micro-step, no L factor:
+        // 2 O(p·hs)
+        Row::PipeFusion => 2.0 * hs,
+    }
+}
+
+/// Memory cost multipliers of Table 1 (params, KV), as fractions of the
+/// full model parameters `P` and full per-layer KV `(KV)L`.
+pub fn memory_fractions(row: Row, n: usize) -> (f64, f64) {
+    let inv = 1.0 / n as f64;
+    match row {
+        Row::TensorParallel => (inv, inv),
+        Row::DistriFusion => (1.0, 1.0),
+        Row::SpRing | Row::SpUlysses => (1.0, inv),
+        Row::PipeFusion => (inv, inv),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::ModelSpec;
+
+    #[test]
+    fn table1_ordering_holds() {
+        // PipeFusion lowest when N < 2L (paper §4.1.3)
+        let m = ModelSpec::by_name("sd3").unwrap(); // L = 24
+        let s = m.seq_len(1024);
+        for n in [2, 4, 8, 16] {
+            let pf = comm_bytes(Row::PipeFusion, &m, s, n);
+            for row in [Row::TensorParallel, Row::DistriFusion, Row::SpRing, Row::SpUlysses] {
+                assert!(
+                    pf < comm_bytes(row, &m, s, n),
+                    "pipefusion not lowest at n={n} vs {row:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ulysses_decreases_with_n() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let s = m.seq_len(2048);
+        assert!(
+            comm_bytes(Row::SpUlysses, &m, s, 8) < comm_bytes(Row::SpUlysses, &m, s, 2)
+        );
+        // ring does not decrease
+        assert_eq!(
+            comm_bytes(Row::SpRing, &m, s, 8),
+            comm_bytes(Row::SpRing, &m, s, 2)
+        );
+    }
+
+    #[test]
+    fn pipefusion_beats_ulysses_iff_n_lt_2l() {
+        let m = ModelSpec::by_name("sd3").unwrap();
+        let s = m.seq_len(1024);
+        // n < 2L = 48 -> pipefusion wins
+        assert!(comm_bytes(Row::PipeFusion, &m, s, 16) < comm_bytes(Row::SpUlysses, &m, s, 16));
+        // hypothetical n > 2L -> ulysses would win
+        assert!(comm_bytes(Row::PipeFusion, &m, s, 64) > comm_bytes(Row::SpUlysses, &m, s, 64));
+    }
+
+    #[test]
+    fn memory_fractions_match_table() {
+        assert_eq!(memory_fractions(Row::PipeFusion, 4), (0.25, 0.25));
+        assert_eq!(memory_fractions(Row::DistriFusion, 4), (1.0, 1.0));
+        assert_eq!(memory_fractions(Row::SpUlysses, 4), (1.0, 0.25));
+        assert_eq!(memory_fractions(Row::TensorParallel, 4), (0.25, 0.25));
+    }
+}

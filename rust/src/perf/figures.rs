@@ -1,0 +1,321 @@
+//! Reusable figure/table series generators — each paper figure's rows are
+//! produced here and printed by the corresponding bench target
+//! (`benches/figXX_*.rs`). Absolute seconds come from the analytic latency
+//! model at the paper's model dimensions; the *shape* (who wins, by what
+//! factor, where the crossovers fall) is the reproduction target.
+
+use crate::config::hardware::ClusterSpec;
+use crate::config::model::ModelSpec;
+use crate::config::parallel::ParallelConfig;
+use crate::perf::comm_model::{comm_bytes, memory_fractions, Row};
+use crate::perf::latency::{best_hybrid, predict_latency, serial_latency, Method};
+use crate::perf::memory_model::backbone_memory;
+
+pub const SINGLE_METHODS: [Method; 5] =
+    [Method::Tp, Method::SpUlysses, Method::SpRing, Method::DistriFusion, Method::PipeFusion];
+
+/// One scalability figure (Figs 8/10/12/14/15/16/17): latency of every
+/// method vs. GPU count, at several resolutions.
+pub fn scalability_figure(
+    title: &str,
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    pxs: &[usize],
+    steps: usize,
+    methods: &[Method],
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("# {title}: {} on {} ({} steps, {})\n",
+        model.name, cluster.name, steps, model.scheduler));
+    let gpus: Vec<usize> =
+        [1usize, 2, 4, 8, 16].iter().copied().filter(|&n| n <= cluster.n_gpus).collect();
+    for &px in pxs {
+        out.push_str(&format!("\n## {px}px (seq={})\n", model.attn_seq_len(px)));
+        out.push_str(&format!("{:<16}", "method\\gpus"));
+        for &n in &gpus {
+            out.push_str(&format!(" {:>9}", n));
+        }
+        out.push('\n');
+        out.push_str(&format!("{:<16}", "serial"));
+        out.push_str(&format!(" {:>9.2}", serial_latency(model, px, cluster, steps)));
+        out.push('\n');
+        for &meth in methods {
+            out.push_str(&format!("{:<16}", meth.label()));
+            for &n in &gpus {
+                if n == 1 {
+                    out.push_str(&format!(" {:>9}", "-"));
+                    continue;
+                }
+                let pc = meth.single_config(n);
+                // feasibility: divisibility + memory
+                let valid = match meth {
+                    Method::SpUlysses => model.heads % n == 0,
+                    // real xDiT balances uneven stage sizes; only n <= L
+                    Method::PipeFusion => n <= model.layers,
+                    _ => true,
+                };
+                let fits = crate::perf::memory_model::fits(
+                    model,
+                    px,
+                    row_of(meth),
+                    n,
+                    cluster.gpu.mem_bytes,
+                );
+                if !valid {
+                    out.push_str(&format!(" {:>9}", "n/a"));
+                } else if !fits {
+                    out.push_str(&format!(" {:>9}", "OOM"));
+                } else {
+                    let lb = predict_latency(model, px, cluster, meth, &pc, steps);
+                    out.push_str(&format!(" {:>9.2}", lb.total));
+                }
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!("{:<16}", "xdit-hybrid"));
+        for &n in &gpus {
+            if n == 1 {
+                out.push_str(&format!(" {:>9}", "-"));
+                continue;
+            }
+            let (pc, lb) = best_hybrid(model, px, cluster, n, steps);
+            out.push_str(&format!(" {:>9.2}", lb.total));
+            let _ = pc;
+        }
+        out.push('\n');
+        let (pc, lb) = best_hybrid(model, px, cluster, *gpus.last().unwrap(), steps);
+        let sp = serial_latency(model, px, cluster, steps) / lb.total;
+        out.push_str(&format!(
+            "best hybrid on {} GPUs: [{}] -> {:.2}s ({:.1}x vs 1 GPU)\n",
+            gpus.last().unwrap(),
+            pc.describe(),
+            lb.total,
+            sp
+        ));
+    }
+    out
+}
+
+fn row_of(m: Method) -> Row {
+    match m {
+        Method::Tp => Row::TensorParallel,
+        Method::SpUlysses => Row::SpUlysses,
+        Method::SpRing => Row::SpRing,
+        Method::DistriFusion => Row::DistriFusion,
+        Method::PipeFusion | Method::Hybrid => Row::PipeFusion,
+    }
+}
+
+/// Hybrid-configuration sweep (Figs 9/11): latency of every valid hybrid
+/// config at a fixed world size.
+pub fn hybrid_sweep_figure(
+    title: &str,
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    world: usize,
+    pxs: &[usize],
+    steps: usize,
+) -> String {
+    let mut out = format!("# {title}: hybrid configs on {} GPUs ({})\n", world, cluster.name);
+    for &px in pxs {
+        out.push_str(&format!("\n## {px}px\n"));
+        let mut rows: Vec<(String, f64)> = ParallelConfig::enumerate(world, model, model.seq_len(px))
+            .into_iter()
+            .map(|pc| {
+                let lb = predict_latency(model, px, cluster, Method::Hybrid, &pc, steps);
+                (pc.describe(), lb.total)
+            })
+            .collect();
+        rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for (desc, t) in rows.iter().take(12) {
+            out.push_str(&format!("{:<44} {:>8.2}s\n", desc, t));
+        }
+    }
+    out
+}
+
+/// Fig 13: best hybrid per degree for the video model (SP + CFG only; the
+/// paper's head/height divisibility limits apply).
+pub fn cogvideox_figure(cluster: &ClusterSpec, steps: usize) -> String {
+    let m = ModelSpec::by_name("cogvideox").unwrap();
+    // 480x720, 13 latent frames
+    let s_img = (480 / 16) * (720 / 16) * m.frames;
+    let mut out = format!(
+        "# Fig 13: CogVideoX-5B best hybrid on {} ({} steps, seq={})\n",
+        cluster.name, steps, s_img
+    );
+    let serial = serial_latency(&m, 588, cluster, steps); // px with (px/16)^2*13 ~= 17550 tokens
+    for world in [1usize, 2, 4, 6, 8, 12] {
+        if world > cluster.n_gpus {
+            continue;
+        }
+        // enumerate SP x CFG configs only (pipefusion unsupported for video)
+        let mut best: Option<(ParallelConfig, f64)> = None;
+        for cfg in [1usize, 2] {
+            if world % cfg != 0 {
+                continue;
+            }
+            let intra = world / cfg;
+            for ul in 1..=intra {
+                if intra % ul != 0 {
+                    continue;
+                }
+                let ring = intra / ul;
+                // paper constraints: heads=30 % ulysses, height blocks % ring
+                if m.heads % ul != 0 || (480 / 16) % ring != 0 {
+                    continue;
+                }
+                let pc = ParallelConfig::new(cfg, 1, ul, ring);
+                let lb = predict_latency(&m, 588, cluster, Method::Hybrid, &pc, steps);
+                if best.as_ref().map(|(_, b)| lb.total < *b).unwrap_or(true) {
+                    best = Some((pc, lb.total));
+                }
+            }
+        }
+        if let Some((pc, t)) = best {
+            out.push_str(&format!(
+                "{:>2} GPUs: [{}] {:>8.1}s ({:.2}x)\n",
+                world,
+                pc.describe(),
+                t,
+                serial / t
+            ));
+        } else {
+            out.push_str(&format!("{world:>2} GPUs: no valid config\n"));
+        }
+    }
+    out
+}
+
+/// Fig 18: stacked memory bars.
+pub fn memory_figure(pxs: &[usize]) -> String {
+    let mut out = String::from("# Fig 18: max GPU memory (GB/device), 8 GPUs\n");
+    for name in ["pixart", "sd3", "flux"] {
+        let m = ModelSpec::by_name(name).unwrap();
+        for &px in pxs {
+            out.push_str(&format!("\n{name} @ {px}px:\n"));
+            for row in [Row::SpUlysses, Row::DistriFusion, Row::PipeFusion, Row::TensorParallel] {
+                let f = backbone_memory(&m, px, row, 8);
+                out.push_str(&format!(
+                    "  {:<20} params={:>6.1}GB others={:>6.1}GB total={:>6.1}GB\n",
+                    row.label(),
+                    f.parameters_gb(),
+                    f.others_gb(),
+                    f.total() / 1e9
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Table 1 with live-simulator validation hooks: analytic bytes per method.
+pub fn table1(model_name: &str, px: usize, n: usize) -> String {
+    let m = ModelSpec::by_name(model_name).unwrap();
+    let s = m.attn_seq_len(px);
+    let mut out = format!(
+        "# Table 1: comm volume/step per device, {model_name} @ {px}px (seq {s}), n={n}\n"
+    );
+    out.push_str(&format!(
+        "{:<22} {:>10} {:>8} {:>10} {:>10}\n",
+        "method", "comm (GB)", "overlap", "params", "kv"
+    ));
+    for row in [Row::TensorParallel, Row::DistriFusion, Row::SpRing, Row::SpUlysses, Row::PipeFusion]
+    {
+        let (pfrac, kvfrac) = memory_fractions(row, n);
+        out.push_str(&format!(
+            "{:<22} {:>10.3} {:>8} {:>9.2}P {:>8.2}KV\n",
+            row.label(),
+            comm_bytes(row, &m, s, n) / 1e9,
+            if row.overlaps() { "yes" } else { "no" },
+            pfrac,
+            kvfrac
+        ));
+    }
+    out
+}
+
+/// Table 2: component disk usage of the five models.
+pub fn table2() -> String {
+    let mut out = String::from("# Table 2: disk usage per component\n");
+    out.push_str(&format!(
+        "{:<12} {:>14} {:>14} {:>9}\n",
+        "model", "transformers", "text-encoder", "vae"
+    ));
+    for name in ["pixart", "sd3", "flux", "hunyuan", "cogvideox"] {
+        let m = ModelSpec::by_name(name).unwrap();
+        out.push_str(&format!(
+            "{:<12} {:>9.1}GB ({:.1}B) {:>11.1}GB {:>8.0}MB\n",
+            name,
+            m.param_bytes() / 1e9,
+            m.params / 1e9,
+            m.text_encoder_bytes / 1e9,
+            m.vae_bytes / 1e6
+        ));
+    }
+    out
+}
+
+/// Table 3: parallel VAE time / OOM grid.
+pub fn table3() -> String {
+    use crate::vae::{vae_decode_time, vae_fits};
+    let mut out = String::from("# Table 3: parallel VAE elapsed seconds (OOM where it does not fit)\n");
+    for (gname, mem, tflops, bw, lat) in [
+        ("8xL40 (48GB)", 48e9, 90.0, 24e9, 8e-6),
+        ("8xA100 (80GB)", 80e9, 250.0, 250e9, 3e-6),
+    ] {
+        for ch in [16usize, 4] {
+            out.push_str(&format!("\n{gname}, {ch} channels:\n"));
+            out.push_str(&format!("{:<6} {:>8} {:>8} {:>8} {:>8} {:>8}\n", "GPUs", "1k", "2k", "4k", "7k", "8k"));
+            for n in [1usize, 2, 4, 8] {
+                out.push_str(&format!("{n:<6}"));
+                for px in [1024usize, 2048, 4096, 7168, 8192] {
+                    if vae_fits(px, ch, n, 4, mem) {
+                        out.push_str(&format!(" {:>8.2}", vae_decode_time(px, n, tflops, bw, lat)));
+                    } else {
+                        out.push_str(&format!(" {:>8}", "OOM"));
+                    }
+                }
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::{a100_node, l40_cluster};
+
+    #[test]
+    fn figures_render_nonempty() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let s = scalability_figure("Fig 8", &m, &l40_cluster(2), &[1024], 20, &SINGLE_METHODS);
+        assert!(s.contains("xdit-hybrid"));
+        assert!(s.contains("OOM") || s.contains("n/a") || s.contains("pipefusion"));
+        let h = hybrid_sweep_figure("Fig 9", &m, &l40_cluster(2), 16, &[1024], 20);
+        assert!(h.contains("cfg=2"));
+        let t1 = table1("sd3", 1024, 8);
+        assert!(t1.contains("PipeFusion"));
+        let t2 = table2();
+        assert!(t2.contains("flux"));
+        let t3 = table3();
+        assert!(t3.contains("OOM"));
+        let f13 = cogvideox_figure(&l40_cluster(2), 50);
+        assert!(f13.contains("GPUs"));
+        let f18 = memory_figure(&[1024, 2048]);
+        assert!(f18.contains("DistriFusion"));
+        let _ = a100_node();
+    }
+
+    #[test]
+    fn fig13_divisibility_constraints() {
+        // ulysses degree 4 impossible (heads=30); height limits ring at 8
+        let f = cogvideox_figure(&l40_cluster(2), 50);
+        for line in f.lines() {
+            assert!(!line.contains("ulysses=4"), "{line}");
+            assert!(!line.contains("ulysses=8"), "{line}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Transformer FLOPs accounting for DiT forward passes.
+//!
+//! Conventions: 1 MAC = 2 FLOPs; attention counts QK^T and PV
+//! (2 * 2 * Sq * Skv * d); projections count their GEMMs. Matches the
+//! standard 2*P*S + attention-quadratic accounting used in the paper's
+//! compute-vs-comm analysis.
+
+/// Dense + attention FLOPs of `ls` transformer layers over a query patch of
+/// `p` tokens attending to `s_kv` tokens, hidden size `d`, MLP ratio `m`.
+pub fn layers_flops(ls: usize, p: usize, s_kv: usize, d: usize, m: usize) -> f64 {
+    let (p, s_kv, d, m) = (p as f64, s_kv as f64, d as f64, m as f64);
+    let qkv = 2.0 * p * d * 3.0 * d;
+    let proj = 2.0 * p * d * d;
+    let mlp = 2.0 * 2.0 * p * d * m * d;
+    let attn = 2.0 * 2.0 * p * s_kv * d;
+    ls as f64 * (qkv + proj + mlp + attn)
+}
+
+/// Extra FLOPs per layer for a cross-attention branch with text memory of
+/// `s_txt` tokens.
+pub fn cross_extra_flops(ls: usize, p: usize, s_txt: usize, d: usize) -> f64 {
+    let (p, s_txt, d) = (p as f64, s_txt as f64, d as f64);
+    let q = 2.0 * p * d * d;
+    let kv = 2.0 * s_txt * d * 2.0 * d;
+    let attn = 2.0 * 2.0 * p * s_txt * d;
+    let o = 2.0 * p * d * d;
+    ls as f64 * (q + kv + attn + o)
+}
+
+/// MM-DiT stage FLOPs: two streams (text patch `pt`, image patch `pi`) with
+/// joint attention over `s_kv`.
+pub fn mmdit_layers_flops(ls: usize, pt: usize, pi: usize, s_kv: usize, d: usize, m: usize) -> f64 {
+    // dense parts per stream + joint attention over the concatenated query
+    let dense_t = layers_flops(ls, pt, 0, d, m);
+    let dense_i = layers_flops(ls, pi, 0, d, m);
+    let attn = ls as f64 * 2.0 * 2.0 * (pt + pi) as f64 * s_kv as f64 * d as f64;
+    dense_t + dense_i + attn
+}
+
+/// Embed / final layers (linear projections over the patch).
+pub fn embed_flops(p: usize, c: usize, d: usize) -> f64 {
+    2.0 * p as f64 * c as f64 * d as f64
+}
+
+pub fn final_flops(p: usize, c: usize, d: usize) -> f64 {
+    2.0 * p as f64 * d as f64 * (c as f64 + 2.0 * d as f64)
+}
+
+/// Seconds to execute `flops` on a GPU with `tflops` sustained throughput.
+pub fn compute_time(flops: f64, tflops: f64) -> f64 {
+    flops / (tflops * 1e12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_in_depth_and_patch() {
+        let f1 = layers_flops(1, 64, 256, 192, 4);
+        let f2 = layers_flops(2, 64, 256, 192, 4);
+        assert!((f2 / f1 - 2.0).abs() < 1e-9);
+        let fp = layers_flops(1, 128, 256, 192, 4);
+        assert!(fp > 1.9 * f1 && fp < 2.1 * f1);
+    }
+
+    #[test]
+    fn attention_quadratic_dominates_long_seq() {
+        let d = 1152;
+        let short = layers_flops(1, 4096, 4096, d, 4) / 4096.0;
+        let long = layers_flops(1, 65536, 65536, d, 4) / 65536.0;
+        // per-token cost grows with sequence (quadratic term)
+        assert!(long > 2.0 * short);
+    }
+
+    #[test]
+    fn mmdit_close_to_two_streams() {
+        let f = mmdit_layers_flops(1, 32, 256, 288, 192, 4);
+        let approx = layers_flops(1, 288, 288, 192, 4);
+        assert!((f / approx - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn compute_time_sane() {
+        // 1 TFLOP on 100 TFLOP/s = 10 ms
+        assert!((compute_time(1e12, 100.0) - 0.01).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,376 @@
+//! Closed-form per-generation latency prediction for every parallel method
+//! on every cluster, at the paper's model scales — the engine behind the
+//! scalability figures (Figs 8–17).
+//!
+//! Modelling choices mirror the paper's analysis (§4.1.3):
+//! * compute is divided across the intra-image group; CFG models run 2
+//!   branches (batch 2) unless CFG parallelism splits them;
+//! * collectives are bottlenecked by the slowest link in the group
+//!   (PCIe-QPI crossing, Ethernet between nodes);
+//! * overlap: SP-Ring hides K/V hops behind attention blocks, DistriFusion
+//!   hides its AllGather behind the whole forward, PipeFusion hides patch
+//!   P2P behind micro-step compute; TP and SP-Ulysses expose their
+//!   collectives;
+//! * PipeFusion pays the pipeline fill bubble (M+N-1)/M and one warmup
+//!   (~serial) step; skip-connection models add non-adjacent P2P that
+//!   breaks overlap (Fig 17).
+
+use crate::config::hardware::ClusterSpec;
+use crate::config::model::{BlockVariant, ModelSpec};
+use crate::config::parallel::ParallelConfig;
+use crate::perf::flops;
+
+/// Method selector for figure series (single methods + the hybrid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Tp,
+    SpUlysses,
+    SpRing,
+    DistriFusion,
+    PipeFusion,
+    /// Hybrid uses the full ParallelConfig (cfg/pipe/ulysses/ring).
+    Hybrid,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Tp => "tp",
+            Method::SpUlysses => "ulysses",
+            Method::SpRing => "ring",
+            Method::DistriFusion => "distrifusion",
+            Method::PipeFusion => "pipefusion",
+            Method::Hybrid => "hybrid",
+        }
+    }
+
+    /// The ParallelConfig a *single* method uses at intra-image degree `n`.
+    /// TP borrows the ulysses slot (it also shards heads) and DistriFusion
+    /// the ring slot, purely to carry the world size for the closed forms.
+    pub fn single_config(&self, n: usize) -> ParallelConfig {
+        match self {
+            Method::SpUlysses | Method::Tp => ParallelConfig::new(1, 1, n, 1),
+            Method::SpRing => ParallelConfig::new(1, 1, 1, n),
+            Method::PipeFusion => ParallelConfig::new(1, n, 1, 1).with_patches(best_patches(n)),
+            Method::DistriFusion => ParallelConfig::new(1, 1, 1, n).with_patches(n),
+            Method::Hybrid => ParallelConfig::new(1, 1, 1, 1),
+        }
+    }
+}
+
+fn best_patches(n: usize) -> usize {
+    // the paper searches M in {2,4,8,16,32}; M = 2N is a good default
+    (2 * n).clamp(2, 32)
+}
+
+/// Latency decomposition (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyBreakdown {
+    pub compute: f64,
+    pub comm_exposed: f64,
+    pub warmup_extra: f64,
+    pub total: f64,
+}
+
+/// Devices 0..n-1 of the cluster in mesh order (cfg outermost): the CFG
+/// pair is placed across nodes, SP innermost — the paper's §5.2.4
+/// placement recommendation.
+fn intra_group(_cluster: &ClusterSpec, world: usize, cfg: usize, branch: usize) -> Vec<usize> {
+    let n_intra = world / cfg;
+    (0..n_intra).map(|i| branch * n_intra + i).collect()
+}
+
+/// Per-generation latency of a (method, config) on `world` devices.
+pub fn predict_latency(
+    m: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    method: Method,
+    pc: &ParallelConfig,
+    steps: usize,
+) -> LatencyBreakdown {
+    let world = pc.world().max(1);
+    let cfg = pc.cfg;
+    let branches = if m.uses_cfg { 2 } else { 1 };
+    let n_intra = world / cfg;
+    let s = m.attn_seq_len(px);
+    let group = intra_group(cluster, world, cfg, 0);
+    let tfl = cluster.gpu.tflops;
+
+    // per-branch per-step full-model compute
+    let step_fl = m.step_flops(px);
+    // branches not parallelized over cfg run sequentially on the same group
+    let branch_factor = branches as f64 / cfg as f64;
+
+    let compute_step = flops::compute_time(step_fl, tfl) / n_intra as f64 * branch_factor;
+
+    let hs = s as f64 * m.hidden as f64 * 2.0;
+    let l = m.layers as f64;
+    let n = n_intra as f64;
+
+    let (comm_exposed_step, warmup_extra) = match method {
+        Method::Tp => {
+            let t = 2.0 * l * cluster.collective_time(&group, hs, 2.0 * (n - 1.0) / n);
+            (t * branch_factor, 0.0)
+        }
+        Method::SpUlysses => {
+            let t = l * cluster.collective_time(&group, 4.0 * hs / n, 1.0);
+            (t * branch_factor, 0.0)
+        }
+        Method::SpRing => {
+            // (n-1) hops/layer of the local K/V block, overlapped with the
+            // per-block attention compute; each hop also pays a
+            // non-overlappable launch/sync cost (block-wise attention +
+            // P2P kickoff), which is why Ring trails Ulysses on fast links
+            // at small sequences (paper §5.2.2) while the gap narrows as
+            // compute grows.
+            let hop_bytes = 2.0 * hs / n;
+            let hop_t = cluster.collective_time(&group, hop_bytes, 1.0) / (n - 1.0).max(1.0);
+            let blk_attn =
+                flops::compute_time(4.0 * (s as f64 / n) * (s as f64 / n) * m.hidden as f64, tfl);
+            // NVLink P2P kickoff is cheap; PCIe pays host-driven launches
+            let sync = if cluster.has_nvlink { 15e-6 } else { 40e-6 };
+            let exposed = ((hop_t - blk_attn).max(0.0) + sync) * (n - 1.0) * l;
+            (exposed * branch_factor, 0.0)
+        }
+        Method::DistriFusion => {
+            let t_comm = cluster.collective_time(&group, 2.0 * hs * l / n, n - 1.0);
+            let exposed = (t_comm - compute_step).max(0.0);
+            // one synchronous warmup step ~ serial compute on the group
+            let warm = flops::compute_time(step_fl, tfl) * branch_factor - compute_step;
+            (exposed, warm.max(0.0))
+        }
+        Method::PipeFusion => {
+            let m_patches = pc.patches.max(best_patches(n_intra));
+            let micro = compute_step / m_patches as f64;
+            // pipeline bubble: (M + N - 1) micro-steps instead of M
+            let bubble = (n_intra as f64 - 1.0) * micro;
+            // patch activation P2P between adjacent stages, overlapped
+            let patch_bytes = hs / m_patches as f64;
+            let mut worst_p2p: f64 = 0.0;
+            for w in group.windows(2) {
+                worst_p2p = worst_p2p.max(cluster.p2p_time(w[0], w[1], patch_bytes));
+            }
+            let mut exposed = (worst_p2p - micro).max(0.0) * m_patches as f64 + bubble;
+            // skip-connection models: non-adjacent P2P per skip pair breaks
+            // overlap (Fig 17) — charge it fully
+            if m.variant == BlockVariant::Skip && n_intra > 1 {
+                let far = cluster.p2p_time(group[0], *group.last().unwrap(), patch_bytes);
+                exposed += far * m_patches as f64;
+            }
+            let warm = flops::compute_time(step_fl, tfl) * branch_factor - compute_step;
+            (exposed * branch_factor, warm.max(0.0))
+        }
+        Method::Hybrid => {
+            // compose: PipeFusion across pc.pipefusion stages, USP inside,
+            // CFG across branches
+            let mut exposed = 0.0;
+            let nsp = pc.sp_degree() as f64;
+            if pc.ulysses > 1 {
+                let g: Vec<usize> = group[..pc.ulysses].to_vec();
+                exposed += l * cluster.collective_time(&g, 4.0 * hs / n, 1.0);
+            }
+            if pc.ring > 1 {
+                let g: Vec<usize> = group[..pc.sp_degree()].to_vec();
+                let hop_bytes = 2.0 * hs / nsp / pc.patches as f64;
+                let hop_t = cluster.collective_time(&g, hop_bytes, 1.0)
+                    / (pc.ring as f64 - 1.0).max(1.0);
+                let blk = flops::compute_time(
+                    4.0 * (s as f64 / nsp) * (s as f64 / nsp) * m.hidden as f64
+                        / pc.patches as f64,
+                    tfl,
+                );
+                let sync = if cluster.has_nvlink { 15e-6 } else { 40e-6 };
+                exposed += ((hop_t - blk).max(0.0) + sync) * (pc.ring as f64 - 1.0) * l;
+            }
+            let mut warm = 0.0;
+            if pc.pipefusion > 1 {
+                let m_patches = pc.patches.max(2);
+                let micro = compute_step / m_patches as f64;
+                exposed += (pc.pipefusion as f64 - 1.0) * micro;
+                let patch_bytes = hs / m_patches as f64 / nsp;
+                let stride = pc.sp_degree();
+                let mut worst = 0.0f64;
+                for i in (stride..n_intra).step_by(stride) {
+                    worst = worst.max(cluster.p2p_time(group[i - stride], group[i], patch_bytes));
+                }
+                exposed += (worst - micro).max(0.0) * m_patches as f64;
+                warm = (flops::compute_time(step_fl, tfl) * branch_factor - compute_step).max(0.0);
+            }
+            if cfg == 2 {
+                // latent allgather between branch pairs once per step
+                let latent_bytes = (px as f64 / 8.0).powi(2) * m.c_latent as f64 * 2.0;
+                let pair = [0, world / 2];
+                exposed += cluster.p2p_time(pair[0], pair[1], latent_bytes);
+            }
+            (exposed, warm)
+        }
+    };
+
+    let total = steps as f64 * (compute_step + comm_exposed_step) + warmup_extra;
+    LatencyBreakdown {
+        compute: steps as f64 * compute_step,
+        comm_exposed: steps as f64 * comm_exposed_step,
+        warmup_extra,
+        total,
+    }
+}
+
+/// Best hybrid configuration for a world size (exhaustive over valid
+/// configs, as the paper's per-figure "hybrid" series does).
+pub fn best_hybrid(
+    m: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    world: usize,
+    steps: usize,
+) -> (ParallelConfig, LatencyBreakdown) {
+    let s_img = m.seq_len(px);
+    let mut best: Option<(ParallelConfig, LatencyBreakdown)> = None;
+    for pc in ParallelConfig::enumerate(world, m, s_img) {
+        let lb = predict_latency(m, px, cluster, Method::Hybrid, &pc, steps);
+        if best.as_ref().map(|(_, b)| lb.total < b.total).unwrap_or(true) {
+            best = Some((pc, lb));
+        }
+    }
+    best.unwrap_or_else(|| {
+        let pc = ParallelConfig::serial();
+        let lb = predict_latency(m, px, cluster, Method::Hybrid, &pc, steps);
+        (pc, lb)
+    })
+}
+
+/// Serial (1-GPU) baseline latency.
+pub fn serial_latency(m: &ModelSpec, px: usize, cluster: &ClusterSpec, steps: usize) -> f64 {
+    let branches = if m.uses_cfg { 2.0 } else { 1.0 };
+    steps as f64 * branches * flops::compute_time(m.step_flops(px), cluster.gpu.tflops)
+}
+
+/// Re-export used by figure benches.
+pub fn predict_step_latency(
+    m: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    method: Method,
+    pc: &ParallelConfig,
+) -> LatencyBreakdown {
+    predict_latency(m, px, cluster, method, pc, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::{a100_node, l40_cluster};
+    use crate::config::model::ModelSpec;
+
+    fn pixart() -> ModelSpec {
+        ModelSpec::by_name("pixart").unwrap()
+    }
+
+    #[test]
+    fn tp_worst_on_l40() {
+        // Fig 8/9: TP consistently highest latency
+        let m = pixart();
+        let c = l40_cluster(1);
+        let n = 8;
+        let tp = predict_latency(&m, 2048, &c, Method::Tp, &Method::Tp.single_config(n), 20);
+        for meth in [Method::SpUlysses, Method::SpRing, Method::PipeFusion] {
+            let pc = meth.single_config(n);
+            let lb = predict_latency(&m, 2048, &c, meth, &pc, 20);
+            assert!(tp.total > lb.total, "{meth:?} not better than TP");
+        }
+    }
+
+    #[test]
+    fn pipefusion_wins_on_pcie() {
+        // §5.2.1: on 8xL40 PCIe, PipeFusion beats SP at 1024px
+        let m = pixart();
+        let c = l40_cluster(1);
+        let pf = predict_latency(
+            &m, 1024, &c, Method::PipeFusion, &Method::PipeFusion.single_config(8), 20,
+        );
+        let ul = predict_latency(
+            &m, 1024, &c, Method::SpUlysses, &Method::SpUlysses.single_config(8), 20,
+        );
+        assert!(pf.total < ul.total, "pipefusion {} !< ulysses {}", pf.total, ul.total);
+    }
+
+    #[test]
+    fn single_methods_collapse_8_to_16_over_ethernet() {
+        // §5.2.1: scaling 8 -> 16 across Ethernet makes single methods
+        // slower; hybrid with cfg still improves
+        let m = pixart();
+        let c16 = l40_cluster(2);
+        let c8 = l40_cluster(1);
+        for meth in [Method::SpUlysses, Method::SpRing] {
+            let l8 = predict_latency(&m, 2048, &c8, meth, &meth.single_config(8), 20);
+            let l16 = predict_latency(&m, 2048, &c16, meth, &meth.single_config(16), 20);
+            assert!(
+                l16.total > l8.total,
+                "{meth:?} should collapse over ethernet: 8={} 16={}",
+                l8.total,
+                l16.total
+            );
+        }
+        let (_, h16) = best_hybrid(&m, 2048, &c16, 16, 20);
+        let (_, h8) = best_hybrid(&m, 2048, &c8, 8, 20);
+        assert!(h16.total < h8.total, "hybrid must keep scaling 8->16");
+    }
+
+    #[test]
+    fn hybrid_speedup_pixart_4096_16gpu() {
+        // headline: ~13x on 16 L40 for Pixart 4096px
+        let m = pixart();
+        let c = l40_cluster(2);
+        let serial = serial_latency(&m, 4096, &c, 20);
+        let (pc, h) = best_hybrid(&m, 4096, &c, 16, 20);
+        let speedup = serial / h.total;
+        assert!(
+            speedup > 8.0 && speedup <= 16.0,
+            "speedup {speedup:.1} out of the expected band (cfg={})",
+            pc.describe()
+        );
+    }
+
+    #[test]
+    fn ulysses_preferred_on_nvlink_large_seq() {
+        // §5.2.4: on NVLink prioritize SP-Ulysses (large sequences)
+        let m = pixart();
+        let c = a100_node();
+        let ul = predict_latency(
+            &m, 4096, &c, Method::SpUlysses, &Method::SpUlysses.single_config(8), 20,
+        );
+        let ring = predict_latency(
+            &m, 4096, &c, Method::SpRing, &Method::SpRing.single_config(8), 20,
+        );
+        assert!(ul.total <= ring.total * 1.05);
+    }
+
+    #[test]
+    fn skip_model_pipefusion_penalty() {
+        // Fig 17: HunyuanDiT skip connections hurt PipeFusion at 2048px
+        let m = ModelSpec::by_name("hunyuan").unwrap();
+        let c = a100_node();
+        let pf = predict_latency(
+            &m, 2048, &c, Method::PipeFusion, &Method::PipeFusion.single_config(8), 50,
+        );
+        let ul = predict_latency(
+            &m, 2048, &c, Method::SpUlysses, &Method::SpUlysses.single_config(8), 50,
+        );
+        assert!(pf.total > ul.total, "skip penalty missing: pf {} ul {}", pf.total, ul.total);
+    }
+
+    #[test]
+    fn ring_gap_narrows_with_resolution() {
+        // §5.2.2 Hunyuan: ring/ulysses gap shrinks as compute/comm ratio
+        // falls with larger images
+        let m = ModelSpec::by_name("hunyuan").unwrap();
+        let c = a100_node();
+        let gap = |px| {
+            let u = predict_latency(&m, px, &c, Method::SpUlysses, &Method::SpUlysses.single_config(8), 50).total;
+            let r = predict_latency(&m, px, &c, Method::SpRing, &Method::SpRing.single_config(8), 50).total;
+            r / u
+        };
+        assert!(gap(2048) <= gap(1024) + 1e-9);
+    }
+}

@@ -1,0 +1,132 @@
+//! Memory footprint model (paper Fig 18 + Table 2 + the DistriFusion OOM
+//! argument).
+
+use crate::config::model::ModelSpec;
+use crate::perf::comm_model::{memory_fractions, Row};
+
+/// Per-device memory footprint of the DiT backbone under a parallel method.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryFootprint {
+    /// Transformer parameter bytes on this device.
+    pub params: f64,
+    /// Text encoder bytes (replicated — xDiT does not shard it).
+    pub text_encoder: f64,
+    /// KV buffers (staleness methods) or transient K/V (SP).
+    pub kv: f64,
+    /// Working activations + temporaries.
+    pub activations: f64,
+}
+
+impl MemoryFootprint {
+    pub fn total(&self) -> f64 {
+        self.params + self.text_encoder + self.kv + self.activations
+    }
+
+    /// "parameters" vs "others" split used by Fig 18's stacked bars.
+    pub fn parameters_gb(&self) -> f64 {
+        (self.params + self.text_encoder) / 1e9
+    }
+
+    pub fn others_gb(&self) -> f64 {
+        (self.kv + self.activations) / 1e9
+    }
+}
+
+/// Footprint of one device for a method at intra-image degree `n`,
+/// resolution `px`.
+pub fn backbone_memory(m: &ModelSpec, px: usize, row: Row, n: usize) -> MemoryFootprint {
+    let (pf, kvf) = memory_fractions(row, n);
+    let s = m.attn_seq_len(px) as f64;
+    let kv_full = 2.0 * s * m.hidden as f64 * 2.0 * m.layers as f64; // K+V, fp16, all layers
+    // KV actually held:
+    //  - SP keeps only the transient per-layer shard (1/n of one layer)
+    //  - DistriFusion keeps the full (KV)L buffer
+    //  - PipeFusion keeps (KV)L / n (its stage's layers)
+    //  - TP keeps 1/n of the transient layer
+    let kv = match row {
+        // full (KV)L buffer + same-size communication buffers for the
+        // async AllGather (§4.1.3: "maintain communication buffers that
+        // store the complete spatial shape of K and V activations"),
+        // double-buffered for overlap -> ~3x (KV)L
+        Row::DistriFusion => 3.0 * kv_full,
+        Row::PipeFusion => kv_full * kvf,
+        Row::SpRing | Row::SpUlysses => kv_full / m.layers as f64 * kvf,
+        Row::TensorParallel => kv_full / m.layers as f64 * kvf,
+    };
+    // activations: a few live copies of the sharded hidden state + latent
+    let act_shard = s / n as f64 * m.hidden as f64 * 2.0;
+    let activations = 8.0 * act_shard + (px as f64 / 8.0).powi(2) * m.c_latent as f64 * 4.0;
+    MemoryFootprint {
+        params: m.param_bytes() * pf,
+        text_encoder: m.text_encoder_bytes,
+        kv,
+        activations,
+    }
+}
+
+/// Serial (1 GPU) footprint.
+pub fn serial_memory(m: &ModelSpec, px: usize) -> MemoryFootprint {
+    let s = m.attn_seq_len(px) as f64;
+    MemoryFootprint {
+        params: m.param_bytes(),
+        text_encoder: m.text_encoder_bytes,
+        kv: 2.0 * s * m.hidden as f64 * 2.0, // one layer's transient K/V
+        activations: 8.0 * s * m.hidden as f64 * 2.0
+            + (px as f64 / 8.0).powi(2) * m.c_latent as f64 * 4.0,
+    }
+}
+
+/// Does the backbone fit a GPU with `mem_bytes` HBM?
+pub fn fits(m: &ModelSpec, px: usize, row: Row, n: usize, mem_bytes: f64) -> bool {
+    backbone_memory(m, px, row, n).total() < mem_bytes * 0.92 // allocator slack
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::ModelSpec;
+
+    #[test]
+    fn distrifusion_ooms_pixart_4096_on_l40() {
+        // §5.2.1: DistriFusion cannot run 0.6B Pixart at 4096px on 8xL40
+        let m = ModelSpec::by_name("pixart").unwrap();
+        assert!(!fits(&m, 4096, Row::DistriFusion, 8, 48e9));
+        // ...while PipeFusion and SP fit
+        assert!(fits(&m, 4096, Row::PipeFusion, 8, 48e9));
+        assert!(fits(&m, 4096, Row::SpUlysses, 8, 48e9));
+    }
+
+    #[test]
+    fn distrifusion_memory_does_not_drop_with_n() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let m4 = backbone_memory(&m, 2048, Row::DistriFusion, 4).kv;
+        let m8 = backbone_memory(&m, 2048, Row::DistriFusion, 8).kv;
+        assert_eq!(m4, m8);
+        let p4 = backbone_memory(&m, 2048, Row::PipeFusion, 4).kv;
+        let p8 = backbone_memory(&m, 2048, Row::PipeFusion, 8).kv;
+        assert!(p8 < p4);
+    }
+
+    #[test]
+    fn pipefusion_flux_memory_fraction_of_sp() {
+        // §5.2.3: PipeFusion total ~ 32-36% of SP on Flux.1 at 8 GPUs
+        let m = ModelSpec::by_name("flux").unwrap();
+        for px in [1024, 2048] {
+            let pf = backbone_memory(&m, px, Row::PipeFusion, 8).total();
+            let sp = backbone_memory(&m, px, Row::SpUlysses, 8).total();
+            let frac = pf / sp;
+            assert!(
+                (0.2..0.6).contains(&frac),
+                "fraction {frac:.2} at {px}px out of band"
+            );
+        }
+    }
+
+    #[test]
+    fn pixart_parameters_dominated_by_text_encoder() {
+        // Fig 18: for 0.6B Pixart the text encoder dominates "parameters"
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let f = backbone_memory(&m, 1024, Row::SpUlysses, 8);
+        assert!(f.text_encoder > f.params);
+    }
+}

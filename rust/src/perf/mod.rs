@@ -1,0 +1,12 @@
+//! Analytic performance models: FLOPs, communication volumes (paper
+//! Table 1), memory footprints (Fig 18), per-step latency prediction for
+//! every parallel method on every cluster — the machinery behind the
+//! figure/table reproduction benches.
+
+pub mod comm_model;
+pub mod figures;
+pub mod flops;
+pub mod latency;
+pub mod memory_model;
+
+pub use latency::{predict_step_latency, LatencyBreakdown, Method};

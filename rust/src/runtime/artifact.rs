@@ -1,0 +1,230 @@
+//! `artifacts/manifest.json` parsing: the contract between the AOT pipeline
+//! (python) and the runtime (rust).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Data input dtype.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One positional weight argument of an entrypoint.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightRef {
+    /// Stage-relative layer parameter: resolves to
+    /// `{variant}.L{stage*ls + rel}.{param}` (or `L{L/2 + rel}` for
+    /// skip-decoder refs, which are absolute in the decoder half).
+    Layer { variant: String, rel: usize, param: String, dec: bool },
+    /// Per-variant global: `{variant}.{name}`.
+    Global { variant: String, name: String },
+    /// `shared.{name}`.
+    Shared { name: String },
+    /// `vae.{name}`.
+    Vae { name: String },
+}
+
+impl WeightRef {
+    /// Resolve to the tensor name in weights.bin. `stage` and
+    /// `layers_per_stage` position stage-relative layer refs; `total_layers`
+    /// anchors decoder-half refs. Convention: for decoder (`dec`) refs the
+    /// caller passes a *decoder-relative* stage (0 for the enc/dec stage
+    /// split; `abs_layer - L/2` for per-layer calls).
+    pub fn resolve(&self, stage: usize, layers_per_stage: usize, total_layers: usize) -> String {
+        match self {
+            WeightRef::Layer { variant, rel, param, dec } => {
+                let abs = if *dec {
+                    total_layers / 2 + stage * layers_per_stage + rel
+                } else {
+                    stage * layers_per_stage + rel
+                };
+                format!("{variant}.L{abs}.{param}")
+            }
+            WeightRef::Global { variant, name } => format!("{variant}.{name}"),
+            WeightRef::Shared { name } => format!("shared.{name}"),
+            WeightRef::Vae { name } => format!("vae.{name}"),
+        }
+    }
+
+    fn parse(j: &Json) -> Result<WeightRef> {
+        if let Some(p) = j.opt("param") {
+            Ok(WeightRef::Layer {
+                variant: j.get("variant")?.as_str()?.to_string(),
+                rel: j.get("layer_rel")?.as_usize()?,
+                param: p.as_str()?.to_string(),
+                dec: j.opt("dec").map(|d| d.as_bool().unwrap_or(false)).unwrap_or(false),
+            })
+        } else if let Some(g) = j.opt("global") {
+            Ok(WeightRef::Global {
+                variant: j.get("variant")?.as_str()?.to_string(),
+                name: g.as_str()?.to_string(),
+            })
+        } else if let Some(s) = j.opt("shared") {
+            Ok(WeightRef::Shared { name: s.as_str()?.to_string() })
+        } else if let Some(v) = j.opt("vae") {
+            Ok(WeightRef::Vae { name: v.as_str()?.to_string() })
+        } else {
+            Err(Error::Manifest(format!("unparseable weight ref: {j:?}")))
+        }
+    }
+}
+
+/// One AOT entrypoint.
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub variant: Option<String>,
+    pub layers_per_stage: usize,
+    pub patch_factor: usize,
+    /// (name, dims, dtype) of each data input, in positional order.
+    pub data_inputs: Vec<(String, Vec<usize>, DType)>,
+    /// Weight args following the data args, in positional order.
+    pub weights: Vec<WeightRef>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: usize,
+    /// Tiny-model dims (d, heads, layers, s_img, s_txt, ...).
+    pub model: BTreeMap<String, usize>,
+    pub vae_halo: usize,
+    pub weights_file: String,
+    pub entries: BTreeMap<String, EntryPoint>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let version = j.get("version")?.as_usize()?;
+        let mut model = BTreeMap::new();
+        for (k, v) in j.get("model")?.as_obj()? {
+            if let Json::Num(n) = v {
+                model.insert(k.clone(), *n as usize);
+            }
+        }
+        let vae_halo = j.get("vae")?.get("halo")?.as_usize()?;
+        let weights_file = j.get("weights_file")?.as_str()?.to_string();
+        let mut entries = BTreeMap::new();
+        for e in j.get("entrypoints")?.as_arr()? {
+            let ep = EntryPoint {
+                name: e.get("name")?.as_str()?.to_string(),
+                file: e.get("file")?.as_str()?.to_string(),
+                kind: e.get("kind")?.as_str()?.to_string(),
+                variant: e.opt("variant").and_then(|v| v.as_str().ok()).map(String::from),
+                layers_per_stage: e
+                    .opt("layers_per_stage")
+                    .map(|v| v.as_usize())
+                    .transpose()?
+                    .unwrap_or(1),
+                patch_factor: e
+                    .opt("patch_factor")
+                    .map(|v| v.as_usize())
+                    .transpose()?
+                    .unwrap_or(1),
+                data_inputs: e
+                    .get("data_inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| {
+                        let dt = match d.get("dtype")?.as_str()? {
+                            "i32" => DType::I32,
+                            _ => DType::F32,
+                        };
+                        Ok((
+                            d.get("name")?.as_str()?.to_string(),
+                            d.get("dims")?.usize_arr()?,
+                            dt,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                weights: e
+                    .get("weights")?
+                    .as_arr()?
+                    .iter()
+                    .map(WeightRef::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: e
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|o| o.usize_arr())
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            entries.insert(ep.name.clone(), ep);
+        }
+        Ok(Manifest { dir, version, model, vae_halo, weights_file, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryPoint> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Manifest(format!("entrypoint '{name}' not in manifest (rebuild artifacts?)"))
+        })
+    }
+
+    pub fn model_dim(&self, key: &str) -> Result<usize> {
+        self.model
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Manifest(format!("model dim '{key}' missing")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_ref_resolution() {
+        let r = WeightRef::Layer { variant: "adaln".into(), rel: 1, param: "Wqkv".into(), dec: false };
+        assert_eq!(r.resolve(2, 2, 8), "adaln.L5.Wqkv");
+        let d = WeightRef::Layer { variant: "skip".into(), rel: 3, param: "Wskip".into(), dec: true };
+        assert_eq!(d.resolve(0, 4, 8), "skip.L7.Wskip");
+        // per-layer decoder ref (ls=1): stage is decoder-relative layer idx
+        let pl = WeightRef::Layer { variant: "skip".into(), rel: 0, param: "Wqkv".into(), dec: true };
+        assert_eq!(pl.resolve(2, 1, 8), "skip.L6.Wqkv");
+        let g = WeightRef::Global { variant: "mmdit".into(), name: "We".into() };
+        assert_eq!(g.resolve(0, 1, 8), "mmdit.We");
+        assert_eq!(WeightRef::Shared { name: "txt_table".into() }.resolve(0, 1, 8), "shared.txt_table");
+        assert_eq!(WeightRef::Vae { name: "k0".into() }.resolve(0, 1, 8), "vae.k0");
+    }
+
+    #[test]
+    fn parse_ref_json() {
+        let j = Json::parse(r#"{"variant":"adaln","layer_rel":0,"param":"W1","dec":false}"#).unwrap();
+        let r = WeightRef::parse(&j).unwrap();
+        assert_eq!(r.resolve(0, 4, 8), "adaln.L0.W1");
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.contains_key("adaln_stage_L8_p1"));
+        let e = m.entry("mmdit_stage_L2_p8").unwrap();
+        assert_eq!(e.layers_per_stage, 2);
+        assert_eq!(e.patch_factor, 8);
+        assert_eq!(e.data_inputs.len(), 7);
+        assert_eq!(e.weights.len(), 2 * 20);
+        assert_eq!(m.model_dim("d").unwrap(), 192);
+    }
+}

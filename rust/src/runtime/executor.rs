@@ -1,0 +1,242 @@
+//! The PJRT executor: compile cache + resident weight buffers + marshalling.
+//!
+//! Hot-path contract: weights are uploaded to device once (keyed by resolved
+//! tensor name) and passed by reference via `execute_b`; per-call uploads are
+//! limited to the activation/KV data arguments.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::runtime::artifact::{DType, EntryPoint, Manifest};
+use crate::runtime::weights::HostWeights;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// A data argument for an entrypoint call. Tensors are *borrowed*: the
+/// call uploads straight from the caller's buffer, so the hot path never
+/// deep-copies activations/KV on the host (§Perf iteration 4).
+#[derive(Debug, Clone, Copy)]
+pub enum ArgValue<'a> {
+    F32(&'a Tensor),
+    I32(i32),
+}
+
+/// Execution statistics (profiling the L3 hot path, §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: usize,
+    pub exec_ns: u128,
+    pub marshal_ns: u128,
+    pub weight_uploads: usize,
+}
+
+/// The runtime: one PJRT CPU client, shared compile cache, resident weights.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub host_weights: Rc<HostWeights>,
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    weight_bufs: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
+    pub stats: RefCell<ExecStats>,
+}
+
+impl Runtime {
+    /// Load manifest + weights from the artifacts directory and connect the
+    /// PJRT CPU client.
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let weights =
+            HostWeights::load(manifest.dir.join(&manifest.weights_file))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            host_weights: Rc::new(weights),
+            execs: RefCell::new(HashMap::new()),
+            weight_bufs: RefCell::new(HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    /// Get (or compile) the executable for an entrypoint.
+    fn executable(&self, entry: &EntryPoint) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.borrow().get(&entry.name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.execs.borrow_mut().insert(entry.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Get (or upload) the resident device buffer for a weight tensor.
+    fn weight_buffer(&self, name: &str) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(b) = self.weight_bufs.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let t = self.host_weights.get(name)?;
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)?;
+        let rc = Rc::new(buf);
+        self.weight_bufs.borrow_mut().insert(name.to_string(), rc.clone());
+        self.stats.borrow_mut().weight_uploads += 1;
+        Ok(rc)
+    }
+
+    fn upload_arg(&self, a: &ArgValue<'_>) -> Result<xla::PjRtBuffer> {
+        match a {
+            ArgValue::F32(t) => {
+                Ok(self.client.buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)?)
+            }
+            ArgValue::I32(v) => {
+                Ok(self.client.buffer_from_host_buffer::<i32>(&[*v], &[], None)?)
+            }
+        }
+    }
+
+    /// Execute an entrypoint. `stage` positions stage-relative weight refs.
+    /// Returns the tuple of outputs as host tensors.
+    pub fn call(&self, entry_name: &str, stage: usize, data: &[ArgValue<'_>]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.entry(entry_name)?;
+        if data.len() != entry.data_inputs.len() {
+            return Err(Error::Engine(format!(
+                "{entry_name}: expected {} data args, got {}",
+                entry.data_inputs.len(),
+                data.len()
+            )));
+        }
+        // shape-check data args against the manifest
+        for (a, (name, dims, dt)) in data.iter().zip(&entry.data_inputs) {
+            match (a, dt) {
+                (ArgValue::F32(t), DType::F32) => {
+                    if &t.dims != dims {
+                        return Err(Error::shape(format!(
+                            "{entry_name}.{name}: expected {:?}, got {:?}",
+                            dims, t.dims
+                        )));
+                    }
+                }
+                (ArgValue::I32(_), DType::I32) => {}
+                _ => {
+                    return Err(Error::shape(format!(
+                        "{entry_name}.{name}: dtype mismatch"
+                    )))
+                }
+            }
+        }
+        let exe = self.executable(entry)?;
+        let total_layers = self.manifest.model_dim("layers").unwrap_or(8);
+
+        let t0 = std::time::Instant::now();
+        let mut args: Vec<Rc<xla::PjRtBuffer>> = Vec::with_capacity(
+            data.len() + entry.weights.len(),
+        );
+        for a in data {
+            args.push(Rc::new(self.upload_arg(a)?));
+        }
+        for wr in &entry.weights {
+            let name = wr.resolve(stage, entry.layers_per_stage, total_layers);
+            args.push(self.weight_buffer(&name)?);
+        }
+        let marshal = t0.elapsed().as_nanos();
+
+        let t1 = std::time::Instant::now();
+        let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| a.as_ref()).collect();
+        let result = exe.execute_b(&arg_refs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let shape = p.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let v = p.to_vec::<f32>()?;
+            out.push(Tensor::new(dims, v)?);
+        }
+        let exec = t1.elapsed().as_nanos();
+
+        let mut st = self.stats.borrow_mut();
+        st.calls += 1;
+        st.marshal_ns += marshal;
+        st.exec_ns += exec;
+        Ok(out)
+    }
+
+    /// Warm the compile cache for a set of entrypoints (leader startup).
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            let e = self.manifest.entry(n)?.clone();
+            self.executable(&e)?;
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables resident.
+    pub fn compiled_count(&self) -> usize {
+        self.execs.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::load(dir).unwrap())
+    }
+
+    #[test]
+    fn t_embed_executes() {
+        let Some(rt) = runtime() else { return };
+        // wrong dtype must be rejected
+        assert!(rt.call("adaln_t_embed", 0, &[ArgValue::I32(0)]).is_err());
+        let half = Tensor::scalar(0.5);
+        let out = rt.call("adaln_t_embed", 0, &[ArgValue::F32(&half)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![192]);
+        // deterministic across calls
+        let again = rt.call("adaln_t_embed", 0, &[ArgValue::F32(&half)]).unwrap();
+        assert_eq!(out[0], again[0]);
+    }
+
+    #[test]
+    fn stage_weight_residency() {
+        let Some(rt) = runtime() else { return };
+        let d = 192;
+        let x = Tensor::zeros(&[32, d]);
+        let cond = Tensor::zeros(&[d]);
+        let kb = Tensor::zeros(&[2, 256, d]);
+        let args = vec![
+            ArgValue::F32(&x),
+            ArgValue::F32(&cond),
+            ArgValue::F32(&kb),
+            ArgValue::F32(&kb),
+            ArgValue::I32(0),
+        ];
+        rt.call("adaln_stage_L2_p8", 0, &args).unwrap();
+        let ups = rt.stats.borrow().weight_uploads;
+        assert_eq!(ups, 20); // 2 layers x 10 params
+        rt.call("adaln_stage_L2_p8", 0, &args).unwrap();
+        assert_eq!(rt.stats.borrow().weight_uploads, ups, "weights re-uploaded");
+        // different stage -> different weights
+        rt.call("adaln_stage_L2_p8", 1, &args).unwrap();
+        assert_eq!(rt.stats.borrow().weight_uploads, ups + 20);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(rt) = runtime() else { return };
+        let wrong = Tensor::zeros(&[1]);
+        let bad = vec![ArgValue::F32(&wrong)];
+        assert!(rt.call("adaln_t_embed", 0, &bad).is_err());
+    }
+}

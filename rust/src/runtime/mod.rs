@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + manifest.json + weights.bin) and executes them on the CPU
+//! PJRT client from the coordinator's hot path.
+//!
+//! Design notes:
+//! * HLO **text** is the interchange format (xla_extension 0.5.1 rejects
+//!   jax>=0.5 serialized protos — 64-bit instruction ids).
+//! * Weights are uploaded once as resident `PjRtBuffer`s and reused across
+//!   every call (`execute_b`), so the per-call marshalling cost is only the
+//!   activation/KV data.
+//! * The `xla` crate's client is `Rc`-based (not `Send`): all PJRT execution
+//!   is owned by the leader thread. Simulated devices are scheduled by the
+//!   deterministic event loop in `comm`/`parallel`, not OS threads — on this
+//!   single-core testbed that is also the faster choice.
+
+pub mod artifact;
+pub mod executor;
+pub mod weights;
+
+pub use artifact::{EntryPoint, Manifest, WeightRef};
+pub use executor::{ArgValue, Runtime};
+pub use weights::HostWeights;

@@ -1,0 +1,148 @@
+//! weights.bin loader ("XTW1" format, see python/compile/params.py).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// All model weights, host-side.
+#[derive(Debug)]
+pub struct HostWeights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl HostWeights {
+    pub fn load(path: impl AsRef<Path>) -> Result<HostWeights> {
+        let mut f = std::fs::File::open(path.as_ref()).map_err(|e| {
+            Error::Weights(format!("cannot open {}: {e}", path.as_ref().display()))
+        })?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<HostWeights> {
+        let mut c = Cursor { b: buf, i: 0 };
+        if c.take(4)? != b"XTW1" {
+            return Err(Error::Weights("bad magic (expected XTW1)".into()));
+        }
+        let count = c.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = c.u16()? as usize;
+            let name = String::from_utf8(c.take(nlen)?.to_vec())
+                .map_err(|e| Error::Weights(e.to_string()))?;
+            let ndim = c.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(c.u32()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let raw = c.take(n * 4)?;
+            let mut data = Vec::with_capacity(n);
+            for chunk in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            }
+            tensors.insert(name, Tensor::new(dims, data)?);
+        }
+        if c.i != buf.len() {
+            return Err(Error::Weights(format!("{} trailing bytes", buf.len() - c.i)));
+        }
+        Ok(HostWeights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::Weights(format!("weight '{name}' not found")))
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.size_bytes()).sum()
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(Error::Weights("truncated weights file".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(entries: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = b"XTW1".to_vec();
+        out.extend((entries.len() as u32).to_le_bytes());
+        for (name, dims, data) in entries {
+            out.extend((name.len() as u16).to_le_bytes());
+            out.extend(name.as_bytes());
+            out.push(dims.len() as u8);
+            for &d in *dims {
+                out.extend((d as u32).to_le_bytes());
+            }
+            for &v in *data {
+                out.extend(v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parse_synthetic() {
+        let buf = encode(&[
+            ("a.w", &[2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            ("b", &[3], &[5.0, 6.0, 7.0]),
+        ]);
+        let w = HostWeights::parse(&buf).unwrap();
+        assert_eq!(w.get("a.w").unwrap().dims, vec![2, 2]);
+        assert_eq!(w.get("b").unwrap().data, vec![5.0, 6.0, 7.0]);
+        assert!(w.get("missing").is_err());
+        assert_eq!(w.total_bytes(), 28);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(HostWeights::parse(b"NOPE").is_err());
+        let mut buf = encode(&[("a", &[4], &[0.0; 4])]);
+        buf.truncate(buf.len() - 3);
+        assert!(HostWeights::parse(&buf).is_err());
+    }
+
+    #[test]
+    fn loads_real_weights_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights.bin");
+        if !p.exists() {
+            return;
+        }
+        let w = HostWeights::load(&p).unwrap();
+        assert!(w.tensors.len() > 400);
+        let q = w.get("adaln.L0.Wqkv").unwrap();
+        assert_eq!(q.dims, vec![192, 3 * 192]);
+        assert_eq!(w.get("shared.txt_table").unwrap().dims, vec![256, 192]);
+    }
+}

@@ -1,0 +1,348 @@
+//! Host-side f32 tensor used by the coordinator for latents, activations
+//! and KV buffers. Deliberately small: the heavy math lives in the AOT HLO
+//! executables; the coordinator only splits, scatters, concatenates and
+//! does elementwise scheduler updates.
+
+use crate::{Error, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "dims {:?} expect {} elements, got {}",
+                dims,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    pub fn from_fn(dims: &[usize], f: impl FnMut(usize) -> f32) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: (0..n).map(f).collect() }
+    }
+
+    pub fn randn(dims: &[usize], rng: &mut crate::util::rng::Rng) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: rng.normal_vec(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Size of one "row" = product of all dims except the first.
+    pub fn row_len(&self) -> usize {
+        self.dims.iter().skip(1).product()
+    }
+
+    pub fn rows(&self) -> usize {
+        *self.dims.first().unwrap_or(&1)
+    }
+
+    /// Bytes of payload (for comm-volume accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Contiguous row-range view copy: rows [lo, hi).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if hi > self.rows() || lo > hi {
+            return Err(Error::shape(format!(
+                "slice_rows {lo}..{hi} out of {} rows",
+                self.rows()
+            )));
+        }
+        let rl = self.row_len();
+        let mut dims = self.dims.clone();
+        dims[0] = hi - lo;
+        Ok(Tensor { dims, data: self.data[lo * rl..hi * rl].to_vec() })
+    }
+
+    /// Overwrite rows [at, at+src.rows()) with `src` (shape-checked).
+    pub fn scatter_rows(&mut self, at: usize, src: &Tensor) -> Result<()> {
+        if src.row_len() != self.row_len() {
+            return Err(Error::shape(format!(
+                "scatter_rows row_len mismatch {} vs {}",
+                src.row_len(),
+                self.row_len()
+            )));
+        }
+        let end = at + src.rows();
+        if end > self.rows() {
+            return Err(Error::shape(format!(
+                "scatter_rows {}..{} out of {} rows",
+                at,
+                end,
+                self.rows()
+            )));
+        }
+        let rl = self.row_len();
+        self.data[at * rl..end * rl].copy_from_slice(&src.data);
+        Ok(())
+    }
+
+    /// Split into `n` equal contiguous row chunks.
+    pub fn split_rows(&self, n: usize) -> Result<Vec<Tensor>> {
+        if n == 0 || self.rows() % n != 0 {
+            return Err(Error::shape(format!(
+                "cannot split {} rows into {n} chunks",
+                self.rows()
+            )));
+        }
+        let per = self.rows() / n;
+        (0..n).map(|i| self.slice_rows(i * per, (i + 1) * per)).collect()
+    }
+
+    /// Concatenate along the first axis.
+    pub fn concat_rows(parts: &[Tensor]) -> Result<Tensor> {
+        let first = parts.first().ok_or_else(|| Error::shape("concat of nothing"))?;
+        let rl = first.row_len();
+        let mut dims = first.dims.clone();
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            if p.row_len() != rl {
+                return Err(Error::shape("concat_rows: row_len mismatch"));
+            }
+            rows += p.rows();
+            data.extend_from_slice(&p.data);
+        }
+        dims[0] = rows;
+        Tensor::new(dims, data)
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(&self, dims: &[usize]) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != self.len() {
+            return Err(Error::shape(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Tensor { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    // ---- elementwise ops used by the diffusion schedulers ----------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { dims: self.dims.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.dims != other.dims {
+            return Err(Error::shape(format!(
+                "zip shape mismatch {:?} vs {:?}",
+                self.dims, other.dims
+            )));
+        }
+        Ok(Tensor {
+            dims: self.dims.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        })
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// a + s * b (axpy), in place — hot path of every scheduler step.
+    pub fn axpy_inplace(&mut self, s: f32, b: &Tensor) -> Result<()> {
+        if self.dims != b.dims {
+            return Err(Error::shape("axpy shape mismatch"));
+        }
+        for (x, &y) in self.data.iter_mut().zip(&b.data) {
+            *x += s * y;
+        }
+        Ok(())
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Mean over the first axis -> tensor of shape dims[1..].
+    pub fn mean_rows(&self) -> Tensor {
+        let rl = self.row_len();
+        let r = self.rows();
+        let mut out = vec![0.0f32; rl];
+        for i in 0..r {
+            for j in 0..rl {
+                out[j] += self.data[i * rl + j];
+            }
+        }
+        for v in &mut out {
+            *v /= r as f32;
+        }
+        Tensor { dims: self.dims[1..].to_vec(), data: out }
+    }
+
+    // ---- divergence metrics (Fig 19 reproduction) -------------------------
+
+    pub fn mse(&self, other: &Tensor) -> Result<f64> {
+        if self.dims != other.dims {
+            return Err(Error::shape("mse shape mismatch"));
+        }
+        let s: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        Ok(s / self.data.len() as f64)
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f64> {
+        if self.dims != other.dims {
+            return Err(Error::shape("diff shape mismatch"));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max))
+    }
+
+    /// PSNR in dB against `other` treated as reference (range from ref).
+    pub fn psnr(&self, reference: &Tensor) -> Result<f64> {
+        let mse = self.mse(reference)?;
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in &reference.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let range = (hi - lo).max(1e-12) as f64;
+        Ok(10.0 * (range * range / mse.max(1e-20)).log10())
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f64) -> bool {
+        self.dims == other.dims && self.max_abs_diff(other).map(|d| d <= atol).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor::new(dims.to_vec(), (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn slice_scatter_roundtrip() {
+        let mut a = t(&[8, 4]);
+        let s = a.slice_rows(2, 5).unwrap();
+        assert_eq!(s.dims, vec![3, 4]);
+        assert_eq!(s.data[0], 8.0);
+        let orig = a.clone();
+        a.scatter_rows(2, &s).unwrap();
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn split_concat_roundtrip() {
+        let a = t(&[8, 3]);
+        let parts = a.split_rows(4).unwrap();
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0].dims, vec![2, 3]);
+        let b = Tensor::concat_rows(&parts).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn split_rejects_uneven() {
+        assert!(t(&[7, 2]).split_rows(2).is_err());
+    }
+
+    #[test]
+    fn scatter_out_of_range_rejected() {
+        let mut a = t(&[4, 2]);
+        let s = t(&[3, 2]);
+        assert!(a.scatter_rows(2, &s).is_err());
+    }
+
+    #[test]
+    fn elementwise() {
+        let a = t(&[2, 2]);
+        let b = a.scale(2.0);
+        assert_eq!(b.data, vec![0.0, 2.0, 4.0, 6.0]);
+        let c = a.add(&a).unwrap();
+        assert_eq!(c.data, b.data);
+        let mut d = a.clone();
+        d.axpy_inplace(0.5, &a).unwrap();
+        assert_eq!(d.data, vec![0.0, 1.5, 3.0, 4.5]);
+    }
+
+    #[test]
+    fn metrics() {
+        let a = t(&[2, 2]);
+        assert_eq!(a.mse(&a).unwrap(), 0.0);
+        let b = a.map(|x| x + 1.0);
+        assert_eq!(a.mse(&b).unwrap(), 1.0);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 1.0);
+        assert!(a.psnr(&a).unwrap() > 100.0);
+    }
+
+    #[test]
+    fn mean_rows() {
+        let a = t(&[2, 3]); // rows [0,1,2], [3,4,5]
+        let m = a.mean_rows();
+        assert_eq!(m.dims, vec![3]);
+        assert_eq!(m.data, vec![1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn three_dim_rows() {
+        let a = t(&[2, 3, 4]);
+        assert_eq!(a.row_len(), 12);
+        let s = a.slice_rows(1, 2).unwrap();
+        assert_eq!(s.dims, vec![1, 3, 4]);
+        assert_eq!(s.data[0], 12.0);
+    }
+}

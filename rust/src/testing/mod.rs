@@ -1,0 +1,111 @@
+//! Minimal property-testing harness (proptest is not in the offline crate
+//! set). Runs N randomized cases from a deterministic seed; on failure it
+//! reports the failing case index and seed so the case can be replayed
+//! exactly.
+//!
+//! Used for the coordinator invariants (routing, batching, queue
+//! conservation), mesh bijectivity, tensor split/scatter round-trips and
+//! comm-cost monotonicity.
+
+use crate::util::rng::Rng;
+
+/// Outcome of a property check over one generated case.
+pub type CaseResult = std::result::Result<(), String>;
+
+/// Run `cases` random cases of property `prop`. Panics with a replayable
+/// seed on the first failure.
+pub fn check<F: FnMut(&mut Rng) -> CaseResult>(name: &str, cases: usize, mut prop: F) {
+    check_seeded(name, 0xDEC0DE, cases, &mut prop);
+}
+
+pub fn check_seeded<F: FnMut(&mut Rng) -> CaseResult>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    prop: &mut F,
+) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// A divisor of n, uniformly among divisors.
+    pub fn divisor_of(rng: &mut Rng, n: usize) -> usize {
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        *rng.pick(&divs)
+    }
+
+    /// Power of two <= max.
+    pub fn pow2_upto(rng: &mut Rng, max: usize) -> usize {
+        let mut opts = vec![1usize];
+        while opts.last().unwrap() * 2 <= max {
+            let next = opts.last().unwrap() * 2;
+            opts.push(next);
+        }
+        *rng.pick(&opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |rng| {
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports() {
+        check("fails", 10, |rng| {
+            let x = rng.below(4);
+            if x != 3 {
+                Ok(())
+            } else {
+                Err(format!("hit {x}"))
+            }
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        check("gen ranges", 100, |rng| {
+            let d = gen::divisor_of(rng, 24);
+            if 24 % d != 0 {
+                return Err(format!("{d} not a divisor"));
+            }
+            let p = gen::pow2_upto(rng, 16);
+            if !p.is_power_of_two() || p > 16 {
+                return Err(format!("bad pow2 {p}"));
+            }
+            let u = gen::usize_in(rng, 3, 7);
+            if !(3..=7).contains(&u) {
+                return Err(format!("out of range {u}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by `benches/*` (harness = false) and the §Perf pass: warmup, fixed
+//! iteration budget, median/p10/p90 over per-iteration wall time.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} median  ({:.3?}..{:.3?}, n={})",
+            self.name, self.median, self.p10, self.p90, self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations, then at least
+/// `min_iters` and at most `max_iters` iterations or ~`budget` of wall time.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    bench_cfg(name, 3, 10, 200, Duration::from_secs(2), &mut f)
+}
+
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    budget: Duration,
+    f: &mut F,
+) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters
+        || (samples.len() < max_iters && start.elapsed() < budget)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        median: samples[n / 2],
+        p10: samples[n / 10],
+        p90: samples[(n * 9) / 10],
+        mean,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let s = bench_cfg("noop", 1, 5, 10, Duration::from_millis(50), &mut || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 5);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+}

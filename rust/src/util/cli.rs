@@ -1,0 +1,103 @@
+//! Minimal CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = parse("serve --model tiny-mmdit --gpus=8 --verbose --steps 20");
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.str_or("model", ""), "tiny-mmdit");
+        assert_eq!(a.usize_or("gpus", 1).unwrap(), 8);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 20);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("generate");
+        assert_eq!(a.usize_or("gpus", 4).unwrap(), 4);
+        assert_eq!(a.str_or("model", "tiny-adaln"), "tiny-adaln");
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse("--gpus banana");
+        assert!(a.usize_or("gpus", 1).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure utilities: JSON, RNG, image output, CLI parsing, timing.
+//!
+//! The offline crate registry only ships the `xla` dependency closure, so
+//! serde/clap/criterion/rand are hand-rolled here (see DESIGN.md §2).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pgm;
+pub mod rng;

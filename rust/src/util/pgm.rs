@@ -1,0 +1,77 @@
+//! PPM/PGM image writers for the examples (no image crates offline).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::Result;
+
+/// Write an RGB image (HWC, f32, arbitrary range; min-max normalized) as
+/// binary PPM (P6).
+pub fn write_ppm(path: impl AsRef<Path>, data: &[f32], h: usize, w: usize) -> Result<()> {
+    assert_eq!(data.len(), h * w * 3, "expected HWC RGB");
+    let (lo, hi) = min_max(data);
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    let mut out = Vec::with_capacity(h * w * 3 + 32);
+    out.extend_from_slice(format!("P6\n{w} {h}\n255\n").as_bytes());
+    for &v in data {
+        out.push(((v - lo) * scale).clamp(0.0, 255.0) as u8);
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+/// Write a grayscale image (HW, f32) as binary PGM (P5).
+pub fn write_pgm(path: impl AsRef<Path>, data: &[f32], h: usize, w: usize) -> Result<()> {
+    assert_eq!(data.len(), h * w);
+    let (lo, hi) = min_max(data);
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    let mut out = Vec::with_capacity(h * w + 32);
+    out.extend_from_slice(format!("P5\n{w} {h}\n255\n").as_bytes());
+    for &v in data {
+        out.push(((v - lo) * scale).clamp(0.0, 255.0) as u8);
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+fn min_max(data: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in data {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_valid_ppm() {
+        let dir = std::env::temp_dir().join("xdit_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ppm");
+        let data: Vec<f32> = (0..2 * 3 * 3).map(|i| i as f32).collect();
+        write_ppm(&p, &data, 2, 3).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n3 2\n255\n"));
+        assert_eq!(bytes.len(), 11 + 18);
+    }
+
+    #[test]
+    fn constant_image_ok() {
+        let dir = std::env::temp_dir().join("xdit_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.pgm");
+        write_pgm(&p, &[1.0; 16], 4, 4).unwrap();
+        assert!(p.exists());
+    }
+}

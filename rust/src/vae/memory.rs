@@ -1,0 +1,106 @@
+//! Analytic VAE memory/latency model — Table 3's OOM boundaries and the
+//! "parallel VAE lifts resolution, not speed" result.
+//!
+//! Calibration anchors from the paper: the SD-VAE peak activation tensor at
+//! 4096px is 60.41 GB (§4.3), i.e. ~3.6 KB per output pixel; 1-GPU decode
+//! at 2048px on L40 takes ~2.2 s; the naive decoder OOMs above 2048px on
+//! both 48 GB and 80 GB GPUs, while 8-way patch parallel + chunked conv
+//! reaches 7168px (L40) / 8192px (A100).
+
+/// Peak *live* activation bytes of the naive (unchunked, single-device)
+/// decode: the widest single tensor (~3.6 KB/pixel — the paper's 60.41 GB
+/// at 4096px) plus the neighbouring input/output maps that must coexist,
+/// totalling ~6 KB per output pixel.
+pub fn vae_peak_bytes(px: usize, channels_latent: usize) -> f64 {
+    let per_pixel = 6000.0 * (1.0 + 0.05 * (channels_latent as f64 / 4.0 - 1.0));
+    per_pixel * (px as f64) * (px as f64)
+}
+
+/// The single largest tensor (the paper's §4.3 anchor).
+pub fn vae_peak_tensor_bytes(px: usize) -> f64 {
+    0.6 * vae_peak_bytes(px, 4)
+}
+
+/// Temporary (im2col / workspace) bytes of one conv over the widest map;
+/// chunked execution divides this by `chunks`.
+pub fn vae_temp_bytes(px: usize, chunks: usize) -> f64 {
+    900.0 * (px as f64) * (px as f64) / chunks as f64
+}
+
+/// Decoder FLOPs (conv stack ~ 1.6 GFLOP per output megapixel at SD-VAE
+/// widths).
+pub fn vae_decode_flops(px: usize) -> f64 {
+    1.6e9 * (px as f64) * (px as f64) / 1e6 * 1e3
+}
+
+/// Does a decode at `px` fit on a GPU with `mem` bytes using `n` patch
+/// devices and `chunks`-way chunked convs?
+pub fn vae_fits(px: usize, channels_latent: usize, n: usize, chunks: usize, mem: f64) -> bool {
+    let act = vae_peak_bytes(px, channels_latent) / n as f64;
+    let tmp = vae_temp_bytes(px, chunks) / n as f64;
+    let params = 320e6;
+    act + tmp + params < mem * 0.9
+}
+
+/// Decode wall-time (seconds) on `n` devices of a cluster: compute/n plus
+/// halo exchange and the per-device launch overhead that makes small
+/// resolutions *slower* in parallel (Table 3's pattern).
+pub fn vae_decode_time(
+    px: usize,
+    n: usize,
+    tflops: f64,
+    link_bw: f64,
+    link_lat: f64,
+) -> f64 {
+    let compute = vae_decode_flops(px) / (tflops * 1e12 * 0.15) / n as f64; // convs run at low MFU
+    if n == 1 {
+        return compute;
+    }
+    // halo strips at several feature scales + stitching allgather
+    let halo_bytes = 6.0 * (px as f64) * 128.0 * 2.0;
+    let comm = (n as f64 - 1.0) * (link_lat + halo_bytes / link_bw)
+        + (px as f64).powi(2) * 3.0 / link_bw / n as f64;
+    let overhead = 0.15 * n as f64 * link_lat / 8e-6; // kernel launch + sync
+    compute + comm + overhead
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peak_anchor() {
+        // peak single tensor: 60.41 GB at 4096px (paper §4.3), within 10%
+        let gb = vae_peak_tensor_bytes(4096) / 1e9;
+        assert!((54.0..66.0).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn naive_oom_above_2048() {
+        // Table 3: 1 GPU decodes 2048px but OOMs at 4096px on both GPUs
+        assert!(vae_fits(2048, 4, 1, 1, 48e9));
+        assert!(!vae_fits(4096, 4, 1, 1, 48e9));
+        assert!(!vae_fits(4096, 4, 1, 1, 80e9));
+    }
+
+    #[test]
+    fn eight_way_reaches_7k_l40_8k_a100() {
+        // Table 3 boundaries with 8 devices + chunked conv
+        assert!(vae_fits(7168, 4, 8, 4, 48e9));
+        assert!(!vae_fits(8192, 4, 8, 4, 48e9));
+        assert!(vae_fits(8192, 4, 8, 4, 80e9));
+    }
+
+    #[test]
+    fn parallel_does_not_speed_up_small_images() {
+        // Table 3: latency at 1k/2k *increases* with more devices
+        let t1 = vae_decode_time(1024, 1, 90.0, 24e9, 8e-6);
+        let t8 = vae_decode_time(1024, 8, 90.0, 24e9, 8e-6);
+        assert!(t8 > t1, "t8 {t8} !> t1 {t1}");
+    }
+
+    #[test]
+    fn chunking_reduces_temp() {
+        assert!(vae_temp_bytes(4096, 4) < vae_temp_bytes(4096, 1));
+    }
+}

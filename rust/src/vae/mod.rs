@@ -1,0 +1,9 @@
+//! Parallel VAE (paper §4.3): patch parallelism with halo exchange for the
+//! decoder, plus the analytic activation-memory model behind Table 3's OOM
+//! boundaries and the chunked-conv temporary-memory mitigation.
+
+pub mod decoder;
+pub mod memory;
+
+pub use decoder::ParallelVae;
+pub use memory::{vae_decode_time, vae_fits, vae_peak_bytes};

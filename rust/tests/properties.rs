@@ -1,0 +1,182 @@
+//! Property-based tests over coordinator/mesh/tensor invariants (the
+//! `testing` mini-harness stands in for proptest, which is unavailable in
+//! the offline crate set).
+
+use xdit::config::model::ModelSpec;
+use xdit::config::parallel::ParallelConfig;
+use xdit::mesh::Mesh;
+use xdit::tensor::Tensor;
+use xdit::testing::{check, gen};
+use xdit::util::rng::Rng;
+
+#[test]
+fn prop_mesh_coord_rank_bijective() {
+    check("mesh bijection", 100, |rng| {
+        let cfg = gen::pow2_upto(rng, 2);
+        let pipe = gen::pow2_upto(rng, 4);
+        let ul = gen::pow2_upto(rng, 4);
+        let ring = gen::pow2_upto(rng, 4);
+        let m = Mesh::new(ParallelConfig::new(cfg, pipe, ul, ring));
+        for r in 0..m.world() {
+            if m.rank(m.coord(r)) != r {
+                return Err(format!("rank {r} not bijective"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mesh_groups_partition_world() {
+    check("mesh groups partition", 60, |rng| {
+        let m = Mesh::new(ParallelConfig::new(
+            gen::pow2_upto(rng, 2),
+            gen::pow2_upto(rng, 4),
+            gen::pow2_upto(rng, 2),
+            gen::pow2_upto(rng, 2),
+        ));
+        let mut seen = vec![false; m.world()];
+        for r in 0..m.world() {
+            let g = m.sp_group(r);
+            if !g.contains(&r) {
+                return Err(format!("rank {r} not in own sp group"));
+            }
+            if g[m.coord(r).ring * m.pc.ulysses + m.coord(r).ulysses] != r {
+                return Err("sp_index inconsistent with group order".into());
+            }
+            seen[r] = true;
+        }
+        if seen.iter().any(|&s| !s) {
+            return Err("world not covered".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_split_concat_roundtrip() {
+    check("tensor split/concat", 80, |rng| {
+        let shards = gen::divisor_of(rng, 24);
+        let cols = gen::usize_in(rng, 1, 8);
+        let t = Tensor::randn(&[24, cols], rng);
+        let parts = t.split_rows(shards).map_err(|e| e.to_string())?;
+        let back = Tensor::concat_rows(&parts).map_err(|e| e.to_string())?;
+        if back != t {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_scatter_inverse_of_slice() {
+    check("scatter inverse", 80, |rng| {
+        let rows = gen::usize_in(rng, 4, 32);
+        let cols = gen::usize_in(rng, 1, 6);
+        let mut t = Tensor::randn(&[rows, cols], rng);
+        let orig = t.clone();
+        let lo = rng.below(rows);
+        let hi = lo + 1 + rng.below(rows - lo);
+        let s = t.slice_rows(lo, hi).map_err(|e| e.to_string())?;
+        t.scatter_rows(lo, &s).map_err(|e| e.to_string())?;
+        if t != orig {
+            return Err("scatter(slice) changed tensor".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_enumerate_configs_valid_and_exact_world() {
+    check("config enumeration", 30, |rng| {
+        let worlds = [2usize, 4, 8, 16];
+        let world = *rng.pick(&worlds);
+        let names = ["tiny-adaln", "tiny-mmdit", "tiny-cross", "sd3", "pixart"];
+        let m = ModelSpec::by_name(*rng.pick(&names)).unwrap();
+        let s_img = 256 * gen::pow2_upto(rng, 4);
+        for pc in ParallelConfig::enumerate(world, &m, s_img) {
+            if pc.world() != world {
+                return Err(format!("world {} != {world}", pc.world()));
+            }
+            pc.validate(&m, s_img).map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_cost_monotone_in_bytes_and_distance() {
+    check("comm cost monotonicity", 50, |rng| {
+        let c = xdit::config::hardware::l40_cluster(2);
+        let b1 = 1.0 + rng.uniform() * 1e6;
+        let b2 = b1 * (1.5 + rng.uniform());
+        let g_near: Vec<usize> = vec![0, 1];
+        let g_far: Vec<usize> = vec![0, 8];
+        let t_near1 = c.collective_time(&g_near, b1, 1.0);
+        let t_near2 = c.collective_time(&g_near, b2, 1.0);
+        let t_far1 = c.collective_time(&g_far, b1, 1.0);
+        if t_near2 < t_near1 {
+            return Err("not monotone in bytes".into());
+        }
+        if t_far1 < t_near1 {
+            return Err("cross-node cheaper than intra-node".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_final_step_reaches_clean_latent() {
+    // for any steps count, running with eps = x (perfect noise prediction
+    // of a pure-noise latent) must shrink magnitude monotonically-ish and
+    // end finite
+    check("scheduler sanity", 30, |rng| {
+        let steps = gen::usize_in(rng, 2, 20);
+        let kinds = ["ddim", "dpm", "flow_match"];
+        let kind = *rng.pick(&kinds);
+        let sch = xdit::diffusion::make_scheduler(kind, steps).map_err(|e| e.to_string())?;
+        let mut x = Tensor::randn(&[64], rng);
+        for i in 0..steps {
+            let eps = x.clone();
+            x = sch.step(&x, &eps, i).map_err(|e| e.to_string())?;
+            if !x.data.iter().all(|v| v.is_finite()) {
+                return Err(format!("{kind} step {i} not finite"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_valid_for_any_world() {
+    check("router validity", 40, |rng| {
+        let world = gen::pow2_upto(rng, 16);
+        let names = ["tiny-adaln", "tiny-mmdit", "tiny-cross", "tiny-skip"];
+        let m = ModelSpec::by_name(*rng.pick(&names)).unwrap();
+        let clusters = [
+            xdit::config::hardware::l40_cluster(2),
+            xdit::config::hardware::a100_node(),
+        ];
+        let c = rng.pick(&clusters);
+        let pc = xdit::coordinator::route(&m, 256, c, world.min(c.n_gpus));
+        pc.validate(&m, 256).map_err(|e| e.to_string())?;
+        if pc.world() != world.min(c.n_gpus) {
+            return Err(format!("router wasted devices: {} of {}", pc.world(), world));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_uniform_bounds() {
+    check("rng bounds", 20, |rng| {
+        let mut r2 = Rng::new(rng.next_u64());
+        for _ in 0..100 {
+            let v = r2.range(-2.0, 3.0);
+            if !(-2.0..3.0).contains(&v) {
+                return Err(format!("range out of bounds: {v}"));
+            }
+        }
+        Ok(())
+    });
+}
