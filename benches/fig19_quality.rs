@@ -2,11 +2,14 @@
 //! 30k COCO images; with no COCO/Inception offline we report the direct
 //! divergence (MSE / PSNR of the final latent) of every parallel method
 //! against the serial baseline over a fixed prompt set — exact methods
-//! must be ~bit-exact, staleness methods bounded (see DESIGN.md §2).
-use xdit::config::hardware::l40_cluster;
-use xdit::config::model::BlockVariant;
+//! must be ~bit-exact, staleness methods bounded (see DESIGN.md).
+//! Every run goes through the `Pipeline` facade with an explicit policy.
+use xdit::config::hardware::{a100_node, l40_cluster};
 use xdit::config::parallel::ParallelConfig;
-use xdit::parallel::{driver, GenParams, Session};
+use xdit::coordinator::GenRequest;
+use xdit::diffusion::SchedulerKind;
+use xdit::parallel::driver::Method;
+use xdit::pipeline::{ParallelPolicy, Pipeline};
 use xdit::runtime::Runtime;
 
 fn main() {
@@ -17,35 +20,56 @@ fn main() {
     }
     let rt = Runtime::load(dir).unwrap();
     let prompts = ["a kid wearing headphones and using a laptop", "a red fox in snow"];
+    // one request list and one serial baseline per prompt, shared by every
+    // parallel config below
+    let reqs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, prompt)| {
+            GenRequest::new(i as u64, *prompt)
+                .with_steps(6)
+                .with_seed(100 + i as u64)
+                .with_guidance(3.0)
+                .with_scheduler(SchedulerKind::Dpm)
+        })
+        .collect();
+    let mut reference_pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(a100_node())
+        .world(1)
+        .parallel(ParallelPolicy::Explicit(ParallelConfig::serial()))
+        .build()
+        .unwrap();
+    let references: Vec<_> =
+        reqs.iter().map(|r| reference_pipe.generate(r).unwrap().latent).collect();
     println!("# Fig 19 analogue: divergence vs serial baseline (tiny-adaln, 6-step DPM)");
     println!("{:<26} {:>12} {:>10}", "config", "latent MSE", "PSNR dB");
     for (label, method, pc) in [
-        ("baseline(serial)", driver::Method::Serial, ParallelConfig::serial()),
-        ("ulysses=2", driver::Method::Sp, ParallelConfig::new(1, 1, 2, 1)),
-        ("ring=2", driver::Method::Sp, ParallelConfig::new(1, 1, 1, 2)),
-        ("usp(2x2)", driver::Method::Sp, ParallelConfig::new(1, 1, 2, 2)),
-        ("pipefusion=2,M=4", driver::Method::PipeFusion, ParallelConfig::new(1, 2, 1, 1).with_patches(4)),
-        ("pp=2,sp=2 (hybrid)", driver::Method::Hybrid, ParallelConfig::new(1, 2, 2, 1).with_patches(2)),
-        ("pp=2,sp=2 standard-sp", driver::Method::HybridStandardSp, ParallelConfig::new(1, 2, 2, 1).with_patches(2)),
-        ("distrifusion n=4", driver::Method::DistriFusion, ParallelConfig::new(1, 1, 1, 4).with_patches(4)),
+        ("baseline(serial)", Method::Serial, ParallelConfig::serial()),
+        ("ulysses=2", Method::Sp, ParallelConfig::new(1, 1, 2, 1)),
+        ("ring=2", Method::Sp, ParallelConfig::new(1, 1, 1, 2)),
+        ("usp(2x2)", Method::Sp, ParallelConfig::new(1, 1, 2, 2)),
+        ("pipefusion=2,M=4", Method::PipeFusion, ParallelConfig::new(1, 2, 1, 1).with_patches(4)),
+        ("pp=2,sp=2 (hybrid)", Method::Hybrid, ParallelConfig::new(1, 2, 2, 1).with_patches(2)),
+        ("pp=2,sp=2 standard-sp", Method::HybridStandardSp, ParallelConfig::new(1, 2, 2, 1).with_patches(2)),
+        ("distrifusion n=4", Method::DistriFusion, ParallelConfig::new(1, 1, 1, 4).with_patches(4)),
     ] {
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(pc.world())
+            .parallel(ParallelPolicy::Explicit(pc))
+            .method(method)
+            .build()
+            .unwrap();
         let mut mse_acc = 0.0;
         let mut psnr_acc = 0.0;
-        for (i, prompt) in prompts.iter().enumerate() {
-            let p = GenParams {
-                prompt: prompt.to_string(),
-                steps: 6,
-                seed: 100 + i as u64,
-                guidance: 3.0,
-                scheduler: "dpm".into(),
-            };
-            let reference = driver::generate_reference(&rt, BlockVariant::AdaLn, &p).unwrap();
-            let mut sess = Session::new(&rt, BlockVariant::AdaLn, l40_cluster(1), pc).unwrap();
-            let r = driver::generate(&mut sess, method, &p).unwrap();
-            mse_acc += r.latent.mse(&reference).unwrap();
-            psnr_acc += r.latent.psnr(&reference).unwrap();
+        for (req, reference) in reqs.iter().zip(&references) {
+            let r = pipe.generate(req).unwrap();
+            mse_acc += r.latent.mse(reference).unwrap();
+            psnr_acc += r.latent.psnr(reference).unwrap();
         }
-        let n = prompts.len() as f64;
+        let n = reqs.len() as f64;
         println!("{:<26} {:>12.3e} {:>10.1}", label, mse_acc / n, psnr_acc / n);
     }
 }

@@ -5,10 +5,11 @@
 
 use xdit::comm::{Clocks, Communicator};
 use xdit::config::hardware::l40_cluster;
-use xdit::config::model::BlockVariant;
 use xdit::config::parallel::ParallelConfig;
+use xdit::coordinator::GenRequest;
 use xdit::model::KvBuffer;
-use xdit::parallel::{driver, GenParams, Session};
+use xdit::parallel::driver::Method;
+use xdit::pipeline::{ParallelPolicy, Pipeline};
 use xdit::runtime::{ArgValue, Runtime};
 use xdit::tensor::Tensor;
 use xdit::util::bench::bench;
@@ -77,20 +78,27 @@ fn main() {
         );
     }
 
-    // --- end-to-end steps ------------------------------------------------------
+    // --- end-to-end steps (through the Pipeline facade) -----------------------
     for (label, method, pc) in [
-        ("e2e: serial 2-step", driver::Method::Serial, ParallelConfig::serial()),
-        ("e2e: sp(2) 2-step", driver::Method::Sp, ParallelConfig::new(1, 1, 2, 1)),
+        ("e2e: serial 2-step", Method::Serial, ParallelConfig::serial()),
+        ("e2e: sp(2) 2-step", Method::Sp, ParallelConfig::new(1, 1, 2, 1)),
         (
             "e2e: pipefusion(2,M=4) 2-step",
-            driver::Method::PipeFusion,
+            Method::PipeFusion,
             ParallelConfig::new(1, 2, 1, 1).with_patches(4),
         ),
     ] {
-        let p = GenParams { steps: 2, guidance: 0.0, ..Default::default() };
+        let req = GenRequest::new(0, "a photo").with_steps(2).with_guidance(0.0);
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(cluster.clone())
+            .world(pc.world())
+            .parallel(ParallelPolicy::Explicit(pc))
+            .method(method)
+            .build()
+            .unwrap();
         println!("{}", bench(label, || {
-            let mut sess = Session::new(&rt, BlockVariant::AdaLn, cluster.clone(), pc).unwrap();
-            std::hint::black_box(driver::generate(&mut sess, method, &p).unwrap());
+            std::hint::black_box(pipe.generate(&req).unwrap());
         }).report());
     }
 }

@@ -1,11 +1,13 @@
 //! Table 1: analytic comm/memory comparison + live-simulator validation:
 //! the tiny-model runs must rank methods' measured comm volume the same
-//! way the closed forms do.
+//! way the closed forms do. Live runs go through the `Pipeline` facade,
+//! which reports per-request comm volume on the response.
 use xdit::config::hardware::l40_cluster;
-use xdit::config::model::BlockVariant;
 use xdit::config::parallel::ParallelConfig;
-use xdit::parallel::{driver, GenParams, Session};
+use xdit::coordinator::GenRequest;
+use xdit::parallel::driver::Method;
 use xdit::perf::figures::table1;
+use xdit::pipeline::{ParallelPolicy, Pipeline};
 use xdit::runtime::Runtime;
 
 fn main() {
@@ -19,17 +21,24 @@ fn main() {
         return;
     }
     let rt = Runtime::load(dir).unwrap();
-    let p = GenParams { steps: 3, guidance: 0.0, ..Default::default() };
+    let req = GenRequest::new(0, "a photo").with_steps(3).with_guidance(0.0);
     let mut rows = Vec::new();
     for (name, method, pc) in [
-        ("sp-ulysses(2)", driver::Method::Sp, ParallelConfig::new(1, 1, 2, 1)),
-        ("sp-ring", driver::Method::Sp, ParallelConfig::new(1, 1, 1, 4)),
-        ("tp", driver::Method::Tp, ParallelConfig::serial()),
-        ("pipefusion", driver::Method::PipeFusion, ParallelConfig::new(1, 4, 1, 1).with_patches(4)),
+        ("sp-ulysses(2)", Method::Sp, ParallelConfig::new(1, 1, 2, 1)),
+        ("sp-ring", Method::Sp, ParallelConfig::new(1, 1, 1, 4)),
+        ("tp", Method::Tp, ParallelConfig::serial()),
+        ("pipefusion", Method::PipeFusion, ParallelConfig::new(1, 4, 1, 1).with_patches(4)),
     ] {
-        let mut sess = Session::new(&rt, BlockVariant::AdaLn, l40_cluster(1), pc).unwrap();
-        let r = driver::generate(&mut sess, method, &p).unwrap();
-        rows.push((name, sess.ledger.total_bytes(), r.makespan));
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(pc.world())
+            .parallel(ParallelPolicy::Explicit(pc))
+            .method(method)
+            .build()
+            .unwrap();
+        let r = pipe.generate(&req).unwrap();
+        rows.push((name, r.comm_bytes, r.model_seconds));
     }
     println!("# live tiny-model comm volume (3 steps, 4 devices)");
     for (name, bytes, mk) in &rows {

@@ -1,13 +1,13 @@
 //! Table 3: parallel VAE elapsed time / OOM boundaries, plus a live
-//! exactness + timing run of the tiny patch-parallel VAE.
-use xdit::comm::Clocks;
+//! exactness + timing run of the tiny patch-parallel VAE through the
+//! `Pipeline` facade (which owns a single VAE instance).
 use xdit::config::hardware::l40_cluster;
 use xdit::perf::figures::table3;
+use xdit::pipeline::Pipeline;
 use xdit::runtime::Runtime;
 use xdit::tensor::Tensor;
 use xdit::util::bench::bench;
 use xdit::util::rng::Rng;
-use xdit::vae::ParallelVae;
 
 fn main() {
     println!("{}", table3());
@@ -16,18 +16,16 @@ fn main() {
         return;
     }
     let rt = Runtime::load(dir).unwrap();
-    let vae = ParallelVae::new(&rt).unwrap();
+    let mut pipe = Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).build().unwrap();
     let z = Tensor::randn(&[16, 16, 4], &mut Rng::new(0));
-    let cluster = l40_cluster(1);
-    let full = vae.decode_full(&z).unwrap();
+    let full = pipe.decode_reference(&z).unwrap();
     for n in [1usize, 2, 4, 8] {
-        let mut clocks = Clocks::new(8);
-        let out = vae.decode_parallel(&z, n, &cluster, &mut clocks).unwrap();
+        let (out, sim_seconds) = pipe.decode_latent(&z, n).unwrap();
         assert!(out.allclose(&full, 1e-4));
         let s = bench(&format!("tiny vae decode n={n}"), || {
-            let mut c = Clocks::new(8);
-            std::hint::black_box(vae.decode_parallel(&z, n, &cluster, &mut c).unwrap());
+            std::hint::black_box(pipe.decode_latent(&z, n).unwrap());
         });
-        eprintln!("{}  (simulated {:.2} ms)", s.report(), clocks.makespan() * 1e3);
+        eprintln!("{}  (simulated {:.2} ms)", s.report(), sim_seconds * 1e3);
     }
+    assert_eq!(pipe.metrics().vae_builds, 1, "one VAE for the whole run");
 }

@@ -1,34 +1,38 @@
 //! Parallel VAE demo (paper §4.3 / Table 3): live patch-parallel decode of
 //! the tiny VAE (exact vs. full decode) plus the analytic OOM-boundary grid
-//! at SD-VAE scale.
+//! at SD-VAE scale. The VAE is owned by the `Pipeline` facade — built once
+//! and reused across every decode call.
 
-use xdit::comm::Clocks;
 use xdit::config::hardware::l40_cluster;
+use xdit::pipeline::Pipeline;
 use xdit::runtime::Runtime;
 use xdit::tensor::Tensor;
 use xdit::util::rng::Rng;
-use xdit::vae::{vae_decode_time, vae_fits, ParallelVae};
+use xdit::vae::{vae_decode_time, vae_fits};
 
 fn main() -> xdit::Result<()> {
-    let rt = Runtime::load(std::env::args().nth(1).unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))))?;
-    let vae = ParallelVae::new(&rt)?;
-    let cluster = l40_cluster(1);
+    let rt = Runtime::load(
+        std::env::args()
+            .nth(1)
+            .unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))),
+    )?;
+    let mut pipe = Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).build()?;
     let z = Tensor::randn(&[16, 16, 4], &mut Rng::new(5));
-    let full = vae.decode_full(&z)?;
+    let full = pipe.decode_reference(&z)?;
 
     println!("live tiny VAE (latent 16x16x4 -> 128x128x3):");
     for n in [1usize, 2, 4, 8] {
-        let mut clocks = Clocks::new(8);
         let t0 = std::time::Instant::now();
-        let out = vae.decode_parallel(&z, n, &cluster, &mut clocks)?;
+        let (out, sim_seconds) = pipe.decode_latent(&z, n)?;
         let err = out.max_abs_diff(&full)?;
         println!(
             "  {n} device(s): max|Δ| vs full = {err:.2e}, wall {:?}, simulated {:.3} ms",
             t0.elapsed(),
-            clocks.makespan() * 1e3
+            sim_seconds * 1e3
         );
         assert!(err < 1e-4, "patch decode must be exact");
     }
+    assert_eq!(pipe.metrics().vae_builds, 1, "facade builds the VAE exactly once");
 
     println!("\nSD-VAE-scale resolution ceiling (48GB L40, chunked convs):");
     println!("{:<8} {:>10} {:>14}", "devices", "max px", "time @max (s)");

@@ -1,48 +1,70 @@
 //! PipeFusion vs. sequence parallelism on one image: numerics (divergence
 //! from the serial baseline) and simulated latency/communication side by
-//! side — the paper's §4.1.3 comparison, live.
+//! side — the paper's §4.1.3 comparison, live. Each configuration is one
+//! `Pipeline` with an explicit parallel policy and a forced strategy.
 
 use xdit::config::hardware::{a100_node, l40_cluster};
-use xdit::config::model::BlockVariant;
 use xdit::config::parallel::ParallelConfig;
-use xdit::parallel::{driver, GenParams, Session};
+use xdit::coordinator::GenRequest;
+use xdit::diffusion::SchedulerKind;
+use xdit::parallel::driver::Method;
+use xdit::pipeline::{ParallelPolicy, Pipeline};
 use xdit::runtime::Runtime;
 
 fn main() -> xdit::Result<()> {
-    let rt = Runtime::load(std::env::args().nth(1).unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))))?;
-    let p = GenParams {
-        prompt: "an isometric voxel castle".into(),
-        steps: 6,
-        seed: 7,
-        guidance: 3.0,
-        scheduler: "dpm".into(),
+    let rt = Runtime::load(
+        std::env::args()
+            .nth(1)
+            .unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))),
+    )?;
+    // steps/seed/guidance/scheduler live on the request, not in the engine
+    let req = GenRequest::new(0, "an isometric voxel castle")
+        .with_steps(6)
+        .with_seed(7)
+        .with_guidance(3.0)
+        .with_scheduler(SchedulerKind::Dpm);
+
+    // serial reference on one device
+    let reference = {
+        let mut serial = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(a100_node())
+            .world(1)
+            .parallel(ParallelPolicy::Explicit(ParallelConfig::serial()))
+            .build()?;
+        serial.generate(&req)?.latent
     };
-    let reference = driver::generate_reference(&rt, BlockVariant::AdaLn, &p)?;
 
     println!(
         "{:<34} {:>10} {:>12} {:>12} {:>10}",
         "config", "cluster", "sim latency", "comm MB", "MSE vs ref"
     );
     for (label, method, pc, l40) in [
-        ("ulysses=2", driver::Method::Sp, ParallelConfig::new(1, 1, 2, 1), false),
-        ("usp 2x2", driver::Method::Sp, ParallelConfig::new(1, 1, 2, 2), false),
-        ("ring=4", driver::Method::Sp, ParallelConfig::new(1, 1, 1, 4), true),
-        ("pipefusion=4 (M=8)", driver::Method::PipeFusion,
+        ("ulysses=2", Method::Sp, ParallelConfig::new(1, 1, 2, 1), false),
+        ("usp 2x2", Method::Sp, ParallelConfig::new(1, 1, 2, 2), false),
+        ("ring=4", Method::Sp, ParallelConfig::new(1, 1, 1, 4), true),
+        ("pipefusion=4 (M=8)", Method::PipeFusion,
             ParallelConfig::new(1, 4, 1, 1).with_patches(8), true),
-        ("cfg=2 x pipefusion=2 (M=4)", driver::Method::PipeFusion,
+        ("cfg=2 x pipefusion=2 (M=4)", Method::PipeFusion,
             ParallelConfig::new(2, 2, 1, 1).with_patches(4), true),
-        ("cfg=2 x ulysses=2", driver::Method::Sp, ParallelConfig::new(2, 1, 2, 1), false),
-        ("hybrid pp=2 x sp=2", driver::Method::Hybrid,
+        ("cfg=2 x ulysses=2", Method::Sp, ParallelConfig::new(2, 1, 2, 1), false),
+        ("hybrid pp=2 x sp=2", Method::Hybrid,
             ParallelConfig::new(1, 2, 2, 1).with_patches(2), true),
     ] {
         let cluster = if l40 { l40_cluster(1) } else { a100_node() };
-        let mut sess = Session::new(&rt, BlockVariant::AdaLn, cluster.clone(), pc)?;
-        let r = driver::generate(&mut sess, method, &p)?;
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(cluster.clone())
+            .world(pc.world())
+            .parallel(ParallelPolicy::Explicit(pc))
+            .method(method)
+            .build()?;
+        let r = pipe.generate(&req)?;
         println!(
             "{:<34} {:>10} {:>11.4}s {:>12.2} {:>10.2e}",
             label,
             cluster.name,
-            r.makespan,
+            r.model_seconds,
             r.comm_bytes as f64 / 1e6,
             r.latent.mse(&reference)?
         );

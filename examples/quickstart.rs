@@ -1,47 +1,53 @@
-//! Quickstart: generate one image with the tiny DiT and write it as PPM.
+//! Quickstart: generate one image with the tiny DiT and write it as PPM —
+//! the `DESIGN.md` quickstart, runnable.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! This exercises the full single-device path: text encode -> denoising
+//! Everything goes through the `Pipeline` facade: text encode -> denoising
 //! loop over the AOT HLO executables (Pallas attention inside) -> parallel
 //! VAE decode -> image file.
 
-use xdit::comm::Clocks;
 use xdit::config::hardware::a100_node;
 use xdit::config::model::BlockVariant;
 use xdit::config::parallel::ParallelConfig;
-use xdit::parallel::{driver, GenParams, Session};
+use xdit::coordinator::GenRequest;
+use xdit::diffusion::SchedulerKind;
+use xdit::pipeline::{ParallelPolicy, Pipeline};
 use xdit::runtime::Runtime;
 use xdit::util::pgm;
-use xdit::vae::ParallelVae;
 
 fn main() -> xdit::Result<()> {
-    let rt = Runtime::load(std::env::args().nth(1).unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))))?;
-    let mut sess = Session::new(
-        &rt,
-        BlockVariant::MmDit, // SD3/Flux-style in-context conditioning
-        a100_node(),
-        ParallelConfig::serial(),
+    let rt = Runtime::load(
+        std::env::args()
+            .nth(1)
+            .unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))),
     )?;
-    let params = GenParams {
-        prompt: "a watercolor painting of a lighthouse at dusk".into(),
-        steps: 8,
-        seed: 42,
-        guidance: 4.0,
-        scheduler: "flow_match".into(),
-    };
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(a100_node())
+        .world(1)
+        .parallel(ParallelPolicy::Explicit(ParallelConfig::serial()))
+        .scheduler(SchedulerKind::FlowMatch)
+        .build()?;
+
+    let req = GenRequest::new(0, "a watercolor painting of a lighthouse at dusk")
+        .with_variant(BlockVariant::MmDit) // SD3/Flux-style in-context conditioning
+        .with_steps(8)
+        .with_seed(42)
+        .with_guidance(4.0)
+        .with_decode(true);
+
     let t0 = std::time::Instant::now();
-    let r = driver::generate(&mut sess, driver::Method::Serial, &params)?;
+    let r = pipe.generate(&req)?;
     println!(
-        "denoised 8 steps in {:?} (simulated 1-GPU latency {:.2}ms)",
+        "denoised {} steps with {} in {:?} (simulated 1-GPU latency {:.2}ms)",
+        req.steps,
+        r.scheduler,
         t0.elapsed(),
-        r.makespan * 1e3
+        r.model_seconds * 1e3
     );
 
-    let vae = ParallelVae::new(&rt)?;
-    let z = r.latent.reshape(&[16, 16, 4])?;
-    let mut clocks = Clocks::new(1);
-    let img = vae.decode_parallel(&z, 1, &sess.cluster, &mut clocks)?;
+    let img = r.image.expect("decode was requested");
     pgm::write_ppm("quickstart.ppm", &img.data, img.dims[0], img.dims[1])?;
     println!("wrote quickstart.ppm ({}x{})", img.dims[0], img.dims[1]);
     Ok(())

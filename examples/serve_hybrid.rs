@@ -3,21 +3,25 @@
 //! the full stack — request queue with backpressure, compatibility batcher,
 //! the §5.2.4 router picking a hybrid parallel config, the denoising loop
 //! over real AOT HLO executables, parallel VAE decode — and reports
-//! latency/throughput. Run: cargo run --release --example serve_hybrid
+//! latency/throughput. The serving side is one `Pipeline` facade.
+//! Run: cargo run --release --example serve_hybrid
 
 use std::sync::Arc;
 
 use xdit::config::hardware::l40_cluster;
 use xdit::config::model::BlockVariant;
-use xdit::coordinator::{Engine, GenRequest, RequestQueue};
+use xdit::coordinator::{GenRequest, RequestQueue};
+use xdit::pipeline::Pipeline;
 use xdit::runtime::Runtime;
 use xdit::util::pgm;
 use xdit::util::rng::Rng;
 
 fn main() -> xdit::Result<()> {
-    let rt = Runtime::load(std::env::args().nth(1).unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))))?;
-    let cluster = l40_cluster(1);
-    let world = 8;
+    let rt = Runtime::load(
+        std::env::args()
+            .nth(1)
+            .unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))),
+    )?;
     let n_requests = 12u64;
 
     // producers on separate threads push into the bounded queue
@@ -38,11 +42,11 @@ fn main() -> xdit::Result<()> {
             for i in 0..n_requests / 2 {
                 t += rng.exp(0.8);
                 let id = tid * 1000 + i;
-                let mut r = GenRequest::new(id, prompts[(id as usize) % prompts.len()]);
-                r.variant = variants[(id as usize) % variants.len()];
-                r.steps = 3;
-                r.arrival = t;
-                r.decode = id % 4 == 0;
+                let r = GenRequest::new(id, prompts[(id as usize) % prompts.len()])
+                    .with_variant(variants[(id as usize) % variants.len()])
+                    .with_steps(3)
+                    .with_arrival(t)
+                    .with_decode(id % 4 == 0);
                 // simple retry-on-backpressure loop
                 let mut req = r;
                 loop {
@@ -64,29 +68,32 @@ fn main() -> xdit::Result<()> {
     println!("queued {} requests from 2 producer threads", queue.len());
 
     // the leader drains and serves (PJRT is leader-pinned)
-    let mut engine = Engine::new(&rt, cluster, world);
+    let mut pipe = Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).world(8).build()?;
     let window = queue.drain_upto(usize::MAX);
     let t0 = std::time::Instant::now();
-    let responses = engine.serve(window)?;
+    let report = pipe.serve(window)?;
     let wall = t0.elapsed();
 
     println!("\nper-request results:");
-    for r in &responses {
+    for r in &report.responses {
         println!(
-            "  req {:>4}: config=[{}] model {:.3}s, e2e latency {:.3}s{}",
+            "  req {:>4}: config=[{}] sched={} model {:.3}s, e2e latency {:.3}s{}",
             r.id,
             r.parallel_config,
+            r.scheduler,
             r.model_seconds,
             r.latency,
             if r.image.is_some() { " +image" } else { "" }
         );
     }
-    println!("\n{}", engine.metrics.report());
-    println!("(host wall time {wall:?} for {} generations on the simulated cluster)",
-        responses.len());
+    println!("\n{}", report.summary());
+    println!(
+        "(host wall time {wall:?} for {} generations on the simulated cluster)",
+        report.responses.len()
+    );
 
     // persist one decoded image as proof of the full pipeline
-    if let Some(resp) = responses.iter().find(|r| r.image.is_some()) {
+    if let Some(resp) = report.responses.iter().find(|r| r.image.is_some()) {
         let img = resp.image.as_ref().unwrap();
         pgm::write_ppm("serve_hybrid_sample.ppm", &img.data, img.dims[0], img.dims[1])?;
         println!("sample image written to serve_hybrid_sample.ppm");

@@ -109,6 +109,12 @@ impl ModelSpec {
         self.attn_seq_len(px) as f64 * self.hidden as f64 * 2.0
     }
 
+    /// The runnable tiny-family spec that executes a block variant — the
+    /// single place that knows the `tiny-` naming convention.
+    pub fn for_variant(variant: BlockVariant) -> Result<ModelSpec> {
+        Self::by_name(&format!("tiny-{}", variant.key()))
+    }
+
     pub fn by_name(name: &str) -> Result<ModelSpec> {
         all_models()
             .into_iter()
@@ -255,6 +261,21 @@ mod tests {
         assert!(ModelSpec::by_name("pixart").is_ok());
         assert!(ModelSpec::by_name("tiny-mmdit").unwrap().runnable);
         assert!(ModelSpec::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn for_variant_resolves_runnable_family() {
+        for v in [
+            BlockVariant::AdaLn,
+            BlockVariant::Cross,
+            BlockVariant::MmDit,
+            BlockVariant::Skip,
+        ] {
+            let m = ModelSpec::for_variant(v).unwrap();
+            assert!(m.runnable);
+            assert_eq!(m.variant, v);
+            assert_eq!(m.name, format!("tiny-{}", v.key()));
+        }
     }
 
     #[test]

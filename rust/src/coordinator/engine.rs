@@ -3,6 +3,16 @@
 //! denoising loop on the simulated cluster, optionally decodes with the
 //! parallel VAE, and records metrics.
 //!
+//! This is an *internal* layer: user code enters through
+//! `crate::pipeline::Pipeline`, which owns an `Engine` and configures its
+//! policy knobs (`force_config`, `force_method`, `default_scheduler`).
+//!
+//! Lifecycle invariants (asserted by `Metrics`):
+//! * one `Session` per *batch*, not per request — requests that share a
+//!   batch reuse the mesh, clocks and buffers;
+//! * one `ParallelVae` per *engine* — built lazily on the first decode and
+//!   reused forever after (`Metrics::vae_builds` stays at 1).
+//!
 //! Virtual-time semantics: requests arrive with `arrival` stamps; the
 //! cluster serves batches one after another (the whole mesh is owned by one
 //! generation at a time, as in xDiT); latency = finish - arrival.
@@ -15,8 +25,10 @@ use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::router::route;
+use crate::diffusion::SchedulerKind;
 use crate::parallel::{driver, GenParams, Session};
 use crate::runtime::Runtime;
+use crate::tensor::Tensor;
 use crate::vae::ParallelVae;
 use crate::Result;
 
@@ -26,8 +38,15 @@ pub struct Engine<'a> {
     pub world: usize,
     pub batcher: Batcher,
     pub metrics: Metrics,
-    /// Override the router (None = paper policy).
+    /// Override the router (None = paper policy, resolution-aware).
     pub force_config: Option<ParallelConfig>,
+    /// Override the strategy implied by the config (None = `pick_method`).
+    pub force_method: Option<driver::Method>,
+    /// Pipeline-level scheduler default; per-request overrides win, the
+    /// model's benchmark scheduler is the final fallback.
+    pub default_scheduler: Option<SchedulerKind>,
+    /// Patch-parallel VAE, built once per engine on first decode.
+    vae: Option<ParallelVae<'a>>,
     /// Virtual clock of the serving horizon.
     now: f64,
 }
@@ -41,7 +60,19 @@ impl<'a> Engine<'a> {
             batcher: Batcher::new(4),
             metrics: Metrics::default(),
             force_config: None,
+            force_method: None,
+            default_scheduler: None,
+            vae: None,
             now: 0.0,
+        }
+    }
+
+    /// Scheduler for a request: request override > engine default > model
+    /// benchmark scheduler. No literal anywhere on this path.
+    fn scheduler_for(&self, spec: &ModelSpec, req: &GenRequest) -> Result<SchedulerKind> {
+        match req.scheduler.or(self.default_scheduler) {
+            Some(kind) => Ok(kind),
+            None => SchedulerKind::parse(spec.scheduler),
         }
     }
 
@@ -50,56 +81,102 @@ impl<'a> Engine<'a> {
     pub fn serve(&mut self, window: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
         let mut out = Vec::with_capacity(window.len());
         let batches = self.batcher.form(window);
+        let rt = self.rt;
         for batch in batches {
             let first = &batch.requests[0];
-            let spec = ModelSpec::by_name(&format!("tiny-{}", first.variant.key()))?;
+            let spec = ModelSpec::for_variant(first.variant)?;
+            // the routed sequence length follows the requested resolution
+            let s_img = spec.seq_len(first.px);
             let pc = self
                 .force_config
-                .unwrap_or_else(|| route(&spec, 256, &self.cluster, self.world));
-            let method = pick_method(&pc);
+                .unwrap_or_else(|| route(&spec, s_img, &self.cluster, self.world));
+            let method = self.force_method.unwrap_or_else(|| pick_method(&pc));
+
+            // one session per batch: the whole batch shares the mesh and
+            // runs back-to-back on it
+            let mut sess = Session::new(rt, first.variant, self.cluster.clone(), pc)?;
+            self.metrics.sessions_built += 1;
 
             for req in &batch.requests {
-                // the batch shares the mesh; requests run back-to-back on it
-                let mut sess =
-                    Session::new(self.rt, req.variant, self.cluster.clone(), pc)?;
+                let scheduler = self.scheduler_for(&spec, req)?;
                 let params = GenParams {
                     prompt: req.prompt.clone(),
                     steps: req.steps,
                     seed: req.seed,
                     guidance: req.guidance,
-                    scheduler: "ddim".into(),
+                    scheduler,
                 };
+                // the session's clocks/ledger persist across the batch;
+                // driver::generate reports per-generation deltas
                 let r = driver::generate(&mut sess, method, &params)?;
+                let model_seconds = r.makespan;
+                let comm_bytes = r.comm_bytes;
+
                 let mut image = None;
                 let mut decode_time = 0.0;
                 if req.decode {
-                    let vae = ParallelVae::new(self.rt)?;
-                    let mut clocks = Clocks::new(self.cluster.n_gpus);
-                    let z = r.latent.reshape(&[16, 16, 4])?;
-                    let n_vae = pc.world().min(8);
-                    image = Some(vae.decode_parallel(&z, n_vae, &self.cluster, &mut clocks)?);
-                    decode_time = clocks.makespan();
+                    let (img, t) = self.decode_latent(&r.latent, pc.world().min(8))?;
+                    image = Some(img);
+                    decode_time = t;
                 }
                 let start = self.now.max(req.arrival);
-                let finish = start + r.makespan + decode_time;
+                let finish = start + model_seconds + decode_time;
                 self.now = finish;
                 let latency = finish - req.arrival;
                 self.metrics.latency.observe(latency);
                 self.metrics.queue_wait.observe(start - req.arrival);
                 self.metrics.served += 1;
-                self.metrics.model_seconds += r.makespan;
+                self.metrics.model_seconds += model_seconds;
                 out.push(GenResponse {
                     id: req.id,
                     latent: r.latent,
                     image,
-                    model_seconds: r.makespan,
+                    model_seconds,
                     latency,
+                    comm_bytes,
                     parallel_config: pc.describe(),
+                    method: r.method,
+                    scheduler: scheduler.key().to_string(),
+                    px: req.px,
                 });
             }
         }
         self.metrics.horizon = self.now;
         Ok(out)
+    }
+
+    /// Decode a final latent with the engine-owned parallel VAE over `n`
+    /// simulated devices. Returns the image and the simulated decode time.
+    pub fn decode_latent(&mut self, latent: &Tensor, n: usize) -> Result<(Tensor, f64)> {
+        self.ensure_vae()?;
+        let vae = self.vae.as_ref().unwrap();
+        let z = latent.reshape(&[vae.hw, vae.hw, vae.c])?;
+        let mut clocks = Clocks::new(self.cluster.n_gpus);
+        let img = vae.decode_parallel(&z, n, &self.cluster, &mut clocks)?;
+        Ok((img, clocks.makespan()))
+    }
+
+    /// Current end of the virtual serving horizon (seconds since engine
+    /// start) — where the next arriving request would start.
+    pub fn virtual_now(&self) -> f64 {
+        self.now
+    }
+
+    /// Exact single-device decode (the reference the parallel path is
+    /// checked against).
+    pub fn decode_reference(&mut self, latent: &Tensor) -> Result<Tensor> {
+        self.ensure_vae()?;
+        let vae = self.vae.as_ref().unwrap();
+        let z = latent.reshape(&[vae.hw, vae.hw, vae.c])?;
+        vae.decode_full(&z)
+    }
+
+    fn ensure_vae(&mut self) -> Result<()> {
+        if self.vae.is_none() {
+            self.vae = Some(ParallelVae::new(self.rt)?);
+            self.metrics.vae_builds += 1;
+        }
+        Ok(())
     }
 }
 
@@ -144,11 +221,36 @@ mod tests {
         assert_eq!(out.len(), 3);
         assert_eq!(eng.metrics.served, 3);
         assert!(eng.metrics.throughput() > 0.0);
+        // identical batch keys -> one shared session for all three
+        assert_eq!(eng.metrics.sessions_built, 1);
         // completion order preserves arrival order within a batch
         assert!(out[0].latency <= out[2].latency + out[2].model_seconds);
         for r in &out {
             assert_eq!(r.latent.dims, vec![256, 4]);
+            assert!(r.model_seconds > 0.0);
         }
+    }
+
+    #[test]
+    fn vae_is_built_once_per_engine() {
+        let Some(rt) = setup() else { return };
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        let mut reqs = Vec::new();
+        for i in 0..3u64 {
+            let mut r = GenRequest::new(i, "decode me");
+            r.steps = 2;
+            r.decode = true;
+            reqs.push(r);
+        }
+        let out = eng.serve(reqs).unwrap();
+        assert!(out.iter().all(|r| r.image.is_some()));
+        assert_eq!(eng.metrics.vae_builds, 1, "VAE must be reused across requests");
+        // a second window still reuses it
+        let mut r = GenRequest::new(9, "again");
+        r.steps = 2;
+        r.decode = true;
+        eng.serve(vec![r]).unwrap();
+        assert_eq!(eng.metrics.vae_builds, 1);
     }
 
     #[test]

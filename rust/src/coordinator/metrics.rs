@@ -72,6 +72,12 @@ pub struct Metrics {
     pub model_seconds: f64,
     /// Virtual end-to-end seconds of the serving run.
     pub horizon: f64,
+    /// Sessions constructed (one per batch, not per request — reuse is the
+    /// point of the batcher).
+    pub sessions_built: u64,
+    /// Parallel-VAE constructions; stays at 1 for the whole life of an
+    /// engine no matter how many requests decode.
+    pub vae_builds: u64,
 }
 
 impl Metrics {
@@ -85,7 +91,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "served={} rejected={} throughput={:.2} img/s  latency mean={:.3}s p50={:.3}s p90={:.3}s max={:.3}s",
+            "served={} rejected={} throughput={:.2} img/s  latency mean={:.3}s p50={:.3}s p90={:.3}s max={:.3}s  sessions={} vae_builds={}",
             self.served,
             self.rejected,
             self.throughput(),
@@ -93,6 +99,8 @@ impl Metrics {
             self.latency.quantile(0.5),
             self.latency.quantile(0.9),
             self.latency.max,
+            self.sessions_built,
+            self.vae_builds,
         )
     }
 }

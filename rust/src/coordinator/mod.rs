@@ -2,6 +2,10 @@
 //! batcher, the §5.2.4 routing policy (pick the hybrid parallel config for
 //! the hardware + model at hand), the generation engine, and metrics.
 //!
+//! These are the *internal* serving layers; user code enters through the
+//! typed facade in `crate::pipeline`, which owns an `Engine` and the
+//! session/VAE lifecycle.
+//!
 //! Rust owns the event loop and process topology; PJRT execution is pinned
 //! to the leader thread (the `xla` client is `Rc`-based), so the engine
 //! drains the queue on the leader while producers submit from any thread

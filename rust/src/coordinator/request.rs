@@ -1,8 +1,20 @@
 //! Request/response types of the serving API.
+//!
+//! A `GenRequest` is the unit of work the `Pipeline` facade accepts:
+//! besides prompt/steps/seed it carries the *target resolution* (`px`) and
+//! an optional per-request scheduler override, so neither is hardcoded on
+//! the engine path. Resolution drives the §5.2.4 routing decision and the
+//! latency accounting; the runnable tiny family executes at its compiled
+//! native shape as the numeric proxy (see `DESIGN.md`).
 
 use crate::config::model::BlockVariant;
+use crate::diffusion::SchedulerKind;
 
 pub type RequestId = u64;
+
+/// Default target resolution (pixels, square) — matches the tiny family's
+/// native 256-token latent grid (256px / patch 16).
+pub const DEFAULT_PX: usize = 256;
 
 /// One image-generation request.
 #[derive(Debug, Clone)]
@@ -15,6 +27,12 @@ pub struct GenRequest {
     pub steps: usize,
     pub seed: u64,
     pub guidance: f32,
+    /// Target resolution in pixels (square). Routed on — the parallel
+    /// config is chosen for `seq_len(px)` tokens, not a hardcoded count.
+    pub px: usize,
+    /// Per-request scheduler; `None` uses the pipeline default, falling
+    /// back to the model's benchmark scheduler.
+    pub scheduler: Option<SchedulerKind>,
     /// Arrival time (seconds since engine start) for latency accounting.
     pub arrival: f64,
     /// Decode the latent to pixels with the parallel VAE.
@@ -30,15 +48,64 @@ impl GenRequest {
             steps: 4,
             seed: id,
             guidance: 3.0,
+            px: DEFAULT_PX,
+            scheduler: None,
             arrival: 0.0,
             decode: false,
         }
     }
 
-    /// Two requests can share a batch iff their compiled shapes and step
-    /// counts coincide (same variant, steps, guidance-usage).
-    pub fn batch_key(&self) -> (BlockVariant, usize, bool) {
-        (self.variant, self.steps, self.guidance != 1.0 && self.guidance != 0.0)
+    pub fn with_variant(mut self, variant: BlockVariant) -> Self {
+        self.variant = variant;
+        self
+    }
+
+    pub fn with_steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_guidance(mut self, guidance: f32) -> Self {
+        self.guidance = guidance;
+        self
+    }
+
+    pub fn with_resolution(mut self, px: usize) -> Self {
+        self.px = px;
+        self
+    }
+
+    pub fn with_scheduler(mut self, scheduler: SchedulerKind) -> Self {
+        self.scheduler = Some(scheduler);
+        self
+    }
+
+    pub fn with_arrival(mut self, arrival: f64) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    pub fn with_decode(mut self, decode: bool) -> Self {
+        self.decode = decode;
+        self
+    }
+
+    /// Two requests can share a batch iff their compiled shapes, step
+    /// counts, guidance-usage and routed resolution coincide. (Schedulers
+    /// may differ within a batch — they change the update rule, not the
+    /// mesh or the compiled shapes.)
+    pub fn batch_key(&self) -> (BlockVariant, usize, bool, usize) {
+        (
+            self.variant,
+            self.steps,
+            self.guidance != 1.0 && self.guidance != 0.0,
+            self.px,
+        )
     }
 }
 
@@ -53,7 +120,16 @@ pub struct GenResponse {
     pub model_seconds: f64,
     /// End-to-end virtual latency including queueing.
     pub latency: f64,
+    /// Bytes moved between simulated devices for this request.
+    pub comm_bytes: usize,
     pub parallel_config: String,
+    /// Strategy that ran the denoising loop.
+    pub method: String,
+    /// Scheduler that produced the trajectory (request override, pipeline
+    /// default, or the model's benchmark scheduler — in that order).
+    pub scheduler: String,
+    /// Resolution the request was routed at (echo of `GenRequest::px`).
+    pub px: usize,
 }
 
 #[cfg(test)]
@@ -70,5 +146,32 @@ mod tests {
         let mut c = GenRequest::new(3, "z");
         c.guidance = 1.0; // no CFG
         assert_ne!(a.batch_key(), c.batch_key());
+        // resolution is routed on, so it splits batches too
+        let d = GenRequest::new(4, "w").with_resolution(1024);
+        assert_ne!(a.batch_key(), d.batch_key());
+        // scheduler does not split a batch (same mesh, same shapes)
+        let e = GenRequest::new(5, "v").with_scheduler(SchedulerKind::FlowMatch);
+        assert_eq!(a.batch_key(), e.batch_key());
+    }
+
+    #[test]
+    fn builder_helpers_set_fields() {
+        let r = GenRequest::new(9, "p")
+            .with_variant(BlockVariant::MmDit)
+            .with_steps(6)
+            .with_seed(11)
+            .with_guidance(5.0)
+            .with_resolution(512)
+            .with_scheduler(SchedulerKind::Dpm)
+            .with_arrival(2.5)
+            .with_decode(true);
+        assert_eq!(r.variant, BlockVariant::MmDit);
+        assert_eq!(r.steps, 6);
+        assert_eq!(r.seed, 11);
+        assert_eq!(r.guidance, 5.0);
+        assert_eq!(r.px, 512);
+        assert_eq!(r.scheduler, Some(SchedulerKind::Dpm));
+        assert_eq!(r.arrival, 2.5);
+        assert!(r.decode);
     }
 }

@@ -104,6 +104,74 @@ mod tests {
     }
 
     #[test]
+    fn pcie_remainder_goes_to_ring_not_ulysses() {
+        // §5.2.4 low-bandwidth order is PipeFusion *then* Ring: on a skip
+        // model PipeFusion is capped at 2 (enc/dec split), so the leftover
+        // intra degree must land on Ring, never on Ulysses.
+        let m = ModelSpec::by_name("tiny-skip").unwrap();
+        let pc = route(&m, 256, &l40_cluster(1), 8);
+        assert_eq!(pc.cfg, 2, "{}", pc.describe());
+        assert_eq!(pc.pipefusion, 2, "{}", pc.describe());
+        assert_eq!(pc.ring, 2, "{}", pc.describe());
+        assert_eq!(pc.ulysses, 1, "{}", pc.describe());
+        assert_eq!(pc.world(), 8);
+    }
+
+    #[test]
+    fn pcie_pipefusion_takes_whole_intra_when_unconstrained() {
+        // adaln has 8 layers: PipeFusion can absorb the full intra degree
+        // on a 16-GPU PCIe cluster (cfg=2 x pipefusion=8).
+        let m = ModelSpec::by_name("tiny-adaln").unwrap();
+        let pc = route(&m, 256, &l40_cluster(2), 16);
+        assert_eq!(pc.cfg, 2, "{}", pc.describe());
+        assert_eq!(pc.pipefusion, 8, "{}", pc.describe());
+        assert_eq!(pc.world(), 16);
+    }
+
+    #[test]
+    fn nvlink_grows_ulysses_before_pipefusion() {
+        // NVLink order is Ulysses first; Ulysses stops at 2 because the
+        // tiny family has 6 heads (6 % 4 != 0) and the remainder flows to
+        // PipeFusion.
+        let m = ModelSpec::by_name("tiny-adaln").unwrap();
+        let pc = route(&m, 256, &a100_node(), 8);
+        assert_eq!(pc.cfg, 2, "{}", pc.describe());
+        assert_eq!(pc.ulysses, 2, "{}", pc.describe());
+        assert_eq!(pc.pipefusion, 2, "{}", pc.describe());
+        assert_eq!(pc.ring, 1, "{}", pc.describe());
+    }
+
+    #[test]
+    fn cfg_degree_needs_even_world() {
+        let m = ModelSpec::by_name("tiny-adaln").unwrap();
+        for cluster in [l40_cluster(1), a100_node()] {
+            // odd world: CFG parallelism (degree 2) cannot split it
+            let odd = route(&m, 256, &cluster, 5);
+            assert_eq!(odd.cfg, 1, "{}", odd.describe());
+            odd.validate(&m, 256).unwrap();
+            // the smallest even world goes entirely to the CFG branches
+            let pair = route(&m, 256, &cluster, 2);
+            assert_eq!(pair.cfg, 2, "{}", pair.describe());
+            assert_eq!(pair.world(), 2);
+        }
+    }
+
+    #[test]
+    fn head_divisibility_caps_ulysses() {
+        // 6 heads: ulysses degree can only be a divisor of 6 reached by
+        // doubling, i.e. never more than 2 — on any cluster or world.
+        let m = ModelSpec::by_name("tiny-mmdit").unwrap();
+        for world in [2usize, 4, 8] {
+            for cluster in [l40_cluster(1), a100_node()] {
+                let pc = route(&m, 256, &cluster, world);
+                pc.validate(&m, 256).unwrap();
+                assert!(pc.ulysses <= 2, "w={world} {}: {}", cluster.name, pc.describe());
+                assert_eq!(pc.world(), world);
+            }
+        }
+    }
+
+    #[test]
     fn always_valid_and_full_world() {
         for world in [1, 2, 4, 8] {
             for name in ["tiny-adaln", "tiny-mmdit", "tiny-cross", "tiny-skip"] {

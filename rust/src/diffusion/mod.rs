@@ -8,4 +8,4 @@ pub mod cfg;
 pub mod scheduler;
 
 pub use cfg::combine_cfg;
-pub use scheduler::{make_scheduler, Scheduler};
+pub use scheduler::{make_scheduler, Scheduler, SchedulerKind};

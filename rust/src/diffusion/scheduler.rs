@@ -8,6 +8,52 @@
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
+/// Typed scheduler selector — the first-class form of the string keys in
+/// `ModelSpec::scheduler` and the request API. `Pipeline` requests carry an
+/// `Option<SchedulerKind>` so the scheduler is a per-request decision
+/// rather than a hardcoded string on the serving path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    /// DDIM, eta = 0 (CogVideoX benchmarks, tiny family default).
+    Ddim,
+    /// First-order DPM-Solver (Pixart / HunyuanDiT benchmarks).
+    Dpm,
+    /// FlowMatch Euler (SD3 / Flux benchmarks).
+    FlowMatch,
+}
+
+impl SchedulerKind {
+    /// The manifest/CLI key of this scheduler.
+    pub fn key(&self) -> &'static str {
+        match self {
+            SchedulerKind::Ddim => "ddim",
+            SchedulerKind::Dpm => "dpm",
+            SchedulerKind::FlowMatch => "flow_match",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        Ok(match s {
+            "ddim" => SchedulerKind::Ddim,
+            "dpm" => SchedulerKind::Dpm,
+            "flow_match" | "flowmatch" => SchedulerKind::FlowMatch,
+            _ => {
+                return Err(Error::config(format!(
+                    "unknown scheduler '{s}' (ddim, dpm, flow_match)"
+                )))
+            }
+        })
+    }
+
+    pub fn build(&self, steps: usize) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Ddim => Box::new(Ddim::new(steps)),
+            SchedulerKind::Dpm => Box::new(DpmSolver::new(steps)),
+            SchedulerKind::FlowMatch => Box::new(FlowMatchEuler::new(steps)),
+        }
+    }
+}
+
 pub trait Scheduler {
     fn name(&self) -> &'static str;
     fn steps(&self) -> usize;
@@ -187,12 +233,7 @@ impl Scheduler for FlowMatchEuler {
 
 /// Factory by scheduler key (`ModelSpec::scheduler`).
 pub fn make_scheduler(kind: &str, steps: usize) -> Result<Box<dyn Scheduler>> {
-    match kind {
-        "ddim" => Ok(Box::new(Ddim::new(steps))),
-        "dpm" => Ok(Box::new(DpmSolver::new(steps))),
-        "flow_match" => Ok(Box::new(FlowMatchEuler::new(steps))),
-        _ => Err(Error::config(format!("unknown scheduler '{kind}'"))),
-    }
+    Ok(SchedulerKind::parse(kind)?.build(steps))
 }
 
 #[cfg(test)]
@@ -269,6 +310,15 @@ mod tests {
                 assert!(x.data.iter().all(|v| v.is_finite()), "{s} step {i}");
             }
         }
+    }
+
+    #[test]
+    fn kind_parse_key_round_trip() {
+        for kind in [SchedulerKind::Ddim, SchedulerKind::Dpm, SchedulerKind::FlowMatch] {
+            assert_eq!(SchedulerKind::parse(kind.key()).unwrap(), kind);
+            assert_eq!(kind.build(4).name(), kind.key());
+        }
+        assert!(SchedulerKind::parse("euler-a").is_err());
     }
 
     #[test]

@@ -14,7 +14,14 @@
 //!   kernels, AOT-lowered to HLO text in `artifacts/` and executed here via
 //!   the PJRT CPU client (`runtime`). Python never runs on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index.
+//! The **entry point is [`pipeline::Pipeline`]**: a typed builder facade
+//! over the coordinator/parallel/VAE layers that handles one-shot
+//! generation (`generate`), batch serving (`serve`) and the §5.2.4 routing
+//! decision (`plan`). Binaries, examples and benches all go through it;
+//! `Engine`, `Session` and `driver` are the internal layers it composes.
+//!
+//! See `DESIGN.md` for the system inventory, the Pipeline quickstart and
+//! the per-experiment index.
 
 pub mod comm;
 pub mod config;
@@ -25,6 +32,7 @@ pub mod mesh;
 pub mod model;
 pub mod parallel;
 pub mod perf;
+pub mod pipeline;
 pub mod runtime;
 pub mod tensor;
 pub mod testing;
@@ -32,3 +40,4 @@ pub mod util;
 pub mod vae;
 
 pub use error::{Error, Result};
+pub use pipeline::{ParallelPolicy, Pipeline, PipelineBuilder, RoutePlan, ServeReport};

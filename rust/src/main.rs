@@ -1,5 +1,9 @@
 //! xDiT command-line launcher.
 //!
+//! Every serving/generation subcommand goes through the typed
+//! `xdit::Pipeline` facade (see `DESIGN.md`); `figures` and `inspect` use
+//! the analytic performance model and the artifact manifest directly.
+//!
 //! Subcommands:
 //!   generate  — generate one image with a chosen parallel config
 //!   serve     — run the serving engine on a synthetic request workload
@@ -7,26 +11,29 @@
 //!   figures   — regenerate the paper's figure/table series (analytic)
 //!   inspect   — list AOT artifacts and model dims
 
-use xdit::comm::Clocks;
 use xdit::config::hardware::ClusterSpec;
 use xdit::config::model::{BlockVariant, ModelSpec};
 use xdit::config::parallel::ParallelConfig;
-use xdit::coordinator::{Engine, GenRequest};
-use xdit::parallel::{driver, GenParams, Session};
+use xdit::coordinator::GenRequest;
+use xdit::diffusion::SchedulerKind;
+use xdit::parallel::driver;
 use xdit::perf::latency::{best_hybrid, predict_latency, serial_latency, Method};
+use xdit::pipeline::{ParallelPolicy, Pipeline};
 use xdit::runtime::Runtime;
 use xdit::util::cli::Args;
 use xdit::util::pgm;
 use xdit::util::rng::Rng;
-use xdit::vae::ParallelVae;
 
 const USAGE: &str = "xdit <command> [--flags]
 
 commands:
-  generate  --model tiny-adaln --method hybrid --gpus 8 --steps 8
+  generate  --model tiny-adaln --gpus 8 --steps 8 --px 256
             --prompt '...' --seed 0 --guidance 3 --cluster l40x8
+            [--method serial|tp|sp|pipefusion|hybrid (default: auto)]
+            [--scheduler ddim|dpm|flow_match (default: model)]
             --out image.ppm
-  serve     --gpus 8 --requests 16 --rate 0.5 --steps 4 --cluster l40x8
+  serve     --gpus 8 --requests 16 --rate 0.5 --steps 4 --px 256
+            --cluster l40x8 [--scheduler ddim|dpm|flow_match]
   route     --model pixart --cluster l40x16 --gpus 16 --px 2048
   figures   --which fig8|fig14|table1|table3|memory [--px 1024]
   inspect   [--artifacts artifacts]
@@ -77,56 +84,69 @@ fn variant_of(name: &str) -> xdit::Result<BlockVariant> {
     })
 }
 
-fn generate(args: &Args) -> xdit::Result<()> {
-    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
-    let cluster = cluster_of(args)?;
-    let model = args.str_or("model", "tiny-adaln").to_string();
-    let variant = variant_of(&model)?;
-    let gpus = args.usize_or("gpus", 1)?;
-    let method = driver::Method::parse(args.str_or("method", "serial"))?;
-    let spec = ModelSpec::by_name(&model)?;
-    let pc = if args.has("pipefusion") || args.has("ulysses") || args.has("ring") || args.has("cfg")
-    {
-        ParallelConfig::new(
+/// Parallel policy from CLI degree flags (explicit when any is given).
+fn policy_of(args: &Args) -> xdit::Result<ParallelPolicy> {
+    if args.has("pipefusion") || args.has("ulysses") || args.has("ring") || args.has("cfg") {
+        let pc = ParallelConfig::new(
             args.usize_or("cfg", 1)?,
             args.usize_or("pipefusion", 1)?,
             args.usize_or("ulysses", 1)?,
             args.usize_or("ring", 1)?,
         )
-        .with_patches(args.usize_or("patches", args.usize_or("pipefusion", 1)?.max(1))?)
+        .with_patches(args.usize_or("patches", args.usize_or("pipefusion", 1)?.max(1))?);
+        Ok(ParallelPolicy::Explicit(pc))
     } else {
-        xdit::coordinator::route(&spec, 256, &cluster, gpus)
-    };
-    println!(
-        "model={model} method={:?} config=[{}] cluster={}",
-        method,
-        pc.describe(),
-        cluster.name
-    );
+        Ok(ParallelPolicy::Auto)
+    }
+}
 
-    let mut sess = Session::new(&rt, variant, cluster.clone(), pc)?;
-    let params = GenParams {
-        prompt: args.str_or("prompt", "a photo of a mountain lake at dawn").into(),
-        steps: args.usize_or("steps", 8)?,
-        seed: args.usize_or("seed", 0)? as u64,
-        guidance: args.f64_or("guidance", 3.0)? as f32,
-        scheduler: args.str_or("scheduler", "ddim").into(),
-    };
+fn generate(args: &Args) -> xdit::Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    let model = args.str_or("model", "tiny-adaln").to_string();
+    let variant = variant_of(&model)?;
+
+    let mut builder = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(cluster_of(args)?)
+        .world(args.usize_or("gpus", 1)?)
+        .parallel(policy_of(args)?);
+    if args.has("method") {
+        builder = builder.method(driver::Method::parse(args.str_or("method", "serial"))?);
+    }
+    let mut pipe = builder.build()?;
+
+    let mut req = GenRequest::new(0, args.str_or("prompt", "a photo of a mountain lake at dawn"))
+        .with_variant(variant)
+        .with_steps(args.usize_or("steps", 8)?)
+        .with_seed(args.usize_or("seed", 0)? as u64)
+        .with_guidance(args.f64_or("guidance", 3.0)? as f32)
+        .with_resolution(args.usize_or("px", 256)?)
+        .with_decode(true);
+    if args.has("scheduler") {
+        req = req.with_scheduler(SchedulerKind::parse(args.str_or("scheduler", ""))?);
+    }
+
     let t0 = std::time::Instant::now();
-    let r = driver::generate(&mut sess, method, &params)?;
+    let r = pipe.generate(&req)?;
+    println!(
+        "model={model} method={} config=[{}] scheduler={} px={} cluster={}",
+        r.method,
+        r.parallel_config,
+        r.scheduler,
+        r.px,
+        pipe.cluster().name
+    );
     println!(
         "done: simulated latency {:.3}s on {} GPUs, comm {:.1} MB, wall {:?}",
-        r.makespan,
-        pc.world(),
+        r.model_seconds,
+        pipe.world(),
         r.comm_bytes as f64 / 1e6,
         t0.elapsed()
     );
 
-    // decode and write the image
-    let vae = ParallelVae::new(&rt)?;
-    let z = r.latent.reshape(&[16, 16, 4])?;
-    let mut clocks = Clocks::new(cluster.n_gpus);
-    let img = vae.decode_parallel(&z, pc.world().min(8), &cluster, &mut clocks)?;
+    let img = r
+        .image
+        .ok_or_else(|| xdit::Error::config("decode requested but no image returned"))?;
     let out = args.str_or("out", "xdit_out.ppm");
     pgm::write_ppm(out, &img.data, img.dims[0], img.dims[1])?;
     println!("image written to {out} ({}x{})", img.dims[0], img.dims[1]);
@@ -135,13 +155,23 @@ fn generate(args: &Args) -> xdit::Result<()> {
 
 fn serve(args: &Args) -> xdit::Result<()> {
     let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
-    let cluster = cluster_of(args)?;
-    let gpus = args.usize_or("gpus", 8)?;
     let n = args.usize_or("requests", 16)?;
     let rate = args.f64_or("rate", 0.5)?;
     let steps = args.usize_or("steps", 4)?;
+    let px = args.usize_or("px", 256)?;
+    let variant = variant_of(args.str_or("model", "tiny-adaln"))?;
+    let scheduler = if args.has("scheduler") {
+        Some(SchedulerKind::parse(args.str_or("scheduler", ""))?)
+    } else {
+        None
+    };
 
-    let mut eng = Engine::new(&rt, cluster, gpus);
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(cluster_of(args)?)
+        .world(args.usize_or("gpus", 8)?)
+        .build()?;
+
     let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
     let mut t = 0.0;
     let prompts =
@@ -149,16 +179,22 @@ fn serve(args: &Args) -> xdit::Result<()> {
     let mut window = Vec::new();
     for i in 0..n as u64 {
         t += rng.exp(rate);
-        let mut r = GenRequest::new(i, *rng.pick(&prompts));
-        r.steps = steps;
-        r.arrival = t;
-        r.variant = variant_of(args.str_or("model", "tiny-adaln"))?;
+        let mut r = GenRequest::new(i, *rng.pick(&prompts))
+            .with_variant(variant)
+            .with_steps(steps)
+            .with_resolution(px)
+            .with_arrival(t);
+        r.scheduler = scheduler;
         window.push(r);
     }
     let t0 = std::time::Instant::now();
-    let out = eng.serve(window)?;
-    println!("{}", eng.metrics.report());
-    println!("(host wall time {:?} for {} generations)", t0.elapsed(), out.len());
+    let report = pipe.serve(window)?;
+    println!("{}", report.summary());
+    println!(
+        "(host wall time {:?} for {} generations)",
+        t0.elapsed(),
+        report.responses.len()
+    );
     Ok(())
 }
 
@@ -167,16 +203,8 @@ fn route_cmd(args: &Args) -> xdit::Result<()> {
     let cluster = cluster_of(args)?;
     let gpus = args.usize_or("gpus", cluster.n_gpus)?;
     let px = args.usize_or("px", 1024)?;
-    let pc = xdit::coordinator::route(&model, model.seq_len(px), &cluster, gpus);
-    println!("{} @ {}px on {} x{}: [{}]", model.name, px, cluster.name, gpus, pc.describe());
-    let lb = predict_latency(&model, px, &cluster, Method::Hybrid, &pc, model.default_steps);
-    println!(
-        "predicted: {:.2}s total ({:.2}s compute, {:.2}s exposed comm) vs serial {:.2}s",
-        lb.total,
-        lb.compute,
-        lb.comm_exposed,
-        serial_latency(&model, px, &cluster, model.default_steps)
-    );
+    let plan = Pipeline::builder().cluster(cluster).world(gpus).plan(&model, px)?;
+    println!("{}", plan.describe());
     Ok(())
 }
 

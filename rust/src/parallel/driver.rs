@@ -4,7 +4,7 @@
 //! §4.2).
 
 use crate::config::model::BlockVariant;
-use crate::diffusion::{combine_cfg, make_scheduler};
+use crate::diffusion::{combine_cfg, SchedulerKind};
 use crate::model::TextEncoder;
 use crate::parallel::{
     distrifusion::DistriFusion,
@@ -65,7 +65,7 @@ pub struct GenParams {
     pub steps: usize,
     pub seed: u64,
     pub guidance: f32,
-    pub scheduler: String,
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for GenParams {
@@ -75,7 +75,7 @@ impl Default for GenParams {
             steps: 8,
             seed: 0,
             guidance: 4.0,
-            scheduler: "ddim".into(),
+            scheduler: SchedulerKind::Ddim,
         }
     }
 }
@@ -84,19 +84,24 @@ impl Default for GenParams {
 pub struct GenResult {
     /// Final denoised latent `[s_img, c]`.
     pub latent: Tensor,
-    /// Virtual wall-clock of the simulated cluster (seconds).
+    /// Virtual wall-clock of the simulated cluster for *this* generation
+    /// (seconds) — a delta, correct even when the session is reused.
     pub makespan: f64,
-    /// Total bytes communicated.
+    /// Bytes communicated by *this* generation (delta, as above).
     pub comm_bytes: usize,
     /// Strategy name used.
     pub method: String,
 }
 
-/// Run the full denoising loop for one image.
+/// Run the full denoising loop for one image. The session may be reused
+/// across calls (the engine shares one per batch): time/traffic are
+/// reported as deltas against the session's clocks and ledger.
 pub fn generate(sess: &mut Session, method: Method, p: &GenParams) -> Result<GenResult> {
     let model = sess.model.clone();
+    let span_before = sess.makespan();
+    let bytes_before = sess.ledger.total_bytes();
     let mut strat = method.build();
-    let sch = make_scheduler(&p.scheduler, p.steps)?;
+    let sch = p.scheduler.build(p.steps);
     let enc = TextEncoder::new(&sess.rt.host_weights, model.s_txt)?;
 
     let world: Vec<usize> = (0..sess.pc.world()).collect();
@@ -148,8 +153,8 @@ pub fn generate(sess: &mut Session, method: Method, p: &GenParams) -> Result<Gen
 
     Ok(GenResult {
         latent: x,
-        makespan: sess.makespan(),
-        comm_bytes: sess.ledger.total_bytes(),
+        makespan: sess.makespan() - span_before,
+        comm_bytes: sess.ledger.total_bytes().saturating_sub(bytes_before),
         method: strat.name(),
     })
 }

@@ -50,7 +50,7 @@ impl<'a> Session<'a> {
         pc: ParallelConfig,
     ) -> Result<Session<'a>> {
         let model = DitModel::from_manifest(rt, variant)?;
-        let spec = crate::config::model::ModelSpec::by_name(&format!("tiny-{}", variant.key()))?;
+        let spec = crate::config::model::ModelSpec::for_variant(variant)?;
         pc.validate(&spec, model.s_img)?;
         if pc.world() > cluster.n_gpus {
             return Err(Error::config(format!(
@@ -135,10 +135,23 @@ pub trait Strategy {
 // Shared helpers.
 // ---------------------------------------------------------------------------
 
-/// Contiguous equal split offsets: [(off, len); shards].
+/// Contiguous split offsets covering all of `total`: `[(off, len); shards]`.
+/// When `total % shards != 0` the first `total % shards` shards carry one
+/// extra row (lengths differ by at most 1), so no remainder row is ever
+/// silently dropped. The strategy paths that require *equal* shards enforce
+/// divisibility up front via `ParallelConfig::validate`.
 pub fn split_offsets(total: usize, shards: usize) -> Vec<(usize, usize)> {
-    let per = total / shards;
-    (0..shards).map(|i| (i * per, per)).collect()
+    debug_assert!(shards > 0, "split_offsets: shards must be >= 1");
+    let base = total / shards;
+    let rem = total % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut off = 0;
+    for i in 0..shards {
+        let len = base + usize::from(i < rem);
+        out.push((off, len));
+        off += len;
+    }
+    out
 }
 
 /// qkv-projection FLOPs for a patch (per layer).
@@ -439,6 +452,19 @@ mod tests {
     fn split_offsets_cover() {
         let o = split_offsets(256, 4);
         assert_eq!(o, vec![(0, 64), (64, 64), (128, 64), (192, 64)]);
+    }
+
+    #[test]
+    fn split_offsets_distributes_remainder() {
+        // 10 rows over 4 shards: 3,3,2,2 — contiguous, nothing dropped
+        let o = split_offsets(10, 4);
+        assert_eq!(o, vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+        let covered: usize = o.iter().map(|&(_, l)| l).sum();
+        assert_eq!(covered, 10);
+        // degenerate: fewer rows than shards still covers every row once
+        let o = split_offsets(2, 4);
+        assert_eq!(o.iter().map(|&(_, l)| l).sum::<usize>(), 2);
+        assert_eq!(o.len(), 4);
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! Cross-module integration tests: full generations over the simulated
-//! cluster, exactness/staleness matrix, serving engine end-to-end,
-//! parallel VAE composition.
+//! Cross-module integration tests over the *internal* layers (`Session`,
+//! `driver`, `ParallelVae`): full generations over the simulated cluster,
+//! exactness/staleness matrix, parallel VAE composition. Facade-level
+//! end-to-end serving lives in `tests/pipeline.rs`.
 //!
 //! All tests no-op gracefully when `artifacts/` has not been built.
 
@@ -8,7 +9,7 @@ use xdit::comm::Clocks;
 use xdit::config::hardware::{a100_node, l40_cluster};
 use xdit::config::model::BlockVariant;
 use xdit::config::parallel::ParallelConfig;
-use xdit::coordinator::{Engine, GenRequest};
+use xdit::diffusion::SchedulerKind;
 use xdit::parallel::{driver, GenParams, Session};
 use xdit::runtime::Runtime;
 use xdit::vae::ParallelVae;
@@ -27,7 +28,7 @@ fn params(steps: usize) -> GenParams {
         steps,
         seed: 1234,
         guidance: 3.0,
-        scheduler: "ddim".into(),
+        scheduler: SchedulerKind::Ddim,
     }
 }
 
@@ -120,31 +121,6 @@ fn pipefusion_divergence_shrinks_with_more_warmup() {
     let m3 = mse_with_warmup(3);
     assert!(m3 <= m1 * 1.5, "more warmup should not hurt much: w1={m1} w3={m3}");
     assert!(m1 < 1e-2, "w1 divergence too large: {m1}");
-}
-
-#[test]
-fn engine_serves_mixed_variants_end_to_end() {
-    let Some(rt) = runtime() else { return };
-    let mut eng = Engine::new(&rt, l40_cluster(1), 4);
-    let mut window = Vec::new();
-    for (i, v) in [BlockVariant::AdaLn, BlockVariant::MmDit, BlockVariant::AdaLn]
-        .iter()
-        .enumerate()
-    {
-        let mut r = GenRequest::new(i as u64, "mixed batch");
-        r.variant = *v;
-        r.steps = 2;
-        r.arrival = i as f64 * 0.1;
-        r.decode = i == 0;
-        window.push(r);
-    }
-    let out = eng.serve(window).unwrap();
-    assert_eq!(out.len(), 3);
-    assert!(out[0].image.is_some());
-    let img = out[0].image.as_ref().unwrap();
-    assert_eq!(img.dims, vec![128, 128, 3]);
-    assert_eq!(eng.metrics.served, 3);
-    assert!(eng.metrics.latency.quantile(0.5) > 0.0);
 }
 
 #[test]

@@ -1,0 +1,178 @@
+//! Facade-level tests: the `Pipeline` builder, the typed routing plan, and
+//! end-to-end generation/serving with per-request resolution and scheduler
+//! (nothing on these paths may fall back to a hardcoded 256 or "ddim").
+//!
+//! Numeric tests no-op gracefully when `artifacts/` has not been built;
+//! plan/builder tests run everywhere (routing is analytic).
+
+use xdit::config::hardware::{a100_node, l40_cluster};
+use xdit::config::model::{BlockVariant, ModelSpec};
+use xdit::config::parallel::ParallelConfig;
+use xdit::coordinator::GenRequest;
+use xdit::diffusion::SchedulerKind;
+use xdit::pipeline::{ParallelPolicy, Pipeline};
+use xdit::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Runtime::load(dir).unwrap())
+}
+
+#[test]
+fn plan_tracks_resolution_not_a_constant() {
+    // the routed token count follows the request resolution for every
+    // model family — no hardcoded 256 anywhere on the routing path
+    for name in ["pixart", "sd3", "flux", "tiny-adaln"] {
+        let m = ModelSpec::by_name(name).unwrap();
+        let mut last = 0;
+        for px in [256usize, 1024, 2048] {
+            let plan =
+                Pipeline::builder().cluster(l40_cluster(1)).world(8).plan(&m, px).unwrap();
+            assert_eq!(plan.s_img, m.seq_len(px), "{name}@{px}");
+            assert!(plan.s_img > last, "{name}: s_img must grow with px");
+            last = plan.s_img;
+            plan.config.validate(&m, plan.s_img).unwrap();
+        }
+    }
+}
+
+#[test]
+fn plan_interconnect_preferences() {
+    // the typed plan exposes the §5.2.4 policy: PCIe leans PipeFusion,
+    // NVLink leans Ulysses
+    let m = ModelSpec::by_name("tiny-adaln").unwrap();
+    let pcie = Pipeline::builder().cluster(l40_cluster(1)).world(8).plan(&m, 256).unwrap();
+    let nvlink = Pipeline::builder().cluster(a100_node()).world(8).plan(&m, 256).unwrap();
+    assert!(pcie.config.pipefusion >= pcie.config.ulysses, "{}", pcie.describe());
+    assert!(nvlink.config.ulysses >= 2, "{}", nvlink.describe());
+}
+
+#[test]
+fn generate_round_trips_resolution_and_scheduler() {
+    let Some(rt) = runtime() else { return };
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .build()
+        .unwrap();
+    let req = GenRequest::new(7, "round trip")
+        .with_steps(2)
+        .with_resolution(1024)
+        .with_scheduler(SchedulerKind::FlowMatch);
+    let r = pipe.generate(&req).unwrap();
+    assert_eq!(r.px, 1024, "resolution must round-trip");
+    assert_eq!(r.scheduler, "flow_match", "scheduler must round-trip");
+    assert!(r.model_seconds > 0.0);
+
+    // absent an override, the scheduler is the model's benchmark default
+    // (resolved from the spec, not a literal)
+    let plain = pipe.generate(&GenRequest::new(8, "default").with_steps(2)).unwrap();
+    let spec = ModelSpec::for_variant(BlockVariant::AdaLn).unwrap();
+    assert_eq!(plain.scheduler, spec.scheduler);
+}
+
+#[test]
+fn serve_round_trips_resolution_and_scheduler() {
+    let Some(rt) = runtime() else { return };
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .scheduler(SchedulerKind::Dpm) // pipeline-level default
+        .build()
+        .unwrap();
+    let window = vec![
+        GenRequest::new(0, "a").with_steps(2).with_resolution(512),
+        GenRequest::new(1, "b")
+            .with_steps(2)
+            .with_resolution(512)
+            .with_scheduler(SchedulerKind::FlowMatch),
+    ];
+    let report = pipe.serve(window).unwrap();
+    assert_eq!(report.submitted, 2);
+    assert_eq!(report.responses.len(), 2);
+    let by_id = |id: u64| report.responses.iter().find(|r| r.id == id).unwrap();
+    assert_eq!(by_id(0).px, 512);
+    assert_eq!(by_id(0).scheduler, "dpm", "pipeline default applies");
+    assert_eq!(by_id(1).scheduler, "flow_match", "request override wins");
+}
+
+#[test]
+fn vae_and_sessions_are_reused_across_a_window() {
+    let Some(rt) = runtime() else { return };
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .build()
+        .unwrap();
+    let window: Vec<GenRequest> = (0..3u64)
+        .map(|i| GenRequest::new(i, "decode").with_steps(2).with_decode(true))
+        .collect();
+    let report = pipe.serve(window).unwrap();
+    assert!(report.responses.iter().all(|r| r.image.is_some()));
+    // one VAE for the engine's lifetime, one session for the shared batch
+    assert_eq!(report.metrics.vae_builds, 1);
+    assert_eq!(report.metrics.sessions_built, 1);
+    assert_eq!(report.metrics.served, 3);
+
+    // a second window on the same pipeline still reuses the VAE
+    let again = pipe
+        .serve(vec![GenRequest::new(9, "again").with_steps(2).with_decode(true)])
+        .unwrap();
+    assert_eq!(again.metrics.vae_builds, 1);
+}
+
+#[test]
+fn explicit_config_and_method_flow_through_generate() {
+    let Some(rt) = runtime() else { return };
+    let pc = ParallelConfig::new(1, 2, 1, 1).with_patches(4);
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(pc.world())
+        .parallel(ParallelPolicy::Explicit(pc))
+        .build()
+        .unwrap();
+    let r = pipe.generate(&GenRequest::new(0, "explicit").with_steps(2)).unwrap();
+    assert_eq!(r.parallel_config, pc.describe());
+    assert!(r.method.contains("pipefusion"), "inferred method, got {}", r.method);
+    assert!(r.comm_bytes > 0, "pipefusion must move patch activations");
+}
+
+#[test]
+fn serve_mixed_variants_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .build()
+        .unwrap();
+    let mut window = Vec::new();
+    for (i, v) in [BlockVariant::AdaLn, BlockVariant::MmDit, BlockVariant::AdaLn]
+        .iter()
+        .enumerate()
+    {
+        window.push(
+            GenRequest::new(i as u64, "mixed batch")
+                .with_variant(*v)
+                .with_steps(2)
+                .with_arrival(i as f64 * 0.1)
+                .with_decode(i == 0),
+        );
+    }
+    let report = pipe.serve(window).unwrap();
+    assert_eq!(report.responses.len(), 3);
+    let first = report.responses.iter().find(|r| r.id == 0).unwrap();
+    let img = first.image.as_ref().expect("request 0 asked for decode");
+    assert_eq!(img.dims, vec![128, 128, 3]);
+    assert_eq!(report.metrics.served, 3);
+    assert!(report.metrics.latency.quantile(0.5) > 0.0);
+    // two distinct batch keys (adaln x2, mmdit x1) -> two sessions
+    assert_eq!(report.metrics.sessions_built, 2);
+}

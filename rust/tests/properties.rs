@@ -54,6 +54,36 @@ fn prop_mesh_groups_partition_world() {
 }
 
 #[test]
+fn prop_split_offsets_cover_contiguously_even_or_not() {
+    // uneven totals must not drop remainder rows: shards are contiguous,
+    // cover exactly [0, total), and differ in length by at most 1
+    check("split offsets cover", 120, |rng| {
+        let total = gen::usize_in(rng, 1, 512);
+        let shards = gen::usize_in(rng, 1, 16);
+        let offs = xdit::parallel::split_offsets(total, shards);
+        if offs.len() != shards {
+            return Err(format!("{} shards, expected {shards}", offs.len()));
+        }
+        let mut next = 0usize;
+        for &(off, len) in &offs {
+            if off != next {
+                return Err(format!("gap: shard starts at {off}, expected {next}"));
+            }
+            next += len;
+        }
+        if next != total {
+            return Err(format!("covered {next} of {total} rows"));
+        }
+        let lens: Vec<usize> = offs.iter().map(|&(_, l)| l).collect();
+        let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        if hi - lo > 1 {
+            return Err(format!("unbalanced shards: min {lo}, max {hi}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_tensor_split_concat_roundtrip() {
     check("tensor split/concat", 80, |rng| {
         let shards = gen::divisor_of(rng, 24);
