@@ -1,31 +1,36 @@
 //! END-TO-END SERVING DRIVER (the required e2e example): a simulated
 //! 8-device cluster serves a Poisson stream of generation requests through
-//! the full stack — request queue with backpressure, compatibility batcher,
-//! the §5.2.4 router picking a hybrid parallel config, the denoising loop
-//! over real AOT HLO executables, parallel VAE decode — and reports
-//! latency/throughput. The serving side is one `Pipeline` facade.
+//! the full continuous-batching stack — bounded request queue with
+//! backpressure, per-tick compatibility batch re-formation (priorities +
+//! aging + deadlines), the §5.2.4 router picking a hybrid parallel config,
+//! the denoising loop, parallel VAE decode — and reports the queue-delay
+//! vs execution split, p50/p95/p99 latency and batch occupancy.
+//! Runs on the real AOT HLO executables when `artifacts/` is built, and on
+//! the hermetic simulated backend otherwise.
 //! Run: cargo run --release --example serve_hybrid
 
 use std::sync::Arc;
 
 use xdit::config::hardware::l40_cluster;
 use xdit::config::model::BlockVariant;
-use xdit::coordinator::{GenRequest, RequestQueue};
+use xdit::coordinator::{GenRequest, RequestQueue, Trace};
 use xdit::pipeline::Pipeline;
 use xdit::runtime::Runtime;
 use xdit::util::pgm;
 use xdit::util::rng::Rng;
 
 fn main() -> xdit::Result<()> {
-    let rt = Runtime::load(
+    let rt = Runtime::load_or_simulated(
         std::env::args()
             .nth(1)
             .unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))),
     )?;
     let n_requests = 12u64;
 
-    // producers on separate threads push into the bounded queue
-    let queue = Arc::new(RequestQueue::new(64));
+    // producers on separate threads push into the bounded queue (the API
+    // front); a deliberately small capacity exercises the backpressure
+    // retry loop
+    let queue = Arc::new(RequestQueue::new(8));
     let prompts = [
         "a kid wearing headphones and using a laptop",
         "a flamingo standing in a shallow lagoon",
@@ -46,6 +51,8 @@ fn main() -> xdit::Result<()> {
                     .with_variant(variants[(id as usize) % variants.len()])
                     .with_steps(3)
                     .with_arrival(t)
+                    .with_priority((id % 3) as i32)
+                    .with_deadline(t + 30.0)
                     .with_decode(id % 4 == 0);
                 // simple retry-on-backpressure loop
                 let mut req = r;
@@ -62,16 +69,32 @@ fn main() -> xdit::Result<()> {
             }
         }));
     }
+    // the leader drains concurrently — with only 8 queue slots for 12
+    // requests the producers *will* hit backpressure and retry, and the
+    // example must consume while they spin or everyone livelocks
+    let mut collected: Vec<GenRequest> = Vec::with_capacity(n_requests as usize);
+    while collected.len() < n_requests as usize {
+        collected.extend(queue.drain_upto(usize::MAX));
+        std::thread::yield_now();
+    }
     for h in handles {
         h.join().unwrap();
     }
-    println!("queued {} requests from 2 producer threads", queue.len());
+    println!("collected {} requests from 2 producer threads", collected.len());
 
-    // the leader drains and serves (PJRT is leader-pinned)
-    let mut pipe = Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).world(8).build()?;
-    let window = queue.drain_upto(usize::MAX);
+    // the leader turns the drained requests into a virtual-time trace and
+    // replays it through the continuous-batching scheduler (PJRT is
+    // leader-pinned)
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(8)
+        .max_batch(4)
+        .queue_capacity(16)
+        .build()?;
+    let trace = Trace::new(collected);
     let t0 = std::time::Instant::now();
-    let report = pipe.serve(window)?;
+    let report = pipe.serve_trace(&trace)?;
     let wall = t0.elapsed();
 
     println!("\nper-request results:");
@@ -86,10 +109,14 @@ fn main() -> xdit::Result<()> {
             if r.image.is_some() { " +image" } else { "" }
         );
     }
+    for rej in &report.rejected {
+        println!("  {rej}");
+    }
     println!("\n{}", report.summary());
     println!(
-        "(host wall time {wall:?} for {} generations on the simulated cluster)",
-        report.responses.len()
+        "(host wall time {wall:?} for {} generations on the simulated cluster, backend {})",
+        report.responses.len(),
+        rt.backend_name()
     );
 
     // persist one decoded image as proof of the full pipeline

@@ -10,7 +10,7 @@
 use crate::{Error, Result};
 
 /// DiT block architecture variants (paper Fig 1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum BlockVariant {
     /// adaLN-Zero conditioning (original DiT).
     AdaLn,

@@ -1,6 +1,18 @@
-//! Compatibility batcher: groups queued requests that can share compiled
-//! shapes (same variant / steps / CFG usage) into batches up to
-//! `max_batch`, preserving arrival order within a group.
+//! Compatibility batcher: groups requests that can share compiled shapes
+//! (same variant / steps / CFG usage / resolution) into batches up to
+//! `max_batch`.
+//!
+//! **Continuous batching** ([`Batcher::next_batch`]): every engine tick
+//! the waiting set is re-grouped from scratch and the single most urgent
+//! compatible batch is launched, so late arrivals join the next batch of
+//! their group instead of waiting behind a pre-formed schedule. Every
+//! serving path (`Engine::serve`, `submit`/`tick`, trace replay) goes
+//! through this one selection.
+//!
+//! Urgency is `priority + aging_rate * time_waiting`: strict priorities in
+//! the short run, but every waiting request's effective priority grows
+//! linearly with virtual time, which bounds starvation (see the property
+//! tests and DESIGN.md).
 
 use std::collections::BTreeMap;
 
@@ -23,36 +35,96 @@ impl Batch {
 
 pub struct Batcher {
     pub max_batch: usize,
+    /// Effective-priority units gained per virtual second of waiting.
+    /// 0 disables aging (strict priorities; starvation possible).
+    pub aging_rate: f64,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize) -> Batcher {
-        Batcher { max_batch: max_batch.max(1) }
+        Batcher { max_batch: max_batch.max(1), aging_rate: 1.0 }
     }
 
-    /// Partition a drained request window into compatible batches.
-    /// Returns batches in order of the earliest request they contain.
-    pub fn form(&self, window: Vec<GenRequest>) -> Vec<Batch> {
-        let mut groups: BTreeMap<String, Vec<GenRequest>> = BTreeMap::new();
-        let mut order: Vec<(u64, String)> = Vec::new();
-        for r in window {
-            let key = format!("{:?}", r.batch_key());
-            if !groups.contains_key(&key) {
-                order.push((r.id, key.clone()));
-            }
-            groups.entry(key).or_default().push(r);
-        }
-        order.sort_by_key(|(id, _)| *id);
-        let mut out = Vec::new();
-        for (_, key) in order {
-            let mut reqs = groups.remove(&key).unwrap();
-            while !reqs.is_empty() {
-                let take = reqs.len().min(self.max_batch);
-                out.push(Batch { requests: reqs.drain(..take).collect() });
-            }
-        }
-        out
+    pub fn with_aging_rate(mut self, rate: f64) -> Batcher {
+        self.aging_rate = rate.max(0.0);
+        self
     }
+
+    /// Effective priority of a waiting request at virtual time `now`.
+    pub fn effective_priority(&self, r: &GenRequest, now: f64) -> f64 {
+        r.priority as f64 + self.aging_rate * (now - r.arrival).max(0.0)
+    }
+
+    /// Continuous-batching selection: re-form compatibility groups over the
+    /// waiting set and remove + return the most urgent batch (up to
+    /// `max_batch` members of one group). Groups are ranked by (max
+    /// effective priority, earliest deadline, earliest arrival, lowest id);
+    /// members within the winning group by (effective priority, earliest
+    /// deadline, lowest id). Returns `None` iff `waiting` is empty.
+    pub fn next_batch(&self, waiting: &mut Vec<GenRequest>, now: f64) -> Option<Batch> {
+        if waiting.is_empty() {
+            return None;
+        }
+        let mut groups: BTreeMap<_, Vec<usize>> = BTreeMap::new();
+        for (i, r) in waiting.iter().enumerate() {
+            groups.entry(r.batch_key()).or_default().push(i);
+        }
+        // rank the groups, scoring each once (total_cmp: even a NaN
+        // arrival/deadline smuggled in by a caller orders deterministically
+        // instead of panicking)
+        let mut chosen = groups
+            .into_values()
+            .map(|idx| (self.group_score(waiting, &idx, now), idx))
+            .min_by(|a, b| cmp_score(&a.0, &b.0))
+            .map(|(_, idx)| idx)?;
+        // most urgent first: higher effective priority, tighter deadline,
+        // lowest id (members deliberately don't tie-break on arrival —
+        // aging already folds waiting time into the effective priority)
+        let member_key = |r: &GenRequest| {
+            (-self.effective_priority(r, now), r.deadline.unwrap_or(f64::INFINITY), r.id)
+        };
+        chosen.sort_by(|&a, &b| {
+            let (pa, da, ia) = member_key(&waiting[a]);
+            let (pb, db, ib) = member_key(&waiting[b]);
+            pa.total_cmp(&pb).then(da.total_cmp(&db)).then(ia.cmp(&ib))
+        });
+        chosen.truncate(self.max_batch);
+        // extract in descending index order so earlier indices stay valid
+        chosen.sort_unstable_by(|a, b| b.cmp(a));
+        let mut requests: Vec<GenRequest> =
+            chosen.iter().map(|&i| waiting.swap_remove(i)).collect();
+        // FIFO execution order inside the batch (stable latency accounting)
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        Some(Batch { requests })
+    }
+
+    /// Group rank key: smaller = more urgent (negated priority so `min_by`
+    /// picks the highest effective priority first).
+    fn group_score(&self, waiting: &[GenRequest], idx: &[usize], now: f64) -> (f64, f64, f64, u64) {
+        let mut best_prio = f64::NEG_INFINITY;
+        let mut best_deadline = f64::INFINITY;
+        let mut best_arrival = f64::INFINITY;
+        let mut best_id = u64::MAX;
+        for &i in idx {
+            let r = &waiting[i];
+            best_prio = best_prio.max(self.effective_priority(r, now));
+            if let Some(d) = r.deadline {
+                best_deadline = best_deadline.min(d);
+            }
+            best_arrival = best_arrival.min(r.arrival);
+            best_id = best_id.min(r.id);
+        }
+        (-best_prio, best_deadline, best_arrival, best_id)
+    }
+}
+
+/// Total order over a rank key — `f64::total_cmp` keeps the scheduler
+/// panic-free even if a caller sneaks a NaN arrival/deadline in.
+fn cmp_score(a: &(f64, f64, f64, u64), b: &(f64, f64, f64, u64)) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0)
+        .then(a.1.total_cmp(&b.1))
+        .then(a.2.total_cmp(&b.2))
+        .then(a.3.cmp(&b.3))
 }
 
 #[cfg(test)]
@@ -68,6 +140,16 @@ mod tests {
         r
     }
 
+    /// Drain a waiting set to completion through repeated selection.
+    fn drain_all(b: &Batcher, mut waiting: Vec<GenRequest>) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while let Some(batch) = b.next_batch(&mut waiting, 0.0) {
+            out.push(batch);
+        }
+        assert!(waiting.is_empty());
+        out
+    }
+
     #[test]
     fn groups_by_compatibility() {
         let b = Batcher::new(8);
@@ -77,8 +159,9 @@ mod tests {
             req(2, BlockVariant::AdaLn, 4),
             req(3, BlockVariant::AdaLn, 8),
         ];
-        let batches = b.form(window);
+        let batches = drain_all(&b, window);
         assert_eq!(batches.len(), 3);
+        // equal urgency: the group holding the earliest request goes first
         assert_eq!(batches[0].requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
     }
 
@@ -86,23 +169,84 @@ mod tests {
     fn splits_at_max_batch() {
         let b = Batcher::new(2);
         let window = (0..5).map(|i| req(i, BlockVariant::AdaLn, 4)).collect();
-        let batches = b.form(window);
+        let batches = drain_all(&b, window);
         assert_eq!(batches.iter().map(Batch::len).collect::<Vec<_>>(), vec![2, 2, 1]);
     }
 
     #[test]
-    fn prop_batches_never_mix_incompatible_and_conserve() {
-        testing::check("batcher invariants", 40, |rng| {
-            let b = Batcher::new(1 + rng.below(4));
-            let n = rng.below(16);
-            let variants = [BlockVariant::AdaLn, BlockVariant::MmDit, BlockVariant::Cross];
-            let window: Vec<GenRequest> = (0..n as u64)
-                .map(|i| req(i, *rng.pick(&variants), *rng.pick(&[4usize, 8])))
+    fn next_batch_prefers_priority_then_ages() {
+        let b = Batcher::new(4).with_aging_rate(1.0);
+        // a freshly arrived high-priority request beats a slightly older
+        // low-priority one...
+        let mut waiting = vec![
+            req(0, BlockVariant::AdaLn, 4).with_priority(0).with_arrival(0.0),
+            req(1, BlockVariant::MmDit, 4).with_priority(3).with_arrival(2.0),
+        ];
+        let first = b.next_batch(&mut waiting, 2.0).unwrap();
+        assert_eq!(first.requests[0].id, 1);
+        // ...but a request that has waited long enough outranks any fresh
+        // arrival of bounded priority: aging bounds starvation
+        let mut waiting = vec![
+            req(0, BlockVariant::AdaLn, 4).with_priority(0).with_arrival(0.0),
+            req(1, BlockVariant::MmDit, 4).with_priority(3).with_arrival(10.0),
+        ];
+        let first = b.next_batch(&mut waiting, 10.0).unwrap();
+        assert_eq!(first.requests[0].id, 0, "aged request must outrank fresh priority");
+    }
+
+    #[test]
+    fn next_batch_respects_deadlines_between_equal_priorities() {
+        let b = Batcher::new(4).with_aging_rate(0.0);
+        let mut waiting = vec![
+            req(0, BlockVariant::AdaLn, 4),
+            req(1, BlockVariant::MmDit, 4).with_deadline(1.0),
+        ];
+        let first = b.next_batch(&mut waiting, 0.0).unwrap();
+        assert_eq!(first.requests[0].id, 1);
+    }
+
+    #[test]
+    fn next_batch_drains_everything_exactly_once() {
+        let b = Batcher::new(3);
+        let mut waiting: Vec<GenRequest> = (0..7)
+            .map(|i| req(i, if i % 2 == 0 { BlockVariant::AdaLn } else { BlockVariant::Cross }, 4))
+            .collect();
+        let mut seen = std::collections::BTreeSet::new();
+        while let Some(batch) = b.next_batch(&mut waiting, 0.0) {
+            assert!(!batch.is_empty() && batch.len() <= 3);
+            let k0 = batch.requests[0].batch_key();
+            for r in &batch.requests {
+                assert_eq!(r.batch_key(), k0, "mixed batch");
+                assert!(seen.insert(r.id), "request duplicated");
+            }
+        }
+        assert!(waiting.is_empty());
+        assert_eq!(seen.len(), 7);
+    }
+
+    #[test]
+    fn prop_next_batch_invariants() {
+        // continuous selection conserves requests, never mixes keys, and
+        // never exceeds max_batch — under random priorities/deadlines/ages
+        testing::check("next_batch invariants", 40, |rng| {
+            let b = Batcher::new(1 + rng.below(4)).with_aging_rate(rng.uniform());
+            let n = rng.below(14);
+            let variants = [BlockVariant::AdaLn, BlockVariant::MmDit, BlockVariant::Skip];
+            let mut waiting: Vec<GenRequest> = (0..n as u64)
+                .map(|i| {
+                    let mut r = req(i, *rng.pick(&variants), *rng.pick(&[2usize, 4]))
+                        .with_resolution(*rng.pick(&[256usize, 512]))
+                        .with_priority(rng.below(5) as i32)
+                        .with_arrival(rng.uniform() * 8.0);
+                    if rng.below(3) == 0 {
+                        r = r.with_deadline(rng.uniform() * 16.0);
+                    }
+                    r
+                })
                 .collect();
-            let keys: Vec<_> = window.iter().map(|r| (r.id, r.batch_key())).collect();
-            let batches = b.form(window);
+            let mut now = 8.0;
             let mut seen = std::collections::BTreeSet::new();
-            for batch in &batches {
+            while let Some(batch) = b.next_batch(&mut waiting, now) {
                 if batch.is_empty() || batch.len() > b.max_batch {
                     return Err(format!("bad batch size {}", batch.len()));
                 }
@@ -115,9 +259,10 @@ mod tests {
                         return Err(format!("duplicated request {}", r.id));
                     }
                 }
+                now += 0.25; // virtual time moves between ticks
             }
-            if seen.len() != keys.len() {
-                return Err(format!("lost requests: {} of {}", seen.len(), keys.len()));
+            if !waiting.is_empty() || seen.len() != n {
+                return Err(format!("lost requests: {} of {n}", seen.len()));
             }
             Ok(())
         });

@@ -1,7 +1,15 @@
-//! The generation engine: drains the queue in batch windows, routes each
-//! batch to a hybrid parallel config (paper §5.2.4 policy), runs the
-//! denoising loop on the simulated cluster, optionally decodes with the
-//! parallel VAE, and records metrics.
+//! The generation engine: a continuous-batching scheduler over the
+//! simulated cluster.
+//!
+//! Admission path: producers [`Engine::submit`] into the bounded
+//! [`RequestQueue`]; a full queue rejects with a reason (backpressure)
+//! instead of buffering unboundedly. Every [`Engine::tick`] the waiting
+//! set is re-grouped by the compatibility [`Batcher`] and the single most
+//! urgent batch (priority + aging, deadlines, arrival order) is routed to
+//! a hybrid parallel config (paper §5.2.4 policy), run through the
+//! denoising loop, optionally decoded with the parallel VAE, and recorded
+//! in [`Metrics`]. Late arrivals join the *next* batch of their group —
+//! batches are formed per tick, never ahead of time.
 //!
 //! This is an *internal* layer: user code enters through
 //! `crate::pipeline::Pipeline`, which owns an `Engine` and configures its
@@ -15,15 +23,17 @@
 //!
 //! Virtual-time semantics: requests arrive with `arrival` stamps; the
 //! cluster serves batches one after another (the whole mesh is owned by one
-//! generation at a time, as in xDiT); latency = finish - arrival.
+//! generation at a time, as in xDiT); latency = finish - arrival, split
+//! into queue delay (arrival -> launch) and execution (launch -> finish).
 
 use crate::comm::Clocks;
 use crate::config::hardware::ClusterSpec;
 use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::coordinator::queue::{PushError, RequestQueue};
+use crate::coordinator::request::{GenRequest, GenResponse, RequestId};
 use crate::coordinator::router::route;
 use crate::diffusion::SchedulerKind;
 use crate::parallel::{driver, GenParams, Session};
@@ -31,6 +41,22 @@ use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::vae::ParallelVae;
 use crate::Result;
+
+/// Default bound on the admission queue.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 64;
+
+/// Why a request was refused admission (returned by [`Engine::submit`]).
+#[derive(Debug, Clone)]
+pub struct Rejection {
+    pub id: RequestId,
+    pub reason: String,
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {} rejected: {}", self.id, self.reason)
+    }
+}
 
 pub struct Engine<'a> {
     pub rt: &'a Runtime,
@@ -45,6 +71,13 @@ pub struct Engine<'a> {
     /// Pipeline-level scheduler default; per-request overrides win, the
     /// model's benchmark scheduler is the final fallback.
     pub default_scheduler: Option<SchedulerKind>,
+    /// Bounded admission queue. Engine admission itself is leader-side
+    /// (`submit` takes `&mut self`); cross-thread producers feed an
+    /// *external* `RequestQueue` handle the leader drains into a `Trace`
+    /// or `submit` loop, as `examples/serve_hybrid.rs` does.
+    queue: RequestQueue,
+    /// Admitted requests awaiting a batch slot (re-grouped every tick).
+    waiting: Vec<GenRequest>,
     /// Patch-parallel VAE, built once per engine on first decode.
     vae: Option<ParallelVae<'a>>,
     /// Virtual clock of the serving horizon.
@@ -62,9 +95,94 @@ impl<'a> Engine<'a> {
             force_config: None,
             force_method: None,
             default_scheduler: None,
+            queue: RequestQueue::new(DEFAULT_QUEUE_CAPACITY),
+            waiting: Vec::new(),
             vae: None,
             now: 0.0,
         }
+    }
+
+    /// Replace the admission queue bound. Anything already queued is
+    /// carried over into the waiting set, so resizing can never drop
+    /// admitted work.
+    pub fn set_queue_capacity(&mut self, capacity: usize) {
+        self.waiting.extend(self.queue.drain_upto(usize::MAX));
+        self.queue = RequestQueue::new(capacity.max(1));
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity
+    }
+
+    /// Admit one request, or reject it with a reason when the engine's
+    /// backlog (queued + waiting) is at capacity — backpressure bounds the
+    /// *total* admitted-but-unserved set, not just the mpsc front, so a
+    /// live submit/tick loop cannot grow `waiting` without bound.
+    /// Rejections are counted.
+    pub fn submit(&mut self, req: GenRequest) -> std::result::Result<(), Rejection> {
+        if self.pending() >= self.queue.capacity {
+            self.metrics.rejected += 1;
+            return Err(Rejection {
+                id: req.id,
+                reason: format!(
+                    "backpressure: {} requests pending >= capacity {}",
+                    self.pending(),
+                    self.queue.capacity
+                ),
+            });
+        }
+        match self.queue.push(req) {
+            Ok(()) => Ok(()),
+            // unreachable in practice: the pre-check bounds pending() which
+            // dominates queue.len(), and the engine never closes its own
+            // queue — kept as defense with the same backpressure contract
+            Err(PushError::Backpressure(r)) | Err(PushError::Closed(r)) => {
+                self.metrics.rejected += 1;
+                Err(Rejection {
+                    id: r.id,
+                    reason: format!(
+                        "backpressure: queue refused admission (capacity {})",
+                        self.queue.capacity
+                    ),
+                })
+            }
+        }
+    }
+
+    /// Requests admitted but not yet completed.
+    pub fn pending(&self) -> usize {
+        self.waiting.len() + self.queue.len()
+    }
+
+    /// One scheduler tick: drain the queue into the waiting set, re-form
+    /// compatibility batches, launch the most urgent one, and return its
+    /// responses. Empty result = nothing was waiting (an idle tick).
+    pub fn tick(&mut self) -> Result<Vec<GenResponse>> {
+        self.metrics.ticks += 1;
+        self.waiting.extend(self.queue.drain_upto(usize::MAX));
+        match self.batcher.next_batch(&mut self.waiting, self.now) {
+            Some(batch) => self.execute_batch(batch),
+            None => {
+                self.metrics.idle_ticks += 1;
+                Ok(Vec::new())
+            }
+        }
+    }
+
+    /// Serve exactly this window of requests to completion, bypassing the
+    /// admission bound (the one-shot / legacy path — nothing is ever
+    /// rejected). The engine's live backlog (`submit`/`tick`) is left
+    /// untouched: the window runs on its own waiting set, so mixing
+    /// `generate`/`serve` with the continuous API never steals or returns
+    /// someone else's requests. Returns responses in completion order.
+    pub fn serve(&mut self, window: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
+        let mut local = window;
+        let mut out = Vec::with_capacity(local.len());
+        while let Some(batch) = self.batcher.next_batch(&mut local, self.now) {
+            self.metrics.ticks += 1;
+            out.extend(self.execute_batch(batch)?);
+        }
+        Ok(out)
     }
 
     /// Scheduler for a request: request override > engine default > model
@@ -76,70 +194,73 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Serve a window of requests (already drained from the queue) to
-    /// completion. Returns responses in completion order.
-    pub fn serve(&mut self, window: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
-        let mut out = Vec::with_capacity(window.len());
-        let batches = self.batcher.form(window);
+    /// Run one compatibility batch on the simulated cluster: route, build
+    /// the shared session, generate back-to-back, account the split times.
+    fn execute_batch(&mut self, batch: Batch) -> Result<Vec<GenResponse>> {
+        let mut out = Vec::with_capacity(batch.len());
+        self.metrics.observe_batch(batch.len());
         let rt = self.rt;
-        for batch in batches {
-            let first = &batch.requests[0];
-            let spec = ModelSpec::for_variant(first.variant)?;
-            // the routed sequence length follows the requested resolution
-            let s_img = spec.seq_len(first.px);
-            let pc = self
-                .force_config
-                .unwrap_or_else(|| route(&spec, s_img, &self.cluster, self.world));
-            let method = self.force_method.unwrap_or_else(|| pick_method(&pc));
+        let first = &batch.requests[0];
+        let spec = ModelSpec::for_variant(first.variant)?;
+        // the routed sequence length follows the requested resolution
+        let s_img = spec.seq_len(first.px);
+        let pc = self
+            .force_config
+            .unwrap_or_else(|| route(&spec, s_img, &self.cluster, self.world));
+        let method = self.force_method.unwrap_or_else(|| pick_method(&pc));
 
-            // one session per batch: the whole batch shares the mesh and
-            // runs back-to-back on it
-            let mut sess = Session::new(rt, first.variant, self.cluster.clone(), pc)?;
-            self.metrics.sessions_built += 1;
+        // one session per batch: the whole batch shares the mesh and runs
+        // back-to-back on it
+        let mut sess = Session::new(rt, first.variant, self.cluster.clone(), pc)?;
+        self.metrics.sessions_built += 1;
 
-            for req in &batch.requests {
-                let scheduler = self.scheduler_for(&spec, req)?;
-                let params = GenParams {
-                    prompt: req.prompt.clone(),
-                    steps: req.steps,
-                    seed: req.seed,
-                    guidance: req.guidance,
-                    scheduler,
-                };
-                // the session's clocks/ledger persist across the batch;
-                // driver::generate reports per-generation deltas
-                let r = driver::generate(&mut sess, method, &params)?;
-                let model_seconds = r.makespan;
-                let comm_bytes = r.comm_bytes;
+        for req in &batch.requests {
+            let scheduler = self.scheduler_for(&spec, req)?;
+            let params = GenParams {
+                prompt: req.prompt.clone(),
+                steps: req.steps,
+                seed: req.seed,
+                guidance: req.guidance,
+                scheduler,
+            };
+            // the session's clocks/ledger persist across the batch;
+            // driver::generate reports per-generation deltas
+            let r = driver::generate(&mut sess, method, &params)?;
+            let model_seconds = r.makespan;
+            let comm_bytes = r.comm_bytes;
 
-                let mut image = None;
-                let mut decode_time = 0.0;
-                if req.decode {
-                    let (img, t) = self.decode_latent(&r.latent, pc.world().min(8))?;
-                    image = Some(img);
-                    decode_time = t;
-                }
-                let start = self.now.max(req.arrival);
-                let finish = start + model_seconds + decode_time;
-                self.now = finish;
-                let latency = finish - req.arrival;
-                self.metrics.latency.observe(latency);
-                self.metrics.queue_wait.observe(start - req.arrival);
-                self.metrics.served += 1;
-                self.metrics.model_seconds += model_seconds;
-                out.push(GenResponse {
-                    id: req.id,
-                    latent: r.latent,
-                    image,
-                    model_seconds,
-                    latency,
-                    comm_bytes,
-                    parallel_config: pc.describe(),
-                    method: r.method,
-                    scheduler: scheduler.key().to_string(),
-                    px: req.px,
-                });
+            let mut image = None;
+            let mut decode_time = 0.0;
+            if req.decode {
+                let (img, t) = self.decode_latent(&r.latent, pc.world().min(8))?;
+                image = Some(img);
+                decode_time = t;
             }
+            let start = self.now.max(req.arrival);
+            let exec = model_seconds + decode_time;
+            let finish = start + exec;
+            self.now = finish;
+            let latency = finish - req.arrival;
+            self.metrics.latency.observe(latency);
+            self.metrics.queue_delay.observe(start - req.arrival);
+            self.metrics.exec_time.observe(exec);
+            if matches!(req.deadline, Some(d) if finish > d) {
+                self.metrics.deadline_misses += 1;
+            }
+            self.metrics.served += 1;
+            self.metrics.model_seconds += model_seconds;
+            out.push(GenResponse {
+                id: req.id,
+                latent: r.latent,
+                image,
+                model_seconds,
+                latency,
+                comm_bytes,
+                parallel_config: pc.describe(),
+                method: r.method,
+                scheduler: scheduler.key().to_string(),
+                px: req.px,
+            });
         }
         self.metrics.horizon = self.now;
         Ok(out)
@@ -160,6 +281,14 @@ impl<'a> Engine<'a> {
     /// start) — where the next arriving request would start.
     pub fn virtual_now(&self) -> f64 {
         self.now
+    }
+
+    /// Advance the virtual clock to `t` (idle gap between arrivals in a
+    /// trace replay). Never moves backwards.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
     }
 
     /// Exact single-device decode (the reference the parallel path is
@@ -198,17 +327,16 @@ mod tests {
     use super::*;
     use crate::config::hardware::l40_cluster;
 
-    fn setup() -> Option<Runtime> {
+    fn setup() -> Runtime {
+        // real artifacts when built, hermetic simulator otherwise — the
+        // scheduling semantics under test are identical
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        Some(Runtime::load(dir).unwrap())
+        Runtime::load_or_simulated(dir).unwrap()
     }
 
     #[test]
     fn serves_batch_and_records_metrics() {
-        let Some(rt) = setup() else { return };
+        let rt = setup();
         let mut eng = Engine::new(&rt, l40_cluster(1), 4);
         let mut reqs = Vec::new();
         for i in 0..3u64 {
@@ -223,17 +351,22 @@ mod tests {
         assert!(eng.metrics.throughput() > 0.0);
         // identical batch keys -> one shared session for all three
         assert_eq!(eng.metrics.sessions_built, 1);
+        assert_eq!(eng.metrics.batches, 1);
+        assert_eq!(eng.metrics.occupancy_max, 3);
         // completion order preserves arrival order within a batch
         assert!(out[0].latency <= out[2].latency + out[2].model_seconds);
         for r in &out {
             assert_eq!(r.latent.dims, vec![256, 4]);
             assert!(r.model_seconds > 0.0);
         }
+        // the split accounting adds up
+        assert_eq!(eng.metrics.queue_delay.count, 3);
+        assert_eq!(eng.metrics.exec_time.count, 3);
     }
 
     #[test]
     fn vae_is_built_once_per_engine() {
-        let Some(rt) = setup() else { return };
+        let rt = setup();
         let mut eng = Engine::new(&rt, l40_cluster(1), 4);
         let mut reqs = Vec::new();
         for i in 0..3u64 {
@@ -251,6 +384,63 @@ mod tests {
         r.decode = true;
         eng.serve(vec![r]).unwrap();
         assert_eq!(eng.metrics.vae_builds, 1);
+    }
+
+    #[test]
+    fn submit_backpressure_at_capacity() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        eng.set_queue_capacity(2);
+        assert!(eng.submit(GenRequest::new(0, "a")).is_ok());
+        assert!(eng.submit(GenRequest::new(1, "b")).is_ok());
+        let rej = eng.submit(GenRequest::new(2, "c")).unwrap_err();
+        assert_eq!(rej.id, 2);
+        assert!(rej.reason.contains("backpressure"), "{}", rej.reason);
+        assert_eq!(eng.metrics.rejected, 1);
+        assert_eq!(eng.pending(), 2);
+        // a tick drains the queue, freeing capacity for new admissions
+        let mut r = GenRequest::new(3, "d");
+        r.steps = 1;
+        let served = eng.tick().unwrap();
+        assert_eq!(served.len(), 2);
+        assert!(eng.submit(r).is_ok());
+    }
+
+    #[test]
+    fn tick_launches_one_batch_and_idles_when_empty() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        // two incompatible groups -> two ticks to drain
+        let mut a = GenRequest::new(0, "a");
+        a.steps = 1;
+        let mut b = GenRequest::new(1, "b");
+        b.steps = 2;
+        eng.submit(a).unwrap();
+        eng.submit(b).unwrap();
+        let first = eng.tick().unwrap();
+        assert_eq!(first.len(), 1);
+        let second = eng.tick().unwrap();
+        assert_eq!(second.len(), 1);
+        assert!(eng.tick().unwrap().is_empty(), "idle tick");
+        assert_eq!(eng.metrics.idle_ticks, 1);
+        assert_eq!(eng.metrics.batches, 2);
+        assert_eq!(eng.metrics.sessions_built, 2);
+    }
+
+    #[test]
+    fn deadline_misses_are_counted() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        let mut r = GenRequest::new(0, "tight");
+        r.steps = 2;
+        r.deadline = Some(1e-12); // cannot possibly be met
+        eng.serve(vec![r]).unwrap();
+        assert_eq!(eng.metrics.deadline_misses, 1);
+        let mut r = GenRequest::new(1, "loose");
+        r.steps = 2;
+        r.deadline = Some(1e9);
+        eng.serve(vec![r]).unwrap();
+        assert_eq!(eng.metrics.deadline_misses, 1);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Serving metrics: latency histogram (log buckets), throughput counters,
-//! per-stage timing.
+//! Serving metrics: latency histograms (log buckets), throughput counters,
+//! the queue-delay vs execution-time split, and batch-occupancy stats of
+//! the continuous-batching scheduler.
 
 #[derive(Debug, Clone)]
 pub struct Histogram {
@@ -64,13 +65,17 @@ impl Default for Histogram {
 /// Engine metrics snapshot.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
+    /// End-to-end virtual latency (queue delay + execution).
     pub latency: Histogram,
-    pub queue_wait: Histogram,
+    /// Time between arrival and batch launch (the queueing component).
+    pub queue_delay: Histogram,
+    /// Time on the simulated cluster (denoise + optional VAE decode).
+    pub exec_time: Histogram,
     pub served: u64,
     pub rejected: u64,
     /// Total simulated device-seconds of model compute.
     pub model_seconds: f64,
-    /// Virtual end-to-end seconds of the serving run.
+    /// Virtual end-to-end seconds of the serving run (the makespan).
     pub horizon: f64,
     /// Sessions constructed (one per batch, not per request — reuse is the
     /// point of the batcher).
@@ -78,6 +83,17 @@ pub struct Metrics {
     /// Parallel-VAE constructions; stays at 1 for the whole life of an
     /// engine no matter how many requests decode.
     pub vae_builds: u64,
+    /// Scheduler ticks taken (continuous-batching mode).
+    pub ticks: u64,
+    /// Ticks that found nothing waiting.
+    pub idle_ticks: u64,
+    /// Batches launched.
+    pub batches: u64,
+    /// Sum of batch sizes (mean occupancy = occupancy_sum / batches).
+    pub occupancy_sum: u64,
+    pub occupancy_max: u64,
+    /// Requests that finished after their declared deadline.
+    pub deadline_misses: u64,
 }
 
 impl Metrics {
@@ -89,16 +105,48 @@ impl Metrics {
         }
     }
 
+    /// Record a launched batch of `n` requests.
+    pub fn observe_batch(&mut self, n: usize) {
+        self.batches += 1;
+        self.occupancy_sum += n as u64;
+        self.occupancy_max = self.occupancy_max.max(n as u64);
+    }
+
+    /// Mean requests per launched batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// Human-readable snapshot. Virtual makespan, the queue-delay vs
+    /// execution split, and batch occupancy are reported separately —
+    /// folding them into one latency figure hides *where* time went.
     pub fn report(&self) -> String {
         format!(
-            "served={} rejected={} throughput={:.2} img/s  latency mean={:.3}s p50={:.3}s p90={:.3}s max={:.3}s  sessions={} vae_builds={}",
+            "served={} rejected={} | makespan {:.3}s virtual, {:.2} img/s | \
+             latency p50/p95/p99 {:.3}/{:.3}/{:.3}s (mean {:.3}s max {:.3}s) | \
+             queue delay mean {:.3}s p95 {:.3}s | exec mean {:.3}s | \
+             batches={} occupancy mean {:.2} max {} | deadline misses={} | \
+             sessions={} vae_builds={}",
             self.served,
             self.rejected,
+            self.horizon,
             self.throughput(),
+            self.latency.quantile(0.50),
+            self.latency.quantile(0.95),
+            self.latency.quantile(0.99),
             self.latency.mean(),
-            self.latency.quantile(0.5),
-            self.latency.quantile(0.9),
             self.latency.max,
+            self.queue_delay.mean(),
+            self.queue_delay.quantile(0.95),
+            self.exec_time.mean(),
+            self.batches,
+            self.mean_occupancy(),
+            self.occupancy_max,
+            self.deadline_misses,
             self.sessions_built,
             self.vae_builds,
         )
@@ -127,5 +175,34 @@ mod tests {
         m.served = 10;
         m.horizon = 5.0;
         assert!((m.throughput() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy_tracking() {
+        let mut m = Metrics::default();
+        m.observe_batch(4);
+        m.observe_batch(2);
+        m.observe_batch(3);
+        assert_eq!(m.batches, 3);
+        assert!((m.mean_occupancy() - 3.0).abs() < 1e-9);
+        assert_eq!(m.occupancy_max, 4);
+    }
+
+    #[test]
+    fn report_separates_makespan_queue_delay_and_exec() {
+        let mut m = Metrics::default();
+        m.served = 2;
+        m.horizon = 3.0;
+        m.latency.observe(1.5);
+        m.latency.observe(2.0);
+        m.queue_delay.observe(0.5);
+        m.exec_time.observe(1.0);
+        m.observe_batch(2);
+        let r = m.report();
+        assert!(r.contains("makespan 3.000s virtual"), "{r}");
+        assert!(r.contains("queue delay"), "{r}");
+        assert!(r.contains("exec mean"), "{r}");
+        assert!(r.contains("occupancy mean 2.00"), "{r}");
+        assert!(r.contains("p50/p95/p99"), "{r}");
     }
 }

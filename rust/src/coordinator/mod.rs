@@ -1,15 +1,20 @@
-//! The serving coordinator: request queue with backpressure, compatibility
-//! batcher, the §5.2.4 routing policy (pick the hybrid parallel config for
-//! the hardware + model at hand), the generation engine, and metrics.
+//! The serving coordinator: bounded request queue with backpressure, the
+//! compatibility batcher with continuous per-tick batch re-formation
+//! (priorities, deadlines, aging), the §5.2.4 routing policy (pick the
+//! hybrid parallel config for the hardware + model at hand), the
+//! generation engine (`submit`/`tick` admission path + virtual-time
+//! accounting), deterministic arrival [`Trace`]s, and metrics.
 //!
 //! These are the *internal* serving layers; user code enters through the
 //! typed facade in `crate::pipeline`, which owns an `Engine` and the
 //! session/VAE lifecycle.
 //!
 //! Rust owns the event loop and process topology; PJRT execution is pinned
-//! to the leader thread (the `xla` client is `Rc`-based), so the engine
-//! drains the queue on the leader while producers submit from any thread
-//! through the `RequestQueue`'s mpsc front.
+//! to the leader thread (the `xla` client is `Rc`-based), so the whole
+//! engine — admission included — runs on the leader. Cross-thread
+//! producers push into an *external* thread-safe `RequestQueue` handle
+//! that the leader drains into a `Trace` or `submit` loop (see
+//! `examples/serve_hybrid.rs`).
 
 pub mod batcher;
 pub mod engine;
@@ -17,10 +22,12 @@ pub mod metrics;
 pub mod queue;
 pub mod request;
 pub mod router;
+pub mod trace;
 
-pub use batcher::Batcher;
-pub use engine::Engine;
+pub use batcher::{Batch, Batcher};
+pub use engine::{Engine, Rejection};
 pub use metrics::Metrics;
 pub use queue::RequestQueue;
 pub use request::{GenRequest, GenResponse, RequestId};
 pub use router::route;
+pub use trace::Trace;

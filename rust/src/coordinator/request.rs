@@ -37,6 +37,13 @@ pub struct GenRequest {
     pub arrival: f64,
     /// Decode the latent to pixels with the parallel VAE.
     pub decode: bool,
+    /// Scheduling priority (higher = sooner). The batcher ages waiting
+    /// requests, so a low priority delays service but can never starve it.
+    pub priority: i32,
+    /// Optional completion deadline in virtual seconds (absolute, same
+    /// clock as `arrival`). Missing it is recorded in `Metrics`, not an
+    /// error — the engine still serves the request.
+    pub deadline: Option<f64>,
 }
 
 impl GenRequest {
@@ -52,6 +59,8 @@ impl GenRequest {
             scheduler: None,
             arrival: 0.0,
             decode: false,
+            priority: 0,
+            deadline: None,
         }
     }
 
@@ -92,6 +101,16 @@ impl GenRequest {
 
     pub fn with_decode(mut self, decode: bool) -> Self {
         self.decode = decode;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: f64) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 
@@ -164,7 +183,9 @@ mod tests {
             .with_resolution(512)
             .with_scheduler(SchedulerKind::Dpm)
             .with_arrival(2.5)
-            .with_decode(true);
+            .with_decode(true)
+            .with_priority(3)
+            .with_deadline(9.0);
         assert_eq!(r.variant, BlockVariant::MmDit);
         assert_eq!(r.steps, 6);
         assert_eq!(r.seed, 11);
@@ -173,5 +194,15 @@ mod tests {
         assert_eq!(r.scheduler, Some(SchedulerKind::Dpm));
         assert_eq!(r.arrival, 2.5);
         assert!(r.decode);
+        assert_eq!(r.priority, 3);
+        assert_eq!(r.deadline, Some(9.0));
+    }
+
+    #[test]
+    fn priority_and_deadline_do_not_split_batches() {
+        // compatibility is about compiled shapes, not urgency
+        let a = GenRequest::new(1, "x");
+        let b = GenRequest::new(2, "y").with_priority(9).with_deadline(1.0);
+        assert_eq!(a.batch_key(), b.batch_key());
     }
 }

@@ -1,0 +1,241 @@
+//! Deterministic virtual-time arrival traces.
+//!
+//! A [`Trace`] is a sorted sequence of [`GenRequest`]s with absolute
+//! virtual arrival stamps — the unit `Pipeline::serve_trace` replays
+//! against the continuous-batching engine. Because arrivals, prompts,
+//! priorities and deadlines are all derived from one seeded [`Rng`], a
+//! whole Poisson workload replays bit-identically: same trace, same
+//! batches, same latencies, same latents.
+
+use crate::config::model::BlockVariant;
+use crate::coordinator::request::{GenRequest, DEFAULT_PX};
+use crate::diffusion::SchedulerKind;
+use crate::util::rng::Rng;
+
+/// A virtual-time request trace, sorted by (arrival, id). The request
+/// list is private so the sortedness/finiteness invariants the replay
+/// loop depends on cannot be bypassed — construct via [`Trace::new`] or
+/// [`Trace::poisson`], read via [`Trace::requests`].
+#[derive(Debug, Clone)]
+pub struct Trace {
+    requests: Vec<GenRequest>,
+}
+
+impl Trace {
+    /// Build from explicit requests: non-finite arrival stamps are
+    /// coerced to 0.0 (a NaN arrival would otherwise hang the replay
+    /// loop's admission cursor), then sorted by arrival so replay order
+    /// is well-defined regardless of how the caller produced them.
+    pub fn new(mut requests: Vec<GenRequest>) -> Trace {
+        for r in &mut requests {
+            if !r.arrival.is_finite() {
+                r.arrival = 0.0;
+            }
+        }
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        Trace { requests }
+    }
+
+    /// The requests in replay (arrival) order.
+    pub fn requests(&self) -> &[GenRequest] {
+        &self.requests
+    }
+
+    /// A Poisson arrival process: `n` requests with exponential
+    /// inter-arrival gaps at `rate` requests per virtual second. Returns a
+    /// builder for the per-request mix; everything is derived from `seed`.
+    pub fn poisson(seed: u64, n: usize, rate: f64) -> PoissonTrace {
+        PoissonTrace {
+            seed,
+            n,
+            rate,
+            steps: 4,
+            guidance: 3.0,
+            variants: vec![BlockVariant::AdaLn],
+            schedulers: vec![None],
+            resolutions: vec![DEFAULT_PX],
+            priorities: vec![0],
+            deadline_slack: None,
+            decode_every: 0,
+            prompts: vec![
+                "a red fox in snow".into(),
+                "city skyline at dusk".into(),
+                "an astronaut sketch".into(),
+                "a bowl of fruit".into(),
+            ],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Arrival stamp of the last request (the offered-load horizon).
+    pub fn last_arrival(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival).unwrap_or(0.0)
+    }
+}
+
+/// Builder for a seeded Poisson workload. Each knob is a *mix*: one entry
+/// pins the value, several entries sample uniformly per request.
+pub struct PoissonTrace {
+    seed: u64,
+    n: usize,
+    rate: f64,
+    steps: usize,
+    guidance: f32,
+    variants: Vec<BlockVariant>,
+    schedulers: Vec<Option<SchedulerKind>>,
+    resolutions: Vec<usize>,
+    priorities: Vec<i32>,
+    deadline_slack: Option<f64>,
+    decode_every: usize,
+    prompts: Vec<String>,
+}
+
+impl PoissonTrace {
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn guidance(mut self, guidance: f32) -> Self {
+        self.guidance = guidance;
+        self
+    }
+
+    pub fn variants(mut self, variants: &[BlockVariant]) -> Self {
+        if !variants.is_empty() {
+            self.variants = variants.to_vec();
+        }
+        self
+    }
+
+    pub fn schedulers(mut self, schedulers: &[SchedulerKind]) -> Self {
+        if !schedulers.is_empty() {
+            self.schedulers = schedulers.iter().copied().map(Some).collect();
+        }
+        self
+    }
+
+    pub fn resolutions(mut self, resolutions: &[usize]) -> Self {
+        if !resolutions.is_empty() {
+            self.resolutions = resolutions.to_vec();
+        }
+        self
+    }
+
+    pub fn priorities(mut self, priorities: &[i32]) -> Self {
+        if !priorities.is_empty() {
+            self.priorities = priorities.to_vec();
+        }
+        self
+    }
+
+    /// Give every request a deadline `slack` virtual seconds after arrival.
+    pub fn deadline_slack(mut self, slack: f64) -> Self {
+        self.deadline_slack = Some(slack);
+        self
+    }
+
+    /// Decode every k-th request with the parallel VAE (0 = never).
+    pub fn decode_every(mut self, k: usize) -> Self {
+        self.decode_every = k;
+        self
+    }
+
+    pub fn prompts(mut self, prompts: &[&str]) -> Self {
+        if !prompts.is_empty() {
+            self.prompts = prompts.iter().map(|p| p.to_string()).collect();
+        }
+        self
+    }
+
+    pub fn build(&self) -> Trace {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0;
+        let mut requests = Vec::with_capacity(self.n);
+        for i in 0..self.n as u64 {
+            t += rng.exp(self.rate);
+            let mut r = GenRequest::new(i, rng.pick(&self.prompts).clone())
+                .with_variant(*rng.pick(&self.variants))
+                .with_steps(self.steps)
+                .with_guidance(self.guidance)
+                .with_resolution(*rng.pick(&self.resolutions))
+                .with_priority(*rng.pick(&self.priorities))
+                .with_arrival(t)
+                .with_seed(self.seed.wrapping_add(i));
+            if let Some(k) = *rng.pick(&self.schedulers) {
+                r = r.with_scheduler(k);
+            }
+            if let Some(slack) = self.deadline_slack {
+                r = r.with_deadline(t + slack);
+            }
+            if self.decode_every > 0 && i % self.decode_every as u64 == 0 {
+                r = r.with_decode(true);
+            }
+            requests.push(r);
+        }
+        Trace::new(requests)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_is_deterministic() {
+        let a = Trace::poisson(42, 32, 1.5).steps(2).priorities(&[0, 2]).build();
+        let b = Trace::poisson(42, 32, 1.5).steps(2).priorities(&[0, 2]).build();
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.priority, y.priority);
+        }
+        let c = Trace::poisson(43, 32, 1.5).steps(2).build();
+        assert_ne!(a.requests[0].arrival, c.requests[0].arrival, "seed must matter");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_rate_scaled() {
+        let t = Trace::poisson(7, 200, 2.0).build();
+        let mut prev = 0.0;
+        for r in &t.requests {
+            assert!(r.arrival >= prev);
+            prev = r.arrival;
+        }
+        // 200 arrivals at 2/s should take roughly 100 virtual seconds
+        assert!(t.last_arrival() > 50.0 && t.last_arrival() < 200.0, "{}", t.last_arrival());
+    }
+
+    #[test]
+    fn mixes_and_deadlines_apply() {
+        let t = Trace::poisson(1, 64, 1.0)
+            .variants(&[BlockVariant::AdaLn, BlockVariant::MmDit])
+            .resolutions(&[256, 512])
+            .deadline_slack(3.0)
+            .decode_every(8)
+            .build();
+        assert!(t.requests.iter().any(|r| r.variant == BlockVariant::MmDit));
+        assert!(t.requests.iter().any(|r| r.px == 512));
+        assert!(t.requests.iter().all(|r| r.deadline == Some(r.arrival + 3.0)));
+        assert_eq!(t.requests.iter().filter(|r| r.decode).count(), 8);
+    }
+
+    #[test]
+    fn explicit_trace_sorts_by_arrival() {
+        let t = Trace::new(vec![
+            GenRequest::new(1, "b").with_arrival(5.0),
+            GenRequest::new(0, "a").with_arrival(1.0),
+        ]);
+        assert_eq!(t.requests[0].id, 0);
+        assert_eq!(t.last_arrival(), 5.0);
+    }
+}

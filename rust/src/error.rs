@@ -1,35 +1,65 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the default build
+//! of this crate has zero external dependencies so the tier-1 gate runs
+//! hermetically on stock CI runners. The `Xla` variant only exists under
+//! the `pjrt` feature, which is the one build that links the `xla` crate.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json error: {0}")]
+    #[cfg(feature = "pjrt")]
+    Xla(xla::Error),
+    Io(std::io::Error),
     Json(String),
-
-    #[error("manifest error: {0}")]
     Manifest(String),
-
-    #[error("weights error: {0}")]
     Weights(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("shape error: {0}")]
     Shape(String),
-
-    #[error("comm error: {0}")]
     Comm(String),
-
-    #[error("engine error: {0}")]
     Engine(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Weights(m) => write!(f, "weights error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Comm(m) => write!(f, "comm error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -40,5 +70,18 @@ impl Error {
     }
     pub fn shape(msg: impl Into<String>) -> Self {
         Error::Shape(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_kind() {
+        assert_eq!(Error::config("bad").to_string(), "config error: bad");
+        assert_eq!(Error::shape("dim").to_string(), "shape error: dim");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().starts_with("io error:"));
     }
 }

@@ -39,5 +39,6 @@ pub mod testing;
 pub mod util;
 pub mod vae;
 
+pub use coordinator::{Rejection, Trace};
 pub use error::{Error, Result};
 pub use pipeline::{ParallelPolicy, Pipeline, PipelineBuilder, RoutePlan, ServeReport};

@@ -14,7 +14,7 @@
 use xdit::config::hardware::ClusterSpec;
 use xdit::config::model::{BlockVariant, ModelSpec};
 use xdit::config::parallel::ParallelConfig;
-use xdit::coordinator::GenRequest;
+use xdit::coordinator::{GenRequest, Trace};
 use xdit::diffusion::SchedulerKind;
 use xdit::parallel::driver;
 use xdit::perf::latency::{best_hybrid, predict_latency, serial_latency, Method};
@@ -22,7 +22,6 @@ use xdit::pipeline::{ParallelPolicy, Pipeline};
 use xdit::runtime::Runtime;
 use xdit::util::cli::Args;
 use xdit::util::pgm;
-use xdit::util::rng::Rng;
 
 const USAGE: &str = "xdit <command> [--flags]
 
@@ -34,6 +33,10 @@ commands:
             --out image.ppm
   serve     --gpus 8 --requests 16 --rate 0.5 --steps 4 --px 256
             --cluster l40x8 [--scheduler ddim|dpm|flow_match]
+            [--capacity 64 --max-batch 4 --deadline-slack 10 --seed 0]
+            (replays a deterministic Poisson trace through the
+             continuous-batching scheduler; runs on the simulated
+             backend when artifacts are absent)
   route     --model pixart --cluster l40x16 --gpus 16 --px 2048
   figures   --which fig8|fig14|table1|table3|memory [--px 1024]
   inspect   [--artifacts artifacts]
@@ -154,46 +157,45 @@ fn generate(args: &Args) -> xdit::Result<()> {
 }
 
 fn serve(args: &Args) -> xdit::Result<()> {
-    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    // the serving demo runs anywhere: real artifacts when built, the
+    // hermetic simulator otherwise
+    let rt = Runtime::load_or_simulated(args.str_or("artifacts", "artifacts"))?;
     let n = args.usize_or("requests", 16)?;
     let rate = args.f64_or("rate", 0.5)?;
-    let steps = args.usize_or("steps", 4)?;
-    let px = args.usize_or("px", 256)?;
     let variant = variant_of(args.str_or("model", "tiny-adaln"))?;
-    let scheduler = if args.has("scheduler") {
-        Some(SchedulerKind::parse(args.str_or("scheduler", ""))?)
-    } else {
-        None
-    };
 
     let mut pipe = Pipeline::builder()
         .runtime(&rt)
         .cluster(cluster_of(args)?)
         .world(args.usize_or("gpus", 8)?)
+        .max_batch(args.usize_or("max-batch", 4)?)
+        .queue_capacity(args.usize_or("capacity", 64)?)
         .build()?;
 
-    let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
-    let mut t = 0.0;
-    let prompts =
-        ["a red fox in snow", "city skyline at dusk", "an astronaut sketch", "a bowl of fruit"];
-    let mut window = Vec::new();
-    for i in 0..n as u64 {
-        t += rng.exp(rate);
-        let mut r = GenRequest::new(i, *rng.pick(&prompts))
-            .with_variant(variant)
-            .with_steps(steps)
-            .with_resolution(px)
-            .with_arrival(t);
-        r.scheduler = scheduler;
-        window.push(r);
+    let mut trace = Trace::poisson(args.usize_or("seed", 0)? as u64, n, rate)
+        .steps(args.usize_or("steps", 4)?)
+        .variants(&[variant])
+        .resolutions(&[args.usize_or("px", 256)?])
+        .priorities(&[0, 0, 0, 1]);
+    if args.has("scheduler") {
+        trace = trace.schedulers(&[SchedulerKind::parse(args.str_or("scheduler", ""))?]);
     }
+    if args.has("deadline-slack") {
+        trace = trace.deadline_slack(args.f64_or("deadline-slack", 10.0)?);
+    }
+    let trace = trace.build();
+
     let t0 = std::time::Instant::now();
-    let report = pipe.serve(window)?;
+    let report = pipe.serve_trace(&trace)?;
     println!("{}", report.summary());
+    for rej in &report.rejected {
+        println!("  {rej}");
+    }
     println!(
-        "(host wall time {:?} for {} generations)",
+        "(host wall time {:?} for {} generations, backend {})",
         t0.elapsed(),
-        report.responses.len()
+        report.responses.len(),
+        rt.backend_name()
     );
     Ok(())
 }

@@ -1,22 +1,27 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! (HLO text + manifest.json + weights.bin) and executes them on the CPU
-//! PJRT client from the coordinator's hot path.
+//! The execution runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + manifest.json + weights.bin) and
+//! executes entrypoints behind the [`ExecBackend`] seam.
 //!
-//! Design notes:
-//! * HLO **text** is the interchange format (xla_extension 0.5.1 rejects
-//!   jax>=0.5 serialized protos — 64-bit instruction ids).
-//! * Weights are uploaded once as resident `PjRtBuffer`s and reused across
-//!   every call (`execute_b`), so the per-call marshalling cost is only the
-//!   activation/KV data.
-//! * The `xla` crate's client is `Rc`-based (not `Send`): all PJRT execution
-//!   is owned by the leader thread. Simulated devices are scheduled by the
-//!   deterministic event loop in `comm`/`parallel`, not OS threads — on this
-//!   single-core testbed that is also the faster choice.
+//! Backends:
+//! * `pjrt` (feature `pjrt`) — the real thing: HLO **text** is the
+//!   interchange format (xla_extension 0.5.1 rejects jax>=0.5 serialized
+//!   protos — 64-bit instruction ids); weights are uploaded once as
+//!   resident `PjRtBuffer`s and reused across every call (`execute_b`), so
+//!   the per-call marshalling cost is only the activation/KV data. The
+//!   `xla` client is `Rc`-based (not `Send`): all PJRT execution is owned
+//!   by the leader thread.
+//! * `sim` (default) — hermetic host simulation with the contract output
+//!   shapes and deterministic pseudo-activations; `Runtime::simulated()`
+//!   needs no artifacts at all. This is what stock CI runners execute.
 
 pub mod artifact;
 pub mod executor;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod sim;
 pub mod weights;
 
 pub use artifact::{EntryPoint, Manifest, WeightRef};
-pub use executor::{ArgValue, Runtime};
+pub use executor::{ArgValue, ExecBackend, ExecStats, Runtime};
+pub use sim::SimBackend;
 pub use weights::HostWeights;

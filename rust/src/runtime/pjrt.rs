@@ -1,0 +1,138 @@
+//! The PJRT execution backend (feature `pjrt`): compile cache + resident
+//! weight buffers + marshalling over the `xla` crate's CPU client.
+//!
+//! The client is `Rc`-based (not `Send`); all PJRT execution stays on the
+//! leader thread, matching the coordinator's leader-pinned event loop.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::runtime::artifact::{EntryPoint, Manifest};
+use crate::runtime::executor::{ArgValue, ExecBackend, ExecStats};
+use crate::runtime::weights::HostWeights;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    total_layers: usize,
+    host_weights: Rc<HostWeights>,
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    weight_bufs: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
+}
+
+impl PjrtBackend {
+    pub fn new(manifest: &Manifest, host_weights: Rc<HostWeights>) -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            client: xla::PjRtClient::cpu()?,
+            dir: manifest.dir.clone(),
+            total_layers: manifest.model_dim("layers").unwrap_or(8),
+            host_weights,
+            execs: RefCell::new(HashMap::new()),
+            weight_bufs: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Get (or compile) the executable for an entrypoint.
+    fn executable(&self, entry: &EntryPoint) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.borrow().get(&entry.name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.execs.borrow_mut().insert(entry.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Get (or upload) the resident device buffer for a weight tensor.
+    fn weight_buffer(&self, name: &str, stats: &mut ExecStats) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(b) = self.weight_bufs.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let t = self.host_weights.get(name)?;
+        let buf = self.client.buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)?;
+        let rc = Rc::new(buf);
+        self.weight_bufs.borrow_mut().insert(name.to_string(), rc.clone());
+        stats.weight_uploads += 1;
+        Ok(rc)
+    }
+
+    fn upload_arg(&self, a: &ArgValue<'_>) -> Result<xla::PjRtBuffer> {
+        match a {
+            ArgValue::F32(t) => {
+                Ok(self.client.buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)?)
+            }
+            ArgValue::I32(v) => Ok(self.client.buffer_from_host_buffer::<i32>(&[*v], &[], None)?),
+        }
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn requires_manifest(&self) -> bool {
+        true
+    }
+
+    fn execute(
+        &self,
+        entry_name: &str,
+        entry: Option<&EntryPoint>,
+        stage: usize,
+        data: &[ArgValue<'_>],
+        stats: &mut ExecStats,
+    ) -> Result<Vec<Tensor>> {
+        let entry = entry.ok_or_else(|| {
+            Error::Manifest(format!("entrypoint '{entry_name}' not in manifest"))
+        })?;
+        let exe = self.executable(entry)?;
+
+        let t0 = std::time::Instant::now();
+        let mut args: Vec<Rc<xla::PjRtBuffer>> =
+            Vec::with_capacity(data.len() + entry.weights.len());
+        for a in data {
+            args.push(Rc::new(self.upload_arg(a)?));
+        }
+        for wr in &entry.weights {
+            let name = wr.resolve(stage, entry.layers_per_stage, self.total_layers);
+            args.push(self.weight_buffer(&name, stats)?);
+        }
+        let marshal = t0.elapsed().as_nanos();
+
+        let t1 = std::time::Instant::now();
+        let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| a.as_ref()).collect();
+        let result = exe.execute_b(&arg_refs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let shape = p.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let v = p.to_vec::<f32>()?;
+            out.push(Tensor::new(dims, v)?);
+        }
+        let exec = t1.elapsed().as_nanos();
+
+        stats.marshal_ns += marshal;
+        stats.exec_ns += exec;
+        Ok(out)
+    }
+
+    fn warm(&self, entry: &EntryPoint) -> Result<()> {
+        self.executable(entry)?;
+        Ok(())
+    }
+
+    fn compiled_count(&self) -> usize {
+        self.execs.borrow().len()
+    }
+}

@@ -1,7 +1,8 @@
 //! Infrastructure utilities: JSON, RNG, image output, CLI parsing, timing.
 //!
-//! The offline crate registry only ships the `xla` dependency closure, so
-//! serde/clap/criterion/rand are hand-rolled here (see DESIGN.md §2).
+//! The default build is dependency-free (only the optional `pjrt` feature
+//! pulls in the vendored `xla` crate), so serde/clap/criterion/rand are
+//! hand-rolled here (see DESIGN.md).
 
 pub mod bench;
 pub mod cli;
