@@ -10,7 +10,8 @@ fn main() {
     let c = l40_cluster(2);
     println!("{}", scalability_figure("Fig 8", &m, &c, &[1024, 2048, 4096], 20, &SINGLE_METHODS));
     let s = bench("fig08 series generation", || {
-        std::hint::black_box(scalability_figure("Fig 8", &m, &c, &[1024, 2048, 4096], 20, &SINGLE_METHODS));
+        let fig = scalability_figure("Fig 8", &m, &c, &[1024, 2048, 4096], 20, &SINGLE_METHODS);
+        std::hint::black_box(fig);
     });
     eprintln!("{}", s.report());
 }

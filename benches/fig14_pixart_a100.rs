@@ -5,5 +5,6 @@ use xdit::perf::figures::{scalability_figure, SINGLE_METHODS};
 
 fn main() {
     let m = ModelSpec::by_name("pixart").unwrap();
-    println!("{}", scalability_figure("Fig 14", &m, &a100_node(), &[1024, 2048, 4096], 20, &SINGLE_METHODS));
+    let c = a100_node();
+    println!("{}", scalability_figure("Fig 14", &m, &c, &[1024, 2048, 4096], 20, &SINGLE_METHODS));
 }

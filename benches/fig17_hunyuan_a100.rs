@@ -12,8 +12,14 @@ fn main() {
     println!("{}", scalability_figure("Fig 17", &m, &c, &[1024, 2048], 50, &methods));
     // the skip penalty, explicitly:
     for px in [1024usize, 2048] {
-        let pf = predict_latency(&m, px, &c, Method::PipeFusion, &Method::PipeFusion.single_config(8), 50);
-        let ul = predict_latency(&m, px, &c, Method::SpUlysses, &Method::SpUlysses.single_config(8), 50);
-        println!("{}px: pipefusion/ulysses latency ratio = {:.2} (skip-connection P2P penalty)", px, pf.total / ul.total);
+        let pf_pc = Method::PipeFusion.single_config(8);
+        let pf = predict_latency(&m, px, &c, Method::PipeFusion, &pf_pc, 50);
+        let ul_pc = Method::SpUlysses.single_config(8);
+        let ul = predict_latency(&m, px, &c, Method::SpUlysses, &ul_pc, 50);
+        println!(
+            "{}px: pipefusion/ulysses latency ratio = {:.2} (skip-connection P2P penalty)",
+            px,
+            pf.total / ul.total
+        );
     }
 }

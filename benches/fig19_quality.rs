@@ -51,7 +51,11 @@ fn main() {
         ("usp(2x2)", Method::Sp, ParallelConfig::new(1, 1, 2, 2)),
         ("pipefusion=2,M=4", Method::PipeFusion, ParallelConfig::new(1, 2, 1, 1).with_patches(4)),
         ("pp=2,sp=2 (hybrid)", Method::Hybrid, ParallelConfig::new(1, 2, 2, 1).with_patches(2)),
-        ("pp=2,sp=2 standard-sp", Method::HybridStandardSp, ParallelConfig::new(1, 2, 2, 1).with_patches(2)),
+        (
+            "pp=2,sp=2 standard-sp",
+            Method::HybridStandardSp,
+            ParallelConfig::new(1, 2, 2, 1).with_patches(2),
+        ),
         ("distrifusion n=4", Method::DistriFusion, ParallelConfig::new(1, 1, 1, 4).with_patches(4)),
     ] {
         let mut pipe = Pipeline::builder()

@@ -1,0 +1,67 @@
+//! Planner bench: cost-model auto-planner vs the §5.2.4 paper heuristic
+//! vs the exhaustive per-figure best-hybrid search, swept over the
+//! figs 8–17 (model, cluster, world) grid — the cells the golden-plan CI
+//! snapshot pins. Asserts the acceptance bound (planner never
+//! predicted-slower than the heuristic, strictly faster somewhere) and
+//! times a full-grid planning pass.
+use xdit::coordinator::planner::{paper_grid, Planner, RoutePolicy, GRID_WORLDS};
+use xdit::perf::latency::best_hybrid;
+use xdit::util::bench::bench;
+
+fn main() {
+    let cost = Planner::default();
+    let paper = Planner::default().with_policy(RoutePolicy::PaperHeuristic);
+    println!("# planner vs heuristic vs exhaustive, figs 8-17 grid");
+    println!(
+        "{:<11} {:<7} {:>4} {:>11} {:>9} {:>10}  chosen config",
+        "model", "cluster", "gpus", "planner(s)", "paper(s)", "exhaust(s)"
+    );
+    let mut strictly_better = 0usize;
+    let mut cells = 0usize;
+    for (m, px, cluster) in paper_grid() {
+        for world in GRID_WORLDS {
+            if world > cluster.n_gpus {
+                continue;
+            }
+            let p = cost.plan(&m, px, &cluster, world);
+            let h = paper.plan(&m, px, &cluster, world);
+            let (_, exhaustive) = best_hybrid(&m, px, &cluster, world, p.steps);
+            cells += 1;
+            if p.predicted.total < h.predicted.total - 1e-9 {
+                strictly_better += 1;
+            }
+            // the bound's precondition: the heuristic's pick fits memory
+            // (otherwise pruning may rightly choose a slower feasible plan)
+            assert!(
+                !h.fits || p.predicted.total <= h.predicted.total + 1e-9,
+                "planner predicted-slower than the heuristic: {} on {} w={world}",
+                m.name,
+                cluster.name
+            );
+            println!(
+                "{:<11} {:<7} {:>4} {:>11.2} {:>9.2} {:>10.2}  [{}]",
+                m.name,
+                cluster.name,
+                world,
+                p.predicted.total,
+                h.predicted.total,
+                exhaustive.total,
+                p.config.describe()
+            );
+        }
+    }
+    println!("planner strictly beat the heuristic in {strictly_better}/{cells} cells");
+    assert!(strictly_better >= 1, "planner must strictly win somewhere on the grid");
+
+    let s = bench("plan the full figs 8-17 grid", || {
+        for (m, px, cluster) in paper_grid() {
+            for world in GRID_WORLDS {
+                if world > cluster.n_gpus {
+                    continue;
+                }
+                std::hint::black_box(Planner::default().plan(&m, px, &cluster, world));
+            }
+        }
+    });
+    eprintln!("{}", s.report());
+}

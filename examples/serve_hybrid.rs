@@ -2,9 +2,11 @@
 //! 8-device cluster serves a Poisson stream of generation requests through
 //! the full continuous-batching stack — bounded request queue with
 //! backpressure, per-tick compatibility batch re-formation (priorities +
-//! aging + deadlines), the §5.2.4 router picking a hybrid parallel config,
-//! the denoising loop, parallel VAE decode — and reports the queue-delay
-//! vs execution split, p50/p95/p99 latency and batch occupancy.
+//! aging + deadlines), the cost-model auto-planner picking a hybrid
+//! parallel config per batch (with deadline admission: a request whose
+//! cheapest plan already predicts an SLO miss is rejected at submit), the
+//! denoising loop, parallel VAE decode — and reports the queue-delay vs
+//! execution split, p50/p95/p99 latency and batch occupancy.
 //! Runs on the real AOT HLO executables when `artifacts/` is built, and on
 //! the hermetic simulated backend otherwise.
 //! Run: cargo run --release --example serve_hybrid
@@ -91,6 +93,7 @@ fn main() -> xdit::Result<()> {
         .world(8)
         .max_batch(4)
         .queue_capacity(16)
+        .deadline_admission(true) // reject plans that cannot make their SLO
         .build()?;
     let trace = Trace::new(collected);
     let t0 = std::time::Instant::now();
@@ -100,11 +103,13 @@ fn main() -> xdit::Result<()> {
     println!("\nper-request results:");
     for r in &report.responses {
         println!(
-            "  req {:>4}: config=[{}] sched={} model {:.3}s, e2e latency {:.3}s{}",
+            "  req {:>4}: config=[{}] sched={} model {:.3}s (plan {:.2e}s), \
+             e2e latency {:.3}s{}",
             r.id,
             r.parallel_config,
             r.scheduler,
             r.model_seconds,
+            r.predicted_seconds,
             r.latency,
             if r.image.is_some() { " +image" } else { "" }
         );

@@ -117,7 +117,11 @@ impl<'a> Communicator<'a> {
             return Err(Error::Comm("all_to_all: matrix shape mismatch".into()));
         }
         // per-rank payload: everything it sends to others
-        let bytes: usize = mat[0].iter().enumerate().map(|(j, t)| if j == 0 { 0 } else { t.size_bytes() }).sum();
+        let bytes: usize = mat[0]
+            .iter()
+            .enumerate()
+            .map(|(j, t)| if j == 0 { 0 } else { t.size_bytes() })
+            .sum();
         let t = self.cluster.collective_time(group, bytes as f64, 1.0);
         let start = self.clocks.sync(group);
         for &d in group {

@@ -6,10 +6,13 @@
 //! instead of buffering unboundedly. Every [`Engine::tick`] the waiting
 //! set is re-grouped by the compatibility [`Batcher`] and the single most
 //! urgent batch (priority + aging, deadlines, arrival order) is routed to
-//! a hybrid parallel config (paper §5.2.4 policy), run through the
+//! a hybrid parallel config by the cost-model auto-planner (or the §5.2.4
+//! heuristic under `RoutePolicy::PaperHeuristic`), run through the
 //! denoising loop, optionally decoded with the parallel VAE, and recorded
 //! in [`Metrics`]. Late arrivals join the *next* batch of their group —
-//! batches are formed per tick, never ahead of time.
+//! batches are formed per tick, never ahead of time. With
+//! `deadline_admission` set, `submit` additionally rejects deadlined
+//! requests whose cheapest feasible plan already predicts a miss.
 //!
 //! This is an *internal* layer: user code enters through
 //! `crate::pipeline::Pipeline`, which owns an `Engine` and configures its
@@ -32,9 +35,9 @@ use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::planner::{Plan, Planner, RoutePolicy};
 use crate::coordinator::queue::{PushError, RequestQueue};
 use crate::coordinator::request::{GenRequest, GenResponse, RequestId};
-use crate::coordinator::router::route;
 use crate::diffusion::SchedulerKind;
 use crate::parallel::{driver, GenParams, Session};
 use crate::runtime::Runtime;
@@ -64,8 +67,16 @@ pub struct Engine<'a> {
     pub world: usize,
     pub batcher: Batcher,
     pub metrics: Metrics,
-    /// Override the router (None = paper policy, resolution-aware).
+    /// Override the auto-planner (None = planner policy, resolution-aware).
     pub force_config: Option<ParallelConfig>,
+    /// Routing policy for un-forced batches (default: cost-model planner).
+    pub route_policy: RoutePolicy,
+    /// Per-GPU HBM budget the planner prunes with (None = cluster GPU).
+    pub memory_cap_bytes: Option<f64>,
+    /// When set, `submit` rejects a deadlined request whose *cheapest
+    /// feasible plan* already predicts a miss — admission control on the
+    /// cost model instead of serving work that cannot make it.
+    pub deadline_admission: bool,
     /// Override the strategy implied by the config (None = `pick_method`).
     pub force_method: Option<driver::Method>,
     /// Pipeline-level scheduler default; per-request overrides win, the
@@ -93,6 +104,9 @@ impl<'a> Engine<'a> {
             batcher: Batcher::new(4),
             metrics: Metrics::default(),
             force_config: None,
+            route_policy: RoutePolicy::default(),
+            memory_cap_bytes: None,
+            deadline_admission: false,
             force_method: None,
             default_scheduler: None,
             queue: RequestQueue::new(DEFAULT_QUEUE_CAPACITY),
@@ -120,6 +134,12 @@ impl<'a> Engine<'a> {
     /// live submit/tick loop cannot grow `waiting` without bound.
     /// Rejections are counted.
     pub fn submit(&mut self, req: GenRequest) -> std::result::Result<(), Rejection> {
+        if self.deadline_admission {
+            if let Some(rej) = self.deadline_rejection(&req) {
+                self.metrics.rejected += 1;
+                return Err(rej);
+            }
+        }
         if self.pending() >= self.queue.capacity {
             self.metrics.rejected += 1;
             return Err(Rejection {
@@ -152,6 +172,51 @@ impl<'a> Engine<'a> {
     /// Requests admitted but not yet completed.
     pub fn pending(&self) -> usize {
         self.waiting.len() + self.queue.len()
+    }
+
+    /// The plan the engine would run a request under: the forced config
+    /// scored, or the policy planner's best — always for the request's own
+    /// resolution and step count. A forced method re-prices the plan with
+    /// that strategy's closed form (mirroring `Pipeline::plan`), so
+    /// `predicted_seconds` and deadline admission describe what will
+    /// actually run, not the config's best case.
+    pub fn plan_for(&self, spec: &ModelSpec, px: usize, steps: usize) -> Plan {
+        let planner = Planner {
+            policy: self.route_policy,
+            steps: Some(steps),
+            memory_cap_bytes: self.memory_cap_bytes,
+        };
+        let mut plan = match self.force_config {
+            Some(pc) => planner.score(spec, px, &self.cluster, &pc),
+            None => planner.plan(spec, px, &self.cluster, self.world),
+        };
+        if let Some(method) = self.force_method {
+            planner.reprice_for_method(&mut plan, method, spec, &self.cluster);
+        }
+        plan
+    }
+
+    /// Deadline admission: reject iff even an immediate launch of the
+    /// cheapest feasible plan would predict a miss (`None` = admissible).
+    fn deadline_rejection(&self, req: &GenRequest) -> Option<Rejection> {
+        let deadline = req.deadline?;
+        let spec = ModelSpec::for_variant(req.variant).ok()?;
+        let plan = self.plan_for(&spec, req.px, req.steps);
+        let finish = self.now.max(req.arrival) + plan.predicted.total;
+        if finish > deadline {
+            return Some(Rejection {
+                id: req.id,
+                reason: format!(
+                    "deadline infeasible: cheapest plan [{}] predicts {:.3e}s, \
+                     finishing at {:.3}s > deadline {:.3}s",
+                    plan.config.describe(),
+                    plan.predicted.total,
+                    finish,
+                    deadline
+                ),
+            });
+        }
+        None
     }
 
     /// One scheduler tick: drain the queue into the waiting set, re-form
@@ -202,11 +267,10 @@ impl<'a> Engine<'a> {
         let rt = self.rt;
         let first = &batch.requests[0];
         let spec = ModelSpec::for_variant(first.variant)?;
-        // the routed sequence length follows the requested resolution
-        let s_img = spec.seq_len(first.px);
-        let pc = self
-            .force_config
-            .unwrap_or_else(|| route(&spec, s_img, &self.cluster, self.world));
+        // the plan follows the requested resolution and step count (the
+        // batch key guarantees they are uniform across the batch)
+        let plan = self.plan_for(&spec, first.px, first.steps);
+        let pc = plan.config;
         let method = self.force_method.unwrap_or_else(|| pick_method(&pc));
 
         // one session per batch: the whole batch shares the mesh and runs
@@ -257,6 +321,7 @@ impl<'a> Engine<'a> {
                 latency,
                 comm_bytes,
                 parallel_config: pc.describe(),
+                predicted_seconds: plan.predicted.total,
                 method: r.method,
                 scheduler: scheduler.key().to_string(),
                 px: req.px,
@@ -441,6 +506,50 @@ mod tests {
         r.deadline = Some(1e9);
         eng.serve(vec![r]).unwrap();
         assert_eq!(eng.metrics.deadline_misses, 1);
+    }
+
+    #[test]
+    fn deadline_admission_rejects_only_infeasible_requests() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        eng.deadline_admission = true;
+        // impossible deadline: rejected at submit time, with the plan in
+        // the reason so callers see *why* it could not be met
+        let mut r = GenRequest::new(0, "too tight");
+        r.steps = 2;
+        r.deadline = Some(1e-15);
+        let rej = eng.submit(r).unwrap_err();
+        assert!(rej.reason.contains("deadline infeasible"), "{}", rej.reason);
+        assert_eq!(eng.metrics.rejected, 1);
+        assert_eq!(eng.pending(), 0);
+        // generous deadline and no deadline are both admissible
+        let mut ok = GenRequest::new(1, "fine");
+        ok.steps = 2;
+        ok.deadline = Some(1e9);
+        eng.submit(ok).unwrap();
+        eng.submit(GenRequest::new(2, "no deadline")).unwrap();
+        assert_eq!(eng.pending(), 2);
+        // admission stays opt-in: the default engine serves hopeless
+        // deadlines and only counts the miss
+        let mut off = Engine::new(&rt, l40_cluster(1), 4);
+        let mut hopeless = GenRequest::new(3, "tight but admitted");
+        hopeless.deadline = Some(1e-15);
+        off.submit(hopeless).unwrap();
+    }
+
+    #[test]
+    fn batch_routing_follows_the_planner() {
+        use crate::config::model::BlockVariant;
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        let mut r = GenRequest::new(0, "planned");
+        r.steps = 2;
+        let out = eng.serve(vec![r]).unwrap();
+        let spec = ModelSpec::for_variant(BlockVariant::AdaLn).unwrap();
+        let plan = eng.plan_for(&spec, 256, 2);
+        assert_eq!(out[0].parallel_config, plan.config.describe());
+        assert_eq!(out[0].predicted_seconds, plan.predicted.total);
+        assert!(out[0].predicted_seconds > 0.0);
     }
 
     #[test]

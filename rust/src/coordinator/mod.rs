@@ -1,8 +1,9 @@
 //! The serving coordinator: bounded request queue with backpressure, the
 //! compatibility batcher with continuous per-tick batch re-formation
-//! (priorities, deadlines, aging), the §5.2.4 routing policy (pick the
-//! hybrid parallel config for the hardware + model at hand), the
-//! generation engine (`submit`/`tick` admission path + virtual-time
+//! (priorities, deadlines, aging), the cost-model auto-[`planner`] and the
+//! routing policy layer over it (pick the hybrid parallel config for the
+//! hardware + model at hand; §5.2.4 heuristic kept as fallback/oracle),
+//! the generation engine (`submit`/`tick` admission path + virtual-time
 //! accounting), deterministic arrival [`Trace`]s, and metrics.
 //!
 //! These are the *internal* serving layers; user code enters through the
@@ -19,6 +20,7 @@
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod planner;
 pub mod queue;
 pub mod request;
 pub mod router;
@@ -27,7 +29,8 @@ pub mod trace;
 pub use batcher::{Batch, Batcher};
 pub use engine::{Engine, Rejection};
 pub use metrics::Metrics;
+pub use planner::{Plan, Planner, RoutePolicy};
 pub use queue::RequestQueue;
 pub use request::{GenRequest, GenResponse, RequestId};
-pub use router::route;
+pub use router::{paper_heuristic, route, route_with_policy};
 pub use trace::Trace;

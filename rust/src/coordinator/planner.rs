@@ -1,0 +1,598 @@
+//! Cost-model-driven hybrid-parallelism auto-planner.
+//!
+//! The §5.2.4 router used to pick configs with a fixed bandwidth-priority
+//! order that never consulted the analytic models in `perf/`. The paper's
+//! own data (Figs 8–17) shows the crossover points between PipeFusion and
+//! sequence parallelism move with (model, resolution, cluster, world) —
+//! so the planner does what the paper's per-figure "best hybrid" series
+//! does, per request:
+//!
+//! 1. **enumerate** every `ParallelConfig` that `validate` admits for the
+//!    world size (including the M = 2·pipefusion patch variants);
+//! 2. **prune** candidates whose per-device footprint
+//!    (`perf::memory_model::config_memory`) exceeds the cluster's HBM
+//!    budget (or an explicit `--memory-cap-gb`);
+//! 3. **score** the survivors with the closed-form step-time model
+//!    (`perf::latency::predict_latency`, hybrid row) and the Table-1
+//!    communication composition (`perf::comm_model::config_comm_bytes`);
+//! 4. return a ranked [`Plan`] — config + predicted latency / comm bytes /
+//!    peak memory + a human-readable "why".
+//!
+//! `coordinator::router::route` is now a thin policy over this module;
+//! the old greedy heuristic survives as [`RoutePolicy::PaperHeuristic`]
+//! (the fallback and the test oracle). By construction the cost-model
+//! policy is never predicted-slower than the heuristic on any cell where
+//! the heuristic's pick fits memory: the heuristic's config is in the
+//! enumeration and both are scored by the same model.
+
+use crate::config::hardware::ClusterSpec;
+use crate::config::model::ModelSpec;
+use crate::config::parallel::ParallelConfig;
+use crate::coordinator::engine::pick_method;
+use crate::coordinator::router::paper_heuristic;
+use crate::parallel::driver;
+use crate::perf::comm_model::config_comm_bytes;
+use crate::perf::latency::{
+    predict_latency, serial_latency, LatencyBreakdown, Method as PerfMethod,
+};
+use crate::perf::memory_model::{config_memory, HBM_USABLE_FRACTION};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// How `route`/`Pipeline` pick the hybrid parallel configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Argmin of the analytic cost model over every valid config,
+    /// memory-pruned (the default).
+    #[default]
+    CostModel,
+    /// The §5.2.4 bandwidth-priority greedy heuristic, kept as the
+    /// fallback and as the oracle the planner is tested against.
+    PaperHeuristic,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        Ok(match s {
+            "cost" | "cost-model" | "planner" => RoutePolicy::CostModel,
+            "paper" | "heuristic" => RoutePolicy::PaperHeuristic,
+            _ => {
+                return Err(Error::config(format!(
+                    "unknown route policy '{s}' (cost|paper)"
+                )))
+            }
+        })
+    }
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            RoutePolicy::CostModel => "cost",
+            RoutePolicy::PaperHeuristic => "paper",
+        }
+    }
+}
+
+/// A scored routing decision: the config plus everything the cost model
+/// knows about it. This is what `Pipeline::plan`, the `route` CLI and the
+/// serving admission check all consume.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub model: String,
+    pub px: usize,
+    /// Image-token sequence length the decision was made for.
+    pub s_img: usize,
+    /// Steps the prediction assumes.
+    pub steps: usize,
+    pub world: usize,
+    pub cluster: String,
+    pub policy: RoutePolicy,
+    pub config: ParallelConfig,
+    /// Strategy the engine would run for this config.
+    pub method: driver::Method,
+    pub predicted: LatencyBreakdown,
+    pub serial_seconds: f64,
+    /// Per-device bytes moved over the whole generation (steps × the
+    /// per-step Table-1 composition).
+    pub comm_bytes: f64,
+    /// Predicted peak per-GPU memory (bytes).
+    pub peak_memory_bytes: f64,
+    /// Whether the config fits the memory budget the planner used. A plan
+    /// with `fits == false` is the least-bad choice of an infeasible set.
+    pub fits: bool,
+    /// Candidates enumerated / pruned by memory (cost-model policy only).
+    pub candidates: usize,
+    pub pruned: usize,
+    /// Human-readable reason this config won.
+    pub why: String,
+}
+
+impl Plan {
+    pub fn speedup(&self) -> f64 {
+        if self.predicted.total > 0.0 {
+            self.serial_seconds / self.predicted.total
+        } else {
+            0.0
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} @ {}px ({} tokens): [{}] via {} — predicted {:.2}s \
+             ({:.2}s compute, {:.2}s exposed comm) vs serial {:.2}s ({:.1}x), \
+             comm {:.2} GB/device, peak mem {:.1} GB{}\n  why: {}",
+            self.model,
+            self.px,
+            self.s_img,
+            self.config.describe(),
+            self.method.key(),
+            self.predicted.total,
+            self.predicted.compute,
+            self.predicted.comm_exposed,
+            self.serial_seconds,
+            self.speedup(),
+            self.comm_bytes / 1e9,
+            self.peak_memory_bytes / 1e9,
+            if self.fits { "" } else { " [OVER MEMORY BUDGET]" },
+            self.why,
+        )
+    }
+
+    /// Canonical JSON form (sorted keys, integer metrics) — the unit of
+    /// the golden-plan CI snapshot. Floats are rounded to integral units
+    /// (µs, bytes) so the file is byte-stable and reviewable.
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("cluster".into(), Json::Str(self.cluster.clone()));
+        o.insert("world".into(), Json::Num(self.world as f64));
+        o.insert("px".into(), Json::Num(self.px as f64));
+        o.insert("policy".into(), Json::Str(self.policy.key().into()));
+        o.insert("config".into(), Json::Str(self.config.describe()));
+        o.insert("method".into(), Json::Str(self.method.key().into()));
+        o.insert("predicted_us".into(), Json::Num((self.predicted.total * 1e6).round()));
+        o.insert("comm_bytes".into(), Json::Num(self.comm_bytes.round()));
+        o.insert("peak_mem_bytes".into(), Json::Num(self.peak_memory_bytes.round()));
+        o.insert("fits".into(), Json::Bool(self.fits));
+        Json::Obj(o)
+    }
+}
+
+/// The auto-planner. All fields are optional policy knobs; the zero value
+/// (`Planner::default()`) is the engine's production configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Planner {
+    pub policy: RoutePolicy,
+    /// Diffusion steps to predict for (`None` = the model's benchmark
+    /// step count).
+    pub steps: Option<usize>,
+    /// Per-GPU HBM budget in bytes (`None` = the cluster's GPU capacity).
+    pub memory_cap_bytes: Option<f64>,
+}
+
+impl Planner {
+    pub fn with_policy(mut self, policy: RoutePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_steps(mut self, steps: usize) -> Self {
+        self.steps = Some(steps);
+        self
+    }
+
+    pub fn with_memory_cap_gb(mut self, gb: f64) -> Self {
+        self.memory_cap_bytes = Some(gb * 1e9);
+        self
+    }
+
+    fn steps_for(&self, m: &ModelSpec) -> usize {
+        self.steps.unwrap_or(m.default_steps)
+    }
+
+    fn cap_for(&self, cluster: &ClusterSpec) -> f64 {
+        self.memory_cap_bytes.unwrap_or(cluster.gpu.mem_bytes)
+    }
+
+    /// Score one explicit config (no enumeration): the building block of
+    /// both policies and of `ParallelPolicy::Explicit` plans.
+    pub fn score(
+        &self,
+        m: &ModelSpec,
+        px: usize,
+        cluster: &ClusterSpec,
+        pc: &ParallelConfig,
+    ) -> Plan {
+        let steps = self.steps_for(m);
+        let predicted = predict_latency(m, px, cluster, PerfMethod::Hybrid, pc, steps);
+        let mem = config_memory(m, px, pc).total();
+        Plan {
+            model: m.name.clone(),
+            px,
+            s_img: m.seq_len(px),
+            steps,
+            world: pc.world(),
+            cluster: cluster.name.clone(),
+            policy: self.policy,
+            config: *pc,
+            method: pick_method(pc),
+            predicted,
+            serial_seconds: serial_latency(m, px, cluster, steps),
+            comm_bytes: steps as f64 * config_comm_bytes(m, px, pc),
+            peak_memory_bytes: mem,
+            fits: mem < self.cap_for(cluster) * HBM_USABLE_FRACTION,
+            candidates: 0,
+            pruned: 0,
+            why: String::new(),
+        }
+    }
+
+    /// Every candidate for the world size, scored and ranked: feasible
+    /// plans first (ascending predicted latency), then the memory-pruned
+    /// ones (also ascending) so a caller can still inspect what was cut.
+    /// Ties keep enumeration order (the sort is stable), which makes the
+    /// ranking — and the golden snapshot built on it — deterministic.
+    pub fn rank(
+        &self,
+        m: &ModelSpec,
+        px: usize,
+        cluster: &ClusterSpec,
+        world: usize,
+    ) -> Vec<Plan> {
+        let s_img = m.seq_len(px);
+        let mut plans: Vec<Plan> = ParallelConfig::enumerate(world, m, s_img)
+            .iter()
+            .map(|pc| self.score(m, px, cluster, pc))
+            .collect();
+        let candidates = plans.len();
+        let pruned = plans.iter().filter(|p| !p.fits).count();
+        plans.sort_by(|a, b| {
+            // total_cmp: even a NaN from a degenerate cost-model edit
+            // orders deterministically instead of panicking the sort
+            b.fits.cmp(&a.fits).then(a.predicted.total.total_cmp(&b.predicted.total))
+        });
+        for p in &mut plans {
+            p.candidates = candidates;
+            p.pruned = pruned;
+        }
+        plans
+    }
+
+    /// The routing decision: best plan under this planner's policy. Always
+    /// returns a config that `validate` admits; when memory pruning
+    /// rejects *every* candidate the least-bad plan is returned with
+    /// `fits == false` (serving admission can then refuse the request).
+    pub fn plan(&self, m: &ModelSpec, px: usize, cluster: &ClusterSpec, world: usize) -> Plan {
+        let heuristic_pc = paper_heuristic(m, px, cluster, world);
+        if self.policy == RoutePolicy::PaperHeuristic {
+            let mut plan = self.score(m, px, cluster, &heuristic_pc);
+            plan.why = format!(
+                "paper §5.2.4 bandwidth-priority heuristic ({} first)",
+                if cluster.has_nvlink { "SP-Ulysses" } else { "PipeFusion" }
+            );
+            return plan;
+        }
+        let ranked = self.rank(m, px, cluster, world);
+        let mut best = match ranked.into_iter().next() {
+            Some(p) => p,
+            // enumeration can come up empty on hostile divisibility; the
+            // heuristic (which may under-fill the world) is the fallback
+            None => {
+                let mut p = self.score(m, px, cluster, &heuristic_pc);
+                p.why = "no valid config enumerates for this world; \
+                         §5.2.4 heuristic fallback"
+                    .into();
+                return p;
+            }
+        };
+        let heuristic = self.score(m, px, cluster, &heuristic_pc);
+        let surveyed = format!(
+            "cost-model argmin over {} candidates ({} pruned by the {:.0} GB cap)",
+            best.candidates,
+            best.pruned,
+            self.cap_for(cluster) / 1e9
+        );
+        best.why = if best.config == heuristic.config {
+            format!("{surveyed}; agrees with the §5.2.4 heuristic")
+        } else {
+            format!(
+                "{surveyed}; beats §5.2.4 heuristic [{}] ({:.2}s) by {:.2}x",
+                heuristic.config.describe(),
+                heuristic.predicted.total,
+                heuristic.predicted.total / best.predicted.total.max(1e-12)
+            )
+        };
+        best
+    }
+}
+
+impl Planner {
+    /// Re-price a plan for a *forced* strategy: latency from the
+    /// strategy's own closed form, and — for the baselines that do not
+    /// run the hybrid composition at all (Serial/TP/DistriFusion) — the
+    /// comm volume, peak memory and fits verdict from that strategy's
+    /// Table-1 row, so `describe()`/`to_json()` never report hybrid
+    /// figures next to a baseline latency. The single source of truth
+    /// shared by `PipelineBuilder::plan` and `Engine::plan_for`.
+    pub fn reprice_for_method(
+        &self,
+        plan: &mut Plan,
+        method: driver::Method,
+        m: &ModelSpec,
+        cluster: &ClusterSpec,
+    ) {
+        use crate::perf::comm_model::{comm_bytes, Row};
+        use crate::perf::memory_model::{backbone_memory, serial_memory};
+        plan.method = method;
+        let n_intra = (plan.config.world() / plan.config.cfg).max(1);
+        let s = m.attn_seq_len(plan.px);
+        plan.predicted = match method {
+            driver::Method::Serial => LatencyBreakdown {
+                compute: plan.serial_seconds,
+                comm_exposed: 0.0,
+                warmup_extra: 0.0,
+                total: plan.serial_seconds,
+            },
+            driver::Method::Tp => {
+                predict_latency(m, plan.px, cluster, PerfMethod::Tp, &plan.config, plan.steps)
+            }
+            driver::Method::DistriFusion => predict_latency(
+                m,
+                plan.px,
+                cluster,
+                PerfMethod::DistriFusion,
+                &plan.config,
+                plan.steps,
+            ),
+            _ => {
+                predict_latency(m, plan.px, cluster, PerfMethod::Hybrid, &plan.config, plan.steps)
+            }
+        };
+        let row = match method {
+            driver::Method::Serial => {
+                plan.comm_bytes = 0.0;
+                plan.peak_memory_bytes = serial_memory(m, plan.px).total();
+                None
+            }
+            driver::Method::Tp => Some(Row::TensorParallel),
+            driver::Method::DistriFusion => Some(Row::DistriFusion),
+            // Sp/PipeFusion/Hybrid run the composition the hybrid
+            // comm/memory figures already describe
+            _ => None,
+        };
+        if let Some(row) = row {
+            plan.comm_bytes = plan.steps as f64 * comm_bytes(row, m, s, n_intra);
+            plan.peak_memory_bytes = backbone_memory(m, plan.px, row, n_intra).total();
+        }
+        if matches!(
+            method,
+            driver::Method::Serial | driver::Method::Tp | driver::Method::DistriFusion
+        ) {
+            plan.fits =
+                plan.peak_memory_bytes < self.cap_for(cluster) * HBM_USABLE_FRACTION;
+        }
+    }
+}
+
+/// The (model, representative px, cluster) cells of the paper's Figs 8–17
+/// evaluation grid — shared by the golden-plan snapshot, the planner
+/// bench and the acceptance tests.
+pub fn paper_grid() -> Vec<(ModelSpec, usize, ClusterSpec)> {
+    [
+        ("pixart", 2048, "l40x16"),
+        ("sd3", 2048, "l40x16"),
+        ("flux", 1024, "l40x16"),
+        ("cogvideox", 480, "l40x8"),
+        ("pixart", 2048, "a100x8"),
+        ("sd3", 2048, "a100x8"),
+        ("flux", 1024, "a100x8"),
+        ("hunyuan", 2048, "a100x8"),
+    ]
+    .into_iter()
+    .map(|(name, px, cluster)| {
+        (
+            ModelSpec::by_name(name).expect("paper grid model"),
+            px,
+            ClusterSpec::by_name(cluster).expect("paper grid cluster"),
+        )
+    })
+    .collect()
+}
+
+/// World sizes swept per grid cell (clamped to the cluster).
+pub const GRID_WORLDS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// The canonical golden-plan snapshot: one JSON object per (model,
+/// cluster, world) cell — cost-model plan plus the heuristic baseline —
+/// one cell per line so CI diffs read like a review. Byte-stable:
+/// everything numeric is integral, keys are sorted, ordering follows
+/// [`paper_grid`] × [`GRID_WORLDS`].
+pub fn grid_report() -> String {
+    let planner = Planner::default();
+    let heuristic = Planner::default().with_policy(RoutePolicy::PaperHeuristic);
+    let mut lines = Vec::new();
+    for (m, px, cluster) in paper_grid() {
+        for world in GRID_WORLDS {
+            if world > cluster.n_gpus {
+                continue;
+            }
+            let best = planner.plan(&m, px, &cluster, world);
+            let base = heuristic.plan(&m, px, &cluster, world);
+            let mut cell = match best.to_json() {
+                Json::Obj(o) => o,
+                _ => unreachable!("Plan::to_json returns an object"),
+            };
+            cell.remove("policy");
+            cell.insert("heuristic_config".into(), Json::Str(base.config.describe()));
+            cell.insert(
+                "heuristic_us".into(),
+                Json::Num((base.predicted.total * 1e6).round()),
+            );
+            lines.push(Json::Obj(cell).to_string());
+        }
+    }
+    format!("[\n{}\n]\n", lines.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::{a100_node, l40_cluster};
+
+    #[test]
+    fn planner_matches_bruteforce_argmin() {
+        let planner = Planner::default();
+        let m = ModelSpec::by_name("pixart").unwrap();
+        for cluster in [l40_cluster(1), a100_node()] {
+            for world in [2usize, 4, 8] {
+                let best = planner.plan(&m, 2048, &cluster, world);
+                let brute = ParallelConfig::enumerate(world, &m, m.seq_len(2048))
+                    .iter()
+                    .map(|pc| {
+                        predict_latency(&m, 2048, &cluster, PerfMethod::Hybrid, pc, 20).total
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                assert!(
+                    (best.predicted.total - brute).abs() < 1e-12,
+                    "{} w={world}: planner {} != brute {brute}",
+                    cluster.name,
+                    best.predicted.total
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_never_predicted_slower_than_heuristic() {
+        let m = ModelSpec::by_name("sd3").unwrap();
+        for cluster in [l40_cluster(2), a100_node()] {
+            for world in [2usize, 4, 8] {
+                let cost = Planner::default().plan(&m, 1024, &cluster, world);
+                let paper = Planner::default()
+                    .with_policy(RoutePolicy::PaperHeuristic)
+                    .plan(&m, 1024, &cluster, world);
+                // bound precondition: the heuristic's pick fits memory
+                assert!(
+                    !paper.fits || cost.predicted.total <= paper.predicted.total + 1e-12,
+                    "{} w={world}: cost {} > paper {}",
+                    cluster.name,
+                    cost.predicted.total,
+                    paper.predicted.total
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_cap_prunes_and_falls_back_gracefully() {
+        let m = ModelSpec::by_name("flux").unwrap();
+        let cluster = l40_cluster(1);
+        // flux is 24 GB of fp16 weights: a 20 GB cap rules out everything
+        // that replicates the params, leaving PipeFusion-heavy plans
+        let tight = Planner::default().with_memory_cap_gb(30.0).plan(&m, 1024, &cluster, 8);
+        assert!(tight.fits, "some PipeFusion split must fit 30 GB: {}", tight.describe());
+        assert!(tight.config.pipefusion >= 2, "{}", tight.describe());
+        assert!(tight.pruned > 0, "the cap must have pruned SP-only plans");
+        // an impossible cap: the planner still returns the least-bad plan,
+        // flagged infeasible
+        let hopeless = Planner::default().with_memory_cap_gb(1.0).plan(&m, 1024, &cluster, 8);
+        assert!(!hopeless.fits);
+        assert_eq!(hopeless.pruned, hopeless.candidates);
+    }
+
+    #[test]
+    fn rank_is_sorted_and_consistent() {
+        let planner = Planner::default();
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let cluster = l40_cluster(1);
+        let ranked = planner.rank(&m, 1024, &cluster, 8);
+        assert!(!ranked.is_empty());
+        for w in ranked.windows(2) {
+            if w[0].fits == w[1].fits {
+                assert!(w[0].predicted.total <= w[1].predicted.total);
+            } else {
+                assert!(w[0].fits, "feasible plans must rank before pruned ones");
+            }
+        }
+        let best = planner.plan(&m, 1024, &cluster, 8);
+        assert_eq!(best.config, ranked[0].config);
+        assert!(best.why.contains("argmin"), "{}", best.why);
+    }
+
+    #[test]
+    fn reprice_gives_baselines_their_own_rows() {
+        use crate::perf::comm_model::{comm_bytes, Row};
+        use crate::perf::memory_model::{backbone_memory, serial_memory};
+        let planner = Planner::default();
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let cluster = l40_cluster(1);
+
+        // forced Serial: serial latency, zero comm, serial footprint
+        let mut serial = planner.plan(&m, 2048, &cluster, 8);
+        planner.reprice_for_method(&mut serial, driver::Method::Serial, &m, &cluster);
+        assert_eq!(serial.method, driver::Method::Serial);
+        assert_eq!(serial.comm_bytes, 0.0);
+        assert_eq!(serial.predicted.total, serial.serial_seconds);
+        assert_eq!(serial.peak_memory_bytes, serial_memory(&m, 2048).total());
+
+        // forced DistriFusion: its own Table-1 comm/memory rows at the
+        // intra-image degree, and fits recomputed against that footprint
+        let mut df = planner.plan(&m, 2048, &cluster, 8);
+        planner.reprice_for_method(&mut df, driver::Method::DistriFusion, &m, &cluster);
+        let n_intra = df.config.world() / df.config.cfg;
+        let s = m.attn_seq_len(2048);
+        let expect_comm =
+            df.steps as f64 * comm_bytes(Row::DistriFusion, &m, s, n_intra);
+        assert_eq!(df.comm_bytes, expect_comm);
+        let expect_mem = backbone_memory(&m, 2048, Row::DistriFusion, n_intra).total();
+        assert_eq!(df.peak_memory_bytes, expect_mem);
+        assert_eq!(
+            df.fits,
+            expect_mem < cluster.gpu.mem_bytes * HBM_USABLE_FRACTION
+        );
+        assert!(df.peak_memory_bytes > serial.peak_memory_bytes * 0.1);
+
+        // forced Sp keeps the hybrid composition's figures (it runs it)
+        let base = planner.plan(&m, 2048, &cluster, 8);
+        let mut sp = base.clone();
+        planner.reprice_for_method(&mut sp, driver::Method::Sp, &m, &cluster);
+        assert_eq!(sp.comm_bytes, base.comm_bytes);
+        assert_eq!(sp.peak_memory_bytes, base.peak_memory_bytes);
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for (s, p) in [
+            ("cost", RoutePolicy::CostModel),
+            ("cost-model", RoutePolicy::CostModel),
+            ("paper", RoutePolicy::PaperHeuristic),
+            ("heuristic", RoutePolicy::PaperHeuristic),
+        ] {
+            assert_eq!(RoutePolicy::parse(s).unwrap(), p);
+        }
+        assert!(RoutePolicy::parse("greedy").is_err());
+        let key = RoutePolicy::CostModel.key();
+        assert_eq!(RoutePolicy::parse(key).unwrap(), RoutePolicy::CostModel);
+    }
+
+    #[test]
+    fn grid_report_is_deterministic_canonical_json() {
+        let a = grid_report();
+        let b = grid_report();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        let cells = parsed.as_arr().unwrap();
+        // 3 l40x16 rows x 5 worlds + 1 l40x8 row x 4 + 4 a100x8 rows x 4
+        assert_eq!(cells.len(), 35);
+        for cell in cells {
+            let world = cell.get("world").unwrap().as_usize().unwrap();
+            assert!(GRID_WORLDS.contains(&world));
+            assert!(cell.get("predicted_us").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(cell.get("heuristic_us").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(cell.get("fits").unwrap().as_bool().unwrap(), "grid cells all fit HBM");
+            // (the planner-vs-heuristic acceptance bound lives in
+            // tests/planner.rs, conditioned on the heuristic pick fitting
+            // memory — a raw per-cell comparison here would misfire if a
+            // future grid cell memory-prunes the heuristic's choice)
+        }
+    }
+}

@@ -142,6 +142,10 @@ pub struct GenResponse {
     /// Bytes moved between simulated devices for this request.
     pub comm_bytes: usize,
     pub parallel_config: String,
+    /// What the routing plan's cost model predicted for this generation
+    /// (seconds) — compare against `model_seconds` to see how far the
+    /// analytic model and the simulated cluster agree.
+    pub predicted_seconds: f64,
     /// Strategy that ran the denoising loop.
     pub method: String,
     /// Scheduler that produced the trajectory (request override, pipeline

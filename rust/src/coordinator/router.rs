@@ -1,7 +1,13 @@
-//! The routing policy of §5.2.4: pick a hybrid parallel configuration for
-//! (model, cluster, world size).
+//! Routing: pick a hybrid parallel configuration for (model, resolution,
+//! cluster, world size).
 //!
-//! Paper recommendation, implemented verbatim:
+//! [`route`] is a thin policy layer over the cost-model auto-planner
+//! (`coordinator::planner`): by default every candidate config is scored
+//! with the analytic latency/comm models and pruned by the memory model,
+//! and the argmin wins. The paper's §5.2.4 recommendation survives as
+//! [`paper_heuristic`] — the `RoutePolicy::PaperHeuristic` fallback and
+//! the oracle the planner is property-tested against:
+//!
 //! 1. prioritize CFG parallel (when the model uses CFG and world is even);
 //! 2. on low-bandwidth interconnects (PCIe/Ethernet): PipeFusion first,
 //!    then SP-Ring;
@@ -11,9 +17,34 @@
 use crate::config::hardware::ClusterSpec;
 use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
+use crate::coordinator::planner::{Planner, RoutePolicy};
 
-/// Choose the parallel config for `world` devices.
-pub fn route(model: &ModelSpec, s_img: usize, cluster: &ClusterSpec, world: usize) -> ParallelConfig {
+/// Choose the parallel config for `world` devices under the default
+/// (cost-model) policy, for a generation at `px` resolution.
+pub fn route(model: &ModelSpec, px: usize, cluster: &ClusterSpec, world: usize) -> ParallelConfig {
+    route_with_policy(RoutePolicy::default(), model, px, cluster, world)
+}
+
+/// Choose the parallel config under an explicit policy.
+pub fn route_with_policy(
+    policy: RoutePolicy,
+    model: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    world: usize,
+) -> ParallelConfig {
+    Planner::default().with_policy(policy).plan(model, px, cluster, world).config
+}
+
+/// The §5.2.4 bandwidth-priority greedy heuristic, verbatim from the
+/// paper. Kept as the planner's fallback and test oracle.
+pub fn paper_heuristic(
+    model: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    world: usize,
+) -> ParallelConfig {
+    let s_img = model.seq_len(px);
     let mut best = ParallelConfig::serial();
     if world <= 1 {
         return best;
@@ -72,10 +103,12 @@ mod tests {
     use super::*;
     use crate::config::hardware::{a100_node, l40_cluster};
 
+    // ---- §5.2.4 heuristic oracle tests (PaperHeuristic policy) ----
+
     #[test]
     fn prioritizes_cfg() {
         let m = ModelSpec::by_name("tiny-adaln").unwrap();
-        let pc = route(&m, 256, &l40_cluster(1), 8);
+        let pc = paper_heuristic(&m, 256, &l40_cluster(1), 8);
         assert_eq!(pc.cfg, 2, "{}", pc.describe());
         assert_eq!(pc.world(), 8);
     }
@@ -83,14 +116,14 @@ mod tests {
     #[test]
     fn pcie_prefers_pipefusion() {
         let m = ModelSpec::by_name("tiny-adaln").unwrap();
-        let pc = route(&m, 256, &l40_cluster(1), 8);
+        let pc = paper_heuristic(&m, 256, &l40_cluster(1), 8);
         assert!(pc.pipefusion >= pc.ulysses, "{}", pc.describe());
     }
 
     #[test]
     fn nvlink_prefers_ulysses() {
         let m = ModelSpec::by_name("tiny-adaln").unwrap();
-        let pc = route(&m, 256, &a100_node(), 8);
+        let pc = paper_heuristic(&m, 256, &a100_node(), 8);
         assert!(pc.ulysses >= pc.pipefusion, "{}", pc.describe());
     }
 
@@ -98,7 +131,7 @@ mod tests {
     fn no_cfg_for_flux_like() {
         let mut m = ModelSpec::by_name("tiny-mmdit").unwrap();
         m.uses_cfg = false;
-        let pc = route(&m, 256, &l40_cluster(1), 8);
+        let pc = paper_heuristic(&m, 256, &l40_cluster(1), 8);
         assert_eq!(pc.cfg, 1);
         assert_eq!(pc.world(), 8);
     }
@@ -109,7 +142,7 @@ mod tests {
         // model PipeFusion is capped at 2 (enc/dec split), so the leftover
         // intra degree must land on Ring, never on Ulysses.
         let m = ModelSpec::by_name("tiny-skip").unwrap();
-        let pc = route(&m, 256, &l40_cluster(1), 8);
+        let pc = paper_heuristic(&m, 256, &l40_cluster(1), 8);
         assert_eq!(pc.cfg, 2, "{}", pc.describe());
         assert_eq!(pc.pipefusion, 2, "{}", pc.describe());
         assert_eq!(pc.ring, 2, "{}", pc.describe());
@@ -122,7 +155,7 @@ mod tests {
         // adaln has 8 layers: PipeFusion can absorb the full intra degree
         // on a 16-GPU PCIe cluster (cfg=2 x pipefusion=8).
         let m = ModelSpec::by_name("tiny-adaln").unwrap();
-        let pc = route(&m, 256, &l40_cluster(2), 16);
+        let pc = paper_heuristic(&m, 256, &l40_cluster(2), 16);
         assert_eq!(pc.cfg, 2, "{}", pc.describe());
         assert_eq!(pc.pipefusion, 8, "{}", pc.describe());
         assert_eq!(pc.world(), 16);
@@ -134,7 +167,7 @@ mod tests {
         // tiny family has 6 heads (6 % 4 != 0) and the remainder flows to
         // PipeFusion.
         let m = ModelSpec::by_name("tiny-adaln").unwrap();
-        let pc = route(&m, 256, &a100_node(), 8);
+        let pc = paper_heuristic(&m, 256, &a100_node(), 8);
         assert_eq!(pc.cfg, 2, "{}", pc.describe());
         assert_eq!(pc.ulysses, 2, "{}", pc.describe());
         assert_eq!(pc.pipefusion, 2, "{}", pc.describe());
@@ -146,11 +179,11 @@ mod tests {
         let m = ModelSpec::by_name("tiny-adaln").unwrap();
         for cluster in [l40_cluster(1), a100_node()] {
             // odd world: CFG parallelism (degree 2) cannot split it
-            let odd = route(&m, 256, &cluster, 5);
+            let odd = paper_heuristic(&m, 256, &cluster, 5);
             assert_eq!(odd.cfg, 1, "{}", odd.describe());
             odd.validate(&m, 256).unwrap();
             // the smallest even world goes entirely to the CFG branches
-            let pair = route(&m, 256, &cluster, 2);
+            let pair = paper_heuristic(&m, 256, &cluster, 2);
             assert_eq!(pair.cfg, 2, "{}", pair.describe());
             assert_eq!(pair.world(), 2);
         }
@@ -159,30 +192,56 @@ mod tests {
     #[test]
     fn head_divisibility_caps_ulysses() {
         // 6 heads: ulysses degree can only be a divisor of 6 reached by
-        // doubling, i.e. never more than 2 — on any cluster or world.
+        // doubling, i.e. never more than 2 — on any cluster or world, and
+        // under either routing policy.
         let m = ModelSpec::by_name("tiny-mmdit").unwrap();
         for world in [2usize, 4, 8] {
             for cluster in [l40_cluster(1), a100_node()] {
-                let pc = route(&m, 256, &cluster, world);
-                pc.validate(&m, 256).unwrap();
-                assert!(pc.ulysses <= 2, "w={world} {}: {}", cluster.name, pc.describe());
-                assert_eq!(pc.world(), world);
+                for policy in [RoutePolicy::CostModel, RoutePolicy::PaperHeuristic] {
+                    let pc = route_with_policy(policy, &m, 256, &cluster, world);
+                    pc.validate(&m, 256).unwrap();
+                    assert!(
+                        pc.ulysses <= 2,
+                        "w={world} {} {:?}: {}",
+                        cluster.name,
+                        policy,
+                        pc.describe()
+                    );
+                    assert_eq!(pc.world(), world);
+                }
+            }
+        }
+    }
+
+    // ---- policy-layer tests (cost model is the default) ----
+
+    #[test]
+    fn always_valid_and_full_world_under_both_policies() {
+        for world in [1, 2, 4, 8] {
+            for name in ["tiny-adaln", "tiny-mmdit", "tiny-cross", "tiny-skip"] {
+                let m = ModelSpec::by_name(name).unwrap();
+                for cluster in [l40_cluster(1), a100_node()] {
+                    for policy in [RoutePolicy::CostModel, RoutePolicy::PaperHeuristic] {
+                        let pc = route_with_policy(policy, &m, 256, &cluster, world);
+                        pc.validate(&m, 256).unwrap_or_else(|e| {
+                            panic!("{policy:?} invalid config for {name} w={world}: {e}")
+                        });
+                        assert_eq!(pc.world(), world, "{name} w={world}: {}", pc.describe());
+                    }
+                }
             }
         }
     }
 
     #[test]
-    fn always_valid_and_full_world() {
-        for world in [1, 2, 4, 8] {
-            for name in ["tiny-adaln", "tiny-mmdit", "tiny-cross", "tiny-skip"] {
-                let m = ModelSpec::by_name(name).unwrap();
-                for cluster in [l40_cluster(1), a100_node()] {
-                    let pc = route(&m, 256, &cluster, world);
-                    pc.validate(&m, 256).unwrap_or_else(|e| {
-                        panic!("router produced invalid config for {name} w={world}: {e}")
-                    });
-                    assert_eq!(pc.world(), world, "{name} w={world}: {}", pc.describe());
-                }
+    fn default_route_is_the_cost_model_policy() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        for cluster in [l40_cluster(2), a100_node()] {
+            for world in [4usize, 8] {
+                let defaulted = route(&m, 2048, &cluster, world);
+                let explicit =
+                    route_with_policy(RoutePolicy::CostModel, &m, 2048, &cluster, world);
+                assert_eq!(defaulted, explicit);
             }
         }
     }

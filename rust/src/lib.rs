@@ -39,6 +39,6 @@ pub mod testing;
 pub mod util;
 pub mod vae;
 
-pub use coordinator::{Rejection, Trace};
+pub use coordinator::{Plan, Planner, Rejection, RoutePolicy, Trace};
 pub use error::{Error, Result};
-pub use pipeline::{ParallelPolicy, Pipeline, PipelineBuilder, RoutePlan, ServeReport};
+pub use pipeline::{ParallelPolicy, Pipeline, PipelineBuilder, ServeReport};

@@ -22,6 +22,7 @@ use xdit::pipeline::{ParallelPolicy, Pipeline};
 use xdit::runtime::Runtime;
 use xdit::util::cli::Args;
 use xdit::util::pgm;
+use xdit::RoutePolicy;
 
 const USAGE: &str = "xdit <command> [--flags]
 
@@ -38,6 +39,14 @@ commands:
              continuous-batching scheduler; runs on the simulated
              backend when artifacts are absent)
   route     --model pixart --cluster l40x16 --gpus 16 --px 2048
+            [--policy cost|paper (default: cost)] [--memory-cap-gb 48]
+            [--top-k 5] [--json]
+            (cost-model auto-planner: enumerates every valid hybrid
+             config, prunes by per-GPU memory, ranks by predicted
+             latency; prints latency/comm/memory for the winner and a
+             top-k table, or the canonical JSON plan with --json)
+  route     --grid   (emit the canonical golden-plan JSON for the full
+             figs 8-17 model x cluster x world grid — the CI snapshot)
   figures   --which fig8|fig14|table1|table3|memory [--px 1024]
   inspect   [--artifacts artifacts]
 ";
@@ -140,9 +149,11 @@ fn generate(args: &Args) -> xdit::Result<()> {
         pipe.cluster().name
     );
     println!(
-        "done: simulated latency {:.3}s on {} GPUs, comm {:.1} MB, wall {:?}",
+        "done: simulated latency {:.3}s on {} GPUs (plan predicted {:.3e}s), \
+         comm {:.1} MB, wall {:?}",
         r.model_seconds,
         pipe.world(),
+        r.predicted_seconds,
         r.comm_bytes as f64 / 1e6,
         t0.elapsed()
     );
@@ -201,12 +212,56 @@ fn serve(args: &Args) -> xdit::Result<()> {
 }
 
 fn route_cmd(args: &Args) -> xdit::Result<()> {
+    if args.bool("grid") {
+        // the canonical golden-plan snapshot of the figs 8-17 grid; CI
+        // diffs this byte-for-byte against rust/testdata/plans.golden.json
+        print!("{}", xdit::coordinator::planner::grid_report());
+        return Ok(());
+    }
     let model = ModelSpec::by_name(args.str_or("model", "pixart"))?;
     let cluster = cluster_of(args)?;
     let gpus = args.usize_or("gpus", cluster.n_gpus)?;
     let px = args.usize_or("px", 1024)?;
-    let plan = Pipeline::builder().cluster(cluster).world(gpus).plan(&model, px)?;
+    let policy = RoutePolicy::parse(args.str_or("policy", "cost"))?;
+    let mut b = Pipeline::builder().cluster(cluster).world(gpus).route_policy(policy);
+    if args.has("memory-cap-gb") {
+        b = b.memory_cap_gb(args.f64_or("memory-cap-gb", 0.0)?);
+    }
+    let plan = b.plan(&model, px)?;
+    if args.bool("json") {
+        println!("{}", plan.to_json());
+        return Ok(());
+    }
     println!("{}", plan.describe());
+    let k = args.usize_or("top-k", 5)?;
+    if k == 0 {
+        return Ok(());
+    }
+    let ranked = b.plan_candidates(&model, px)?;
+    if !ranked.is_empty() {
+        // the candidate table is always the cost model's ranking — under
+        // --policy paper the winner above is the heuristic's pick, which
+        // need not be rank 1 here
+        println!(
+            "\ntop-{} of {} candidates, ranked by the cost model:",
+            k.min(ranked.len()),
+            ranked.len()
+        );
+        println!(
+            "{:<36} {:>12} {:>10} {:>9} {:>5}",
+            "config", "predicted(s)", "comm(GB)", "mem(GB)", "fits"
+        );
+        for p in ranked.iter().take(k) {
+            println!(
+                "{:<36} {:>12.3} {:>10.2} {:>9.1} {:>5}",
+                p.config.describe(),
+                p.predicted.total,
+                p.comm_bytes / 1e9,
+                p.peak_memory_bytes / 1e9,
+                if p.fits { "yes" } else { "OOM" }
+            );
+        }
+    }
     Ok(())
 }
 

@@ -123,7 +123,13 @@ impl DitModel {
     }
 
     /// Final layer: hidden patch -> epsilon patch.
-    pub fn final_patch(&self, rt: &Runtime, pf: usize, x: &Tensor, cond: &Tensor) -> Result<Tensor> {
+    pub fn final_patch(
+        &self,
+        rt: &Runtime,
+        pf: usize,
+        x: &Tensor,
+        cond: &Tensor,
+    ) -> Result<Tensor> {
         let out = rt.call(
             &format!("{}_final_p{pf}", self.key()),
             0,

@@ -44,6 +44,19 @@ impl Method {
         }
     }
 
+    /// Canonical key, accepted back by [`Method::parse`].
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::Serial => "serial",
+            Method::Tp => "tp",
+            Method::Sp => "sp",
+            Method::DistriFusion => "distrifusion",
+            Method::PipeFusion => "pipefusion",
+            Method::Hybrid => "hybrid",
+            Method::HybridStandardSp => "hybrid-standard-sp",
+        }
+    }
+
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s {
             "serial" => Method::Serial,
@@ -166,7 +179,8 @@ pub fn generate_reference(
     p: &GenParams,
 ) -> Result<Tensor> {
     let cluster = crate::config::hardware::a100_node();
-    let mut sess = Session::new(rt, variant, cluster, crate::config::parallel::ParallelConfig::serial())?;
+    let serial = crate::config::parallel::ParallelConfig::serial();
+    let mut sess = Session::new(rt, variant, cluster, serial)?;
     Ok(generate(&mut sess, Method::Serial, p)?.latent)
 }
 

@@ -88,7 +88,8 @@ impl Strategy for Hybrid {
                     .map(|i| {
                         let ring = i / sess.pc.ulysses;
                         let ulysses = i % sess.pc.ulysses;
-                        mesh.rank(MeshCoord { cfg: branch.idx.min(sess.pc.cfg - 1), pipe: s, ring, ulysses })
+                        let cfg = branch.idx.min(sess.pc.cfg - 1);
+                        mesh.rank(MeshCoord { cfg, pipe: s, ring, ulysses })
                     })
                     .collect()
             })
@@ -208,9 +209,10 @@ impl Strategy for Hybrid {
                                     i * p_img_shard,
                                     i * p_img_shard + sl.min(p_img_shard),
                                 )?;
-                                let v_own = out
-                                    .v_img
-                                    .slice_rows(i * p_img_shard, i * p_img_shard + sl.min(p_img_shard))?;
+                                let v_own = out.v_img.slice_rows(
+                                    i * p_img_shard,
+                                    i * p_img_shard + sl.min(p_img_shard),
+                                )?;
                                 buf.scatter_layer(
                                     lr,
                                     model.img_buf_off(off_img + so),
@@ -316,8 +318,9 @@ mod tests {
                 base.add(&drift).unwrap()
             })
             .collect();
-        let mut s0 = Session::new(&rt, BlockVariant::AdaLn, l40_cluster(1), ParallelConfig::serial())
-            .unwrap();
+        let mut s0 =
+            Session::new(&rt, BlockVariant::AdaLn, l40_cluster(1), ParallelConfig::serial())
+                .unwrap();
         // serial reference on the final latent (fresh everything)
         let e_serial = Serial.denoise(&mut s0, &xs[2], 420.0, 0, &branch(&rt, 1)).unwrap();
 

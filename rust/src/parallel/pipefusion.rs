@@ -29,7 +29,14 @@ impl PipeFusion {
         PipeFusion { buffers: std::collections::HashMap::new() }
     }
 
-    fn buffer(&mut self, branch: usize, stage: usize, ls: usize, s: usize, d: usize) -> &mut KvBuffer {
+    fn buffer(
+        &mut self,
+        branch: usize,
+        stage: usize,
+        ls: usize,
+        s: usize,
+        d: usize,
+    ) -> &mut KvBuffer {
         self.buffers.entry((branch, stage)).or_insert_with(|| KvBuffer::zeros(ls, s, d))
     }
 
@@ -118,7 +125,8 @@ impl Strategy for PipeFusion {
             // initialized with the exact full-sequence K/V. Costs ~one
             // serial step on the whole pipeline group.
             let (eps, k_new, v_new) = crate::parallel::exact_step(sess, branch, x, &cond)?;
-            let serial_fl = flops_stage(&model, model.layers, model.s_img, model.s_txt, model.attn_seq());
+            let serial_fl =
+                flops_stage(&model, model.layers, model.s_img, model.s_txt, model.attn_seq());
             for &d in &stage_ranks {
                 sess.charge_compute(d, serial_fl / n_stages as f64);
             }

@@ -5,6 +5,7 @@
 //! is `seq × hidden × 2 bytes` here.
 
 use crate::config::model::ModelSpec;
+use crate::config::parallel::ParallelConfig;
 
 /// Paper Table 1 rows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -51,6 +52,37 @@ pub fn comm_bytes(row: Row, m: &ModelSpec, s: usize, n: usize) -> f64 {
         // 2 O(p·hs)
         Row::PipeFusion => 2.0 * hs,
     }
+}
+
+/// Per-device per-step communication bytes of a *hybrid* config — the
+/// Table-1 rows composed the way the mesh composes them (the planner's
+/// comm figure, reported in every `Plan`):
+/// * SP-Ulysses moves 4 All2All/layer of `1/u` of the activation; the
+///   patch split cancels (M patches × act/M), so the volume matches the
+///   single-method row at degree `u`;
+/// * SP-Ring circulates the K/V blocks — degree-independent, 2 O(p·hs) L;
+/// * PipeFusion ships one activation patch in + out per micro-step, and
+///   each SP rank only ships its sequence shard: 2 O(p·hs) / sp;
+/// * CFG parallel exchanges the predicted latent between the branch pair
+///   once per step (fp16).
+pub fn config_comm_bytes(m: &ModelSpec, px: usize, pc: &ParallelConfig) -> f64 {
+    let s = m.attn_seq_len(px);
+    let hs = s as f64 * m.hidden as f64 * 2.0;
+    let l = m.layers as f64;
+    let mut total = 0.0;
+    if pc.ulysses > 1 {
+        total += 4.0 / pc.ulysses as f64 * hs * l;
+    }
+    if pc.ring > 1 {
+        total += 2.0 * hs * l;
+    }
+    if pc.pipefusion > 1 {
+        total += 2.0 * hs / pc.sp_degree() as f64;
+    }
+    if pc.cfg == 2 {
+        total += (px as f64 / 8.0).powi(2) * m.c_latent as f64 * 2.0;
+    }
+    total
 }
 
 /// Memory cost multipliers of Table 1 (params, KV), as fractions of the
@@ -108,6 +140,30 @@ mod tests {
         assert!(comm_bytes(Row::PipeFusion, &m, s, 16) < comm_bytes(Row::SpUlysses, &m, s, 16));
         // hypothetical n > 2L -> ulysses would win
         assert!(comm_bytes(Row::PipeFusion, &m, s, 64) > comm_bytes(Row::SpUlysses, &m, s, 64));
+    }
+
+    #[test]
+    fn config_comm_composes_table1_rows() {
+        let m = ModelSpec::by_name("sd3").unwrap();
+        let px = 1024;
+        let s = m.attn_seq_len(px);
+        // pure single-dimension configs reproduce their Table-1 rows
+        let ul = ParallelConfig::new(1, 1, 8, 1);
+        assert_eq!(config_comm_bytes(&m, px, &ul), comm_bytes(Row::SpUlysses, &m, s, 8));
+        let ring = ParallelConfig::new(1, 1, 1, 8);
+        assert_eq!(config_comm_bytes(&m, px, &ring), comm_bytes(Row::SpRing, &m, s, 8));
+        let pf = ParallelConfig::new(1, 8, 1, 1);
+        assert_eq!(config_comm_bytes(&m, px, &pf), comm_bytes(Row::PipeFusion, &m, s, 8));
+        // serial moves nothing; cfg alone only the per-step latent
+        assert_eq!(config_comm_bytes(&m, px, &ParallelConfig::serial()), 0.0);
+        let cfg_only = config_comm_bytes(&m, px, &ParallelConfig::new(2, 1, 1, 1));
+        assert!(cfg_only > 0.0 && cfg_only < comm_bytes(Row::PipeFusion, &m, s, 8));
+        // a hybrid strictly adds its parts
+        let hybrid = ParallelConfig::new(2, 2, 2, 1);
+        let parts = config_comm_bytes(&m, px, &ParallelConfig::new(1, 1, 2, 1))
+            + comm_bytes(Row::PipeFusion, &m, s, 2) / 2.0
+            + cfg_only;
+        assert!((config_comm_bytes(&m, px, &hybrid) - parts).abs() < 1e-6);
     }
 
     #[test]

@@ -119,7 +119,8 @@ pub fn hybrid_sweep_figure(
     let mut out = format!("# {title}: hybrid configs on {} GPUs ({})\n", world, cluster.name);
     for &px in pxs {
         out.push_str(&format!("\n## {px}px\n"));
-        let mut rows: Vec<(String, f64)> = ParallelConfig::enumerate(world, model, model.seq_len(px))
+        let configs = ParallelConfig::enumerate(world, model, model.seq_len(px));
+        let mut rows: Vec<(String, f64)> = configs
             .into_iter()
             .map(|pc| {
                 let lb = predict_latency(model, px, cluster, Method::Hybrid, &pc, steps);
@@ -220,7 +221,8 @@ pub fn table1(model_name: &str, px: usize, n: usize) -> String {
         "{:<22} {:>10} {:>8} {:>10} {:>10}\n",
         "method", "comm (GB)", "overlap", "params", "kv"
     ));
-    for row in [Row::TensorParallel, Row::DistriFusion, Row::SpRing, Row::SpUlysses, Row::PipeFusion]
+    for row in
+        [Row::TensorParallel, Row::DistriFusion, Row::SpRing, Row::SpUlysses, Row::PipeFusion]
     {
         let (pfrac, kvfrac) = memory_fractions(row, n);
         out.push_str(&format!(
@@ -259,14 +261,18 @@ pub fn table2() -> String {
 /// Table 3: parallel VAE time / OOM grid.
 pub fn table3() -> String {
     use crate::vae::{vae_decode_time, vae_fits};
-    let mut out = String::from("# Table 3: parallel VAE elapsed seconds (OOM where it does not fit)\n");
+    let mut out =
+        String::from("# Table 3: parallel VAE elapsed seconds (OOM where it does not fit)\n");
     for (gname, mem, tflops, bw, lat) in [
         ("8xL40 (48GB)", 48e9, 90.0, 24e9, 8e-6),
         ("8xA100 (80GB)", 80e9, 250.0, 250e9, 3e-6),
     ] {
         for ch in [16usize, 4] {
             out.push_str(&format!("\n{gname}, {ch} channels:\n"));
-            out.push_str(&format!("{:<6} {:>8} {:>8} {:>8} {:>8} {:>8}\n", "GPUs", "1k", "2k", "4k", "7k", "8k"));
+            out.push_str(&format!(
+                "{:<6} {:>8} {:>8} {:>8} {:>8} {:>8}\n",
+                "GPUs", "1k", "2k", "4k", "7k", "8k"
+            ));
             for n in [1usize, 2, 4, 8] {
                 out.push_str(&format!("{n:<6}"));
                 for px in [1024usize, 2048, 4096, 7168, 8192] {

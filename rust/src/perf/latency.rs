@@ -367,8 +367,10 @@ mod tests {
         let m = ModelSpec::by_name("hunyuan").unwrap();
         let c = a100_node();
         let gap = |px| {
-            let u = predict_latency(&m, px, &c, Method::SpUlysses, &Method::SpUlysses.single_config(8), 50).total;
-            let r = predict_latency(&m, px, &c, Method::SpRing, &Method::SpRing.single_config(8), 50).total;
+            let upc = Method::SpUlysses.single_config(8);
+            let u = predict_latency(&m, px, &c, Method::SpUlysses, &upc, 50).total;
+            let rpc = Method::SpRing.single_config(8);
+            let r = predict_latency(&m, px, &c, Method::SpRing, &rpc, 50).total;
             r / u
         };
         assert!(gap(2048) <= gap(1024) + 1e-9);

@@ -2,6 +2,7 @@
 //! argument).
 
 use crate::config::model::ModelSpec;
+use crate::config::parallel::ParallelConfig;
 use crate::perf::comm_model::{memory_fractions, Row};
 
 /// Per-device memory footprint of the DiT backbone under a parallel method.
@@ -64,6 +65,50 @@ pub fn backbone_memory(m: &ModelSpec, px: usize, row: Row, n: usize) -> MemoryFo
     }
 }
 
+/// Fraction of HBM usable after allocator slack (fragmentation, cudnn
+/// workspaces) — shared by every fits-style check in this module.
+pub const HBM_USABLE_FRACTION: f64 = 0.92;
+
+/// Per-device footprint of a *hybrid* config — the composition the
+/// planner prunes with:
+/// * parameters shard across PipeFusion stages only (SP and CFG replicate
+///   the weights);
+/// * the text encoder is always replicated (xDiT does not shard it);
+/// * KV: a PipeFusion stage keeps the **stale full-sequence buffer** for
+///   its `layers/pipefusion` layers, split across its SP group; without
+///   PipeFusion only the transient per-layer K/V shard is live;
+/// * activations: a few live copies of the (patch × SP)-sharded hidden
+///   state plus the fp32 latent.
+///
+/// Corner cases collapse to the Table-1 single-method rows: pure
+/// PipeFusion holds `P/n` params + `(KV)L/n`, pure SP full params + one
+/// transient layer shard, serial matches [`serial_memory`].
+pub fn config_memory(m: &ModelSpec, px: usize, pc: &ParallelConfig) -> MemoryFootprint {
+    let s = m.attn_seq_len(px) as f64;
+    let sp = pc.sp_degree() as f64;
+    let pf = pc.pipefusion as f64;
+    let kv_full = 2.0 * s * m.hidden as f64 * 2.0 * m.layers as f64;
+    let kv = if pc.pipefusion > 1 {
+        kv_full / pf / sp
+    } else {
+        kv_full / m.layers as f64 / sp
+    };
+    let act_shard = s / (sp * pc.patches.max(1) as f64) * m.hidden as f64 * 2.0;
+    let activations = 8.0 * act_shard + (px as f64 / 8.0).powi(2) * m.c_latent as f64 * 4.0;
+    MemoryFootprint {
+        params: m.param_bytes() / pf,
+        text_encoder: m.text_encoder_bytes,
+        kv,
+        activations,
+    }
+}
+
+/// Does a hybrid config's per-device footprint fit `mem_bytes` of HBM?
+/// This is the exact predicate the planner prunes candidates with.
+pub fn config_fits(m: &ModelSpec, px: usize, pc: &ParallelConfig, mem_bytes: f64) -> bool {
+    config_memory(m, px, pc).total() < mem_bytes * HBM_USABLE_FRACTION
+}
+
 /// Serial (1 GPU) footprint.
 pub fn serial_memory(m: &ModelSpec, px: usize) -> MemoryFootprint {
     let s = m.attn_seq_len(px) as f64;
@@ -78,7 +123,7 @@ pub fn serial_memory(m: &ModelSpec, px: usize) -> MemoryFootprint {
 
 /// Does the backbone fit a GPU with `mem_bytes` HBM?
 pub fn fits(m: &ModelSpec, px: usize, row: Row, n: usize, mem_bytes: f64) -> bool {
-    backbone_memory(m, px, row, n).total() < mem_bytes * 0.92 // allocator slack
+    backbone_memory(m, px, row, n).total() < mem_bytes * HBM_USABLE_FRACTION
 }
 
 #[cfg(test)]
@@ -119,6 +164,42 @@ mod tests {
                 (0.2..0.6).contains(&frac),
                 "fraction {frac:.2} at {px}px out of band"
             );
+        }
+    }
+
+    #[test]
+    fn config_memory_matches_serial_and_shards_with_pipefusion() {
+        let m = ModelSpec::by_name("flux").unwrap();
+        let px = 1024;
+        // serial config == serial footprint, field by field
+        let serial = serial_memory(&m, px);
+        let cfg_serial = config_memory(&m, px, &ParallelConfig::serial());
+        assert_eq!(serial.params, cfg_serial.params);
+        assert_eq!(serial.kv, cfg_serial.kv);
+        assert_eq!(serial.activations, cfg_serial.activations);
+        // PipeFusion shards params + stale KV; SP replicates params
+        let pf = config_memory(&m, px, &ParallelConfig::new(1, 8, 1, 1));
+        assert!((pf.params - m.param_bytes() / 8.0).abs() < 1.0);
+        let sp = config_memory(&m, px, &ParallelConfig::new(1, 1, 8, 1));
+        assert_eq!(sp.params, m.param_bytes());
+        assert!(pf.total() < sp.total(), "PipeFusion must be the lean option on a 12B model");
+        // a hybrid sits between: params by its pipe degree only
+        let hy = config_memory(&m, px, &ParallelConfig::new(1, 2, 2, 2));
+        assert!((hy.params - m.param_bytes() / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn config_fits_agrees_with_footprint_and_slack() {
+        let m = ModelSpec::by_name("flux").unwrap();
+        for pc in [
+            ParallelConfig::serial(),
+            ParallelConfig::new(1, 8, 1, 1),
+            ParallelConfig::new(1, 1, 8, 1),
+            ParallelConfig::new(1, 2, 2, 2),
+        ] {
+            let total = config_memory(&m, 2048, &pc).total();
+            assert!(config_fits(&m, 2048, &pc, total / HBM_USABLE_FRACTION + 1.0));
+            assert!(!config_fits(&m, 2048, &pc, total / HBM_USABLE_FRACTION - 1.0));
         }
     }
 

@@ -1,11 +1,11 @@
 //! # The `Pipeline` facade — the one typed entry point of the engine.
 //!
 //! Everything user-facing goes through here: one-shot generation, batch
-//! serving, and the §5.2.4 routing decision. The facade owns the
-//! session/VAE lifecycle (sessions are shared per batch, the parallel VAE
-//! is built once), derives the routed sequence length from each request's
-//! resolution, and resolves the scheduler per request — no `256`, no
-//! `"ddim"`, no `tiny-` string anywhere in user code.
+//! serving, and the cost-model routing decision (`plan`). The facade owns
+//! the session/VAE lifecycle (sessions are shared per batch, the parallel
+//! VAE is built once), derives the routed sequence length from each
+//! request's resolution, and resolves the scheduler per request — no
+//! `256`, no `"ddim"`, no `tiny-` string anywhere in user code.
 //!
 //! ```ignore
 //! let rt = Runtime::load("artifacts")?;
@@ -31,16 +31,13 @@
 use crate::config::hardware::{l40_cluster, ClusterSpec};
 use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
-use crate::coordinator::engine::{pick_method, Engine, Rejection, DEFAULT_QUEUE_CAPACITY};
+use crate::coordinator::engine::{Engine, Rejection, DEFAULT_QUEUE_CAPACITY};
+use crate::coordinator::planner::{Plan, Planner, RoutePolicy};
 use crate::coordinator::request::{GenRequest, GenResponse};
-use crate::coordinator::router::route;
 use crate::coordinator::trace::Trace;
 use crate::coordinator::{Batcher, Metrics};
 use crate::diffusion::SchedulerKind;
 use crate::parallel::driver::Method;
-use crate::perf::latency::{
-    predict_latency, serial_latency, LatencyBreakdown, Method as PerfMethod,
-};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
@@ -48,56 +45,13 @@ use crate::{Error, Result};
 /// How the pipeline picks the hybrid parallel configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ParallelPolicy {
-    /// The §5.2.4 router decides per batch, aware of the request's
-    /// resolution and the cluster interconnect.
+    /// The auto-planner decides per batch, aware of the request's
+    /// resolution, the cluster interconnect and the memory budget (the
+    /// scoring policy is `builder.route_policy(..)`, cost-model by
+    /// default).
     Auto,
     /// Pin an explicit configuration (validated against the model).
     Explicit(ParallelConfig),
-}
-
-/// The routing decision for a (model, resolution) on a cluster, with the
-/// analytic latency prediction behind it — the typed form of the `route`
-/// subcommand.
-#[derive(Debug, Clone)]
-pub struct RoutePlan {
-    pub model: String,
-    pub px: usize,
-    /// Image-token sequence length the decision was made for.
-    pub s_img: usize,
-    /// Steps the prediction assumes (the model's benchmark step count).
-    pub steps: usize,
-    pub config: ParallelConfig,
-    /// Strategy the engine would run for this config.
-    pub method: Method,
-    pub predicted: LatencyBreakdown,
-    pub serial_seconds: f64,
-}
-
-impl RoutePlan {
-    pub fn speedup(&self) -> f64 {
-        if self.predicted.total > 0.0 {
-            self.serial_seconds / self.predicted.total
-        } else {
-            0.0
-        }
-    }
-
-    pub fn describe(&self) -> String {
-        format!(
-            "{} @ {}px ({} tokens): [{}] via {:?} — predicted {:.2}s \
-             ({:.2}s compute, {:.2}s exposed comm) vs serial {:.2}s ({:.1}x)",
-            self.model,
-            self.px,
-            self.s_img,
-            self.config.describe(),
-            self.method,
-            self.predicted.total,
-            self.predicted.compute,
-            self.predicted.comm_exposed,
-            self.serial_seconds,
-            self.speedup(),
-        )
-    }
 }
 
 /// Result of one `Pipeline::serve` / `Pipeline::serve_trace` call.
@@ -155,6 +109,9 @@ pub struct PipelineBuilder<'a> {
     cluster: Option<ClusterSpec>,
     world: Option<usize>,
     parallel: ParallelPolicy,
+    route_policy: RoutePolicy,
+    memory_cap_gb: Option<f64>,
+    deadline_admission: bool,
     scheduler: Option<SchedulerKind>,
     method: Option<Method>,
     max_batch: usize,
@@ -169,6 +126,9 @@ impl<'a> Default for PipelineBuilder<'a> {
             cluster: None,
             world: None,
             parallel: ParallelPolicy::Auto,
+            route_policy: RoutePolicy::default(),
+            memory_cap_gb: None,
+            deadline_admission: false,
             scheduler: None,
             method: None,
             max_batch: 4,
@@ -203,6 +163,28 @@ impl<'a> PipelineBuilder<'a> {
 
     pub fn parallel(mut self, policy: ParallelPolicy) -> Self {
         self.parallel = policy;
+        self
+    }
+
+    /// Scoring policy behind `ParallelPolicy::Auto`: the cost-model
+    /// planner (default) or the §5.2.4 paper heuristic.
+    pub fn route_policy(mut self, policy: RoutePolicy) -> Self {
+        self.route_policy = policy;
+        self
+    }
+
+    /// Per-GPU HBM budget the planner prunes candidates against
+    /// (default: the cluster's GPU capacity).
+    pub fn memory_cap_gb(mut self, gb: f64) -> Self {
+        self.memory_cap_gb = Some(gb);
+        self
+    }
+
+    /// Reject deadlined requests at `submit` time when even their
+    /// cheapest feasible plan predicts a miss (default off: hopeless
+    /// requests are served and the miss is only counted).
+    pub fn deadline_admission(mut self, enabled: bool) -> Self {
+        self.deadline_admission = enabled;
         self
     }
 
@@ -262,48 +244,45 @@ impl<'a> PipelineBuilder<'a> {
         Ok((cluster, world))
     }
 
-    /// Routing decision + analytic latency for `(model, px)` on this
-    /// builder's cluster/world. Needs no runtime or artifacts, so it works
-    /// for the paper-scale analytic models too.
-    pub fn plan(&self, model: &ModelSpec, px: usize) -> Result<RoutePlan> {
+    fn planner(&self) -> Planner {
+        let mut planner = Planner::default().with_policy(self.route_policy);
+        if let Some(gb) = self.memory_cap_gb {
+            planner = planner.with_memory_cap_gb(gb);
+        }
+        planner
+    }
+
+    /// Routing decision + analytic cost prediction for `(model, px)` on
+    /// this builder's cluster/world: the auto-planner's best plan (or the
+    /// explicit config, scored). Needs no runtime or artifacts, so it
+    /// works for the paper-scale analytic models too.
+    pub fn plan(&self, model: &ModelSpec, px: usize) -> Result<Plan> {
         let (cluster, world) = self.resolve_cluster_world()?;
-        let s_img = model.seq_len(px);
-        let config = match self.parallel {
-            ParallelPolicy::Auto => route(model, s_img, &cluster, world),
+        let planner = self.planner();
+        let mut plan = match self.parallel {
+            ParallelPolicy::Auto => planner.plan(model, px, &cluster, world),
             ParallelPolicy::Explicit(pc) => {
-                pc.validate(model, s_img)?;
-                pc
+                pc.validate(model, model.seq_len(px))?;
+                let mut p = planner.score(model, px, &cluster, &pc);
+                p.why = "explicit ParallelPolicy pinned by the caller".into();
+                p
             }
         };
-        let steps = model.default_steps;
-        let method = self.method.unwrap_or_else(|| pick_method(&config));
-        let serial_seconds = serial_latency(model, px, &cluster, steps);
-        // predict with the closed form that matches the strategy the
-        // engine would actually run — the general Hybrid form covers any
-        // cfg/pipe/ulysses/ring mix, the baselines get their own rows
-        let predicted = match method {
-            Method::Serial => LatencyBreakdown {
-                compute: serial_seconds,
-                comm_exposed: 0.0,
-                warmup_extra: 0.0,
-                total: serial_seconds,
-            },
-            Method::Tp => predict_latency(model, px, &cluster, PerfMethod::Tp, &config, steps),
-            Method::DistriFusion => {
-                predict_latency(model, px, &cluster, PerfMethod::DistriFusion, &config, steps)
-            }
-            _ => predict_latency(model, px, &cluster, PerfMethod::Hybrid, &config, steps),
-        };
-        Ok(RoutePlan {
-            model: model.name.clone(),
-            px,
-            s_img,
-            steps,
-            config,
-            method,
-            predicted,
-            serial_seconds,
-        })
+        if let Some(method) = self.method {
+            // the prediction must describe the forced strategy, not the
+            // config's best case — baselines get their own closed forms
+            // and their own Table-1 comm/memory rows
+            planner.reprice_for_method(&mut plan, method, model, &cluster);
+        }
+        Ok(plan)
+    }
+
+    /// Every candidate plan for `(model, px)`, ranked (feasible plans
+    /// first, ascending predicted latency) — the typed form of the
+    /// `route --top-k` table.
+    pub fn plan_candidates(&self, model: &ModelSpec, px: usize) -> Result<Vec<Plan>> {
+        let (cluster, world) = self.resolve_cluster_world()?;
+        Ok(self.planner().rank(model, px, &cluster, world))
     }
 
     pub fn build(self) -> Result<Pipeline<'a>> {
@@ -317,6 +296,9 @@ impl<'a> PipelineBuilder<'a> {
         if let ParallelPolicy::Explicit(pc) = self.parallel {
             engine.force_config = Some(pc);
         }
+        engine.route_policy = self.route_policy;
+        engine.memory_cap_bytes = self.memory_cap_gb.map(|gb| gb * 1e9);
+        engine.deadline_admission = self.deadline_admission;
         engine.force_method = self.method;
         engine.default_scheduler = self.scheduler;
         Ok(Pipeline { engine, policy: self.parallel })
@@ -433,11 +415,15 @@ impl<'a> Pipeline<'a> {
     }
 
     /// The routing decision this pipeline would make for `(model, px)`.
-    pub fn plan(&self, model: &ModelSpec, px: usize) -> Result<RoutePlan> {
+    pub fn plan(&self, model: &ModelSpec, px: usize) -> Result<Plan> {
         let mut b = PipelineBuilder::new()
             .cluster(self.engine.cluster.clone())
             .world(self.engine.world)
-            .parallel(self.policy);
+            .parallel(self.policy)
+            .route_policy(self.engine.route_policy);
+        if let Some(cap) = self.engine.memory_cap_bytes {
+            b = b.memory_cap_gb(cap / 1e9);
+        }
         if let Some(m) = self.engine.force_method {
             b = b.method(m);
         }
@@ -546,6 +532,50 @@ mod tests {
             .parallel(oversized)
             .plan(&m, 256)
             .is_ok());
+    }
+
+    #[test]
+    fn route_policy_flows_through_plan() {
+        use crate::coordinator::paper_heuristic;
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let cluster = l40_cluster(2);
+        let paper = Pipeline::builder()
+            .cluster(cluster.clone())
+            .world(16)
+            .route_policy(RoutePolicy::PaperHeuristic)
+            .plan(&m, 2048)
+            .unwrap();
+        assert_eq!(paper.config, paper_heuristic(&m, 2048, &cluster, 16));
+        let cost = Pipeline::builder().cluster(cluster).world(16).plan(&m, 2048).unwrap();
+        assert!(cost.predicted.total <= paper.predicted.total + 1e-12);
+        assert!(cost.candidates > 1, "{}", cost.why);
+    }
+
+    #[test]
+    fn plan_candidates_rank_and_include_the_winner() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let b = Pipeline::builder().cluster(l40_cluster(1)).world(8);
+        let ranked = b.plan_candidates(&m, 2048).unwrap();
+        let best = b.plan(&m, 2048).unwrap();
+        assert!(!ranked.is_empty());
+        assert_eq!(ranked[0].config, best.config);
+        assert!(ranked[0].comm_bytes >= 0.0 && ranked[0].peak_memory_bytes > 0.0);
+    }
+
+    #[test]
+    fn deadline_admission_flows_through_the_facade() {
+        let rt = Runtime::simulated();
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(4)
+            .deadline_admission(true)
+            .build()
+            .unwrap();
+        let hopeless = GenRequest::new(0, "x").with_steps(1).with_deadline(1e-15);
+        let rej = pipe.submit(hopeless).unwrap_err();
+        assert!(rej.reason.contains("deadline infeasible"), "{}", rej.reason);
+        assert!(pipe.submit(GenRequest::new(1, "y").with_steps(1)).is_ok());
     }
 
     #[test]

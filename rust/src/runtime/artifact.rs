@@ -192,22 +192,27 @@ mod tests {
 
     #[test]
     fn weight_ref_resolution() {
-        let r = WeightRef::Layer { variant: "adaln".into(), rel: 1, param: "Wqkv".into(), dec: false };
+        let r =
+            WeightRef::Layer { variant: "adaln".into(), rel: 1, param: "Wqkv".into(), dec: false };
         assert_eq!(r.resolve(2, 2, 8), "adaln.L5.Wqkv");
-        let d = WeightRef::Layer { variant: "skip".into(), rel: 3, param: "Wskip".into(), dec: true };
+        let d =
+            WeightRef::Layer { variant: "skip".into(), rel: 3, param: "Wskip".into(), dec: true };
         assert_eq!(d.resolve(0, 4, 8), "skip.L7.Wskip");
         // per-layer decoder ref (ls=1): stage is decoder-relative layer idx
-        let pl = WeightRef::Layer { variant: "skip".into(), rel: 0, param: "Wqkv".into(), dec: true };
+        let pl =
+            WeightRef::Layer { variant: "skip".into(), rel: 0, param: "Wqkv".into(), dec: true };
         assert_eq!(pl.resolve(2, 1, 8), "skip.L6.Wqkv");
         let g = WeightRef::Global { variant: "mmdit".into(), name: "We".into() };
         assert_eq!(g.resolve(0, 1, 8), "mmdit.We");
-        assert_eq!(WeightRef::Shared { name: "txt_table".into() }.resolve(0, 1, 8), "shared.txt_table");
+        let shared = WeightRef::Shared { name: "txt_table".into() };
+        assert_eq!(shared.resolve(0, 1, 8), "shared.txt_table");
         assert_eq!(WeightRef::Vae { name: "k0".into() }.resolve(0, 1, 8), "vae.k0");
     }
 
     #[test]
     fn parse_ref_json() {
-        let j = Json::parse(r#"{"variant":"adaln","layer_rel":0,"param":"W1","dec":false}"#).unwrap();
+        let j =
+            Json::parse(r#"{"variant":"adaln","layer_rel":0,"param":"W1","dec":false}"#).unwrap();
         let r = WeightRef::parse(&j).unwrap();
         assert_eq!(r.resolve(0, 4, 8), "adaln.L0.W1");
     }

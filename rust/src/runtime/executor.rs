@@ -133,7 +133,12 @@ impl Runtime {
 
     /// Execute an entrypoint. `stage` positions stage-relative weight refs.
     /// Returns the tuple of outputs as host tensors.
-    pub fn call(&self, entry_name: &str, stage: usize, data: &[ArgValue<'_>]) -> Result<Vec<Tensor>> {
+    pub fn call(
+        &self,
+        entry_name: &str,
+        stage: usize,
+        data: &[ArgValue<'_>],
+    ) -> Result<Vec<Tensor>> {
         let entry = self.manifest.entries.get(entry_name);
         match entry {
             Some(e) => validate_args(e, data)?,

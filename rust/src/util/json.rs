@@ -90,13 +90,6 @@ impl Json {
         self.as_arr()?.iter().map(|x| x.as_usize()).collect()
     }
 
-    /// Serialize (stable key order; used for golden-file tests and reports).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -148,6 +141,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Canonical serialization (stable key order, compact) — `to_string()`
+/// comes from this impl and is what golden-file snapshots diff against.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

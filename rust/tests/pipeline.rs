@@ -12,6 +12,7 @@ use xdit::coordinator::GenRequest;
 use xdit::diffusion::SchedulerKind;
 use xdit::pipeline::{ParallelPolicy, Pipeline};
 use xdit::runtime::Runtime;
+use xdit::RoutePolicy;
 
 fn runtime() -> Option<Runtime> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -41,13 +42,32 @@ fn plan_tracks_resolution_not_a_constant() {
 
 #[test]
 fn plan_interconnect_preferences() {
-    // the typed plan exposes the §5.2.4 policy: PCIe leans PipeFusion,
-    // NVLink leans Ulysses
+    // under the PaperHeuristic policy the typed plan exposes the §5.2.4
+    // preferences: PCIe leans PipeFusion, NVLink leans Ulysses
     let m = ModelSpec::by_name("tiny-adaln").unwrap();
-    let pcie = Pipeline::builder().cluster(l40_cluster(1)).world(8).plan(&m, 256).unwrap();
-    let nvlink = Pipeline::builder().cluster(a100_node()).world(8).plan(&m, 256).unwrap();
+    let paper = |cluster| {
+        Pipeline::builder()
+            .cluster(cluster)
+            .world(8)
+            .route_policy(RoutePolicy::PaperHeuristic)
+            .plan(&m, 256)
+            .unwrap()
+    };
+    let pcie = paper(l40_cluster(1));
+    let nvlink = paper(a100_node());
     assert!(pcie.config.pipefusion >= pcie.config.ulysses, "{}", pcie.describe());
     assert!(nvlink.config.ulysses >= 2, "{}", nvlink.describe());
+    // the default cost-model policy may pick differently, but never a
+    // config the model predicts slower than the heuristic's
+    for (cluster, heuristic) in [(l40_cluster(1), &pcie), (a100_node(), &nvlink)] {
+        let cost = Pipeline::builder().cluster(cluster).world(8).plan(&m, 256).unwrap();
+        assert!(
+            cost.predicted.total <= heuristic.predicted.total + 1e-15,
+            "cost {} vs heuristic {}",
+            cost.predicted.total,
+            heuristic.predicted.total
+        );
+    }
 }
 
 #[test]

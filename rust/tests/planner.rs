@@ -1,0 +1,195 @@
+//! Auto-planner acceptance + property tests (all analytic — no runtime,
+//! no artifacts):
+//! * on every small world the planner's choice matches the brute-force
+//!   argmin of the cost model over every valid config;
+//! * the planner never returns an invalid or world-wasting config, under
+//!   either policy;
+//! * memory-cap pruning rejects exactly the candidates the memory model
+//!   puts over budget;
+//! * on the figs 8–17 grid the planner is never predicted-slower than the
+//!   §5.2.4 heuristic and strictly faster in at least one cell;
+//! * the committed golden snapshot stays parseable and in sync with the
+//!   grid shape (the byte-exact diff is the CI `route --grid` gate).
+
+use xdit::config::hardware::{a100_node, l40_cluster};
+use xdit::config::model::ModelSpec;
+use xdit::config::parallel::ParallelConfig;
+use xdit::coordinator::planner::{grid_report, paper_grid, GRID_WORLDS};
+use xdit::coordinator::{paper_heuristic, route_with_policy};
+use xdit::perf::latency::{predict_latency, Method as PerfMethod};
+use xdit::perf::memory_model::config_fits;
+use xdit::testing::{check, gen};
+use xdit::util::json::Json;
+use xdit::{Planner, RoutePolicy};
+
+const MODELS: [&str; 9] = [
+    "pixart", "sd3", "flux", "hunyuan", "cogvideox", "tiny-adaln", "tiny-cross", "tiny-mmdit",
+    "tiny-skip",
+];
+
+#[test]
+fn prop_planner_is_bruteforce_argmin_on_small_worlds() {
+    check("planner == brute-force argmin", 60, |rng| {
+        let m = ModelSpec::by_name(*rng.pick(&MODELS)).unwrap();
+        let cluster = if rng.below(2) == 0 { l40_cluster(1) } else { a100_node() };
+        let world = gen::pow2_upto(rng, 8);
+        let px = if m.runnable { 256 } else { *rng.pick(&[1024usize, 2048]) };
+        let plan = Planner::default().plan(&m, px, &cluster, world);
+        let candidates = ParallelConfig::enumerate(world, &m, m.seq_len(px));
+        if candidates.is_empty() {
+            return Ok(()); // heuristic fallback path, covered below
+        }
+        // brute force mirrors the planner's spec: argmin over the
+        // memory-feasible candidates, or over everything if none fit
+        let fitting: Vec<&ParallelConfig> = candidates
+            .iter()
+            .filter(|pc| config_fits(&m, px, pc, cluster.gpu.mem_bytes))
+            .collect();
+        let pool: Vec<&ParallelConfig> =
+            if fitting.is_empty() { candidates.iter().collect() } else { fitting };
+        let brute = pool
+            .iter()
+            .map(|pc| predict_latency(&m, px, &cluster, PerfMethod::Hybrid, pc, plan.steps).total)
+            .fold(f64::INFINITY, f64::min);
+        if (plan.predicted.total - brute).abs() > 1e-12 * brute.max(1.0) {
+            return Err(format!(
+                "{} {} w={world} px={px}: planner {} != argmin {brute}",
+                m.name, cluster.name, plan.predicted.total
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planner_configs_always_valid_and_world_filling() {
+    check("planner validity", 80, |rng| {
+        let m = ModelSpec::by_name(*rng.pick(&MODELS)).unwrap();
+        let cluster = if rng.below(2) == 0 { l40_cluster(2) } else { a100_node() };
+        let world = gen::pow2_upto(rng, cluster.n_gpus);
+        let px = if m.runnable { 256 } else { 1024 };
+        for policy in [RoutePolicy::CostModel, RoutePolicy::PaperHeuristic] {
+            let pc = route_with_policy(policy, &m, px, &cluster, world);
+            pc.validate(&m, m.seq_len(px)).map_err(|e| {
+                format!("{policy:?} invalid for {} w={world}: {e}", m.name)
+            })?;
+            // the cost model may only under-fill the world when *no*
+            // valid config exists for it (the heuristic fallback)
+            if pc.world() != world
+                && !ParallelConfig::enumerate(world, &m, m.seq_len(px)).is_empty()
+            {
+                return Err(format!(
+                    "{policy:?} wasted devices for {}: {} of {world}",
+                    m.name,
+                    pc.world()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_cap_prunes_exactly_the_over_budget_configs() {
+    check("memory pruning exactness", 60, |rng| {
+        let m = ModelSpec::by_name(*rng.pick(&["pixart", "sd3", "flux", "hunyuan"])).unwrap();
+        let cluster = if rng.below(2) == 0 { l40_cluster(1) } else { a100_node() };
+        let world = *rng.pick(&[2usize, 4, 8]);
+        let px = *rng.pick(&[1024usize, 2048]);
+        let cap_gb = gen::usize_in(rng, 1, 100) as f64;
+        let planner = Planner::default().with_memory_cap_gb(cap_gb);
+        let ranked = planner.rank(&m, px, &cluster, world);
+        for plan in &ranked {
+            let fits = config_fits(&m, px, &plan.config, cap_gb * 1e9);
+            if plan.fits != fits {
+                return Err(format!(
+                    "cap {cap_gb} GB: plan [{}] fits={} but memory model says {}",
+                    plan.config.describe(),
+                    plan.fits,
+                    fits
+                ));
+            }
+        }
+        let pruned = ranked.iter().filter(|p| !p.fits).count();
+        if ranked.iter().any(|p| p.pruned != pruned) {
+            return Err("pruned count inconsistent across the ranking".into());
+        }
+        // the chosen plan is feasible whenever anything is feasible
+        let best = planner.plan(&m, px, &cluster, world);
+        if pruned < ranked.len() && !best.fits {
+            return Err(format!(
+                "planner chose an infeasible plan [{}] with {} feasible candidates",
+                best.config.describe(),
+                ranked.len() - pruned
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fig_grid_planner_never_loses_to_heuristic_and_strictly_wins_somewhere() {
+    let cost = Planner::default();
+    let paper = Planner::default().with_policy(RoutePolicy::PaperHeuristic);
+    let mut strict = 0usize;
+    for (m, px, cluster) in paper_grid() {
+        for world in GRID_WORLDS {
+            if world > cluster.n_gpus {
+                continue;
+            }
+            let p = cost.plan(&m, px, &cluster, world);
+            let h = paper.plan(&m, px, &cluster, world);
+            assert_eq!(h.config, paper_heuristic(&m, px, &cluster, world));
+            // the bound holds whenever the heuristic's pick fits memory
+            // (then it is inside the planner's feasible enumeration);
+            // memory pruning may legitimately force a slower-but-feasible
+            // plan when the heuristic's choice would OOM
+            if h.fits {
+                assert!(
+                    p.predicted.total <= h.predicted.total + 1e-12,
+                    "{} on {} w={world}: planner {} > heuristic {}",
+                    m.name,
+                    cluster.name,
+                    p.predicted.total,
+                    h.predicted.total
+                );
+                if p.predicted.total < h.predicted.total * (1.0 - 1e-9) {
+                    strict += 1;
+                }
+            }
+        }
+    }
+    assert!(strict >= 1, "planner must strictly beat the heuristic in at least one cell");
+}
+
+#[test]
+fn committed_golden_snapshot_parses_and_matches_grid_shape() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("testdata/plans.golden.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden snapshot {}: {e}", path.display()));
+    let golden = Json::parse(&text).expect("golden snapshot must be valid JSON");
+    let cells = golden.as_arr().unwrap();
+    let live = Json::parse(&grid_report()).unwrap();
+    assert_eq!(
+        cells.len(),
+        live.as_arr().unwrap().len(),
+        "golden snapshot cell count out of sync with the grid definition"
+    );
+    for cell in cells {
+        for key in [
+            "model", "cluster", "world", "px", "config", "method", "predicted_us", "comm_bytes",
+            "peak_mem_bytes", "fits", "heuristic_config", "heuristic_us",
+        ] {
+            assert!(cell.opt(key).is_some(), "golden cell missing '{key}': {cell}");
+        }
+    }
+}
+
+#[test]
+#[ignore = "byte-exact golden diff; CI runs it via `route --grid` (see ci.yml). \
+            Regenerate with: cargo run --release -- route --grid > rust/testdata/plans.golden.json"]
+fn golden_snapshot_is_byte_exact() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("testdata/plans.golden.json");
+    let committed = std::fs::read_to_string(path).unwrap();
+    assert_eq!(committed, grid_report(), "run: cargo run --release -- route --grid");
+}
