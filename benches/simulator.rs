@@ -1,0 +1,142 @@
+//! Simulator-vs-closed-form agreement sweep over the figs 8–17 grid.
+//!
+//! For every (model, px, cluster) cell and world size the golden-plan
+//! snapshot pins, the discrete-event simulator replays each strategy and
+//! its makespan is compared against `perf::latency`'s closed form:
+//!
+//! * **Tight band (±1%)** where overlap is total or absent — serial, the
+//!   CFG pair, TP, SP-Ulysses, SP-Ring, DistriFusion. Event playback and
+//!   the closed form are the same algebra there; the band only absorbs
+//!   float accumulation.
+//! * **Loose band (0.2×–3.0×)** for PipeFusion and the best hybrid — the
+//!   divergence cells are exactly the interesting ones: the event
+//!   pipeline amortizes the per-step fill bubble the closed form
+//!   charges, while CFG hybrids pay their USP collectives once per
+//!   forward instead of once per step. The simulated makespan must also
+//!   never fall below the busiest rank's pure-compute time.
+//!
+//! The bench prints the per-cell ratios and a divergence summary, then
+//! times a full-grid simulation pass.
+use xdit::config::parallel::ParallelConfig;
+use xdit::coordinator::planner::{paper_grid, GRID_WORLDS};
+use xdit::perf::latency::{best_hybrid, predict_latency, serial_latency, Method};
+use xdit::perf::simulator::simulate;
+use xdit::util::bench::bench;
+
+const STEPS: usize = 20;
+const TIGHT_REL_TOL: f64 = 0.01;
+const LOOSE_LO: f64 = 0.2;
+const LOOSE_HI: f64 = 3.0;
+
+fn main() {
+    println!("# simulator vs closed form, figs 8-17 grid ({STEPS} steps)");
+    println!(
+        "{:<11} {:<7} {:>4} {:<13} {:>9} {:>9} {:>6} {:>8}",
+        "model", "cluster", "gpus", "strategy", "sim(s)", "cf(s)", "ratio", "overlap"
+    );
+    let mut cells = 0usize;
+    let mut divergent = 0usize;
+    for (m, px, cluster) in paper_grid() {
+        let s_img = m.seq_len(px);
+        for world in GRID_WORLDS {
+            if world > cluster.n_gpus {
+                continue;
+            }
+            let mut plays: Vec<(&str, Method, ParallelConfig, bool)> = Vec::new();
+            if world == 1 {
+                plays.push(("serial", Method::Hybrid, ParallelConfig::serial(), true));
+            } else {
+                let exact = [Method::Tp, Method::SpUlysses, Method::SpRing, Method::DistriFusion];
+                for meth in exact {
+                    plays.push((meth.label(), meth, meth.single_config(world), true));
+                }
+                plays.push((
+                    "pipefusion",
+                    Method::PipeFusion,
+                    Method::PipeFusion.single_config(world),
+                    false,
+                ));
+                if world == 2 && m.uses_cfg {
+                    plays.push(("cfg", Method::Hybrid, ParallelConfig::new(2, 1, 1, 1), true));
+                }
+                let (best, _) = best_hybrid(&m, px, &cluster, world, STEPS);
+                plays.push(("hybrid", Method::Hybrid, best, false));
+            }
+            for (name, meth, pc, tight) in plays {
+                if pc.validate(&m, s_img).is_err() {
+                    continue;
+                }
+                let cf = predict_latency(&m, px, &cluster, meth, &pc, STEPS).total;
+                let tl = simulate(&m, px, &cluster, meth, &pc, STEPS);
+                let ratio = tl.makespan / cf.max(1e-12);
+                cells += 1;
+                if (ratio - 1.0).abs() > 0.05 {
+                    divergent += 1;
+                }
+                println!(
+                    "{:<11} {:<7} {:>4} {:<13} {:>9.2} {:>9.2} {:>6.3} {:>7.0}%",
+                    m.name,
+                    cluster.name,
+                    world,
+                    name,
+                    tl.makespan,
+                    cf,
+                    ratio,
+                    tl.achieved_overlap() * 100.0
+                );
+                // every strategy: the makespan can never beat the
+                // busiest rank's pure compute
+                assert!(
+                    tl.makespan >= tl.max_rank_compute() - 1e-9,
+                    "{name} on {} w={world}: makespan {} below compute bound {}",
+                    cluster.name,
+                    tl.makespan,
+                    tl.max_rank_compute()
+                );
+                if tight {
+                    assert!(
+                        (ratio - 1.0).abs() <= TIGHT_REL_TOL,
+                        "{name} ({}) on {} w={world}: sim {} vs cf {cf} breaks the \
+                         ±{TIGHT_REL_TOL} band",
+                        m.name,
+                        cluster.name,
+                        tl.makespan
+                    );
+                } else {
+                    assert!(
+                        (LOOSE_LO..=LOOSE_HI).contains(&ratio),
+                        "{name} ({}) on {} w={world}: ratio {ratio} outside \
+                         [{LOOSE_LO}, {LOOSE_HI}]",
+                        m.name,
+                        cluster.name
+                    );
+                }
+            }
+        }
+    }
+    println!("{cells} strategy cells simulated; {divergent} diverge >5% from the closed form");
+    assert!(cells > 50, "the grid sweep must cover a real population of cells");
+    assert!(
+        divergent > 0,
+        "some pipelined cells must diverge — that is the simulator's reason to exist"
+    );
+
+    // sanity anchor: a serial cell reproduces the serial closed form
+    let (m, px, cluster) = paper_grid().remove(0);
+    let tl = simulate(&m, px, &cluster, Method::Hybrid, &ParallelConfig::serial(), STEPS);
+    let serial = serial_latency(&m, px, &cluster, STEPS);
+    assert!((tl.makespan - serial).abs() <= TIGHT_REL_TOL * serial);
+
+    let s = bench("simulate the full figs 8-17 grid (hybrid)", || {
+        for (m, px, cluster) in paper_grid() {
+            for world in GRID_WORLDS {
+                if world > cluster.n_gpus {
+                    continue;
+                }
+                let (pc, _) = best_hybrid(&m, px, &cluster, world, STEPS);
+                std::hint::black_box(simulate(&m, px, &cluster, Method::Hybrid, &pc, STEPS));
+            }
+        }
+    });
+    eprintln!("{}", s.report());
+}

@@ -103,13 +103,14 @@ fn main() -> xdit::Result<()> {
     println!("\nper-request results:");
     for r in &report.responses {
         println!(
-            "  req {:>4}: config=[{}] sched={} model {:.3}s (plan {:.2e}s), \
-             e2e latency {:.3}s{}",
+            "  req {:>4}: config=[{}] sched={} model {:.3}s (plan {:.2e}s, \
+             sim {:.2e}s), e2e latency {:.3}s{}",
             r.id,
             r.parallel_config,
             r.scheduler,
             r.model_seconds,
             r.predicted_seconds,
+            r.simulated_seconds,
             r.latency,
             if r.image.is_some() { " +image" } else { "" }
         );

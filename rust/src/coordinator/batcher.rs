@@ -18,22 +18,30 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::request::GenRequest;
 
+/// One launchable batch: requests that share a `batch_key` (compiled
+/// shapes + routed mesh), at most `max_batch` of them.
 #[derive(Debug, Clone)]
 pub struct Batch {
+    /// Members in FIFO execution order (arrival, then id).
     pub requests: Vec<GenRequest>,
 }
 
 impl Batch {
+    /// Number of requests in the batch.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// True when the batch has no members.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
 }
 
+/// The compatibility batcher: continuous per-tick re-formation of the
+/// waiting set with priority aging (see the module docs).
 pub struct Batcher {
+    /// Most requests a single launched batch may carry.
     pub max_batch: usize,
     /// Effective-priority units gained per virtual second of waiting.
     /// 0 disables aging (strict priorities; starvation possible).
@@ -41,10 +49,13 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Batcher with `max_batch` (clamped to >= 1) and aging rate 1.0.
     pub fn new(max_batch: usize) -> Batcher {
         Batcher { max_batch: max_batch.max(1), aging_rate: 1.0 }
     }
 
+    /// Replace the aging rate (clamped to >= 0; 0 = strict priorities,
+    /// starvation possible).
     pub fn with_aging_rate(mut self, rate: f64) -> Batcher {
         self.aging_rate = rate.max(0.0);
         self

@@ -35,7 +35,7 @@ use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::planner::{Plan, Planner, RoutePolicy};
+use crate::coordinator::planner::{Fidelity, Plan, Planner, RoutePolicy};
 use crate::coordinator::queue::{PushError, RequestQueue};
 use crate::coordinator::request::{GenRequest, GenResponse, RequestId};
 use crate::diffusion::SchedulerKind;
@@ -51,7 +51,9 @@ pub const DEFAULT_QUEUE_CAPACITY: usize = 64;
 /// Why a request was refused admission (returned by [`Engine::submit`]).
 #[derive(Debug, Clone)]
 pub struct Rejection {
+    /// The request that was refused admission.
     pub id: RequestId,
+    /// Human-readable refusal reason (backpressure, deadline infeasible).
     pub reason: String,
 }
 
@@ -61,16 +63,28 @@ impl std::fmt::Display for Rejection {
     }
 }
 
+/// The continuous-batching serving engine (see the module docs for the
+/// admission path and lifecycle invariants). Internal: user code enters
+/// through `crate::pipeline::Pipeline`.
 pub struct Engine<'a> {
+    /// Execution runtime (PJRT artifacts or the hermetic simulation).
     pub rt: &'a Runtime,
+    /// Simulated cluster topology batches are timed against.
     pub cluster: ClusterSpec,
+    /// Devices this engine serves on.
     pub world: usize,
+    /// Compatibility batcher (max batch size, priority aging).
     pub batcher: Batcher,
+    /// Cumulative engine-lifetime serving metrics.
     pub metrics: Metrics,
     /// Override the auto-planner (None = planner policy, resolution-aware).
     pub force_config: Option<ParallelConfig>,
     /// Routing policy for un-forced batches (default: cost-model planner).
     pub route_policy: RoutePolicy,
+    /// Scoring fidelity of the per-batch routing decision (default:
+    /// closed forms; `Fidelity::Simulated` re-scores top candidates with
+    /// the event simulator on every batch launch).
+    pub route_fidelity: Fidelity,
     /// Per-GPU HBM budget the planner prunes with (None = cluster GPU).
     pub memory_cap_bytes: Option<f64>,
     /// When set, `submit` rejects a deadlined request whose *cheapest
@@ -96,6 +110,8 @@ pub struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
+    /// An engine over `world` devices of `cluster`, with default policy
+    /// knobs (cost-model routing, bounded queue, no forced strategy).
     pub fn new(rt: &'a Runtime, cluster: ClusterSpec, world: usize) -> Engine<'a> {
         Engine {
             rt,
@@ -105,6 +121,7 @@ impl<'a> Engine<'a> {
             metrics: Metrics::default(),
             force_config: None,
             route_policy: RoutePolicy::default(),
+            route_fidelity: Fidelity::default(),
             memory_cap_bytes: None,
             deadline_admission: false,
             force_method: None,
@@ -124,6 +141,7 @@ impl<'a> Engine<'a> {
         self.queue = RequestQueue::new(capacity.max(1));
     }
 
+    /// Current bound on the admission queue.
     pub fn queue_capacity(&self) -> usize {
         self.queue.capacity
     }
@@ -181,11 +199,7 @@ impl<'a> Engine<'a> {
     /// `predicted_seconds` and deadline admission describe what will
     /// actually run, not the config's best case.
     pub fn plan_for(&self, spec: &ModelSpec, px: usize, steps: usize) -> Plan {
-        let planner = Planner {
-            policy: self.route_policy,
-            steps: Some(steps),
-            memory_cap_bytes: self.memory_cap_bytes,
-        };
+        let planner = self.planner(steps);
         let mut plan = match self.force_config {
             Some(pc) => planner.score(spec, px, &self.cluster, &pc),
             None => planner.plan(spec, px, &self.cluster, self.world),
@@ -193,7 +207,21 @@ impl<'a> Engine<'a> {
         if let Some(method) = self.force_method {
             planner.reprice_for_method(&mut plan, method, spec, &self.cluster);
         }
+        // forced/pinned plans skip the re-scoring pass; honour the
+        // engine's fidelity by attaching the simulated makespan here
+        planner.attach_simulation(&mut plan, spec, &self.cluster);
         plan
+    }
+
+    /// The planner this engine's policy knobs configure, predicting for
+    /// `steps` diffusion steps.
+    fn planner(&self, steps: usize) -> Planner {
+        Planner {
+            policy: self.route_policy,
+            steps: Some(steps),
+            memory_cap_bytes: self.memory_cap_bytes,
+            fidelity: self.route_fidelity,
+        }
     }
 
     /// Deadline admission: reject iff even an immediate launch of the
@@ -272,6 +300,12 @@ impl<'a> Engine<'a> {
         let plan = self.plan_for(&spec, first.px, first.steps);
         let pc = plan.config;
         let method = self.force_method.unwrap_or_else(|| pick_method(&pc));
+        // one event-simulation per batch: responses report simulated vs
+        // closed-form vs virtual-actual seconds side by side (a plan
+        // scored at Fidelity::Simulated already carries the figure)
+        let simulated_seconds = plan.simulated_seconds.unwrap_or_else(|| {
+            self.planner(first.steps).simulate_plan(&plan, &spec, &self.cluster).makespan
+        });
 
         // one session per batch: the whole batch shares the mesh and runs
         // back-to-back on it
@@ -322,6 +356,7 @@ impl<'a> Engine<'a> {
                 comm_bytes,
                 parallel_config: pc.describe(),
                 predicted_seconds: plan.predicted.total,
+                simulated_seconds,
                 method: r.method,
                 scheduler: scheduler.key().to_string(),
                 px: req.px,
@@ -550,6 +585,9 @@ mod tests {
         assert_eq!(out[0].parallel_config, plan.config.describe());
         assert_eq!(out[0].predicted_seconds, plan.predicted.total);
         assert!(out[0].predicted_seconds > 0.0);
+        // the per-batch event simulation rides along in every response
+        assert!(out[0].simulated_seconds > 0.0);
+        assert_eq!(out[0].simulated_seconds, out.last().unwrap().simulated_seconds);
     }
 
     #[test]

@@ -2,16 +2,21 @@
 //! the queue-delay vs execution-time split, and batch-occupancy stats of
 //! the continuous-batching scheduler.
 
+/// Log-bucketed latency histogram over seconds (~1ms to ~1000s).
 #[derive(Debug, Clone)]
 pub struct Histogram {
     /// log2 buckets over seconds: (-inf,1ms], (1,2ms], ... up to >= ~1000s
     buckets: Vec<u64>,
+    /// Observations recorded.
     pub count: u64,
+    /// Sum of all observed values (seconds).
     pub sum: f64,
+    /// Largest observed value (seconds).
     pub max: f64,
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Histogram {
         Histogram { buckets: vec![0; 32], count: 0, sum: 0.0, max: 0.0 }
     }
@@ -21,6 +26,7 @@ impl Histogram {
         (ms.log2().floor().max(0.0) as usize).min(31)
     }
 
+    /// Record one observation of `v` seconds.
     pub fn observe(&mut self, v: f64) {
         self.buckets[Self::bucket(v)] += 1;
         self.count += 1;
@@ -30,6 +36,7 @@ impl Histogram {
         }
     }
 
+    /// Mean of all observations (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -71,7 +78,9 @@ pub struct Metrics {
     pub queue_delay: Histogram,
     /// Time on the simulated cluster (denoise + optional VAE decode).
     pub exec_time: Histogram,
+    /// Requests served to completion.
     pub served: u64,
+    /// Requests refused admission (backpressure or deadline admission).
     pub rejected: u64,
     /// Total simulated device-seconds of model compute.
     pub model_seconds: f64,
@@ -91,12 +100,14 @@ pub struct Metrics {
     pub batches: u64,
     /// Sum of batch sizes (mean occupancy = occupancy_sum / batches).
     pub occupancy_sum: u64,
+    /// Largest batch launched.
     pub occupancy_max: u64,
     /// Requests that finished after their declared deadline.
     pub deadline_misses: u64,
 }
 
 impl Metrics {
+    /// Served requests per virtual second of the serving horizon.
     pub fn throughput(&self) -> f64 {
         if self.horizon > 0.0 {
             self.served as f64 / self.horizon

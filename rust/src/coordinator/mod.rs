@@ -17,19 +17,27 @@
 //! that the leader drains into a `Trace` or `submit` loop (see
 //! `examples/serve_hybrid.rs`).
 
+/// Compatibility batching with continuous per-tick re-formation.
 pub mod batcher;
+/// The continuous-batching serving engine (`submit`/`tick`/`serve`).
 pub mod engine;
+/// Serving metrics: histograms, counters, occupancy.
 pub mod metrics;
+/// The cost-model auto-planner (`Plan`/`Planner`/`RoutePolicy`/`Fidelity`).
 pub mod planner;
+/// Bounded FIFO request queue with backpressure.
 pub mod queue;
+/// `GenRequest`/`GenResponse` serving types.
 pub mod request;
+/// Routing policy layer (§5.2.4 heuristic + cost-model default).
 pub mod router;
+/// Deterministic virtual-time arrival traces.
 pub mod trace;
 
 pub use batcher::{Batch, Batcher};
 pub use engine::{Engine, Rejection};
 pub use metrics::Metrics;
-pub use planner::{Plan, Planner, RoutePolicy};
+pub use planner::{Fidelity, Plan, Planner, RoutePolicy};
 pub use queue::RequestQueue;
 pub use request::{GenRequest, GenResponse, RequestId};
 pub use router::{paper_heuristic, route, route_with_policy};

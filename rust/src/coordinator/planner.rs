@@ -36,6 +36,7 @@ use crate::perf::latency::{
     predict_latency, serial_latency, LatencyBreakdown, Method as PerfMethod,
 };
 use crate::perf::memory_model::{config_memory, HBM_USABLE_FRACTION};
+use crate::perf::simulator::{simulate, Timeline};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -52,6 +53,8 @@ pub enum RoutePolicy {
 }
 
 impl RoutePolicy {
+    /// Parse a policy name: `cost`/`cost-model`/`planner` or
+    /// `paper`/`heuristic`.
     pub fn parse(s: &str) -> Result<RoutePolicy> {
         Ok(match s {
             "cost" | "cost-model" | "planner" => RoutePolicy::CostModel,
@@ -64,6 +67,7 @@ impl RoutePolicy {
         })
     }
 
+    /// Canonical short key, accepted back by [`RoutePolicy::parse`].
     pub fn key(&self) -> &'static str {
         match self {
             RoutePolicy::CostModel => "cost",
@@ -72,24 +76,63 @@ impl RoutePolicy {
     }
 }
 
+/// Scoring fidelity of the auto-planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Fidelity {
+    /// Closed-form step-time model only — the default, and what the
+    /// golden-plan snapshot pins.
+    #[default]
+    ClosedForm,
+    /// Re-score the top closed-form candidates with the discrete-event
+    /// overlap simulator (`perf::simulator`): the pipeline fill bubble,
+    /// partial overlap and CFG barriers are played out on per-rank
+    /// clocks, ties break on the simulated makespan, and the plan's
+    /// "why" cites the winner's critical path.
+    Simulated,
+}
+
+/// How many top closed-form candidates `Fidelity::Simulated` re-scores.
+pub const SIM_RESCORE_TOP_K: usize = 4;
+
 /// A scored routing decision: the config plus everything the cost model
 /// knows about it. This is what `Pipeline::plan`, the `route` CLI and the
 /// serving admission check all consume.
+///
+/// ```
+/// use xdit::config::hardware::l40_cluster;
+/// use xdit::config::model::ModelSpec;
+/// use xdit::Planner;
+///
+/// let m = ModelSpec::by_name("pixart")?;
+/// let plan = Planner::default().plan(&m, 2048, &l40_cluster(2), 16);
+/// assert_eq!(plan.config.world(), 16);
+/// assert!(plan.fits && plan.speedup() > 1.0);
+/// println!("{}", plan.describe());
+/// # Ok::<(), xdit::Error>(())
+/// ```
 #[derive(Debug, Clone)]
 pub struct Plan {
+    /// Model the decision was made for.
     pub model: String,
+    /// Target resolution (pixels, square).
     pub px: usize,
     /// Image-token sequence length the decision was made for.
     pub s_img: usize,
     /// Steps the prediction assumes.
     pub steps: usize,
+    /// Devices the plan fills.
     pub world: usize,
+    /// Cluster the link model priced transfers on.
     pub cluster: String,
+    /// Routing policy that produced the plan.
     pub policy: RoutePolicy,
+    /// The chosen hybrid parallel configuration.
     pub config: ParallelConfig,
     /// Strategy the engine would run for this config.
     pub method: driver::Method,
+    /// Closed-form latency prediction for the whole generation.
     pub predicted: LatencyBreakdown,
+    /// Serial (1-GPU) baseline latency for the same generation.
     pub serial_seconds: f64,
     /// Per-device bytes moved over the whole generation (steps × the
     /// per-step Table-1 composition).
@@ -99,14 +142,19 @@ pub struct Plan {
     /// Whether the config fits the memory budget the planner used. A plan
     /// with `fits == false` is the least-bad choice of an infeasible set.
     pub fits: bool,
+    /// Discrete-event simulated makespan in seconds, when the planner ran
+    /// at `Fidelity::Simulated` (None under the closed-form default).
+    pub simulated_seconds: Option<f64>,
     /// Candidates enumerated / pruned by memory (cost-model policy only).
     pub candidates: usize,
+    /// Of those, how many the memory budget cut.
     pub pruned: usize,
     /// Human-readable reason this config won.
     pub why: String,
 }
 
 impl Plan {
+    /// Predicted speedup over the serial baseline.
     pub fn speedup(&self) -> f64 {
         if self.predicted.total > 0.0 {
             self.serial_seconds / self.predicted.total
@@ -115,8 +163,10 @@ impl Plan {
         }
     }
 
+    /// Multi-line human-readable report of the plan (the `route` CLI
+    /// output).
     pub fn describe(&self) -> String {
-        format!(
+        let mut out = format!(
             "{} @ {}px ({} tokens): [{}] via {} — predicted {:.2}s \
              ({:.2}s compute, {:.2}s exposed comm) vs serial {:.2}s ({:.1}x), \
              comm {:.2} GB/device, peak mem {:.1} GB{}\n  why: {}",
@@ -134,7 +184,11 @@ impl Plan {
             self.peak_memory_bytes / 1e9,
             if self.fits { "" } else { " [OVER MEMORY BUDGET]" },
             self.why,
-        )
+        );
+        if let Some(sim) = self.simulated_seconds {
+            out.push_str(&format!("\n  simulated (event timeline): {sim:.2}s"));
+        }
+        out
     }
 
     /// Canonical JSON form (sorted keys, integer metrics) — the unit of
@@ -153,6 +207,11 @@ impl Plan {
         o.insert("comm_bytes".into(), Json::Num(self.comm_bytes.round()));
         o.insert("peak_mem_bytes".into(), Json::Num(self.peak_memory_bytes.round()));
         o.insert("fits".into(), Json::Bool(self.fits));
+        if let Some(sim) = self.simulated_seconds {
+            // only present under Fidelity::Simulated — the closed-form
+            // golden snapshot stays byte-identical
+            o.insert("simulated_us".into(), Json::Num((sim * 1e6).round()));
+        }
         Json::Obj(o)
     }
 }
@@ -161,25 +220,39 @@ impl Plan {
 /// (`Planner::default()`) is the engine's production configuration.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Planner {
+    /// Scoring policy: cost-model argmin (default) or the §5.2.4 greedy.
     pub policy: RoutePolicy,
     /// Diffusion steps to predict for (`None` = the model's benchmark
     /// step count).
     pub steps: Option<usize>,
     /// Per-GPU HBM budget in bytes (`None` = the cluster's GPU capacity).
     pub memory_cap_bytes: Option<f64>,
+    /// Scoring fidelity: closed forms only (default), or a simulator
+    /// re-scoring pass over the top candidates.
+    pub fidelity: Fidelity,
 }
 
 impl Planner {
+    /// Replace the routing policy.
     pub fn with_policy(mut self, policy: RoutePolicy) -> Self {
         self.policy = policy;
         self
     }
 
+    /// Replace the scoring fidelity.
+    pub fn with_fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.fidelity = fidelity;
+        self
+    }
+
+    /// Predict for a fixed diffusion step count instead of the model's
+    /// benchmark default.
     pub fn with_steps(mut self, steps: usize) -> Self {
         self.steps = Some(steps);
         self
     }
 
+    /// Prune candidates against an explicit per-GPU HBM budget.
     pub fn with_memory_cap_gb(mut self, gb: f64) -> Self {
         self.memory_cap_bytes = Some(gb * 1e9);
         self
@@ -220,6 +293,7 @@ impl Planner {
             comm_bytes: steps as f64 * config_comm_bytes(m, px, pc),
             peak_memory_bytes: mem,
             fits: mem < self.cap_for(cluster) * HBM_USABLE_FRACTION,
+            simulated_seconds: None,
             candidates: 0,
             pruned: 0,
             why: String::new(),
@@ -269,21 +343,24 @@ impl Planner {
                 "paper §5.2.4 bandwidth-priority heuristic ({} first)",
                 if cluster.has_nvlink { "SP-Ulysses" } else { "PipeFusion" }
             );
+            self.attach_simulation(&mut plan, m, cluster);
             return plan;
         }
         let ranked = self.rank(m, px, cluster, world);
-        let mut best = match ranked.into_iter().next() {
-            Some(p) => p,
+        if ranked.is_empty() {
             // enumeration can come up empty on hostile divisibility; the
             // heuristic (which may under-fill the world) is the fallback
-            None => {
-                let mut p = self.score(m, px, cluster, &heuristic_pc);
-                p.why = "no valid config enumerates for this world; \
-                         §5.2.4 heuristic fallback"
-                    .into();
-                return p;
-            }
-        };
+            let mut p = self.score(m, px, cluster, &heuristic_pc);
+            p.why = "no valid config enumerates for this world; \
+                     §5.2.4 heuristic fallback"
+                .into();
+            self.attach_simulation(&mut p, m, cluster);
+            return p;
+        }
+        if self.fidelity == Fidelity::Simulated {
+            return self.rescore_with_simulator(ranked, m, px, cluster);
+        }
+        let mut best = ranked.into_iter().next().expect("ranked is non-empty");
         let heuristic = self.score(m, px, cluster, &heuristic_pc);
         let surveyed = format!(
             "cost-model argmin over {} candidates ({} pruned by the {:.0} GB cap)",
@@ -302,6 +379,83 @@ impl Planner {
             )
         };
         best
+    }
+
+    /// `Fidelity::Simulated` second pass: play the top closed-form
+    /// candidates through the discrete-event simulator, pick the smallest
+    /// simulated makespan (ties keep the closed-form order) and cite the
+    /// winner's critical path in the "why". Only memory-feasible
+    /// candidates compete — the re-scoring must never promote a plan the
+    /// budget pruned over one that fits (when nothing fits, the least-bad
+    /// set is re-scored as-is).
+    fn rescore_with_simulator(
+        &self,
+        ranked: Vec<Plan>,
+        m: &ModelSpec,
+        px: usize,
+        cluster: &ClusterSpec,
+    ) -> Plan {
+        let feasible = ranked.iter().filter(|p| p.fits).count();
+        let pool = if feasible > 0 { feasible } else { ranked.len() };
+        let k = SIM_RESCORE_TOP_K.min(pool);
+        let steps = self.steps_for(m);
+        let mut top: Vec<Plan> = ranked.into_iter().take(k).collect();
+        let mut best_idx = 0;
+        let mut best_tl: Option<Timeline> = None;
+        for (i, p) in top.iter_mut().enumerate() {
+            let tl = simulate(m, px, cluster, PerfMethod::Hybrid, &p.config, steps);
+            p.simulated_seconds = Some(tl.makespan);
+            let better = best_tl.as_ref().map(|b| tl.makespan < b.makespan).unwrap_or(true);
+            if better {
+                best_idx = i;
+                best_tl = Some(tl);
+            }
+        }
+        let tl = best_tl.expect("at least one candidate was simulated");
+        let mut best = top.swap_remove(best_idx);
+        best.why = format!(
+            "event simulator re-scored the top-{k} of {} closed-form candidates \
+             ({} pruned): [{}] wins at {:.2}s simulated ({:.0}% overlap achieved); {}",
+            best.candidates,
+            best.pruned,
+            best.config.describe(),
+            tl.makespan,
+            tl.achieved_overlap() * 100.0,
+            tl.critical_path()
+        );
+        best
+    }
+
+    /// Attach the simulated makespan to a plan that does not yet carry
+    /// one, when this planner runs at `Fidelity::Simulated` (no-op
+    /// otherwise). The single attach point shared by the policy
+    /// fallbacks, the facade's pinned configs and the engine's forced
+    /// strategies.
+    pub(crate) fn attach_simulation(&self, plan: &mut Plan, m: &ModelSpec, cluster: &ClusterSpec) {
+        if self.fidelity == Fidelity::Simulated && plan.simulated_seconds.is_none() {
+            let tl = self.simulate_plan(plan, m, cluster);
+            plan.simulated_seconds = Some(tl.makespan);
+        }
+    }
+
+    /// The event timeline a plan's strategy would produce — the single
+    /// mapping from an engine strategy to the simulator's method space,
+    /// shared by the engine's per-batch reporting and the pipeline's
+    /// `timeline()` accessor. `Method::Serial` strips the intra-image
+    /// degrees but keeps the CFG dimension: the driver runs the serial
+    /// strategy *per branch* (concurrently, with the per-step latent
+    /// exchange), which is exactly what a CFG-only routed config executes.
+    pub fn simulate_plan(&self, plan: &Plan, m: &ModelSpec, cluster: &ClusterSpec) -> Timeline {
+        let method = match plan.method {
+            driver::Method::Serial => {
+                let pc = ParallelConfig::new(plan.config.cfg.max(1), 1, 1, 1);
+                return simulate(m, plan.px, cluster, PerfMethod::Hybrid, &pc, plan.steps);
+            }
+            driver::Method::Tp => PerfMethod::Tp,
+            driver::Method::DistriFusion => PerfMethod::DistriFusion,
+            _ => PerfMethod::Hybrid,
+        };
+        simulate(m, plan.px, cluster, method, &plan.config, plan.steps)
     }
 }
 
@@ -557,6 +711,75 @@ mod tests {
         planner.reprice_for_method(&mut sp, driver::Method::Sp, &m, &cluster);
         assert_eq!(sp.comm_bytes, base.comm_bytes);
         assert_eq!(sp.peak_memory_bytes, base.peak_memory_bytes);
+    }
+
+    #[test]
+    fn simulated_fidelity_rescores_and_cites_critical_path() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let cluster = l40_cluster(1);
+        let planner = Planner::default().with_fidelity(Fidelity::Simulated);
+        let sim = planner.plan(&m, 2048, &cluster, 8);
+        assert!(sim.simulated_seconds.is_some());
+        assert!(sim.why.contains("finishes last"), "why must cite critical path: {}", sim.why);
+        sim.config.validate(&m, m.seq_len(2048)).unwrap();
+        assert_eq!(sim.config.world(), 8);
+        assert!(sim.to_json().to_string().contains("simulated_us"));
+        // the closed-form default is untouched (golden snapshot safety)
+        let default = Planner::default().plan(&m, 2048, &cluster, 8);
+        assert!(default.simulated_seconds.is_none());
+        assert!(!default.to_json().to_string().contains("simulated_us"));
+        assert!(default.why.contains("argmin"), "{}", default.why);
+        // the heuristic policy also reports a simulated makespan on ask
+        let paper = Planner::default()
+            .with_policy(RoutePolicy::PaperHeuristic)
+            .with_fidelity(Fidelity::Simulated)
+            .plan(&m, 2048, &cluster, 8);
+        assert!(paper.simulated_seconds.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn simulate_plan_covers_every_strategy_mapping() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let cluster = l40_cluster(1);
+        let planner = Planner::default();
+        for method in [
+            driver::Method::Serial,
+            driver::Method::Tp,
+            driver::Method::Sp,
+            driver::Method::DistriFusion,
+            driver::Method::PipeFusion,
+            driver::Method::Hybrid,
+        ] {
+            let mut plan = planner.plan(&m, 1024, &cluster, 8);
+            planner.reprice_for_method(&mut plan, method, &m, &cluster);
+            let tl = planner.simulate_plan(&plan, &m, &cluster);
+            assert!(tl.makespan > 0.0, "{method:?} simulated an empty timeline");
+            if method == driver::Method::Serial {
+                // serial strips the intra degrees but keeps the CFG pair
+                assert_eq!(tl.world(), plan.config.cfg, "{}", plan.config.describe());
+            }
+        }
+        // a CFG-only config picks Method::Serial (serial per branch) —
+        // its timeline must keep both branch ranks and their exchange
+        let cfg_only = planner.score(&m, 1024, &cluster, &ParallelConfig::new(2, 1, 1, 1));
+        assert_eq!(cfg_only.method, driver::Method::Serial);
+        let tl = planner.simulate_plan(&cfg_only, &m, &cluster);
+        assert_eq!(tl.world(), 2, "the CFG pair must keep both ranks");
+        assert!(tl.exposed_comm() > 0.0, "the per-step latent exchange must appear");
+    }
+
+    #[test]
+    fn simulated_rescoring_respects_the_memory_budget() {
+        // the re-scoring pool is feasible-only: a pruned-but-faster plan
+        // must never beat a plan that fits the cap
+        let m = ModelSpec::by_name("flux").unwrap();
+        let cluster = l40_cluster(1);
+        let planner =
+            Planner::default().with_memory_cap_gb(30.0).with_fidelity(Fidelity::Simulated);
+        let plan = planner.plan(&m, 1024, &cluster, 8);
+        assert!(plan.fits, "re-scoring resurrected a pruned plan: {}", plan.describe());
+        assert!(plan.simulated_seconds.is_some());
+        assert!(plan.pruned > 0, "the cap must actually have pruned something");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::sync::{Condvar, Mutex};
 
 use crate::coordinator::request::GenRequest;
 
+/// Why a push was refused.
 #[derive(Debug)]
 pub enum PushError {
     /// Queue at capacity.
@@ -29,10 +30,12 @@ struct Inner {
 pub struct RequestQueue {
     inner: Mutex<Inner>,
     notify: Condvar,
+    /// Maximum queued requests before pushes are refused.
     pub capacity: usize,
 }
 
 impl RequestQueue {
+    /// A bounded queue holding at most `capacity` requests.
     pub fn new(capacity: usize) -> RequestQueue {
         RequestQueue {
             inner: Mutex::new(Inner {
@@ -83,14 +86,17 @@ impl RequestQueue {
         g.q.drain(..n).collect()
     }
 
+    /// Requests currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().q.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Close the queue: subsequent pushes fail with `Closed`.
     pub fn close(&self) {
         let mut g = self.inner.lock().unwrap();
         g.closed = true;

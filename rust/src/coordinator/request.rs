@@ -10,6 +10,7 @@
 use crate::config::model::BlockVariant;
 use crate::diffusion::SchedulerKind;
 
+/// Caller-assigned request identifier (echoed in responses/rejections).
 pub type RequestId = u64;
 
 /// Default target resolution (pixels, square) — matches the tiny family's
@@ -19,13 +20,18 @@ pub const DEFAULT_PX: usize = 256;
 /// One image-generation request.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
+    /// Caller-assigned id, echoed in the response.
     pub id: RequestId,
+    /// Text prompt (embedded by the deterministic text encoder).
     pub prompt: String,
     /// Model variant to serve (tiny family; paper-scale models are
     /// analytic-only).
     pub variant: BlockVariant,
+    /// Diffusion steps to run.
     pub steps: usize,
+    /// RNG seed for the initial latent.
     pub seed: u64,
+    /// CFG guidance scale (1.0 or 0.0 disables the uncond branch).
     pub guidance: f32,
     /// Target resolution in pixels (square). Routed on — the parallel
     /// config is chosen for `seq_len(px)` tokens, not a hardcoded count.
@@ -47,6 +53,8 @@ pub struct GenRequest {
 }
 
 impl GenRequest {
+    /// A request with serving defaults: tiny-adaln, 4 steps, guidance 3,
+    /// 256px, no decode, priority 0, no deadline.
     pub fn new(id: RequestId, prompt: impl Into<String>) -> GenRequest {
         GenRequest {
             id,
@@ -64,51 +72,61 @@ impl GenRequest {
         }
     }
 
+    /// Serve a different runnable model variant.
     pub fn with_variant(mut self, variant: BlockVariant) -> Self {
         self.variant = variant;
         self
     }
 
+    /// Replace the diffusion step count.
     pub fn with_steps(mut self, steps: usize) -> Self {
         self.steps = steps;
         self
     }
 
+    /// Replace the latent RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Replace the CFG guidance scale.
     pub fn with_guidance(mut self, guidance: f32) -> Self {
         self.guidance = guidance;
         self
     }
 
+    /// Target resolution in pixels (drives routing).
     pub fn with_resolution(mut self, px: usize) -> Self {
         self.px = px;
         self
     }
 
+    /// Pin a per-request scheduler override.
     pub fn with_scheduler(mut self, scheduler: SchedulerKind) -> Self {
         self.scheduler = Some(scheduler);
         self
     }
 
+    /// Stamp the virtual arrival time (latency accounting).
     pub fn with_arrival(mut self, arrival: f64) -> Self {
         self.arrival = arrival;
         self
     }
 
+    /// Decode the final latent to pixels with the parallel VAE.
     pub fn with_decode(mut self, decode: bool) -> Self {
         self.decode = decode;
         self
     }
 
+    /// Scheduling priority (higher = sooner; aging bounds starvation).
     pub fn with_priority(mut self, priority: i32) -> Self {
         self.priority = priority;
         self
     }
 
+    /// Absolute completion deadline on the virtual clock.
     pub fn with_deadline(mut self, deadline: f64) -> Self {
         self.deadline = Some(deadline);
         self
@@ -131,9 +149,11 @@ impl GenRequest {
 /// The served result.
 #[derive(Debug, Clone)]
 pub struct GenResponse {
+    /// Id of the request this response answers.
     pub id: RequestId,
     /// Final latent (and optionally decoded image).
     pub latent: crate::tensor::Tensor,
+    /// Decoded image when the request asked for it.
     pub image: Option<crate::tensor::Tensor>,
     /// Simulated cluster seconds spent on the denoising loop.
     pub model_seconds: f64,
@@ -141,11 +161,16 @@ pub struct GenResponse {
     pub latency: f64,
     /// Bytes moved between simulated devices for this request.
     pub comm_bytes: usize,
+    /// The hybrid parallel config the batch ran under (`describe()` form).
     pub parallel_config: String,
     /// What the routing plan's cost model predicted for this generation
     /// (seconds) — compare against `model_seconds` to see how far the
     /// analytic model and the simulated cluster agree.
     pub predicted_seconds: f64,
+    /// What the discrete-event overlap simulator predicted for the
+    /// batch's cell (seconds): the third column of the simulated vs
+    /// closed-form vs actual comparison (`perf::simulator`).
+    pub simulated_seconds: f64,
     /// Strategy that ran the denoising loop.
     pub method: String,
     /// Scheduler that produced the trajectory (request override, pipeline

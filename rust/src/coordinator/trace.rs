@@ -66,10 +66,12 @@ impl Trace {
         }
     }
 
+    /// Number of requests in the trace.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// True when the trace carries no requests.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
@@ -98,16 +100,19 @@ pub struct PoissonTrace {
 }
 
 impl PoissonTrace {
+    /// Diffusion steps every request runs.
     pub fn steps(mut self, steps: usize) -> Self {
         self.steps = steps;
         self
     }
 
+    /// CFG guidance scale for every request.
     pub fn guidance(mut self, guidance: f32) -> Self {
         self.guidance = guidance;
         self
     }
 
+    /// Model-variant mix (sampled per request when several are given).
     pub fn variants(mut self, variants: &[BlockVariant]) -> Self {
         if !variants.is_empty() {
             self.variants = variants.to_vec();
@@ -115,6 +120,7 @@ impl PoissonTrace {
         self
     }
 
+    /// Scheduler-override mix (default: the model's benchmark scheduler).
     pub fn schedulers(mut self, schedulers: &[SchedulerKind]) -> Self {
         if !schedulers.is_empty() {
             self.schedulers = schedulers.iter().copied().map(Some).collect();
@@ -122,6 +128,7 @@ impl PoissonTrace {
         self
     }
 
+    /// Resolution mix in pixels (drives routing and batch keys).
     pub fn resolutions(mut self, resolutions: &[usize]) -> Self {
         if !resolutions.is_empty() {
             self.resolutions = resolutions.to_vec();
@@ -129,6 +136,7 @@ impl PoissonTrace {
         self
     }
 
+    /// Priority mix (sampled per request).
     pub fn priorities(mut self, priorities: &[i32]) -> Self {
         if !priorities.is_empty() {
             self.priorities = priorities.to_vec();
@@ -148,6 +156,7 @@ impl PoissonTrace {
         self
     }
 
+    /// Prompt pool (sampled per request).
     pub fn prompts(mut self, prompts: &[&str]) -> Self {
         if !prompts.is_empty() {
             self.prompts = prompts.iter().map(|p| p.to_string()).collect();
@@ -155,6 +164,7 @@ impl PoissonTrace {
         self
     }
 
+    /// Materialize the deterministic trace (pure function of the seed).
     pub fn build(&self) -> Trace {
         let mut rng = Rng::new(self.seed);
         let mut t = 0.0;

@@ -10,14 +10,22 @@
 //!   fix, the patch-parallel VAE, a serving front-end
 //!   (router/batcher/engine), and the analytic performance model that
 //!   regenerates every figure/table of the paper.
+//! * **L4 ([`perf::simulator`])** — the discrete-event overlap simulator:
+//!   lowers any valid [`config::parallel::ParallelConfig`] into a per-GPU
+//!   event [`Timeline`] (busy/idle/comm spans, critical path, achieved
+//!   overlap, makespan) with each strategy's overlap semantics made
+//!   explicit, and explains where the closed forms hold — the `timeline`
+//!   CLI renders it as a Gantt, the [`Planner`] re-scores candidates with
+//!   it under [`Fidelity::Simulated`].
 //! * **L2/L1 (build-time Python)** — the DiT compute graph and Pallas
 //!   kernels, AOT-lowered to HLO text in `artifacts/` and executed here via
 //!   the PJRT CPU client (`runtime`). Python never runs on the request path.
 //!
 //! The **entry point is [`pipeline::Pipeline`]**: a typed builder facade
 //! over the coordinator/parallel/VAE layers that handles one-shot
-//! generation (`generate`), batch serving (`serve`) and the §5.2.4 routing
-//! decision (`plan`). Binaries, examples and benches all go through it;
+//! generation (`generate`), batch serving (`serve`), the cost-model
+//! routing decision (`plan`) and the event-timeline view of it
+//! (`timeline`). Binaries, examples and benches all go through it;
 //! `Engine`, `Session` and `driver` are the internal layers it composes.
 //!
 //! See `DESIGN.md` for the system inventory, the Pipeline quickstart and
@@ -39,6 +47,7 @@ pub mod testing;
 pub mod util;
 pub mod vae;
 
-pub use coordinator::{Plan, Planner, Rejection, RoutePolicy, Trace};
+pub use coordinator::{Fidelity, Plan, Planner, Rejection, RoutePolicy, Trace};
 pub use error::{Error, Result};
+pub use perf::simulator::Timeline;
 pub use pipeline::{ParallelPolicy, Pipeline, PipelineBuilder, ServeReport};

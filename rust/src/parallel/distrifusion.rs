@@ -15,12 +15,15 @@ use crate::perf::flops;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
+/// The DistriFusion baseline: displaced patch parallelism whose stale
+/// AllGather overlaps the whole forward (see the module docs).
 pub struct DistriFusion {
     /// Per (branch, device-slot) full-depth KV buffers.
     buffers: std::collections::HashMap<(usize, usize), KvBuffer>,
 }
 
 impl DistriFusion {
+    /// A fresh strategy instance (buffers fill during warmup).
     pub fn new() -> DistriFusion {
         DistriFusion { buffers: std::collections::HashMap::new() }
     }

@@ -32,6 +32,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Instantiate the strategy implementation this selector names.
     pub fn build(&self) -> Box<dyn Strategy> {
         match self {
             Method::Serial => Box::new(Serial),
@@ -57,6 +58,8 @@ impl Method {
         }
     }
 
+    /// Parse a strategy name (accepts the `sp`/`ulysses`/`ring`/`usp`
+    /// aliases).
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s {
             "serial" => Method::Serial,
@@ -74,10 +77,15 @@ impl Method {
 /// Generation parameters.
 #[derive(Debug, Clone)]
 pub struct GenParams {
+    /// Text prompt to condition on.
     pub prompt: String,
+    /// Diffusion steps to run.
     pub steps: usize,
+    /// RNG seed for the initial latent.
     pub seed: u64,
+    /// CFG guidance scale (1.0 or 0.0 disables the uncond branch).
     pub guidance: f32,
+    /// Scheduler driving the update rule.
     pub scheduler: SchedulerKind,
 }
 

@@ -33,13 +33,17 @@ pub enum KvUpdateRule {
     StandardSp,
 }
 
+/// The hybrid mesh strategy: PipeFusion stages × SP groups × CFG
+/// branches with the Fig-6/7 KV-consistency rule.
 pub struct Hybrid {
+    /// Which KV update rule the SP groups apply.
     pub rule: KvUpdateRule,
     /// (branch, stage, sp_index) -> per-device buffer for its stage layers.
     buffers: std::collections::HashMap<(usize, usize, usize), KvBuffer>,
 }
 
 impl Hybrid {
+    /// A fresh hybrid strategy under `rule`.
     pub fn new(rule: KvUpdateRule) -> Hybrid {
         Hybrid { rule, buffers: std::collections::HashMap::new() }
     }

@@ -10,12 +10,19 @@
 //! closed-form `perf` models at paper scale; these strategies validate the
 //! semantics (exactness, staleness, buffer consistency) bit-for-bit.
 
+/// DistriFusion baseline (displaced patch parallelism, async AllGather).
 pub mod distrifusion;
+/// The denoising-loop driver and the `Method` strategy selector.
 pub mod driver;
+/// The hybrid mesh strategy (PipeFusion × USP × CFG, Fig 6/7 KV rule).
 pub mod hybrid;
+/// PipeFusion: patch-level pipeline with one-step-stale activations.
 pub mod pipefusion;
+/// Single-device reference strategy.
 pub mod serial;
+/// Sequence parallelism (SP-Ulysses / SP-Ring / USP).
 pub mod sp;
+/// Tensor-parallel baseline (per-layer AllReduce pair).
 pub mod tp;
 
 use crate::comm::{Clocks, CommLedger, Communicator};
@@ -33,16 +40,25 @@ pub use driver::{generate, GenParams, GenResult};
 
 /// Shared generation session: runtime + model + simulated cluster state.
 pub struct Session<'a> {
+    /// Execution runtime the stage entrypoints run on.
     pub rt: &'a Runtime,
+    /// Assembled tiny-DiT model (stage plan + dims).
     pub model: DitModel,
+    /// Simulated cluster the clocks/links are priced on.
     pub cluster: ClusterSpec,
+    /// The hybrid parallel configuration this session runs.
     pub pc: ParallelConfig,
+    /// Rank geometry (cfg × pipefusion × ulysses × ring).
     pub mesh: Mesh,
+    /// Per-device virtual clocks (persist across a batch).
     pub clocks: Clocks,
+    /// Communication ledger (persists across a batch).
     pub ledger: CommLedger,
 }
 
 impl<'a> Session<'a> {
+    /// Build a session for `variant` under config `pc`, validating the
+    /// config against the model and the cluster size.
     pub fn new(
         rt: &'a Runtime,
         variant: BlockVariant,
@@ -87,6 +103,7 @@ impl<'a> Session<'a> {
         out
     }
 
+    /// Slowest device's virtual clock (the session-lifetime makespan).
     pub fn makespan(&self) -> f64 {
         self.clocks.makespan()
     }
@@ -100,7 +117,7 @@ pub struct BranchCtx {
     pub ranks: Vec<usize>,
     /// Embedded text sequence [s_txt, d].
     pub txt: Tensor,
-    /// Pooled text vector [d].
+    /// Pooled text vector `[d]`.
     pub txt_pool: Tensor,
 }
 
@@ -117,6 +134,7 @@ impl BranchCtx {
 
 /// A parallel denoising strategy.
 pub trait Strategy {
+    /// Strategy name as reported in `GenResult`/responses.
     fn name(&self) -> String;
 
     /// Predict the model output for one branch at diffusion step `step`
@@ -187,12 +205,17 @@ pub fn flops_stage(model: &DitModel, ls: usize, p_img: usize, p_txt: usize, s_kv
 
 /// Result of one exact SP layer pass.
 pub struct SpLayerOut {
+    /// Per-rank image hidden-state shards after the layer.
     pub x_img: Vec<Tensor>,
+    /// Per-rank text shards (MM-DiT in-context models).
     pub x_txt: Option<Vec<Tensor>>,
     /// Fresh K/V of the whole patch (concatenated over SP ranks).
     pub k_img: Tensor,
+    /// Fresh V of the whole patch (see `k_img`).
     pub v_img: Tensor,
+    /// Fresh text K (MM-DiT).
     pub k_txt: Option<Tensor>,
+    /// Fresh text V (MM-DiT).
     pub v_txt: Option<Tensor>,
 }
 

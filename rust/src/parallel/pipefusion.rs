@@ -19,12 +19,15 @@ use crate::perf::flops;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
+/// The PipeFusion strategy: patch-level pipeline across layer stages
+/// with one-step-stale KV buffers (see the module docs).
 pub struct PipeFusion {
     /// Per (branch, stage) KV buffers, created lazily.
     buffers: std::collections::HashMap<(usize, usize), KvBuffer>,
 }
 
 impl PipeFusion {
+    /// A fresh strategy instance (buffers fill during warmup).
     pub fn new() -> PipeFusion {
         PipeFusion { buffers: std::collections::HashMap::new() }
     }

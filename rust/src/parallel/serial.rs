@@ -8,6 +8,7 @@ use crate::parallel::{flops_stage, BranchCtx, Session, Strategy};
 use crate::tensor::Tensor;
 use crate::Result;
 
+/// The single-device reference strategy (exact, no communication).
 #[derive(Default)]
 pub struct Serial;
 

@@ -14,6 +14,8 @@ use crate::parallel::{flops_stage, BranchCtx, Session, Strategy};
 use crate::tensor::Tensor;
 use crate::Result;
 
+/// The tensor-parallel baseline: heads/MLP sharded per layer, two
+/// AllReduces per layer exposed on the critical path.
 pub struct TensorParallel;
 
 impl Strategy for TensorParallel {

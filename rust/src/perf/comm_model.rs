@@ -18,6 +18,7 @@ pub enum Row {
 }
 
 impl Row {
+    /// Human-readable row label (as printed in Table 1).
     pub fn label(&self) -> &'static str {
         match self {
             Row::TensorParallel => "Tensor Parallelism",
@@ -28,6 +29,7 @@ impl Row {
         }
     }
 
+    /// Whether the paper classifies this row's traffic as overlappable.
     pub fn overlaps(&self) -> bool {
         matches!(self, Row::DistriFusion | Row::SpRing | Row::PipeFusion)
     }

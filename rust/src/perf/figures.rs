@@ -11,6 +11,7 @@ use crate::perf::comm_model::{comm_bytes, memory_fractions, Row};
 use crate::perf::latency::{best_hybrid, predict_latency, serial_latency, Method};
 use crate::perf::memory_model::backbone_memory;
 
+/// The five single-strategy rows of the scalability figures.
 pub const SINGLE_METHODS: [Method; 5] =
     [Method::Tp, Method::SpUlysses, Method::SpRing, Method::DistriFusion, Method::PipeFusion];
 

@@ -42,6 +42,7 @@ pub fn embed_flops(p: usize, c: usize, d: usize) -> f64 {
     2.0 * p as f64 * c as f64 * d as f64
 }
 
+/// Final-projection FLOPs over the patch (adaLN modulation + linear).
 pub fn final_flops(p: usize, c: usize, d: usize) -> f64 {
     2.0 * p as f64 * d as f64 * (c as f64 + 2.0 * d as f64)
 }

@@ -33,6 +33,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Series label used by the figure tables and the simulator.
     pub fn label(&self) -> &'static str {
         match self {
             Method::Tp => "tp",
@@ -58,17 +59,39 @@ impl Method {
     }
 }
 
-fn best_patches(n: usize) -> usize {
-    // the paper searches M in {2,4,8,16,32}; M = 2N is a good default
+/// Default PipeFusion patch count for an intra-image degree `n`: the
+/// paper searches M in {2,4,8,16,32}; M = 2N is a good default.
+pub(crate) fn best_patches(n: usize) -> usize {
     (2 * n).clamp(2, 32)
+}
+
+/// Non-overlappable per-hop launch/sync cost of ring attention: NVLink
+/// P2P kickoff is cheap, PCIe pays host-driven launches. Shared by the
+/// closed forms and the event simulator so the two cannot drift.
+pub(crate) fn ring_sync_cost(cluster: &ClusterSpec) -> f64 {
+    if cluster.has_nvlink {
+        15e-6
+    } else {
+        40e-6
+    }
+}
+
+/// Bytes of the predicted latent a CFG branch pair exchanges each step
+/// (fp16). Shared by the closed forms and the event simulator.
+pub(crate) fn cfg_latent_bytes(m: &ModelSpec, px: usize) -> f64 {
+    (px as f64 / 8.0).powi(2) * m.c_latent as f64 * 2.0
 }
 
 /// Latency decomposition (seconds).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LatencyBreakdown {
+    /// Pure compute seconds on the critical path.
     pub compute: f64,
+    /// Communication seconds not hidden behind compute.
     pub comm_exposed: f64,
+    /// One-off warmup cost (synchronous first step).
     pub warmup_extra: f64,
+    /// End-to-end predicted seconds.
     pub total: f64,
 }
 
@@ -128,8 +151,7 @@ pub fn predict_latency(
             let hop_t = cluster.collective_time(&group, hop_bytes, 1.0) / (n - 1.0).max(1.0);
             let blk_attn =
                 flops::compute_time(4.0 * (s as f64 / n) * (s as f64 / n) * m.hidden as f64, tfl);
-            // NVLink P2P kickoff is cheap; PCIe pays host-driven launches
-            let sync = if cluster.has_nvlink { 15e-6 } else { 40e-6 };
+            let sync = ring_sync_cost(cluster);
             let exposed = ((hop_t - blk_attn).max(0.0) + sync) * (n - 1.0) * l;
             (exposed * branch_factor, 0.0)
         }
@@ -180,7 +202,7 @@ pub fn predict_latency(
                         / pc.patches as f64,
                     tfl,
                 );
-                let sync = if cluster.has_nvlink { 15e-6 } else { 40e-6 };
+                let sync = ring_sync_cost(cluster);
                 exposed += ((hop_t - blk).max(0.0) + sync) * (pc.ring as f64 - 1.0) * l;
             }
             let mut warm = 0.0;
@@ -199,7 +221,7 @@ pub fn predict_latency(
             }
             if cfg == 2 {
                 // latent allgather between branch pairs once per step
-                let latent_bytes = (px as f64 / 8.0).powi(2) * m.c_latent as f64 * 2.0;
+                let latent_bytes = cfg_latent_bytes(m, px);
                 let pair = [0, world / 2];
                 exposed += cluster.p2p_time(pair[0], pair[1], latent_bytes);
             }

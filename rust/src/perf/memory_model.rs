@@ -19,6 +19,7 @@ pub struct MemoryFootprint {
 }
 
 impl MemoryFootprint {
+    /// Total predicted bytes per device.
     pub fn total(&self) -> f64 {
         self.params + self.text_encoder + self.kv + self.activations
     }
@@ -28,6 +29,7 @@ impl MemoryFootprint {
         (self.params + self.text_encoder) / 1e9
     }
 
+    /// The non-parameter share (KV + activations), in GB.
     pub fn others_gb(&self) -> f64 {
         (self.kv + self.activations) / 1e9
     }

@@ -1,12 +1,22 @@
 //! Analytic performance models: FLOPs, communication volumes (paper
 //! Table 1), memory footprints (Fig 18), per-step latency prediction for
 //! every parallel method on every cluster — the machinery behind the
-//! figure/table reproduction benches.
+//! figure/table reproduction benches — plus the discrete-event overlap
+//! [`simulator`] that lowers a config into a per-GPU event timeline and
+//! explains *where* the closed forms' overlap assumptions hold.
 
+/// Per-step communication volumes (paper Table 1) + hybrid composition.
 pub mod comm_model;
+/// Reusable figure/table series generators behind the benches.
 pub mod figures;
+/// Transformer FLOPs accounting.
 pub mod flops;
+/// Closed-form per-generation latency prediction (Figs 8–17 engine).
 pub mod latency;
+/// Per-device memory footprints (Fig 18) + the planner's fits predicate.
 pub mod memory_model;
+/// The discrete-event overlap simulator (per-rank event timelines).
+pub mod simulator;
 
 pub use latency::{predict_step_latency, LatencyBreakdown, Method};
+pub use simulator::{simulate, Timeline};

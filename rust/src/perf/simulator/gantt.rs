@@ -1,0 +1,158 @@
+//! ASCII Gantt rendering of a [`Timeline`] — what `xdit timeline` prints.
+//!
+//! One row per rank; the time axis is scaled to the requested width and
+//! each column shows the activity that dominated its time slice
+//! (`#` compute, `~` exposed comm, `.` idle). A header summarizes the
+//! cell (strategy, config, makespan vs closed form, achieved overlap,
+//! critical path) and each row ends with the rank's busy/comm/idle
+//! decomposition.
+
+use crate::perf::simulator::timeline::{SpanKind, Timeline};
+
+/// Minimum/maximum chart width in columns (the flag is clamped to this).
+pub const MIN_WIDTH: usize = 16;
+/// See [`MIN_WIDTH`].
+pub const MAX_WIDTH: usize = 240;
+
+/// Dominant span kind of `rank` inside the window `[t0, t1)`, or `None`
+/// when the rank has already finished.
+fn dominant(tl: &Timeline, rank: usize, t0: f64, t1: f64) -> Option<SpanKind> {
+    let mut acc = [0.0f64; 3]; // compute, comm, idle
+    for s in &tl.ranks[rank].spans {
+        let lo = s.start.max(t0);
+        let hi = s.end.min(t1);
+        if hi > lo {
+            let slot = match s.kind {
+                SpanKind::Compute => 0,
+                SpanKind::Comm => 1,
+                SpanKind::Idle => 2,
+            };
+            acc[slot] += hi - lo;
+        }
+    }
+    if acc.iter().all(|&a| a <= 0.0) {
+        return None;
+    }
+    // ties favour showing communication, then compute — the rarer and
+    // more diagnostic signals
+    if acc[1] >= acc[0] && acc[1] >= acc[2] {
+        Some(SpanKind::Comm)
+    } else if acc[0] >= acc[2] {
+        Some(SpanKind::Compute)
+    } else {
+        Some(SpanKind::Idle)
+    }
+}
+
+/// Render the timeline as an ASCII per-rank Gantt chart, `width` columns
+/// wide (clamped to `[MIN_WIDTH, MAX_WIDTH]`).
+pub fn render(tl: &Timeline, width: usize) -> String {
+    let width = width.clamp(MIN_WIDTH, MAX_WIDTH);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# {} @ {}px on {} — [{}], {} steps, {} ranks\n",
+        tl.model,
+        tl.px,
+        tl.cluster,
+        tl.config,
+        tl.steps,
+        tl.world()
+    ));
+    out.push_str(&format!(
+        "strategy {}: makespan {:.3}s (closed form {:.3}s), overlap achieved {:.0}%, \
+         busy {:.0}%\n",
+        tl.strategy,
+        tl.makespan,
+        tl.closed_form,
+        tl.achieved_overlap() * 100.0,
+        tl.busy_fraction() * 100.0
+    ));
+    out.push_str(&format!("critical path: {}\n", tl.critical_path()));
+    if tl.makespan <= 0.0 {
+        out.push_str("(empty timeline)\n");
+        return out;
+    }
+    let dt = tl.makespan / width as f64;
+    for (rank, r) in tl.ranks.iter().enumerate() {
+        out.push_str(&format!("rank {rank:>3} |"));
+        for c in 0..width {
+            let t0 = c as f64 * dt;
+            match dominant(tl, rank, t0, t0 + dt) {
+                Some(kind) => out.push(kind.glyph()),
+                None => out.push(' '),
+            }
+        }
+        out.push_str(&format!(
+            "| {:.2}s compute, {:.2}s comm, {:.2}s idle\n",
+            r.compute_seconds(),
+            r.comm_seconds(),
+            r.idle_seconds()
+        ));
+    }
+    out.push_str(&format!(
+        "{:>9} 0s{:>pad$}{:.3}s   (# compute  ~ comm  . idle)\n",
+        "",
+        "",
+        tl.makespan,
+        pad = width.saturating_sub(8)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::simulator::timeline::{RankTimeline, Span};
+
+    /// Two ranks with a known layout: rank 0 computes 1s then exposes 1s
+    /// of comm; rank 1 idles for the full 2s.
+    fn fixture() -> Timeline {
+        let r0 = RankTimeline {
+            rank: 0,
+            spans: vec![
+                Span { kind: SpanKind::Compute, label: "compute", start: 0.0, end: 1.0 },
+                Span { kind: SpanKind::Comm, label: "allreduce", start: 1.0, end: 2.0 },
+            ],
+            hidden_comm: 0.0,
+        };
+        let r1 = RankTimeline {
+            rank: 1,
+            spans: vec![Span { kind: SpanKind::Idle, label: "wait", start: 0.0, end: 2.0 }],
+            hidden_comm: 0.0,
+        };
+        Timeline {
+            strategy: "tp",
+            model: "pixart".into(),
+            px: 1024,
+            cluster: "l40x8".into(),
+            config: "ulysses=2".into(),
+            steps: 1,
+            ranks: vec![r0, r1],
+            makespan: 2.0,
+            closed_form: 2.0,
+        }
+    }
+
+    #[test]
+    fn renders_one_row_per_rank_with_glyphs() {
+        let g = render(&fixture(), 16);
+        assert_eq!(g.lines().filter(|l| l.starts_with("rank")).count(), 2);
+        assert!(g.contains("critical path"));
+        let rows: Vec<&str> = g
+            .lines()
+            .filter(|l| l.starts_with("rank"))
+            .map(|l| l.split('|').nth(1).unwrap())
+            .collect();
+        assert_eq!(rows[0], "########~~~~~~~~", "{g}");
+        assert_eq!(rows[1], "................", "{g}");
+    }
+
+    #[test]
+    fn width_is_clamped() {
+        let g = render(&fixture(), 1);
+        let row = g.lines().find(|l| l.starts_with("rank")).unwrap();
+        assert_eq!(row.chars().filter(|&c| c == '|').count(), 2);
+        let inner = row.split('|').nth(1).unwrap();
+        assert_eq!(inner.chars().count(), MIN_WIDTH);
+    }
+}

@@ -1,0 +1,117 @@
+//! # The discrete-event overlap simulator (L4)
+//!
+//! The closed forms in [`perf::latency`](crate::perf::latency) assume
+//! perfect or zero overlap per strategy — they can rank configurations
+//! but cannot *explain* a ranking step by step. This subsystem lowers any
+//! valid `ParallelConfig` into a deterministic per-GPU event timeline:
+//! compute segments priced by [`perf::flops`](crate::perf::flops),
+//! transfer segments priced by the `ClusterSpec` link model, and the
+//! overlap semantics of each strategy made explicit (PipeFusion's async
+//! patch P2P hidden behind next-patch compute, ring attention's
+//! comm/compute interleave, the CFG all-gather barrier, TP's exposed
+//! per-layer all-reduces).
+//!
+//! The output is a [`Timeline`]: per-rank busy/idle/comm spans, the
+//! achieved-overlap fraction, the critical path and the makespan —
+//! renderable as an ASCII Gantt ([`render`], the `xdit timeline`
+//! command) or exportable as canonical JSON ([`Timeline::to_json`]).
+//!
+//! Where a strategy's overlap is total or absent (serial, CFG pair, TP,
+//! SP-Ulysses, SP-Ring, DistriFusion) the simulated makespan reproduces
+//! the closed form exactly; where overlap is partial and pipelined
+//! (PipeFusion, hybrids) the two models *disagree*, and the divergence is
+//! the signal — e.g. the event pipeline amortizes the fill bubble the
+//! closed form charges every step. `benches/simulator.rs` sweeps the
+//! Figs 8–17 grid and asserts the agreement band cell by cell;
+//! `coordinator::planner` re-scores its top candidates with this
+//! simulator under `Fidelity::Simulated`.
+
+mod gantt;
+mod lower;
+mod timeline;
+
+pub use gantt::{render, MAX_WIDTH, MIN_WIDTH};
+pub use lower::simulate;
+pub use timeline::{RankTimeline, Span, SpanKind, Timeline};
+
+use crate::config::hardware::ClusterSpec;
+use crate::config::model::ModelSpec;
+use crate::config::parallel::ParallelConfig;
+use crate::perf::latency::{best_hybrid, Method};
+use crate::{Error, Result};
+
+/// Strategy names `xdit timeline --strategy` accepts.
+pub const STRATEGIES: [&str; 8] =
+    ["serial", "cfg", "tp", "ulysses", "ring", "distrifusion", "pipefusion", "hybrid"];
+
+/// Resolve a strategy name into the `(method, config)` pair to simulate
+/// on `world` devices — the single mapping the `timeline` CLI, the tests
+/// and the bench share. `hybrid` picks the best hybrid configuration for
+/// the cell *at the given step count* (warmup amortizes over steps, so a
+/// 1-step horizon would bias the search against pipelined configs); the
+/// result is validated against the model before it is returned.
+pub fn strategy_config(
+    name: &str,
+    m: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    world: usize,
+    steps: usize,
+) -> Result<(Method, ParallelConfig)> {
+    let (method, pc) = match name {
+        "serial" => (Method::Hybrid, ParallelConfig::serial()),
+        "cfg" => (Method::Hybrid, ParallelConfig::new(2, 1, 1, 1)),
+        "tp" => (Method::Tp, Method::Tp.single_config(world)),
+        "ulysses" => (Method::SpUlysses, Method::SpUlysses.single_config(world)),
+        "ring" => (Method::SpRing, Method::SpRing.single_config(world)),
+        "distrifusion" => (Method::DistriFusion, Method::DistriFusion.single_config(world)),
+        "pipefusion" => (Method::PipeFusion, Method::PipeFusion.single_config(world)),
+        "hybrid" => (Method::Hybrid, best_hybrid(m, px, cluster, world, steps.max(1)).0),
+        _ => {
+            return Err(Error::config(format!(
+                "unknown strategy '{name}' (expected one of {})",
+                STRATEGIES.join("|")
+            )))
+        }
+    };
+    pc.validate(m, m.seq_len(px)).map_err(|e| {
+        Error::config(format!("strategy '{name}' is not valid for this cell: {e}"))
+    })?;
+    Ok((method, pc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::{a100_node, l40_cluster};
+
+    #[test]
+    fn every_strategy_resolves_for_pixart() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let c = l40_cluster(1);
+        for name in STRATEGIES {
+            let (method, pc) = strategy_config(name, &m, 1024, &c, 8, 2).unwrap();
+            if name == "serial" {
+                assert!(pc.is_serial());
+            } else if name == "cfg" {
+                assert_eq!(pc.cfg, 2);
+            } else {
+                assert_eq!(pc.world(), 8, "{name}: {}", pc.describe());
+            }
+            let tl = simulate(&m, 1024, &c, method, &pc, 2);
+            assert!(tl.makespan > 0.0, "{name} produced an empty timeline");
+        }
+    }
+
+    #[test]
+    fn invalid_strategies_error_cleanly() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let c = a100_node();
+        assert!(strategy_config("warp", &m, 1024, &c, 8, 2).is_err());
+        // pixart has 16 heads: ulysses degree 5 cannot divide them
+        assert!(strategy_config("ulysses", &m, 1024, &c, 5, 2).is_err());
+        // flux does not use CFG
+        let flux = ModelSpec::by_name("flux").unwrap();
+        assert!(strategy_config("cfg", &flux, 1024, &c, 2, 2).is_err());
+    }
+}

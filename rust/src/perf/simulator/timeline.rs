@@ -1,0 +1,471 @@
+//! Event-timeline types and the deterministic event core.
+//!
+//! A [`Timeline`] is the simulator's output: one span list per rank
+//! (compute / exposed-communication / idle), plus aggregate figures — the
+//! makespan, the achieved-overlap fraction and the critical rank. Spans
+//! are contiguous, non-overlapping and sorted per rank; consecutive spans
+//! with the same kind and label are merged, so even a long PipeFusion run
+//! stays compact.
+//!
+//! The private `Sim` builder is the event core the lowering in
+//! `perf::simulator::lower` drives: per-rank virtual clocks plus span
+//! recording, with `compute` / `exposed` / `wait` / `barrier` /
+//! `collective` / `recv_async` as the primitive operations. Hidden
+//! (fully-overlapped) transfer time never appears as a span — it is
+//! accounted per rank in [`RankTimeline::hidden_comm`], which is what the
+//! achieved-overlap fraction is computed from.
+
+use crate::util::json::Json;
+
+/// What a rank was doing during a [`Span`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Local FLOPs (denoising compute, warmup recompute).
+    Compute,
+    /// Communication time that blocked the rank (exposed, not hidden).
+    Comm,
+    /// Waiting on a dependency or a barrier.
+    Idle,
+}
+
+impl SpanKind {
+    /// Stable string key (used by the JSON export).
+    pub fn key(&self) -> &'static str {
+        match self {
+            SpanKind::Compute => "compute",
+            SpanKind::Comm => "comm",
+            SpanKind::Idle => "idle",
+        }
+    }
+
+    /// One-character glyph for the ASCII Gantt rendering.
+    pub fn glyph(&self) -> char {
+        match self {
+            SpanKind::Compute => '#',
+            SpanKind::Comm => '~',
+            SpanKind::Idle => '.',
+        }
+    }
+}
+
+/// One contiguous interval of a rank's timeline.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// What the rank was doing.
+    pub kind: SpanKind,
+    /// Human-readable label ("compute", "all2all", "cfg exchange", ...).
+    pub label: &'static str,
+    /// Start time in virtual seconds.
+    pub start: f64,
+    /// End time in virtual seconds (`end >= start`).
+    pub end: f64,
+}
+
+impl Span {
+    /// Duration in virtual seconds.
+    pub fn seconds(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// The event timeline of a single rank.
+#[derive(Debug, Clone)]
+pub struct RankTimeline {
+    /// Device index in the mesh (0-based).
+    pub rank: usize,
+    /// Contiguous, sorted, non-overlapping spans from t = 0.
+    pub spans: Vec<Span>,
+    /// Transfer seconds that were fully in flight behind this rank's
+    /// compute (asynchronous P2P, ring hops under attention) — the
+    /// communication the strategy successfully hid.
+    pub hidden_comm: f64,
+}
+
+impl RankTimeline {
+    /// Total seconds of spans of `kind`.
+    pub fn seconds(&self, kind: SpanKind) -> f64 {
+        self.spans.iter().filter(|s| s.kind == kind).map(Span::seconds).sum()
+    }
+
+    /// Total compute seconds.
+    pub fn compute_seconds(&self) -> f64 {
+        self.seconds(SpanKind::Compute)
+    }
+
+    /// Total exposed-communication seconds.
+    pub fn comm_seconds(&self) -> f64 {
+        self.seconds(SpanKind::Comm)
+    }
+
+    /// Total idle seconds.
+    pub fn idle_seconds(&self) -> f64 {
+        self.seconds(SpanKind::Idle)
+    }
+
+    /// When this rank finished its last span.
+    pub fn finish(&self) -> f64 {
+        self.spans.last().map(|s| s.end).unwrap_or(0.0)
+    }
+}
+
+/// A per-GPU event timeline for one generation: the simulator's output.
+///
+/// ```
+/// use xdit::config::hardware::l40_cluster;
+/// use xdit::config::model::ModelSpec;
+/// use xdit::perf::latency::Method;
+/// use xdit::perf::simulator::simulate;
+///
+/// let m = ModelSpec::by_name("pixart")?;
+/// let pc = Method::PipeFusion.single_config(4);
+/// let tl = simulate(&m, 1024, &l40_cluster(1), Method::PipeFusion, &pc, 4);
+/// assert_eq!(tl.ranks.len(), 4);
+/// assert!(tl.makespan > 0.0);
+/// // PipeFusion hides patch P2P behind next-patch compute
+/// assert!(tl.achieved_overlap() > 0.0);
+/// println!("{}", tl.gantt(64));
+/// # Ok::<(), xdit::Error>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    /// Strategy that was lowered (a `perf::latency::Method` label).
+    pub strategy: &'static str,
+    /// Model the timeline describes.
+    pub model: String,
+    /// Resolution the generation was simulated at.
+    pub px: usize,
+    /// Cluster name (link model the transfers were priced with).
+    pub cluster: String,
+    /// The hybrid parallel config, as `ParallelConfig::describe()` prints.
+    pub config: String,
+    /// Diffusion steps simulated.
+    pub steps: usize,
+    /// One timeline per rank, index == rank.
+    pub ranks: Vec<RankTimeline>,
+    /// Virtual seconds until the slowest rank finished.
+    pub makespan: f64,
+    /// The closed-form prediction for the same cell
+    /// (`perf::latency::predict_latency`), for side-by-side comparison.
+    pub closed_form: f64,
+}
+
+impl Timeline {
+    /// Number of simulated devices.
+    pub fn world(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Total exposed-communication seconds across ranks.
+    pub fn exposed_comm(&self) -> f64 {
+        self.ranks.iter().map(RankTimeline::comm_seconds).sum()
+    }
+
+    /// Total hidden (fully-overlapped) transfer seconds across ranks.
+    pub fn hidden_comm(&self) -> f64 {
+        self.ranks.iter().map(|r| r.hidden_comm).sum()
+    }
+
+    /// Fraction of all transfer time that was hidden behind compute:
+    /// `hidden / (hidden + exposed)`. A strategy that moves no bytes
+    /// vacuously achieves 1.0.
+    pub fn achieved_overlap(&self) -> f64 {
+        let hidden = self.hidden_comm();
+        let total = hidden + self.exposed_comm();
+        if total <= 0.0 {
+            1.0
+        } else {
+            hidden / total
+        }
+    }
+
+    /// The rank that finishes last (lowest index on ties) — the rank the
+    /// critical path runs through.
+    pub fn critical_rank(&self) -> usize {
+        let mut best = 0;
+        for (i, r) in self.ranks.iter().enumerate() {
+            if r.finish() > self.ranks[best].finish() {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// One-line description of the critical path: the last-finishing
+    /// rank's compute / exposed-comm / idle decomposition.
+    pub fn critical_path(&self) -> String {
+        let r = &self.ranks[self.critical_rank()];
+        format!(
+            "rank {} finishes last at {:.3}s ({:.3}s compute, {:.3}s exposed comm, \
+             {:.3}s idle)",
+            r.rank,
+            r.finish(),
+            r.compute_seconds(),
+            r.comm_seconds(),
+            r.idle_seconds()
+        )
+    }
+
+    /// Largest per-rank pure-compute total — a hard lower bound on the
+    /// makespan (no schedule can beat its busiest rank).
+    pub fn max_rank_compute(&self) -> f64 {
+        self.ranks.iter().map(RankTimeline::compute_seconds).fold(0.0, f64::max)
+    }
+
+    /// Mean fraction of the makespan the ranks spent computing.
+    pub fn busy_fraction(&self) -> f64 {
+        if self.makespan <= 0.0 || self.ranks.is_empty() {
+            return 0.0;
+        }
+        let busy: f64 = self.ranks.iter().map(RankTimeline::compute_seconds).sum();
+        busy / (self.makespan * self.ranks.len() as f64)
+    }
+
+    /// ASCII per-rank Gantt rendering, `width` columns wide — shorthand
+    /// for [`render`](super::render).
+    pub fn gantt(&self, width: usize) -> String {
+        super::gantt::render(self, width)
+    }
+
+    /// Canonical JSON form (sorted keys; the `timeline --json` schema):
+    /// scalars at the top level plus a `ranks` array whose entries carry
+    /// per-kind second totals and the raw span list.
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("strategy".into(), Json::Str(self.strategy.into()));
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("px".into(), Json::Num(self.px as f64));
+        o.insert("cluster".into(), Json::Str(self.cluster.clone()));
+        o.insert("config".into(), Json::Str(self.config.clone()));
+        o.insert("steps".into(), Json::Num(self.steps as f64));
+        o.insert("world".into(), Json::Num(self.world() as f64));
+        o.insert("makespan_s".into(), Json::Num(self.makespan));
+        o.insert("closed_form_s".into(), Json::Num(self.closed_form));
+        o.insert("achieved_overlap".into(), Json::Num(self.achieved_overlap()));
+        o.insert("critical_rank".into(), Json::Num(self.critical_rank() as f64));
+        let mut ranks = Vec::with_capacity(self.ranks.len());
+        for r in &self.ranks {
+            let mut ro = std::collections::BTreeMap::new();
+            ro.insert("rank".into(), Json::Num(r.rank as f64));
+            ro.insert("compute_s".into(), Json::Num(r.compute_seconds()));
+            ro.insert("comm_s".into(), Json::Num(r.comm_seconds()));
+            ro.insert("idle_s".into(), Json::Num(r.idle_seconds()));
+            ro.insert("hidden_comm_s".into(), Json::Num(r.hidden_comm));
+            let mut spans = Vec::with_capacity(r.spans.len());
+            for s in &r.spans {
+                let mut so = std::collections::BTreeMap::new();
+                so.insert("kind".into(), Json::Str(s.kind.key().into()));
+                so.insert("label".into(), Json::Str(s.label.into()));
+                so.insert("start_s".into(), Json::Num(s.start));
+                so.insert("end_s".into(), Json::Num(s.end));
+                spans.push(Json::Obj(so));
+            }
+            ro.insert("spans".into(), Json::Arr(spans));
+            ranks.push(Json::Obj(ro));
+        }
+        o.insert("ranks".into(), Json::Arr(ranks));
+        Json::Obj(o)
+    }
+}
+
+/// The event core: per-rank clocks + span recording. Lowering code in
+/// `lower.rs` drives it; `finish()` seals it into a [`Timeline`].
+pub(crate) struct Sim {
+    t: Vec<f64>,
+    ranks: Vec<RankTimeline>,
+}
+
+impl Sim {
+    pub(crate) fn new(world: usize) -> Sim {
+        Sim {
+            t: vec![0.0; world],
+            ranks: (0..world)
+                .map(|rank| RankTimeline { rank, spans: Vec::new(), hidden_comm: 0.0 })
+                .collect(),
+        }
+    }
+
+    /// Current virtual time of `rank`.
+    pub(crate) fn now(&self, rank: usize) -> f64 {
+        self.t[rank]
+    }
+
+    fn push(&mut self, rank: usize, kind: SpanKind, label: &'static str, dt: f64) {
+        if dt <= 0.0 {
+            return;
+        }
+        let start = self.t[rank];
+        let end = start + dt;
+        self.t[rank] = end;
+        // merge with the previous span when kind and label repeat
+        if let Some(last) = self.ranks[rank].spans.last_mut() {
+            if last.kind == kind && last.label == label && last.end == start {
+                last.end = end;
+                return;
+            }
+        }
+        self.ranks[rank].spans.push(Span { kind, label, start, end });
+    }
+
+    /// Charge `dt` seconds of local compute to `rank`.
+    pub(crate) fn compute(&mut self, rank: usize, dt: f64, label: &'static str) {
+        self.push(rank, SpanKind::Compute, label, dt);
+    }
+
+    /// Charge `dt` seconds of exposed (blocking) communication to `rank`.
+    pub(crate) fn exposed(&mut self, rank: usize, dt: f64, label: &'static str) {
+        self.push(rank, SpanKind::Comm, label, dt);
+    }
+
+    /// Account `dt` transfer seconds that were fully hidden behind
+    /// `rank`'s compute (no span — the rank never stopped).
+    pub(crate) fn hidden(&mut self, rank: usize, dt: f64) {
+        if dt > 0.0 {
+            self.ranks[rank].hidden_comm += dt;
+        }
+    }
+
+    /// Block `rank` until `until` (dependency wait); idle span if it
+    /// actually waits.
+    pub(crate) fn wait(&mut self, rank: usize, until: f64, label: &'static str) {
+        let dt = until - self.t[rank];
+        self.push(rank, SpanKind::Idle, label, dt);
+    }
+
+    /// Barrier: every rank in `group` reaches the group's max clock.
+    pub(crate) fn barrier(&mut self, group: &[usize], label: &'static str) {
+        let m = group.iter().map(|&r| self.t[r]).fold(0.0, f64::max);
+        for &r in group {
+            self.wait(r, m, label);
+        }
+    }
+
+    /// Synchronous collective: barrier, then `dt` exposed comm on every
+    /// rank of the group.
+    pub(crate) fn collective(&mut self, group: &[usize], dt: f64, label: &'static str) {
+        self.barrier(group, label);
+        for &r in group {
+            self.exposed(r, dt, label);
+        }
+    }
+
+    /// Consume an asynchronous transfer that was launched at `sent_at`
+    /// and takes `dt` link seconds: the part of the flight time the
+    /// receiver had already covered with its own work counts as hidden,
+    /// the remainder blocks it as exposed comm.
+    pub(crate) fn recv_async(&mut self, rank: usize, sent_at: f64, dt: f64, label: &'static str) {
+        let arrive = sent_at + dt;
+        let blocked = (arrive - self.t[rank]).max(0.0).min(dt);
+        self.hidden(rank, dt - blocked);
+        self.exposed(rank, blocked, label);
+        // the transfer may arrive after even the blocked wait (the rank
+        // was still ahead of the send time): never consume before arrival
+        self.wait(rank, arrive, label);
+    }
+
+    /// Seal the run into a [`Timeline`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn finish(
+        self,
+        strategy: &'static str,
+        model: String,
+        px: usize,
+        cluster: String,
+        config: String,
+        steps: usize,
+        closed_form: f64,
+    ) -> Timeline {
+        let makespan = self.t.iter().copied().fold(0.0, f64::max);
+        Timeline {
+            strategy,
+            model,
+            px,
+            cluster,
+            config,
+            steps,
+            ranks: self.ranks,
+            makespan,
+            closed_form,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_merge_and_clocks_advance() {
+        let mut sim = Sim::new(2);
+        sim.compute(0, 1.0, "compute");
+        sim.compute(0, 0.5, "compute");
+        sim.exposed(0, 0.25, "comm");
+        assert_eq!(sim.ranks[0].spans.len(), 2, "adjacent same-label spans must merge");
+        assert_eq!(sim.now(0), 1.75);
+        assert_eq!(sim.now(1), 0.0);
+    }
+
+    #[test]
+    fn barrier_idles_the_laggard() {
+        let mut sim = Sim::new(2);
+        sim.compute(0, 2.0, "compute");
+        sim.barrier(&[0, 1], "sync");
+        assert_eq!(sim.now(1), 2.0);
+        let tl = sim.finish("test", "m".into(), 256, "c".into(), "serial".into(), 1, 0.0);
+        assert_eq!(tl.ranks[1].idle_seconds(), 2.0);
+        assert_eq!(tl.ranks[0].idle_seconds(), 0.0);
+        assert_eq!(tl.makespan, 2.0);
+    }
+
+    #[test]
+    fn recv_async_splits_hidden_and_exposed() {
+        // receiver busy past arrival: transfer fully hidden
+        let mut sim = Sim::new(2);
+        sim.compute(0, 1.0, "compute");
+        let sent = sim.now(0);
+        sim.compute(1, 5.0, "compute");
+        sim.recv_async(1, sent, 2.0, "p2p");
+        assert_eq!(sim.ranks[1].hidden_comm, 2.0);
+        assert_eq!(sim.ranks[1].comm_seconds(), 0.0);
+        assert_eq!(sim.now(1), 5.0);
+        // receiver idle at send time: transfer fully exposed
+        let mut sim = Sim::new(2);
+        sim.compute(0, 1.0, "compute");
+        let sent = sim.now(0);
+        sim.wait(1, 1.0, "fill");
+        sim.recv_async(1, sent, 2.0, "p2p");
+        assert_eq!(sim.ranks[1].hidden_comm, 0.0);
+        assert_eq!(sim.ranks[1].comm_seconds(), 2.0);
+        assert_eq!(sim.now(1), 3.0);
+    }
+
+    #[test]
+    fn timeline_metrics_are_consistent() {
+        let mut sim = Sim::new(2);
+        sim.compute(0, 3.0, "compute");
+        sim.compute(1, 1.0, "compute");
+        sim.collective(&[0, 1], 0.5, "allreduce");
+        sim.hidden(1, 0.25);
+        let tl = sim.finish("test", "m".into(), 256, "c".into(), "tp".into(), 1, 3.5);
+        assert_eq!(tl.world(), 2);
+        assert_eq!(tl.makespan, 3.5);
+        assert_eq!(tl.critical_rank(), 0);
+        assert!(tl.critical_path().contains("rank 0"));
+        assert_eq!(tl.exposed_comm(), 1.0);
+        assert_eq!(tl.hidden_comm(), 0.25);
+        assert!((tl.achieved_overlap() - 0.2).abs() < 1e-12);
+        assert_eq!(tl.max_rank_compute(), 3.0);
+        // json round-trips through the canonical writer
+        let parsed = Json::parse(&tl.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("world").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(parsed.get("ranks").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn overlap_is_vacuously_total_without_comm() {
+        let mut sim = Sim::new(1);
+        sim.compute(0, 1.0, "compute");
+        let tl = sim.finish("serial", "m".into(), 256, "c".into(), "serial".into(), 1, 1.0);
+        assert_eq!(tl.achieved_overlap(), 1.0);
+        assert_eq!(tl.busy_fraction(), 1.0);
+    }
+}

@@ -7,22 +7,36 @@
 //! request's resolution, and resolves the scheduler per request — no
 //! `256`, no `"ddim"`, no `tiny-` string anywhere in user code.
 //!
-//! ```ignore
-//! let rt = Runtime::load("artifacts")?;
+//! The example below is hermetic — `Runtime::simulated()` executes on
+//! the simulated backend, so it runs (and is tested by `cargo test
+//! --doc`) without any AOT artifacts:
+//!
+//! ```
+//! use xdit::config::hardware::l40_cluster;
+//! use xdit::coordinator::GenRequest;
+//! use xdit::pipeline::{ParallelPolicy, Pipeline};
+//! use xdit::runtime::Runtime;
+//!
+//! let rt = Runtime::simulated();
 //! let mut pipe = Pipeline::builder()
 //!     .runtime(&rt)
 //!     .cluster(l40_cluster(1))
 //!     .world(8)
 //!     .parallel(ParallelPolicy::Auto)
-//!     .scheduler(SchedulerKind::Ddim)
 //!     .build()?;
-//! let resp = pipe.generate(&GenRequest::new(0, "a red fox in snow").with_decode(true))?;
-//! let report = pipe.serve((0..16).map(|i| GenRequest::new(i, "city skyline")))?;
+//! let resp = pipe.generate(&GenRequest::new(0, "a red fox in snow").with_steps(2))?;
+//! assert!(resp.model_seconds > 0.0);
+//!
+//! // batch serving through the compatibility batcher
+//! let report = pipe.serve((1..4).map(|i| GenRequest::new(i, "city skyline").with_steps(2)))?;
+//! assert_eq!(report.responses.len(), 3);
+//!
 //! // continuous batching: replay a Poisson arrival trace with admission
 //! // control, priorities/deadlines and per-tick batch re-formation
-//! let trace = xdit::Trace::poisson(0, 64, 2.0).steps(4).build();
+//! let trace = xdit::Trace::poisson(0, 8, 2.0).steps(2).build();
 //! let report = pipe.serve_trace(&trace)?;
 //! println!("{}", report.summary()); // p50/p95/p99, queue delay vs exec, occupancy
+//! # Ok::<(), xdit::Error>(())
 //! ```
 //!
 //! `Engine`, `Session` and `driver` remain the internal layers the facade
@@ -32,12 +46,13 @@ use crate::config::hardware::{l40_cluster, ClusterSpec};
 use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
 use crate::coordinator::engine::{Engine, Rejection, DEFAULT_QUEUE_CAPACITY};
-use crate::coordinator::planner::{Plan, Planner, RoutePolicy};
+use crate::coordinator::planner::{Fidelity, Plan, Planner, RoutePolicy};
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::trace::Trace;
 use crate::coordinator::{Batcher, Metrics};
 use crate::diffusion::SchedulerKind;
 use crate::parallel::driver::Method;
+use crate::perf::simulator::Timeline;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
@@ -110,6 +125,7 @@ pub struct PipelineBuilder<'a> {
     world: Option<usize>,
     parallel: ParallelPolicy,
     route_policy: RoutePolicy,
+    route_fidelity: Fidelity,
     memory_cap_gb: Option<f64>,
     deadline_admission: bool,
     scheduler: Option<SchedulerKind>,
@@ -127,6 +143,7 @@ impl<'a> Default for PipelineBuilder<'a> {
             world: None,
             parallel: ParallelPolicy::Auto,
             route_policy: RoutePolicy::default(),
+            route_fidelity: Fidelity::default(),
             memory_cap_gb: None,
             deadline_admission: false,
             scheduler: None,
@@ -139,6 +156,7 @@ impl<'a> Default for PipelineBuilder<'a> {
 }
 
 impl<'a> PipelineBuilder<'a> {
+    /// A builder with the serving defaults (see the field docs).
     pub fn new() -> Self {
         Self::default()
     }
@@ -161,6 +179,7 @@ impl<'a> PipelineBuilder<'a> {
         self
     }
 
+    /// Auto-plan per batch (default) or pin an explicit config.
     pub fn parallel(mut self, policy: ParallelPolicy) -> Self {
         self.parallel = policy;
         self
@@ -170,6 +189,15 @@ impl<'a> PipelineBuilder<'a> {
     /// planner (default) or the §5.2.4 paper heuristic.
     pub fn route_policy(mut self, policy: RoutePolicy) -> Self {
         self.route_policy = policy;
+        self
+    }
+
+    /// Scoring fidelity behind `ParallelPolicy::Auto`: closed forms only
+    /// (default) or `Fidelity::Simulated`, which re-scores the top
+    /// candidates with the discrete-event overlap simulator and makes
+    /// `Plan::simulated_seconds` / the critical-path "why" available.
+    pub fn fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.route_fidelity = fidelity;
         self
     }
 
@@ -245,7 +273,9 @@ impl<'a> PipelineBuilder<'a> {
     }
 
     fn planner(&self) -> Planner {
-        let mut planner = Planner::default().with_policy(self.route_policy);
+        let mut planner = Planner::default()
+            .with_policy(self.route_policy)
+            .with_fidelity(self.route_fidelity);
         if let Some(gb) = self.memory_cap_gb {
             planner = planner.with_memory_cap_gb(gb);
         }
@@ -274,6 +304,9 @@ impl<'a> PipelineBuilder<'a> {
             // and their own Table-1 comm/memory rows
             planner.reprice_for_method(&mut plan, method, model, &cluster);
         }
+        // pinned/forced plans skip the planner's re-scoring pass, so the
+        // simulated figure the fidelity knob promises is attached here
+        planner.attach_simulation(&mut plan, model, &cluster);
         Ok(plan)
     }
 
@@ -285,6 +318,30 @@ impl<'a> PipelineBuilder<'a> {
         Ok(self.planner().rank(model, px, &cluster, world))
     }
 
+    /// The per-rank event [`Timeline`] of the plan this builder would run
+    /// for `(model, px)` — the typed form of the `timeline` CLI command.
+    /// Like [`plan`](Self::plan) it needs no runtime or artifacts.
+    ///
+    /// ```
+    /// use xdit::config::hardware::l40_cluster;
+    /// use xdit::config::model::ModelSpec;
+    /// use xdit::pipeline::Pipeline;
+    ///
+    /// let m = ModelSpec::by_name("pixart")?;
+    /// let tl = Pipeline::builder().cluster(l40_cluster(2)).world(16).timeline(&m, 2048)?;
+    /// assert_eq!(tl.ranks.len(), 16);
+    /// assert!(tl.makespan >= tl.max_rank_compute());
+    /// println!("{}", xdit::perf::simulator::render(&tl, 72));
+    /// # Ok::<(), xdit::Error>(())
+    /// ```
+    pub fn timeline(&self, model: &ModelSpec, px: usize) -> Result<Timeline> {
+        let (cluster, _world) = self.resolve_cluster_world()?;
+        let plan = self.plan(model, px)?;
+        Ok(self.planner().simulate_plan(&plan, model, &cluster))
+    }
+
+    /// Materialize the pipeline: validates cluster/world/config and
+    /// configures the engine. Requires `.runtime(&rt)`.
     pub fn build(self) -> Result<Pipeline<'a>> {
         let rt = self.rt.ok_or_else(|| {
             Error::config("Pipeline::builder() needs .runtime(&rt) before .build()")
@@ -297,6 +354,7 @@ impl<'a> PipelineBuilder<'a> {
             engine.force_config = Some(pc);
         }
         engine.route_policy = self.route_policy;
+        engine.route_fidelity = self.route_fidelity;
         engine.memory_cap_bytes = self.memory_cap_gb.map(|gb| gb * 1e9);
         engine.deadline_admission = self.deadline_admission;
         engine.force_method = self.method;
@@ -314,6 +372,7 @@ pub struct Pipeline<'a> {
 }
 
 impl<'a> Pipeline<'a> {
+    /// Start building a pipeline (the only way to construct one).
     pub fn builder() -> PipelineBuilder<'a> {
         PipelineBuilder::new()
     }
@@ -416,18 +475,31 @@ impl<'a> Pipeline<'a> {
 
     /// The routing decision this pipeline would make for `(model, px)`.
     pub fn plan(&self, model: &ModelSpec, px: usize) -> Result<Plan> {
+        self.as_builder().plan(model, px)
+    }
+
+    /// The per-rank event [`Timeline`] of the plan this pipeline would
+    /// run for `(model, px)` (see `perf::simulator`).
+    pub fn timeline(&self, model: &ModelSpec, px: usize) -> Result<Timeline> {
+        self.as_builder().timeline(model, px)
+    }
+
+    /// A builder mirroring this pipeline's routing knobs (what `plan` and
+    /// `timeline` consult, without touching the engine's live state).
+    fn as_builder(&self) -> PipelineBuilder<'_> {
         let mut b = PipelineBuilder::new()
             .cluster(self.engine.cluster.clone())
             .world(self.engine.world)
             .parallel(self.policy)
-            .route_policy(self.engine.route_policy);
+            .route_policy(self.engine.route_policy)
+            .fidelity(self.engine.route_fidelity);
         if let Some(cap) = self.engine.memory_cap_bytes {
             b = b.memory_cap_gb(cap / 1e9);
         }
         if let Some(m) = self.engine.force_method {
             b = b.method(m);
         }
-        b.plan(model, px)
+        b
     }
 
     /// Decode a final latent over `n` simulated devices with the
@@ -441,14 +513,17 @@ impl<'a> Pipeline<'a> {
         self.engine.decode_reference(latent)
     }
 
+    /// Cumulative engine-lifetime serving metrics.
     pub fn metrics(&self) -> &Metrics {
         &self.engine.metrics
     }
 
+    /// The simulated cluster this pipeline serves on.
     pub fn cluster(&self) -> &ClusterSpec {
         &self.engine.cluster
     }
 
+    /// Devices this pipeline serves on.
     pub fn world(&self) -> usize {
         self.engine.world
     }
@@ -576,6 +651,35 @@ mod tests {
         let rej = pipe.submit(hopeless).unwrap_err();
         assert!(rej.reason.contains("deadline infeasible"), "{}", rej.reason);
         assert!(pipe.submit(GenRequest::new(1, "y").with_steps(1)).is_ok());
+    }
+
+    #[test]
+    fn timeline_and_fidelity_flow_through_the_facade() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let b = Pipeline::builder().cluster(l40_cluster(1)).world(8).fidelity(Fidelity::Simulated);
+        let plan = b.plan(&m, 2048).unwrap();
+        assert!(plan.simulated_seconds.is_some(), "{}", plan.why);
+        let tl = b.timeline(&m, 2048).unwrap();
+        assert_eq!(tl.ranks.len(), 8);
+        assert!(tl.makespan > 0.0);
+        // built pipelines expose the same accessor
+        let rt = Runtime::simulated();
+        let pipe =
+            Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).world(4).build().unwrap();
+        let tiny = ModelSpec::by_name("tiny-adaln").unwrap();
+        let tl = pipe.timeline(&tiny, 256).unwrap();
+        assert_eq!(tl.ranks.len(), 4);
+        assert!(tl.makespan >= tl.max_rank_compute());
+        // pinned configs skip the re-scoring pass but still honour the
+        // fidelity knob
+        let explicit = Pipeline::builder()
+            .cluster(l40_cluster(1))
+            .world(8)
+            .parallel(ParallelPolicy::Explicit(ParallelConfig::new(2, 2, 2, 1)))
+            .fidelity(Fidelity::Simulated)
+            .plan(&m, 2048)
+            .unwrap();
+        assert!(explicit.simulated_seconds.is_some(), "{}", explicit.why);
     }
 
     #[test]

@@ -250,7 +250,8 @@ fn fill(seed: u64, n: usize) -> Vec<f32> {
     (0..n).map(|i| tile[i % TILE]).collect()
 }
 
-/// Synthesized tiny-family artifacts for [`Runtime::simulated`]: the model
+/// Synthesized tiny-family artifacts for
+/// [`Runtime::simulated`](crate::runtime::Runtime::simulated): the model
 /// dims the engine reads from the manifest, plus the host-side weight
 /// tensors it consumes directly (text table, positional rows).
 pub fn simulated_artifacts() -> (Manifest, HostWeights) {

@@ -1,0 +1,115 @@
+//! Markdown hygiene gate: the repo's top-level docs (README, DESIGN,
+//! CHANGES, ROADMAP) are checked for rot — intra-repo links must resolve
+//! to files that exist and fenced code blocks must declare a language —
+//! with no network access. Runs inside the tier-1 `cargo test` and as
+//! the dedicated docs CI job.
+
+use std::path::{Path, PathBuf};
+
+const DOCS: [&str; 4] = ["README.md", "DESIGN.md", "CHANGES.md", "ROADMAP.md"];
+
+/// The crate lives at `<repo>/rust`, the docs one level up.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("crate sits inside the repo").into()
+}
+
+fn read(doc: &str) -> String {
+    let path = repo_root().join(doc);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()))
+}
+
+/// Extract `[text](target)` link targets outside fenced code blocks.
+fn link_targets(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let bytes = line.as_bytes();
+        let mut i = 0;
+        while i + 1 < bytes.len() {
+            if bytes[i] == b']' && bytes[i + 1] == b'(' {
+                if let Some(close) = line[i + 2..].find(')') {
+                    out.push((lineno + 1, line[i + 2..i + 2 + close].to_string()));
+                    i += 2 + close;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+#[test]
+fn intra_repo_links_resolve() {
+    let root = repo_root();
+    for doc in DOCS {
+        let text = read(doc);
+        for (line, target) in link_targets(&text) {
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+                || target.starts_with('#')
+            {
+                continue;
+            }
+            // strip an anchor suffix: DESIGN.md#planner -> DESIGN.md
+            let file = target.split('#').next().unwrap_or(&target);
+            if file.is_empty() {
+                continue;
+            }
+            let resolved = root.join(file);
+            assert!(
+                resolved.exists(),
+                "{doc}:{line}: link target '{target}' does not exist in the repo"
+            );
+        }
+    }
+}
+
+#[test]
+fn fenced_code_blocks_declare_a_language() {
+    for doc in DOCS {
+        let text = read(doc);
+        let mut in_fence = false;
+        for (lineno, line) in text.lines().enumerate() {
+            let trimmed = line.trim_start();
+            if !trimmed.starts_with("```") {
+                continue;
+            }
+            if in_fence {
+                // closing fence: must be bare
+                assert!(
+                    trimmed == "```",
+                    "{doc}:{}: closing fence carries trailing text '{trimmed}'",
+                    lineno + 1
+                );
+                in_fence = false;
+            } else {
+                let lang = trimmed.trim_start_matches('`').trim();
+                assert!(
+                    !lang.is_empty(),
+                    "{doc}:{}: fenced code block without a language tag",
+                    lineno + 1
+                );
+                in_fence = true;
+            }
+        }
+        assert!(!in_fence, "{doc}: unbalanced code fence");
+    }
+}
+
+#[test]
+fn docs_exist_and_are_nonempty() {
+    for doc in DOCS {
+        let text = read(doc);
+        assert!(text.trim().len() > 100, "{doc} is suspiciously empty");
+    }
+}

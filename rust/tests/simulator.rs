@@ -1,0 +1,255 @@
+//! Integration tests for the discrete-event overlap simulator: timeline
+//! invariants, overlap edge cases (comm-bound ring, zero-comm serial),
+//! the simulated-fidelity planner path and the per-batch reporting the
+//! serving engine attaches to every response.
+
+use xdit::config::hardware::{a100_node, l40_cluster, ClusterSpec, GpuSpec};
+use xdit::config::model::ModelSpec;
+use xdit::config::parallel::ParallelConfig;
+use xdit::coordinator::GenRequest;
+use xdit::perf::latency::{predict_latency, Method};
+use xdit::perf::simulator::{render, simulate, strategy_config, SpanKind, STRATEGIES};
+use xdit::runtime::Runtime;
+use xdit::testing;
+use xdit::util::rng::Rng;
+use xdit::{Fidelity, Pipeline, Planner};
+
+fn pixart() -> ModelSpec {
+    ModelSpec::by_name("pixart").unwrap()
+}
+
+/// Spans must tile each rank's timeline: sorted, non-overlapping,
+/// starting at 0 (modulo float noise), ending at the rank's finish.
+fn assert_well_formed(tl: &xdit::Timeline) {
+    assert_eq!(tl.ranks.len(), tl.world());
+    let mut finish_max: f64 = 0.0;
+    for r in &tl.ranks {
+        let mut t = 0.0;
+        for s in &r.spans {
+            assert!(s.end >= s.start, "negative span on rank {}", r.rank);
+            assert!(
+                (s.start - t).abs() < 1e-9,
+                "gap on rank {}: span starts at {} after {}",
+                r.rank,
+                s.start,
+                t
+            );
+            t = s.end;
+        }
+        finish_max = finish_max.max(r.finish());
+        assert!(r.hidden_comm >= 0.0);
+    }
+    assert!((tl.makespan - finish_max).abs() < 1e-12, "makespan != slowest finish");
+    assert!(tl.makespan >= tl.max_rank_compute() - 1e-9, "schedule beats its busiest rank");
+    let overlap = tl.achieved_overlap();
+    assert!((0.0..=1.0).contains(&overlap), "overlap fraction {overlap} out of range");
+}
+
+#[test]
+fn world_one_is_pure_compute() {
+    // zero-comm edge: a serial run has no comm, no idle, and exactly the
+    // serial closed form as its makespan
+    let m = pixart();
+    let c = l40_cluster(1);
+    let tl = simulate(&m, 1024, &c, Method::Hybrid, &ParallelConfig::serial(), 6);
+    assert_well_formed(&tl);
+    assert_eq!(tl.world(), 1);
+    assert_eq!(tl.exposed_comm(), 0.0);
+    assert_eq!(tl.ranks[0].idle_seconds(), 0.0);
+    assert_eq!(tl.achieved_overlap(), 1.0);
+    let serial = xdit::perf::latency::serial_latency(&m, 1024, &c, 6);
+    assert!((tl.makespan - serial).abs() < 1e-9 * serial);
+}
+
+/// An L40-shaped cluster whose GPUs are absurdly fast: compute rounds to
+/// nothing, so every strategy becomes communication-bound.
+fn zero_compute_cluster() -> ClusterSpec {
+    let mut c = l40_cluster(1);
+    c.gpu = GpuSpec { name: "infinitely-fast".into(), tflops: 1e30, mem_bytes: 48e9 };
+    c
+}
+
+#[test]
+fn comm_bound_ring_exposes_everything() {
+    // zero-compute edge: with no attention blocks to hide behind, the
+    // ring's hops are all residue — overlap collapses and the simulator
+    // still agrees with the closed form (the residue algebra is shared)
+    let m = pixart();
+    let c = zero_compute_cluster();
+    let pc = Method::SpRing.single_config(4);
+    let cf = predict_latency(&m, 1024, &c, Method::SpRing, &pc, 3).total;
+    let tl = simulate(&m, 1024, &c, Method::SpRing, &pc, 3);
+    assert_well_formed(&tl);
+    assert!(tl.makespan > 0.0);
+    assert!((tl.makespan - cf).abs() < 1e-9 * cf, "sim {} vs cf {cf}", tl.makespan);
+    assert!(
+        tl.achieved_overlap() < 1e-6,
+        "nothing can hide behind zero compute: overlap {}",
+        tl.achieved_overlap()
+    );
+    assert!(tl.exposed_comm() > 0.0);
+}
+
+#[test]
+fn comm_bound_pipeline_is_transfer_limited() {
+    // with zero compute the pipeline's makespan is pure transfer chains,
+    // and it still can never be negative or below the (zero) compute bound
+    let m = pixart();
+    let c = zero_compute_cluster();
+    let pc = Method::PipeFusion.single_config(4);
+    let tl = simulate(&m, 1024, &c, Method::PipeFusion, &pc, 3);
+    assert_well_formed(&tl);
+    assert!(tl.makespan > 0.0);
+    assert!(tl.max_rank_compute() < 1e-12);
+}
+
+#[test]
+fn prop_makespan_never_below_pure_compute() {
+    // the satellite property: across random (model, cluster, world,
+    // config, steps) cells the simulated makespan is never below the max
+    // per-rank pure-compute time, and the timeline is always well formed
+    let models = ["pixart", "sd3", "flux", "hunyuan"];
+    testing::check("simulated makespan >= compute bound", 40, |rng: &mut Rng| {
+        let m = ModelSpec::by_name(models[rng.below(models.len())]).unwrap();
+        let cluster = if rng.below(2) == 0 { l40_cluster(2) } else { a100_node() };
+        let world = [2usize, 4, 8, 16][rng.below(4)].min(cluster.n_gpus);
+        let px = [1024usize, 2048][rng.below(2)];
+        let configs = ParallelConfig::enumerate(world, &m, m.seq_len(px));
+        if configs.is_empty() {
+            return Ok(());
+        }
+        let pc = configs[rng.below(configs.len())];
+        let steps = 1 + rng.below(4);
+        let tl = simulate(&m, px, &cluster, Method::Hybrid, &pc, steps);
+        if tl.makespan < tl.max_rank_compute() - 1e-9 {
+            return Err(format!(
+                "[{}] on {} w={world}: makespan {} < compute {}",
+                pc.describe(),
+                cluster.name,
+                tl.makespan,
+                tl.max_rank_compute()
+            ));
+        }
+        assert_well_formed(&tl);
+        Ok(())
+    });
+}
+
+#[test]
+fn every_cli_strategy_produces_a_gantt() {
+    // the acceptance matrix: {serial, cfg, pipefusion, ulysses, ring,
+    // hybrid} (plus tp/distrifusion) all lower, simulate and render
+    let m = pixart();
+    let c = l40_cluster(1);
+    for name in STRATEGIES {
+        let (method, pc) = strategy_config(name, &m, 1024, &c, 8, 2)
+            .unwrap_or_else(|e| panic!("{name} must resolve on 8xL40 pixart: {e}"));
+        let tl = simulate(&m, 1024, &c, method, &pc, 2);
+        assert_well_formed(&tl);
+        let g = render(&tl, 48);
+        assert!(g.contains("critical path"), "{name} render lost its header");
+        let rows = g.lines().filter(|l| l.starts_with("rank")).count();
+        assert_eq!(rows, tl.world(), "{name}: one Gantt row per rank");
+    }
+}
+
+#[test]
+fn pipefusion_hides_patch_p2p() {
+    // the overlap story of the paper: async patch P2P rides behind
+    // next-patch compute, so most transfer seconds are hidden spans
+    let m = pixart();
+    let c = l40_cluster(1);
+    let pc = Method::PipeFusion.single_config(8);
+    let tl = simulate(&m, 1024, &c, Method::PipeFusion, &pc, 8);
+    assert_well_formed(&tl);
+    assert!(tl.hidden_comm() > 0.0);
+    assert!(tl.achieved_overlap() > 0.5, "overlap {}", tl.achieved_overlap());
+    // and the pipeline spans carry the labels the Gantt legend documents
+    let mut labels = std::collections::BTreeSet::new();
+    for r in &tl.ranks {
+        for s in &r.spans {
+            if s.kind == SpanKind::Compute {
+                labels.insert(s.label);
+            }
+        }
+    }
+    assert!(labels.contains("warmup"), "warmup step missing");
+    assert!(labels.contains("compute"), "steady-state compute missing");
+}
+
+#[test]
+fn timeline_json_matches_documented_schema() {
+    let m = pixart();
+    let c = a100_node();
+    let (method, pc) = strategy_config("ulysses", &m, 2048, &c, 8, 2).unwrap();
+    let tl = simulate(&m, 2048, &c, method, &pc, 2);
+    let parsed = xdit::util::json::Json::parse(&tl.to_json().to_string()).unwrap();
+    for key in [
+        "strategy",
+        "model",
+        "px",
+        "cluster",
+        "config",
+        "steps",
+        "world",
+        "makespan_s",
+        "closed_form_s",
+        "achieved_overlap",
+        "critical_rank",
+        "ranks",
+    ] {
+        assert!(parsed.opt(key).is_some(), "timeline JSON lost '{key}'");
+    }
+    let ranks = parsed.get("ranks").unwrap().as_arr().unwrap();
+    assert_eq!(ranks.len(), 8);
+    let spans = ranks[0].get("spans").unwrap().as_arr().unwrap();
+    assert!(!spans.is_empty());
+    for key in ["kind", "label", "start_s", "end_s"] {
+        assert!(spans[0].opt(key).is_some(), "span JSON lost '{key}'");
+    }
+}
+
+#[test]
+fn simulated_fidelity_plans_through_the_facade() {
+    let m = pixart();
+    let plan = Pipeline::builder()
+        .cluster(l40_cluster(2))
+        .world(16)
+        .fidelity(Fidelity::Simulated)
+        .plan(&m, 2048)
+        .unwrap();
+    assert_eq!(plan.config.world(), 16);
+    let sim = plan.simulated_seconds.expect("simulated fidelity must attach a makespan");
+    assert!(sim > 0.0);
+    assert!(plan.why.contains("finishes last"), "{}", plan.why);
+}
+
+#[test]
+fn served_responses_carry_the_simulated_makespan() {
+    // Engine/Pipeline report simulated vs closed-form vs actual per batch
+    let rt = Runtime::simulated();
+    let mut pipe =
+        Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).world(4).build().unwrap();
+    let resp = pipe.generate(&GenRequest::new(0, "overlap story").with_steps(2)).unwrap();
+    assert!(resp.simulated_seconds > 0.0);
+    assert!(resp.predicted_seconds > 0.0);
+    assert!(resp.model_seconds > 0.0);
+    // the three figures describe the same cell, so they agree within an
+    // order of magnitude even though their models differ
+    let ratio = resp.simulated_seconds / resp.predicted_seconds;
+    assert!((0.05..=20.0).contains(&ratio), "sim/cf ratio {ratio} is nonsense");
+}
+
+#[test]
+fn planner_simulation_agrees_with_direct_simulation() {
+    // Planner::simulate_plan is the same lowering as simulate() on the
+    // plan's cell — no secret third model
+    let m = pixart();
+    let cluster = l40_cluster(1);
+    let planner = Planner::default();
+    let plan = planner.plan(&m, 2048, &cluster, 8);
+    let via_planner = planner.simulate_plan(&plan, &m, &cluster);
+    let direct = simulate(&m, 2048, &cluster, Method::Hybrid, &plan.config, plan.steps);
+    assert_eq!(via_planner.makespan, direct.makespan);
+    assert_eq!(via_planner.world(), direct.world());
+}
