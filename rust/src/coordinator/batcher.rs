@@ -3,20 +3,41 @@
 //! `max_batch`.
 //!
 //! **Continuous batching** ([`Batcher::next_batch`]): every engine tick
-//! the waiting set is re-grouped from scratch and the single most urgent
-//! compatible batch is launched, so late arrivals join the next batch of
-//! their group instead of waiting behind a pre-formed schedule. Every
-//! serving path (`Engine::serve`, `submit`/`tick`, trace replay) goes
-//! through this one selection.
+//! the waiting set is re-grouped and the single most urgent compatible
+//! batch is launched, so late arrivals join the next batch of their group
+//! instead of waiting behind a pre-formed schedule. Every serving path
+//! (`Engine::serve`, `submit`/`tick`, trace replay) goes through this one
+//! selection.
 //!
 //! Urgency is `priority + aging_rate * time_waiting`: strict priorities in
 //! the short run, but every waiting request's effective priority grows
 //! linearly with virtual time, which bounds starvation (see the property
 //! tests and DESIGN.md).
+//!
+//! **Two selection paths, one semantics.** [`Batcher::next_batch`] is the
+//! reference implementation: it rebuilds the compatibility groups over a
+//! flat `Vec` and rescans every member per call — O(n) allocations and
+//! scoring per tick. The engine's hot path runs
+//! [`Batcher::next_batch_indexed`] over a [`WaitingSet`] instead:
+//! requests are bucketed by `batch_key()` **once at admission**, each
+//! bucket maintains the aggregates group ranking needs, and a tick only
+//! ranks the buckets (O(#groups)) and orders the members of the single
+//! winning bucket. The two paths pick the same batches — the clamp in
+//! [`Batcher::effective_priority`] commutes with `max`, so a bucket's
+//! best effective priority at time `now` is exactly
+//! `max(max(priority − aging·arrival) + aging·now, max(priority))`, two
+//! insert-monotone aggregates — and `prop_indexed_matches_reference`
+//! locks the equivalence in (on dyadic inputs the two are bit-equal; on
+//! arbitrary floats they can differ only when two scores collide within
+//! ~1 ulp, where the order is unspecified either way).
 
 use std::collections::BTreeMap;
 
+use crate::config::model::BlockVariant;
 use crate::coordinator::request::GenRequest;
+
+/// Compatibility class of a request: `GenRequest::batch_key()`.
+pub type BatchKey = (BlockVariant, usize, bool, usize);
 
 /// One launchable batch: requests that share a `batch_key` (compiled
 /// shapes + routed mesh), at most `max_batch` of them.
@@ -66,12 +87,15 @@ impl Batcher {
         r.priority as f64 + self.aging_rate * (now - r.arrival).max(0.0)
     }
 
-    /// Continuous-batching selection: re-form compatibility groups over the
-    /// waiting set and remove + return the most urgent batch (up to
-    /// `max_batch` members of one group). Groups are ranked by (max
-    /// effective priority, earliest deadline, earliest arrival, lowest id);
-    /// members within the winning group by (effective priority, earliest
-    /// deadline, lowest id). Returns `None` iff `waiting` is empty.
+    /// Continuous-batching selection — the **reference implementation**
+    /// over a flat `Vec` (the engine's hot path is
+    /// [`next_batch_indexed`](Batcher::next_batch_indexed), property-tested
+    /// equivalent): re-form compatibility groups over the waiting set and
+    /// remove + return the most urgent batch (up to `max_batch` members of
+    /// one group). Groups are ranked by (max effective priority, earliest
+    /// deadline, earliest arrival, lowest id); members within the winning
+    /// group by (effective priority, earliest deadline, lowest id).
+    /// Returns `None` iff `waiting` is empty.
     pub fn next_batch(&self, waiting: &mut Vec<GenRequest>, now: f64) -> Option<Batch> {
         if waiting.is_empty() {
             return None;
@@ -109,6 +133,69 @@ impl Batcher {
         Some(Batch { requests })
     }
 
+    /// Indexed continuous-batching selection over a [`WaitingSet`] — the
+    /// engine's hot path. Semantically identical to
+    /// [`next_batch`](Batcher::next_batch) (same group ranking, same member
+    /// ordering, same FIFO batch order) but it never rescans the whole
+    /// waiting set: buckets were formed at admission, group ranking reads
+    /// each bucket's maintained aggregates, and only the *winning* bucket's
+    /// members are scored and sorted. Cost per call:
+    /// O(#groups + winner·log winner) instead of O(n·log n + a fresh group
+    /// map allocation).
+    pub fn next_batch_indexed(&self, waiting: &mut WaitingSet, now: f64) -> Option<Batch> {
+        waiting.reindex_if_aging_changed(self.aging_rate);
+        if waiting.is_empty() {
+            return None;
+        }
+        // rank buckets on their aggregates (exactly the reference scores:
+        // the urgency clamp commutes with max — see the module docs)
+        let mut best: Option<((f64, f64, f64, u64), BatchKey)> = None;
+        for (key, bucket) in &waiting.buckets {
+            let score = bucket.score(self.aging_rate, now);
+            let better = match &best {
+                None => true,
+                Some((b, _)) => cmp_score(&score, b) == std::cmp::Ordering::Less,
+            };
+            if better {
+                best = Some((score, *key));
+            }
+        }
+        let key = best?.1;
+        let (mut requests, emptied) = {
+            let bucket = waiting.buckets.get_mut(&key).expect("ranked bucket exists");
+            // exact member order: same comparator as the reference path,
+            // computed per member only for this one bucket
+            let member_key = |r: &GenRequest| {
+                (-self.effective_priority(r, now), r.deadline.unwrap_or(f64::INFINITY), r.id)
+            };
+            let mut idx: Vec<usize> = (0..bucket.members.len()).collect();
+            idx.sort_by(|&a, &b| {
+                let (pa, da, ia) = member_key(&bucket.members[a]);
+                let (pb, db, ib) = member_key(&bucket.members[b]);
+                pa.total_cmp(&pb).then(da.total_cmp(&db)).then(ia.cmp(&ib))
+            });
+            idx.truncate(self.max_batch);
+            // extract in descending index order so earlier indices stay
+            // valid under swap_remove (same invariant as the reference)
+            idx.sort_unstable_by(|a, b| b.cmp(a));
+            let requests: Vec<GenRequest> =
+                idx.iter().map(|&i| bucket.members.swap_remove(i)).collect();
+            if !bucket.members.is_empty() {
+                // removals can retire the aggregate extrema: rebuild them
+                // from the survivors of this one bucket
+                bucket.recompute(self.aging_rate);
+            }
+            (requests, bucket.members.is_empty())
+        };
+        waiting.len -= requests.len();
+        if emptied {
+            waiting.buckets.remove(&key);
+        }
+        // FIFO execution order inside the batch (stable latency accounting)
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        Some(Batch { requests })
+    }
+
     /// Group rank key: smaller = more urgent (negated priority so `min_by`
     /// picks the highest effective priority first).
     fn group_score(&self, waiting: &[GenRequest], idx: &[usize], now: f64) -> (f64, f64, f64, u64) {
@@ -136,6 +223,135 @@ fn cmp_score(a: &(f64, f64, f64, u64), b: &(f64, f64, f64, u64)) -> std::cmp::Or
         .then(a.1.total_cmp(&b.1))
         .then(a.2.total_cmp(&b.2))
         .then(a.3.cmp(&b.3))
+}
+
+/// One compatibility bucket of the [`WaitingSet`]: members in admission
+/// order plus the aggregates group ranking needs. `max_s` / `max_prio`
+/// grow monotonically on insert; removals (which only ever touch the
+/// winning bucket) trigger a rebuild over that bucket's survivors.
+#[derive(Debug)]
+struct Bucket {
+    /// Waiting members, in admission order.
+    members: Vec<GenRequest>,
+    /// max over members of `priority − aging·arrival` (the static part of
+    /// the unclamped effective priority).
+    max_s: f64,
+    /// max over members of `priority` (the clamped branch: a member that
+    /// has not "arrived" yet scores its bare priority).
+    max_prio: f64,
+    /// Earliest declared deadline (∞ when none declared).
+    min_deadline: f64,
+    /// Earliest arrival stamp.
+    min_arrival: f64,
+    /// Lowest request id.
+    min_id: u64,
+}
+
+impl Bucket {
+    fn new() -> Bucket {
+        Bucket {
+            members: Vec::new(),
+            max_s: f64::NEG_INFINITY,
+            max_prio: f64::NEG_INFINITY,
+            min_deadline: f64::INFINITY,
+            min_arrival: f64::INFINITY,
+            min_id: u64::MAX,
+        }
+    }
+
+    fn absorb(&mut self, r: &GenRequest, aging: f64) {
+        let prio = r.priority as f64;
+        self.max_s = self.max_s.max(prio - aging * r.arrival);
+        self.max_prio = self.max_prio.max(prio);
+        if let Some(d) = r.deadline {
+            self.min_deadline = self.min_deadline.min(d);
+        }
+        self.min_arrival = self.min_arrival.min(r.arrival);
+        self.min_id = self.min_id.min(r.id);
+    }
+
+    fn recompute(&mut self, aging: f64) {
+        let members = std::mem::take(&mut self.members);
+        *self = Bucket::new();
+        for r in &members {
+            self.absorb(r, aging);
+        }
+        self.members = members;
+    }
+
+    /// Group rank key at virtual time `now` (smaller = more urgent). The
+    /// max clamped effective priority over the members is exactly
+    /// `max(max_s + aging·now, max_prio)`: for an arrived member the
+    /// first branch reproduces `priority + aging·(now − arrival)`, for a
+    /// future-stamped member it undershoots its bare priority, which the
+    /// second branch supplies — so the max over both branches equals the
+    /// max over the per-member clamped scores.
+    fn score(&self, aging: f64, now: f64) -> (f64, f64, f64, u64) {
+        let max_eff = (self.max_s + aging * now).max(self.max_prio);
+        (-max_eff, self.min_deadline, self.min_arrival, self.min_id)
+    }
+}
+
+/// The engine's indexed waiting set: requests bucketed by `batch_key()`
+/// at admission, with per-bucket urgency aggregates maintained
+/// incrementally so [`Batcher::next_batch_indexed`] never rescans the
+/// whole backlog. Selection semantics are identical to the flat-`Vec`
+/// reference path (property-tested); only the cost per tick changes.
+#[derive(Debug)]
+pub struct WaitingSet {
+    buckets: BTreeMap<BatchKey, Bucket>,
+    len: usize,
+    /// Aging rate the `max_s` aggregates were computed with; a mismatch
+    /// with the batcher triggers a one-off reindex.
+    aging_rate: f64,
+}
+
+impl WaitingSet {
+    /// An empty waiting set whose aggregates assume `aging_rate`.
+    pub fn new(aging_rate: f64) -> WaitingSet {
+        WaitingSet { buckets: BTreeMap::new(), len: 0, aging_rate }
+    }
+
+    /// Admit one request into its compatibility bucket (O(log groups)).
+    pub fn push(&mut self, r: GenRequest) {
+        let bucket = self.buckets.entry(r.batch_key()).or_insert_with(Bucket::new);
+        bucket.absorb(&r, self.aging_rate);
+        bucket.members.push(r);
+        self.len += 1;
+    }
+
+    /// Admit a sequence of requests in order.
+    pub fn extend(&mut self, requests: impl IntoIterator<Item = GenRequest>) {
+        for r in requests {
+            self.push(r);
+        }
+    }
+
+    /// Requests currently waiting.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Distinct compatibility groups currently waiting.
+    pub fn groups(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Rebuild the aggregates if the batcher's aging rate changed since
+    /// they were computed (rare: a live engine keeps one rate).
+    fn reindex_if_aging_changed(&mut self, aging: f64) {
+        if aging.to_bits() != self.aging_rate.to_bits() {
+            self.aging_rate = aging;
+            for bucket in self.buckets.values_mut() {
+                bucket.recompute(aging);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -233,6 +449,138 @@ mod tests {
         }
         assert!(waiting.is_empty());
         assert_eq!(seen.len(), 7);
+    }
+
+    #[test]
+    fn extraction_survives_colliding_swap_remove_indices() {
+        // Regression guard for the index-extraction step: the most urgent
+        // members here sit at indices {0, 4} of the waiting vec. Removing
+        // in *selection* order would swap_remove(0) first — moving the
+        // tail (index 4) into slot 0 — and then index 4 would be out of
+        // bounds / the wrong element. Descending-index extraction is the
+        // invariant; this pins it with a case where the naive order
+        // panics outright.
+        let b = Batcher::new(2).with_aging_rate(0.0);
+        let mut waiting: Vec<GenRequest> = (0..5)
+            .map(|i| {
+                req(i, BlockVariant::AdaLn, 4).with_priority(match i {
+                    0 => 5,
+                    4 => 4,
+                    _ => 0,
+                })
+            })
+            .collect();
+        let batch = b.next_batch(&mut waiting, 0.0).unwrap();
+        let got: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(got, vec![0, 4], "must extract exactly the two most urgent requests");
+        let mut left: Vec<u64> = waiting.iter().map(|r| r.id).collect();
+        left.sort_unstable();
+        assert_eq!(left, vec![1, 2, 3], "the others must all survive, once each");
+
+        // and the indexed path agrees on the same scenario
+        let mut ws = WaitingSet::new(0.0);
+        ws.extend((0..5).map(|i| {
+            req(i, BlockVariant::AdaLn, 4).with_priority(match i {
+                0 => 5,
+                4 => 4,
+                _ => 0,
+            })
+        }));
+        let batch = b.next_batch_indexed(&mut ws, 0.0).unwrap();
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 4]);
+        assert_eq!(ws.len(), 3);
+    }
+
+    #[test]
+    fn prop_indexed_matches_reference() {
+        // the indexed WaitingSet path must pick bit-identical batches to
+        // the flat-Vec reference under random workloads with mid-drain
+        // admissions. All numeric inputs are dyadic rationals (multiples
+        // of 0.25) so the aggregate scoring is FP-exact, not just
+        // algebraically equal (see the module docs).
+        testing::check("indexed == reference selection", 60, |rng| {
+            let b = Batcher::new(1 + rng.below(4)).with_aging_rate(rng.below(5) as f64 * 0.25);
+            let variants = [BlockVariant::AdaLn, BlockVariant::MmDit, BlockVariant::Skip];
+            let mut next_id = 0u64;
+            let mut mk = |rng: &mut crate::util::rng::Rng| {
+                let id = next_id;
+                next_id += 1;
+                let mut r = req(id, *rng.pick(&variants), *rng.pick(&[2usize, 4]))
+                    .with_resolution(*rng.pick(&[256usize, 512]))
+                    .with_priority(rng.below(5) as i32)
+                    // arrivals 0..12 in 0.25 steps: some land in the
+                    // future relative to `now`, exercising the clamp
+                    .with_arrival(rng.below(48) as f64 * 0.25);
+                if rng.below(3) == 0 {
+                    r = r.with_deadline(rng.below(32) as f64 * 0.5);
+                }
+                r
+            };
+            let mut reference: Vec<GenRequest> = Vec::new();
+            let mut indexed = WaitingSet::new(b.aging_rate);
+            for _ in 0..rng.below(12) {
+                let r = mk(&mut *rng);
+                reference.push(r.clone());
+                indexed.push(r);
+            }
+            let mut now = 8.0;
+            let mut late_admissions = 0;
+            loop {
+                // mid-drain admissions join both structures identically
+                // (bounded so the drain terminates)
+                if late_admissions < 8 && rng.below(3) == 0 {
+                    late_admissions += 1;
+                    let r = mk(&mut *rng);
+                    reference.push(r.clone());
+                    indexed.push(r);
+                }
+                let a = b.next_batch(&mut reference, now);
+                let c = b.next_batch_indexed(&mut indexed, now);
+                match (a, c) {
+                    (None, None) => break,
+                    (Some(x), Some(y)) => {
+                        let xs: Vec<u64> = x.requests.iter().map(|r| r.id).collect();
+                        let ys: Vec<u64> = y.requests.iter().map(|r| r.id).collect();
+                        if xs != ys {
+                            return Err(format!("batch diverged: {xs:?} vs {ys:?}"));
+                        }
+                        if reference.len() != indexed.len() {
+                            return Err("leftover count diverged".into());
+                        }
+                    }
+                    (x, y) => {
+                        return Err(format!(
+                            "one path drained early: ref={:?} indexed={:?}",
+                            x.map(|b| b.len()),
+                            y.map(|b| b.len())
+                        ))
+                    }
+                }
+                now += 0.25;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn indexed_reindexes_when_the_aging_rate_changes() {
+        // aggregates were built at rate 0 (strict priority); switching the
+        // batcher to aggressive aging must re-rank: the old waiter wins
+        let mut ws = WaitingSet::new(0.0);
+        ws.push(req(0, BlockVariant::AdaLn, 4).with_priority(0).with_arrival(0.0));
+        ws.push(req(1, BlockVariant::MmDit, 4).with_priority(3).with_arrival(10.0));
+        let strict = Batcher::new(4).with_aging_rate(0.0);
+        let first = strict.next_batch_indexed(&mut ws, 10.0).unwrap();
+        assert_eq!(first.requests[0].id, 1, "strict priorities pick the high-priority job");
+        // rebuild and flip the rate on the same set
+        let mut ws = WaitingSet::new(0.0);
+        ws.push(req(0, BlockVariant::AdaLn, 4).with_priority(0).with_arrival(0.0));
+        ws.push(req(1, BlockVariant::MmDit, 4).with_priority(3).with_arrival(10.0));
+        let aging = Batcher::new(4).with_aging_rate(1.0);
+        let first = aging.next_batch_indexed(&mut ws, 10.0).unwrap();
+        assert_eq!(first.requests[0].id, 0, "aged request must outrank fresh priority");
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws.groups(), 1);
     }
 
     #[test]

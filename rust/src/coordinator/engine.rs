@@ -29,12 +29,15 @@
 //! generation at a time, as in xDiT); latency = finish - arrival, split
 //! into queue delay (arrival -> launch) and execution (launch -> finish).
 
+use std::cell::RefCell;
+
 use crate::comm::Clocks;
 use crate::config::hardware::ClusterSpec;
-use crate::config::model::ModelSpec;
+use crate::config::model::{BlockVariant, ModelSpec};
 use crate::config::parallel::ParallelConfig;
-use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::batcher::{Batch, Batcher, WaitingSet};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::plan_cache::{fingerprint, PlanCache, PlanKey};
 use crate::coordinator::planner::{Fidelity, Plan, Planner, RoutePolicy};
 use crate::coordinator::queue::{PushError, RequestQueue};
 use crate::coordinator::request::{GenRequest, GenResponse, RequestId};
@@ -47,6 +50,52 @@ use crate::Result;
 
 /// Default bound on the admission queue.
 pub const DEFAULT_QUEUE_CAPACITY: usize = 64;
+
+/// Default bound on warm sessions the engine keeps between batches.
+pub const DEFAULT_SESSION_CACHE_CAPACITY: usize = 8;
+
+/// Shape of a warm session: requests routed to the same (variant,
+/// resolution, config) can reuse the mesh/model the last batch built.
+type SessionKey = (BlockVariant, usize, ParallelConfig);
+
+/// Bounded most-recently-used cache of warm [`Session`]s. Sessions are
+/// *taken out* for the duration of a batch (so the engine can borrow
+/// itself freely while serving) and re-inserted at the front afterwards;
+/// capacity 0 disables reuse entirely (the cold-build debug path). A
+/// cluster-fingerprint mismatch empties the cache, mirroring the
+/// `PlanCache` invalidation rule.
+struct SessionCache<'a> {
+    entries: Vec<(SessionKey, Session<'a>)>,
+    capacity: usize,
+    cluster_fp: Option<u64>,
+}
+
+impl<'a> SessionCache<'a> {
+    fn new(capacity: usize) -> SessionCache<'a> {
+        SessionCache { entries: Vec::new(), capacity, cluster_fp: None }
+    }
+
+    /// Empty the cache when the cluster spec changed under the engine.
+    fn check_cluster(&mut self, fp: u64) {
+        if self.cluster_fp != Some(fp) {
+            self.entries.clear();
+            self.cluster_fp = Some(fp);
+        }
+    }
+
+    fn take(&mut self, key: &SessionKey) -> Option<Session<'a>> {
+        let i = self.entries.iter().position(|(k, _)| k == key)?;
+        Some(self.entries.remove(i).1)
+    }
+
+    fn store(&mut self, key: SessionKey, sess: Session<'a>) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.entries.insert(0, (key, sess));
+        self.entries.truncate(self.capacity);
+    }
+}
 
 /// Why a request was refused admission (returned by [`Engine::submit`]).
 #[derive(Debug, Clone)]
@@ -101,8 +150,18 @@ pub struct Engine<'a> {
     /// *external* `RequestQueue` handle the leader drains into a `Trace`
     /// or `submit` loop, as `examples/serve_hybrid.rs` does.
     queue: RequestQueue,
-    /// Admitted requests awaiting a batch slot (re-grouped every tick).
-    waiting: Vec<GenRequest>,
+    /// Admitted requests awaiting a batch slot, bucketed by compatibility
+    /// at admission (`Batcher::next_batch_indexed` selects from here
+    /// without rescanning the backlog).
+    waiting: WaitingSet,
+    /// Memoized routing decisions (pure function of the plan key + the
+    /// cluster — see `coordinator::plan_cache`). Interior-mutable because
+    /// `plan_for` serves read paths through `&self`.
+    plan_cache: RefCell<PlanCache>,
+    /// Warm sessions keyed by (variant, px, config); reused across
+    /// batches with clocks/ledger reset so `sessions_built` tracks
+    /// distinct shapes, not batch count.
+    sessions: SessionCache<'a>,
     /// Patch-parallel VAE, built once per engine on first decode.
     vae: Option<ParallelVae<'a>>,
     /// Virtual clock of the serving horizon.
@@ -127,7 +186,9 @@ impl<'a> Engine<'a> {
             force_method: None,
             default_scheduler: None,
             queue: RequestQueue::new(DEFAULT_QUEUE_CAPACITY),
-            waiting: Vec::new(),
+            waiting: WaitingSet::new(1.0),
+            plan_cache: RefCell::new(PlanCache::default()),
+            sessions: SessionCache::new(DEFAULT_SESSION_CACHE_CAPACITY),
             vae: None,
             now: 0.0,
         }
@@ -139,6 +200,25 @@ impl<'a> Engine<'a> {
     pub fn set_queue_capacity(&mut self, capacity: usize) {
         self.waiting.extend(self.queue.drain_upto(usize::MAX));
         self.queue = RequestQueue::new(capacity.max(1));
+    }
+
+    /// Enable/disable plan memoization (`--no-plan-cache`). Off, every
+    /// batch re-runs the cold enumerate + score sweep — bit-identical
+    /// results, steady-state cost restored; for debugging the cache only.
+    pub fn set_plan_cache_enabled(&mut self, enabled: bool) {
+        self.plan_cache.borrow_mut().set_enabled(enabled);
+    }
+
+    /// Whether plan memoization is active.
+    pub fn plan_cache_enabled(&self) -> bool {
+        self.plan_cache.borrow().is_enabled()
+    }
+
+    /// Bound the warm-session cache (0 disables reuse: every batch builds
+    /// a fresh session, the pre-cache behavior).
+    pub fn set_session_cache_capacity(&mut self, capacity: usize) {
+        self.sessions.capacity = capacity;
+        self.sessions.entries.truncate(capacity);
     }
 
     /// Current bound on the admission queue.
@@ -153,7 +233,11 @@ impl<'a> Engine<'a> {
     /// Rejections are counted.
     pub fn submit(&mut self, req: GenRequest) -> std::result::Result<(), Rejection> {
         if self.deadline_admission {
-            if let Some(rej) = self.deadline_rejection(&req) {
+            let rej = self.deadline_rejection(&req);
+            // the admission check planned through the cache: reflect its
+            // counters in the metrics snapshot
+            self.sync_cache_metrics();
+            if let Some(rej) = rej {
                 self.metrics.rejected += 1;
                 return Err(rej);
             }
@@ -198,7 +282,43 @@ impl<'a> Engine<'a> {
     /// that strategy's closed form (mirroring `Pipeline::plan`), so
     /// `predicted_seconds` and deadline admission describe what will
     /// actually run, not the config's best case.
+    ///
+    /// Memoized through the engine's `PlanCache`: the decision is a pure
+    /// function of `(model, px, steps)` and the engine's policy knobs
+    /// (all part of the key), so a hit returns a byte-identical clone of
+    /// the cold computation. The cache self-invalidates when the cluster
+    /// spec changes.
     pub fn plan_for(&self, spec: &ModelSpec, px: usize, steps: usize) -> Plan {
+        let fp = fingerprint(&self.cluster);
+        self.plan_for_keyed(&self.plan_key(spec, px, steps), fp, spec, px, steps)
+    }
+
+    /// `plan_for` with a caller-built key and cluster fingerprint, so the
+    /// batch path constructs each exactly once and shares them with the
+    /// sim memo and the session cache.
+    fn plan_for_keyed(
+        &self,
+        key: &PlanKey,
+        cluster_fp: u64,
+        spec: &ModelSpec,
+        px: usize,
+        steps: usize,
+    ) -> Plan {
+        {
+            let mut cache = self.plan_cache.borrow_mut();
+            cache.check_cluster(cluster_fp);
+            if let Some(plan) = cache.lookup(key) {
+                return plan;
+            }
+        }
+        let plan = self.plan_cold(spec, px, steps);
+        self.plan_cache.borrow_mut().insert(key.clone(), plan.clone());
+        plan
+    }
+
+    /// The un-memoized planning sweep `plan_for` caches (enumerate, prune,
+    /// score, reprice, attach simulation).
+    fn plan_cold(&self, spec: &ModelSpec, px: usize, steps: usize) -> Plan {
         let planner = self.planner(steps);
         let mut plan = match self.force_config {
             Some(pc) => planner.score(spec, px, &self.cluster, &pc),
@@ -211,6 +331,31 @@ impl<'a> Engine<'a> {
         // engine's fidelity by attaching the simulated makespan here
         planner.attach_simulation(&mut plan, spec, &self.cluster);
         plan
+    }
+
+    /// Everything the routing decision for `(spec, px, steps)` depends on
+    /// besides the cluster (which the cache fingerprints separately).
+    fn plan_key(&self, spec: &ModelSpec, px: usize, steps: usize) -> PlanKey {
+        PlanKey {
+            model: spec.name.clone(),
+            px,
+            steps,
+            world: self.world,
+            policy: self.route_policy,
+            fidelity: self.route_fidelity,
+            memory_cap_bits: self.memory_cap_bytes.map(f64::to_bits),
+            force_config: self.force_config,
+            force_method: self.force_method,
+        }
+    }
+
+    /// Copy the plan-cache counters into the metrics snapshot (called at
+    /// every engine operation that may have planned).
+    fn sync_cache_metrics(&mut self) {
+        let (hits, misses, invalidations) = self.plan_cache.borrow().counters();
+        self.metrics.plan_cache_hits = hits;
+        self.metrics.plan_cache_misses = misses;
+        self.metrics.plan_cache_invalidations = invalidations;
     }
 
     /// The planner this engine's policy knobs configure, predicting for
@@ -253,7 +398,7 @@ impl<'a> Engine<'a> {
     pub fn tick(&mut self) -> Result<Vec<GenResponse>> {
         self.metrics.ticks += 1;
         self.waiting.extend(self.queue.drain_upto(usize::MAX));
-        match self.batcher.next_batch(&mut self.waiting, self.now) {
+        match self.batcher.next_batch_indexed(&mut self.waiting, self.now) {
             Some(batch) => self.execute_batch(batch),
             None => {
                 self.metrics.idle_ticks += 1;
@@ -269,9 +414,10 @@ impl<'a> Engine<'a> {
     /// `generate`/`serve` with the continuous API never steals or returns
     /// someone else's requests. Returns responses in completion order.
     pub fn serve(&mut self, window: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
-        let mut local = window;
-        let mut out = Vec::with_capacity(local.len());
-        while let Some(batch) = self.batcher.next_batch(&mut local, self.now) {
+        let mut local = WaitingSet::new(self.batcher.aging_rate);
+        let mut out = Vec::with_capacity(window.len());
+        local.extend(window);
+        while let Some(batch) = self.batcher.next_batch_indexed(&mut local, self.now) {
             self.metrics.ticks += 1;
             out.extend(self.execute_batch(batch)?);
         }
@@ -296,21 +442,58 @@ impl<'a> Engine<'a> {
         let first = &batch.requests[0];
         let spec = ModelSpec::for_variant(first.variant)?;
         // the plan follows the requested resolution and step count (the
-        // batch key guarantees they are uniform across the batch)
-        let plan = self.plan_for(&spec, first.px, first.steps);
+        // batch key guarantees they are uniform across the batch); the
+        // key and cluster fingerprint are built once per batch and shared
+        // with the sim memo and the session cache below
+        let key = self.plan_key(&spec, first.px, first.steps);
+        let cluster_fp = fingerprint(&self.cluster);
+        let plan = self.plan_for_keyed(&key, cluster_fp, &spec, first.px, first.steps);
         let pc = plan.config;
         let method = self.force_method.unwrap_or_else(|| pick_method(&pc));
-        // one event-simulation per batch: responses report simulated vs
-        // closed-form vs virtual-actual seconds side by side (a plan
-        // scored at Fidelity::Simulated already carries the figure)
-        let simulated_seconds = plan.simulated_seconds.unwrap_or_else(|| {
-            self.planner(first.steps).simulate_plan(&plan, &spec, &self.cluster).makespan
-        });
+        // one event-simulation per *shape*, not per batch: the makespan is
+        // a pure function of the plan key, so it is memoized next to the
+        // plan (a plan scored at Fidelity::Simulated already carries it).
+        // Responses report simulated vs closed-form vs virtual-actual
+        // seconds side by side. (`cached_sim` is bound to a local first —
+        // a match scrutinee would keep the RefMut borrow alive into the
+        // arm that needs to borrow again.)
+        let simulated_seconds = match plan.simulated_seconds {
+            Some(s) => s,
+            None => {
+                let memoized = self.plan_cache.borrow_mut().cached_sim(&key);
+                match memoized {
+                    Some(s) => s,
+                    None => {
+                        let s = self
+                            .planner(first.steps)
+                            .simulate_plan(&plan, &spec, &self.cluster)
+                            .makespan;
+                        self.plan_cache.borrow_mut().store_sim(&key, s);
+                        s
+                    }
+                }
+            }
+        };
 
-        // one session per batch: the whole batch shares the mesh and runs
-        // back-to-back on it
-        let mut sess = Session::new(rt, first.variant, self.cluster.clone(), pc)?;
-        self.metrics.sessions_built += 1;
+        // one session per batch, *recycled* across batches of the same
+        // (variant, px, config): a warm session gets its clocks and comm
+        // ledger reset, making it observationally identical to a fresh
+        // build (model, mesh and config are pure functions of the key)
+        let skey = (first.variant, first.px, pc);
+        self.sessions.check_cluster(cluster_fp);
+        let mut sess = match self.sessions.take(&skey) {
+            Some(mut warm) => {
+                warm.clocks.reset();
+                warm.ledger.ops.clear();
+                self.metrics.sessions_reused += 1;
+                warm
+            }
+            None => {
+                let built = Session::new(rt, first.variant, self.cluster.clone(), pc)?;
+                self.metrics.sessions_built += 1;
+                built
+            }
+        };
 
         for req in &batch.requests {
             let scheduler = self.scheduler_for(&spec, req)?;
@@ -363,6 +546,8 @@ impl<'a> Engine<'a> {
             });
         }
         self.metrics.horizon = self.now;
+        self.sessions.store(skey, sess);
+        self.sync_cache_metrics();
         Ok(out)
     }
 
@@ -524,7 +709,110 @@ mod tests {
         assert!(eng.tick().unwrap().is_empty(), "idle tick");
         assert_eq!(eng.metrics.idle_ticks, 1);
         assert_eq!(eng.metrics.batches, 2);
-        assert_eq!(eng.metrics.sessions_built, 2);
+        // one session per batch, some possibly warm from the cache (the
+        // two groups share a config iff the planner routes steps=1 and
+        // steps=2 identically)
+        assert_eq!(eng.metrics.sessions_built + eng.metrics.sessions_reused, 2);
+        assert!(eng.metrics.sessions_built >= 1);
+    }
+
+    #[test]
+    fn warm_sessions_stop_scaling_with_batch_count() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        let window = |base: u64| -> Vec<GenRequest> {
+            (0..2u64)
+                .map(|i| {
+                    let mut r = GenRequest::new(base + i, "warm");
+                    r.steps = 1;
+                    r
+                })
+                .collect()
+        };
+        // four identical-shape batches: one cold build, three warm reuses
+        for w in 0..4u64 {
+            eng.serve(window(10 * w)).unwrap();
+        }
+        assert_eq!(eng.metrics.batches, 4);
+        assert_eq!(eng.metrics.sessions_built, 1, "repeat shapes must reuse the session");
+        assert_eq!(eng.metrics.sessions_reused, 3);
+        // plan memoization: one cold sweep, the rest hits
+        assert_eq!(eng.metrics.plan_cache_misses, 1);
+        assert_eq!(eng.metrics.plan_cache_hits, 3);
+
+        // capacity 0 restores the cold-build path exactly
+        let mut cold = Engine::new(&rt, l40_cluster(1), 4);
+        cold.set_session_cache_capacity(0);
+        for w in 0..4u64 {
+            cold.serve(window(10 * w)).unwrap();
+        }
+        assert_eq!(cold.metrics.sessions_built, 4);
+        assert_eq!(cold.metrics.sessions_reused, 0);
+    }
+
+    #[test]
+    fn warm_and_cold_paths_serve_identical_responses() {
+        let rt = setup();
+        let window = || -> Vec<GenRequest> {
+            (0..6u64)
+                .map(|i| {
+                    let mut r = GenRequest::new(i, format!("prompt {i}"));
+                    r.steps = 1;
+                    r.arrival = i as f64 * 0.01;
+                    r
+                })
+                .collect()
+        };
+        let mut warm = Engine::new(&rt, l40_cluster(1), 4);
+        // pre-warm both caches with a separate batch of the same shape
+        let mut primer = GenRequest::new(99, "primer");
+        primer.steps = 1;
+        warm.serve(vec![primer]).unwrap();
+        let a = warm.serve(window()).unwrap();
+        assert!(warm.metrics.sessions_reused > 0 && warm.metrics.plan_cache_hits > 0);
+
+        let mut cold = Engine::new(&rt, l40_cluster(1), 4);
+        cold.set_session_cache_capacity(0);
+        cold.set_plan_cache_enabled(false);
+        let mut primer = GenRequest::new(99, "primer");
+        primer.steps = 1;
+        cold.serve(vec![primer]).unwrap();
+        let b = cold.serve(window()).unwrap();
+        assert_eq!(cold.metrics.plan_cache_hits, 0);
+
+        // caching changes cost, never answers: bit-identical responses
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.latent, y.latent, "warm session must replay bit-identically");
+            assert_eq!(x.model_seconds, y.model_seconds);
+            assert_eq!(x.latency, y.latency);
+            assert_eq!(x.comm_bytes, y.comm_bytes);
+            assert_eq!(x.parallel_config, y.parallel_config);
+            assert_eq!(x.predicted_seconds, y.predicted_seconds);
+            assert_eq!(x.simulated_seconds, y.simulated_seconds);
+        }
+    }
+
+    #[test]
+    fn cluster_change_invalidates_the_plan_cache() {
+        use crate::config::hardware::a100_node;
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        let spec = ModelSpec::for_variant(crate::config::model::BlockVariant::AdaLn).unwrap();
+        let before = eng.plan_for(&spec, 256, 2);
+        assert_eq!(eng.plan_for(&spec, 256, 2).config, before.config); // hit
+        let (hits, _, _) = eng.plan_cache.borrow().counters();
+        assert_eq!(hits, 1);
+        // mutate the cluster in place: the cache must self-invalidate and
+        // the fresh plan must match a cold engine on the new cluster
+        eng.cluster = a100_node();
+        let after = eng.plan_for(&spec, 256, 2);
+        let oracle = Engine::new(&rt, a100_node(), 4).plan_for(&spec, 256, 2);
+        assert_eq!(after.config, oracle.config);
+        assert_eq!(after.predicted.total, oracle.predicted.total);
+        let (_, _, invalidations) = eng.plan_cache.borrow().counters();
+        assert_eq!(invalidations, 1);
     }
 
     #[test]

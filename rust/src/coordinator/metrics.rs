@@ -86,9 +86,21 @@ pub struct Metrics {
     pub model_seconds: f64,
     /// Virtual end-to-end seconds of the serving run (the makespan).
     pub horizon: f64,
-    /// Sessions constructed (one per batch, not per request — reuse is the
-    /// point of the batcher).
+    /// Sessions actually constructed. With the warm session cache this
+    /// stays proportional to the number of *distinct* batch shapes, not
+    /// the number of batches (see `sessions_reused`).
     pub sessions_built: u64,
+    /// Batches served on a recycled session from the warm cache (clocks
+    /// and ledger reset, mesh/model/config reused). `sessions_built +
+    /// sessions_reused == batches` on the engine tick path.
+    pub sessions_reused: u64,
+    /// Routing decisions served from the `PlanCache` memo.
+    pub plan_cache_hits: u64,
+    /// Routing decisions that ran the cold enumerate + score sweep.
+    pub plan_cache_misses: u64,
+    /// Times the plan/session caches were wiped because the cluster spec
+    /// changed under the engine.
+    pub plan_cache_invalidations: u64,
     /// Parallel-VAE constructions; stays at 1 for the whole life of an
     /// engine no matter how many requests decode.
     pub vae_builds: u64,
@@ -132,6 +144,33 @@ impl Metrics {
         }
     }
 
+    /// Fraction of routing decisions served from the plan cache.
+    pub fn plan_cache_hit_rate(&self) -> f64 {
+        let total = self.plan_cache_hits + self.plan_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_cache_hits as f64 / total as f64
+        }
+    }
+
+    /// One-line steady-state summary of the hot-path caches: how often
+    /// planning and session construction were skipped. Printed by the
+    /// `serve` CLI after the serving report.
+    pub fn steady_state(&self) -> String {
+        format!(
+            "steady-state: plan cache {}/{} hits ({:.1}% hit rate, {} invalidations) | \
+             sessions {} built, {} reused | vae_builds={}",
+            self.plan_cache_hits,
+            self.plan_cache_hits + self.plan_cache_misses,
+            self.plan_cache_hit_rate() * 100.0,
+            self.plan_cache_invalidations,
+            self.sessions_built,
+            self.sessions_reused,
+            self.vae_builds,
+        )
+    }
+
     /// Human-readable snapshot. Virtual makespan, the queue-delay vs
     /// execution split, and batch occupancy are reported separately —
     /// folding them into one latency figure hides *where* time went.
@@ -141,7 +180,7 @@ impl Metrics {
              latency p50/p95/p99 {:.3}/{:.3}/{:.3}s (mean {:.3}s max {:.3}s) | \
              queue delay mean {:.3}s p95 {:.3}s | exec mean {:.3}s | \
              batches={} occupancy mean {:.2} max {} | deadline misses={} | \
-             sessions={} vae_builds={}",
+             sessions={}+{} reused | plan cache {}/{} | vae_builds={}",
             self.served,
             self.rejected,
             self.horizon,
@@ -159,6 +198,9 @@ impl Metrics {
             self.occupancy_max,
             self.deadline_misses,
             self.sessions_built,
+            self.sessions_reused,
+            self.plan_cache_hits,
+            self.plan_cache_hits + self.plan_cache_misses,
             self.vae_builds,
         )
     }
@@ -197,6 +239,22 @@ mod tests {
         assert_eq!(m.batches, 3);
         assert!((m.mean_occupancy() - 3.0).abs() < 1e-9);
         assert_eq!(m.occupancy_max, 4);
+    }
+
+    #[test]
+    fn steady_state_line_reports_cache_effectiveness() {
+        let mut m = Metrics::default();
+        m.plan_cache_hits = 9;
+        m.plan_cache_misses = 1;
+        m.sessions_built = 2;
+        m.sessions_reused = 8;
+        m.vae_builds = 1;
+        assert!((m.plan_cache_hit_rate() - 0.9).abs() < 1e-12);
+        let s = m.steady_state();
+        assert!(s.contains("plan cache 9/10 hits (90.0% hit rate"), "{s}");
+        assert!(s.contains("sessions 2 built, 8 reused"), "{s}");
+        // empty metrics divide cleanly
+        assert_eq!(Metrics::default().plan_cache_hit_rate(), 0.0);
     }
 
     #[test]

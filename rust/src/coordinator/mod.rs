@@ -1,10 +1,13 @@
 //! The serving coordinator: bounded request queue with backpressure, the
 //! compatibility batcher with continuous per-tick batch re-formation
-//! (priorities, deadlines, aging), the cost-model auto-[`planner`] and the
-//! routing policy layer over it (pick the hybrid parallel config for the
+//! (priorities, deadlines, aging — indexed by the bucketed [`WaitingSet`]
+//! so a tick never rescans the backlog), the cost-model auto-[`planner`]
+//! with the memoizing [`plan_cache`] in front of it and the routing
+//! policy layer over both (pick the hybrid parallel config for the
 //! hardware + model at hand; §5.2.4 heuristic kept as fallback/oracle),
 //! the generation engine (`submit`/`tick` admission path + virtual-time
-//! accounting), deterministic arrival [`Trace`]s, and metrics.
+//! accounting + warm-session reuse), deterministic arrival [`Trace`]s,
+//! and metrics.
 //!
 //! These are the *internal* serving layers; user code enters through the
 //! typed facade in `crate::pipeline`, which owns an `Engine` and the
@@ -23,6 +26,8 @@ pub mod batcher;
 pub mod engine;
 /// Serving metrics: histograms, counters, occupancy.
 pub mod metrics;
+/// Memoized routing decisions (the engine's `PlanCache`).
+pub mod plan_cache;
 /// The cost-model auto-planner (`Plan`/`Planner`/`RoutePolicy`/`Fidelity`).
 pub mod planner;
 /// Bounded FIFO request queue with backpressure.
@@ -34,9 +39,10 @@ pub mod router;
 /// Deterministic virtual-time arrival traces.
 pub mod trace;
 
-pub use batcher::{Batch, Batcher};
+pub use batcher::{Batch, Batcher, WaitingSet};
 pub use engine::{Engine, Rejection};
 pub use metrics::Metrics;
+pub use plan_cache::{PlanCache, PlanKey};
 pub use planner::{Fidelity, Plan, Planner, RoutePolicy};
 pub use queue::RequestQueue;
 pub use request::{GenRequest, GenResponse, RequestId};

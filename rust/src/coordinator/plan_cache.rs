@@ -1,0 +1,334 @@
+//! Memoized routing decisions: the [`PlanCache`] behind `Engine::plan_for`.
+//!
+//! A routing [`Plan`] is a *pure function* of
+//! `(model, px, steps, world, policy, fidelity, memory cap, forced
+//! config/method)` and of the cluster spec — yet before this cache the
+//! engine re-ran `ParallelConfig::enumerate` plus the full latency /
+//! memory / comm scoring sweep for **every launched batch**, even when
+//! thousands of requests in a row shared the same shape. The cache keys
+//! the decision on exactly that tuple ([`PlanKey`]) and pays one clone on
+//! a hit instead of a full enumeration, which is what makes the
+//! coordinator's control plane effectively free at steady state
+//! (`benches/steady_state.rs` gates cached planning at ≥ 10× cold).
+//!
+//! **Pure memoization, never a behavior change.** A hit returns a clone
+//! of the plan a cold `Planner` run produced for the same key, so cached
+//! and cold plans are byte-identical (`tests/serving.rs` /
+//! `tests/planner.rs` property-test this across the figs 8–17 grid, and
+//! the golden `route --grid` snapshot is pinned unchanged). The planner
+//! itself stays cache-free; only the engine front-end memoizes.
+//!
+//! **Invalidation.** The cache remembers a [`fingerprint`] of the cluster
+//! spec it was filled against; a lookup under a different cluster clears
+//! everything first (self-healing even when `Engine::cluster` is mutated
+//! in place). Entries are evicted least-recently-used beyond
+//! [`DEFAULT_PLAN_CACHE_CAPACITY`].
+//!
+//! Alongside each plan the cache can memoize the batch-launch event
+//! simulation (`simulate_plan(..).makespan`) for the same key — the other
+//! per-batch recomputation on the serve hot path.
+
+use std::collections::HashMap;
+
+use crate::config::hardware::ClusterSpec;
+use crate::config::parallel::ParallelConfig;
+use crate::coordinator::planner::{Fidelity, Plan, RoutePolicy};
+use crate::parallel::driver;
+
+/// Default bound on distinct memoized routing decisions.
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 256;
+
+/// Everything a routing decision is a function of (besides the cluster,
+/// which the cache tracks via [`fingerprint`]). Two engine batches with
+/// equal keys are guaranteed the same plan.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Model the plan is for (`ModelSpec::name`).
+    pub model: String,
+    /// Target resolution (pixels, square).
+    pub px: usize,
+    /// Diffusion steps the prediction assumes.
+    pub steps: usize,
+    /// Devices the plan must fill.
+    pub world: usize,
+    /// Scoring policy (cost-model vs paper heuristic).
+    pub policy: RoutePolicy,
+    /// Scoring fidelity (closed forms vs simulator re-scoring).
+    pub fidelity: Fidelity,
+    /// Per-GPU HBM budget in f64 bits (`None` = cluster capacity).
+    pub memory_cap_bits: Option<u64>,
+    /// Engine-pinned config, if any (`Engine::force_config`).
+    pub force_config: Option<ParallelConfig>,
+    /// Engine-forced strategy, if any (`Engine::force_method`).
+    pub force_method: Option<driver::Method>,
+}
+
+/// Stable-within-a-run fingerprint of a cluster spec: covers the topology
+/// numbers, the GPU spec and the identity of the link-model functions.
+/// Used to invalidate the plan/session caches when the engine's cluster
+/// changes (including in-place mutation of the public field).
+pub fn fingerprint(c: &ClusterSpec) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    let mut fold = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    fold(c.name.as_bytes());
+    fold(&(c.n_gpus as u64).to_le_bytes());
+    fold(&(c.gpus_per_node as u64).to_le_bytes());
+    fold(&(c.gpus_per_numa as u64).to_le_bytes());
+    fold(&[c.has_nvlink as u8]);
+    fold(c.gpu.name.as_bytes());
+    fold(&c.gpu.tflops.to_bits().to_le_bytes());
+    fold(&c.gpu.mem_bytes.to_bits().to_le_bytes());
+    // fn-pointer identities: distinct link models hash differently even
+    // under an identical name/topology
+    fold(&(c.bw as usize as u64).to_le_bytes());
+    fold(&(c.lat as usize as u64).to_le_bytes());
+    h
+}
+
+struct Entry {
+    plan: Plan,
+    /// Memoized batch-launch event simulation (`simulate_plan` makespan).
+    exec_sim: Option<f64>,
+    last_used: u64,
+}
+
+/// Bounded LRU memo of routing decisions (see the module docs). Owned by
+/// the `Engine`; the `--no-plan-cache` escape hatch and the
+/// `PipelineBuilder::plan_cache(false)` knob disable it for debugging.
+pub struct PlanCache {
+    enabled: bool,
+    capacity: usize,
+    entries: HashMap<PlanKey, Entry>,
+    cluster_fp: Option<u64>,
+    stamp: u64,
+    hits: u64,
+    misses: u64,
+    invalidations: u64,
+}
+
+impl PlanCache {
+    /// An enabled cache bounded to `capacity` entries (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            enabled: true,
+            capacity: capacity.max(1),
+            entries: HashMap::new(),
+            cluster_fp: None,
+            stamp: 0,
+            hits: 0,
+            misses: 0,
+            invalidations: 0,
+        }
+    }
+
+    /// Turn memoization on/off (off: every lookup misses without counting,
+    /// inserts are dropped — the cold path, bit-identical by contract).
+    pub fn set_enabled(&mut self, enabled: bool) {
+        self.enabled = enabled;
+        if !enabled {
+            self.entries.clear();
+        }
+    }
+
+    /// Whether memoization is active.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// `(hits, misses, invalidations)` since construction.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.hits, self.misses, self.invalidations)
+    }
+
+    /// Distinct keys currently memoized.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is memoized.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Reconcile with the cluster the caller is about to plan against:
+    /// a fingerprint change empties the cache (counted as an
+    /// invalidation). Returns true when an invalidation happened.
+    pub fn check_cluster(&mut self, fp: u64) -> bool {
+        match self.cluster_fp {
+            Some(old) if old == fp => false,
+            Some(_) => {
+                self.entries.clear();
+                self.invalidations += 1;
+                self.cluster_fp = Some(fp);
+                true
+            }
+            None => {
+                self.cluster_fp = Some(fp);
+                false
+            }
+        }
+    }
+
+    /// Memoized plan for `key`, counting the hit/miss.
+    pub fn lookup(&mut self, key: &PlanKey) -> Option<Plan> {
+        if !self.enabled {
+            return None;
+        }
+        self.stamp += 1;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.stamp;
+                self.hits += 1;
+                Some(e.plan.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Memoize a cold plan for `key`, evicting the least-recently-used
+    /// entry beyond capacity. No-op when disabled.
+    pub fn insert(&mut self, key: PlanKey, plan: Plan) {
+        if !self.enabled {
+            return;
+        }
+        if self.entries.len() >= self.capacity && !self.entries.contains_key(&key) {
+            if let Some(oldest) =
+                self.entries.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&oldest);
+            }
+        }
+        self.stamp += 1;
+        self.entries.insert(key, Entry { plan, exec_sim: None, last_used: self.stamp });
+    }
+
+    /// Memoized batch-launch simulation makespan for `key`, if any.
+    pub fn cached_sim(&mut self, key: &PlanKey) -> Option<f64> {
+        if !self.enabled {
+            return None;
+        }
+        self.entries.get(key).and_then(|e| e.exec_sim)
+    }
+
+    /// Attach the batch-launch simulation makespan to an existing entry.
+    pub fn store_sim(&mut self, key: &PlanKey, makespan: f64) {
+        if let Some(e) = self.entries.get_mut(key) {
+            e.exec_sim = Some(makespan);
+        }
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new(DEFAULT_PLAN_CACHE_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::{a100_node, l40_cluster};
+    use crate::config::model::ModelSpec;
+    use crate::coordinator::planner::Planner;
+
+    fn key(px: usize) -> PlanKey {
+        PlanKey {
+            model: "pixart".into(),
+            px,
+            steps: 20,
+            world: 8,
+            policy: RoutePolicy::CostModel,
+            fidelity: Fidelity::ClosedForm,
+            memory_cap_bits: None,
+            force_config: None,
+            force_method: None,
+        }
+    }
+
+    fn plan_for(px: usize) -> Plan {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        Planner::default().with_steps(20).plan(&m, px, &l40_cluster(1), 8)
+    }
+
+    #[test]
+    fn hit_returns_the_exact_inserted_plan() {
+        let mut c = PlanCache::default();
+        c.check_cluster(fingerprint(&l40_cluster(1)));
+        assert!(c.lookup(&key(2048)).is_none());
+        let cold = plan_for(2048);
+        c.insert(key(2048), cold.clone());
+        let hit = c.lookup(&key(2048)).expect("second lookup must hit");
+        // byte-identical: the memo is a clone of the cold computation
+        assert_eq!(hit.to_json().to_string(), cold.to_json().to_string());
+        assert_eq!(hit.describe(), cold.describe());
+        assert_eq!(c.counters(), (1, 1, 0));
+    }
+
+    #[test]
+    fn cluster_change_invalidates_everything() {
+        let mut c = PlanCache::default();
+        c.check_cluster(fingerprint(&l40_cluster(1)));
+        c.insert(key(1024), plan_for(1024));
+        assert!(c.lookup(&key(1024)).is_some());
+        // same cluster: no invalidation
+        assert!(!c.check_cluster(fingerprint(&l40_cluster(1))));
+        // different cluster: wiped
+        assert!(c.check_cluster(fingerprint(&a100_node())));
+        assert!(c.is_empty());
+        assert!(c.lookup(&key(1024)).is_none());
+        let (_, _, inv) = c.counters();
+        assert_eq!(inv, 1);
+    }
+
+    #[test]
+    fn distinct_clusters_fingerprint_differently() {
+        assert_ne!(fingerprint(&l40_cluster(1)), fingerprint(&a100_node()));
+        assert_ne!(fingerprint(&l40_cluster(1)), fingerprint(&l40_cluster(2)));
+        assert_eq!(fingerprint(&l40_cluster(1)), fingerprint(&l40_cluster(1)));
+    }
+
+    #[test]
+    fn capacity_evicts_least_recently_used() {
+        let mut c = PlanCache::new(2);
+        c.check_cluster(fingerprint(&l40_cluster(1)));
+        let p = plan_for(1024);
+        c.insert(key(256), p.clone());
+        c.insert(key(512), p.clone());
+        assert!(c.lookup(&key(256)).is_some()); // refresh 256
+        c.insert(key(1024), p.clone()); // evicts 512 (least recent)
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup(&key(512)).is_none());
+        assert!(c.lookup(&key(256)).is_some());
+        assert!(c.lookup(&key(1024)).is_some());
+    }
+
+    #[test]
+    fn disabled_cache_never_serves_or_counts() {
+        let mut c = PlanCache::default();
+        c.set_enabled(false);
+        c.check_cluster(fingerprint(&l40_cluster(1)));
+        c.insert(key(256), plan_for(1024));
+        assert!(c.lookup(&key(256)).is_none());
+        assert_eq!(c.counters(), (0, 0, 0));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn sim_figure_rides_alongside_the_plan() {
+        let mut c = PlanCache::default();
+        c.check_cluster(fingerprint(&l40_cluster(1)));
+        assert!(c.cached_sim(&key(2048)).is_none());
+        c.insert(key(2048), plan_for(2048));
+        assert!(c.cached_sim(&key(2048)).is_none());
+        c.store_sim(&key(2048), 1.25);
+        assert_eq!(c.cached_sim(&key(2048)), Some(1.25));
+    }
+}

@@ -41,7 +41,7 @@ use crate::util::json::Json;
 use crate::{Error, Result};
 
 /// How `route`/`Pipeline` pick the hybrid parallel configuration.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum RoutePolicy {
     /// Argmin of the analytic cost model over every valid config,
     /// memory-pruned (the default).
@@ -77,7 +77,7 @@ impl RoutePolicy {
 }
 
 /// Scoring fidelity of the auto-planner.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Fidelity {
     /// Closed-form step-time model only — the default, and what the
     /// golden-plan snapshot pins.
@@ -561,9 +561,16 @@ pub const GRID_WORLDS: [usize; 5] = [1, 2, 4, 8, 16];
 /// everything numeric is integral, keys are sorted, ordering follows
 /// [`paper_grid`] × [`GRID_WORLDS`].
 pub fn grid_report() -> String {
+    use crate::util::json::JsonWriter;
     let planner = Planner::default();
     let heuristic = Planner::default().with_policy(RoutePolicy::PaperHeuristic);
-    let mut lines = Vec::new();
+    // one preallocated output buffer + one reused cell writer: the
+    // canonical grid renders without a per-cell String (byte-identical to
+    // the old join-based emission — the golden snapshot pins it)
+    let mut out = String::with_capacity(16 << 10);
+    let mut writer = JsonWriter::with_capacity(512);
+    out.push_str("[\n");
+    let mut first = true;
     for (m, px, cluster) in paper_grid() {
         for world in GRID_WORLDS {
             if world > cluster.n_gpus {
@@ -581,10 +588,15 @@ pub fn grid_report() -> String {
                 "heuristic_us".into(),
                 Json::Num((base.predicted.total * 1e6).round()),
             );
-            lines.push(Json::Obj(cell).to_string());
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            out.push_str(writer.render(&Json::Obj(cell)));
         }
     }
-    format!("[\n{}\n]\n", lines.join(",\n"))
+    out.push_str("\n]\n");
+    out
 }
 
 #[cfg(test)]

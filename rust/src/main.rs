@@ -36,9 +36,14 @@ commands:
   serve     --gpus 8 --requests 16 --rate 0.5 --steps 4 --px 256
             --cluster l40x8 [--scheduler ddim|dpm|flow_match]
             [--capacity 64 --max-batch 4 --deadline-slack 10 --seed 0]
+            [--no-plan-cache] [--session-cache 8]
             (replays a deterministic Poisson trace through the
              continuous-batching scheduler; runs on the simulated
-             backend when artifacts are absent)
+             backend when artifacts are absent. Prints a steady-state
+             summary — plan-cache hit rate, sessions reused vs built —
+             after the serving report; --no-plan-cache disables the
+             routing memo for debugging, --session-cache 0 disables
+             warm-session reuse)
   route     --model pixart --cluster l40x16 --gpus 16 --px 2048
             [--policy cost|paper (default: cost)] [--memory-cap-gb 48]
             [--top-k 5] [--json]
@@ -194,6 +199,8 @@ fn serve(args: &Args) -> xdit::Result<()> {
         .world(args.usize_or("gpus", 8)?)
         .max_batch(args.usize_or("max-batch", 4)?)
         .queue_capacity(args.usize_or("capacity", 64)?)
+        .plan_cache(!args.bool("no-plan-cache"))
+        .session_cache_capacity(args.usize_or("session-cache", 8)?)
         .build()?;
 
     let mut trace = Trace::poisson(args.usize_or("seed", 0)? as u64, n, rate)
@@ -212,6 +219,7 @@ fn serve(args: &Args) -> xdit::Result<()> {
     let t0 = std::time::Instant::now();
     let report = pipe.serve_trace(&trace)?;
     println!("{}", report.summary());
+    println!("{}", report.metrics.steady_state());
     for rej in &report.rejected {
         println!("  {rej}");
     }
@@ -323,7 +331,7 @@ fn timeline_cmd(args: &Args) -> xdit::Result<()> {
         tl.strategy = name;
     }
     if args.bool("json") {
-        println!("{}", tl.to_json());
+        println!("{}", tl.to_canonical_string());
         return Ok(());
     }
     print!("{}", render(&tl, width));

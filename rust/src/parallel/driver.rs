@@ -20,7 +20,7 @@ use crate::util::rng::Rng;
 use crate::{Error, Result};
 
 /// Strategy selector.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
     Serial,
     Tp,

@@ -265,6 +265,17 @@ impl Timeline {
         o.insert("ranks".into(), Json::Arr(ranks));
         Json::Obj(o)
     }
+
+    /// [`to_json`](Timeline::to_json) rendered into one buffer presized
+    /// from the span count — the `timeline --json` export path, spared
+    /// the rendering reallocations of a growing `to_string()` (bytes are
+    /// identical; the schema test pins both).
+    pub fn to_canonical_string(&self) -> String {
+        let spans: usize = self.ranks.iter().map(|r| r.spans.len()).sum();
+        let mut buf = String::with_capacity(512 + 96 * spans);
+        self.to_json().write_to(&mut buf);
+        buf
+    }
 }
 
 /// The event core: per-rank clocks + span recording. Lowering code in
@@ -458,6 +469,8 @@ mod tests {
         let parsed = Json::parse(&tl.to_json().to_string()).unwrap();
         assert_eq!(parsed.get("world").unwrap().as_usize().unwrap(), 2);
         assert_eq!(parsed.get("ranks").unwrap().as_arr().unwrap().len(), 2);
+        // the presized export path emits the identical bytes
+        assert_eq!(tl.to_canonical_string(), tl.to_json().to_string());
     }
 
     #[test]

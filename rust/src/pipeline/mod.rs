@@ -45,7 +45,9 @@
 use crate::config::hardware::{l40_cluster, ClusterSpec};
 use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
-use crate::coordinator::engine::{Engine, Rejection, DEFAULT_QUEUE_CAPACITY};
+use crate::coordinator::engine::{
+    Engine, Rejection, DEFAULT_QUEUE_CAPACITY, DEFAULT_SESSION_CACHE_CAPACITY,
+};
 use crate::coordinator::planner::{Fidelity, Plan, Planner, RoutePolicy};
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::trace::Trace;
@@ -133,6 +135,8 @@ pub struct PipelineBuilder<'a> {
     max_batch: usize,
     queue_capacity: usize,
     aging_rate: f64,
+    plan_cache: bool,
+    session_cache_capacity: usize,
 }
 
 impl<'a> Default for PipelineBuilder<'a> {
@@ -151,6 +155,8 @@ impl<'a> Default for PipelineBuilder<'a> {
             max_batch: 4,
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             aging_rate: 1.0,
+            plan_cache: true,
+            session_cache_capacity: DEFAULT_SESSION_CACHE_CAPACITY,
         }
     }
 }
@@ -245,6 +251,27 @@ impl<'a> PipelineBuilder<'a> {
     /// (default 1.0; 0 = strict priorities, starvation possible).
     pub fn aging_rate(mut self, rate: f64) -> Self {
         self.aging_rate = rate.max(0.0);
+        self
+    }
+
+    /// Enable/disable routing-plan memoization (default on). Off, every
+    /// batch re-runs the cold enumerate + score sweep — results are
+    /// bit-identical either way (the cache is a pure memo; see
+    /// `Metrics::plan_cache_hits`), so this is a debugging escape hatch
+    /// (`serve --no-plan-cache` on the CLI).
+    pub fn plan_cache(mut self, enabled: bool) -> Self {
+        self.plan_cache = enabled;
+        self
+    }
+
+    /// Bound the engine's warm-session cache (default
+    /// [`DEFAULT_SESSION_CACHE_CAPACITY`]; 0 disables reuse so every
+    /// batch builds its session cold — see `Metrics::sessions_reused`).
+    ///
+    /// [`DEFAULT_SESSION_CACHE_CAPACITY`]:
+    /// crate::coordinator::engine::DEFAULT_SESSION_CACHE_CAPACITY
+    pub fn session_cache_capacity(mut self, capacity: usize) -> Self {
+        self.session_cache_capacity = capacity;
         self
     }
 
@@ -359,6 +386,8 @@ impl<'a> PipelineBuilder<'a> {
         engine.deadline_admission = self.deadline_admission;
         engine.force_method = self.method;
         engine.default_scheduler = self.scheduler;
+        engine.set_plan_cache_enabled(self.plan_cache);
+        engine.set_session_cache_capacity(self.session_cache_capacity);
         Ok(Pipeline { engine, policy: self.parallel })
     }
 }

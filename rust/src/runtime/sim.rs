@@ -239,7 +239,11 @@ fn mix64(mut z: u64) -> u64 {
 
 /// Deterministic pseudo-activations in (-0.9, 0.9): a 1024-value tile
 /// seeded per call, cycled over the output. Cheap enough that a 64-request
-/// trace replays in seconds in a debug test build.
+/// trace replays in seconds in a debug test build. The output buffer comes
+/// from the thread-local [`crate::tensor::pool`], so at steady state the
+/// backend recycles the previous step's dead activations instead of
+/// allocating fresh ones per call (values are unaffected: the buffer is
+/// fully overwritten).
 fn fill(seed: u64, n: usize) -> Vec<f32> {
     const TILE: usize = 1024;
     let mut tile = [0f32; TILE];
@@ -247,7 +251,9 @@ fn fill(seed: u64, n: usize) -> Vec<f32> {
         let u = (mix64(seed ^ i as u64) >> 11) as f64 / (1u64 << 53) as f64;
         *v = (u * 1.8 - 0.9) as f32;
     }
-    (0..n).map(|i| tile[i % TILE]).collect()
+    let mut out = crate::tensor::pool::take(n);
+    out.extend((0..n).map(|i| tile[i % TILE]));
+    out
 }
 
 /// Synthesized tiny-family artifacts for

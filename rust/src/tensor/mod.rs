@@ -2,14 +2,38 @@
 //! and KV buffers. Deliberately small: the heavy math lives in the AOT HLO
 //! executables; the coordinator only splits, scatters, concatenates and
 //! does elementwise scheduler updates.
+//!
+//! Allocation goes through the thread-local [`pool`]: constructors and
+//! elementwise ops take recycled buffers, and `Drop` returns a tensor's
+//! backing storage to the pool — so the steady-state serving loop, whose
+//! activation shapes repeat batch after batch, stops paying the allocator
+//! per call. Values are unaffected: pooled buffers are handed out empty
+//! and fully overwritten (see the pool's correctness contract).
+
+/// Recycling f32 buffer pool behind every tensor allocation.
+pub mod pool;
 
 use crate::{Error, Result};
 
 /// Dense row-major f32 tensor.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct Tensor {
     pub dims: Vec<usize>,
     pub data: Vec<f32>,
+}
+
+impl Clone for Tensor {
+    fn clone(&self) -> Tensor {
+        let mut data = pool::take(self.data.len());
+        data.extend_from_slice(&self.data);
+        Tensor { dims: self.dims.clone(), data }
+    }
+}
+
+impl Drop for Tensor {
+    fn drop(&mut self) {
+        pool::recycle(std::mem::take(&mut self.data));
+    }
 }
 
 impl Tensor {
@@ -28,7 +52,9 @@ impl Tensor {
 
     pub fn zeros(dims: &[usize]) -> Tensor {
         let n = dims.iter().product();
-        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+        let mut data = pool::take(n);
+        data.resize(n, 0.0);
+        Tensor { dims: dims.to_vec(), data }
     }
 
     pub fn scalar(v: f32) -> Tensor {
@@ -37,12 +63,16 @@ impl Tensor {
 
     pub fn from_fn(dims: &[usize], f: impl FnMut(usize) -> f32) -> Tensor {
         let n: usize = dims.iter().product();
-        Tensor { dims: dims.to_vec(), data: (0..n).map(f).collect() }
+        let mut data = pool::take(n);
+        data.extend((0..n).map(f));
+        Tensor { dims: dims.to_vec(), data }
     }
 
     pub fn randn(dims: &[usize], rng: &mut crate::util::rng::Rng) -> Tensor {
         let n: usize = dims.iter().product();
-        Tensor { dims: dims.to_vec(), data: rng.normal_vec(n) }
+        let mut data = pool::take(n);
+        data.extend((0..n).map(|_| rng.normal()));
+        Tensor { dims: dims.to_vec(), data }
     }
 
     pub fn len(&self) -> usize {
@@ -82,7 +112,9 @@ impl Tensor {
         let rl = self.row_len();
         let mut dims = self.dims.clone();
         dims[0] = hi - lo;
-        Ok(Tensor { dims, data: self.data[lo * rl..hi * rl].to_vec() })
+        let mut data = pool::take((hi - lo) * rl);
+        data.extend_from_slice(&self.data[lo * rl..hi * rl]);
+        Ok(Tensor { dims, data })
     }
 
     /// Overwrite rows [at, at+src.rows()) with `src` (shape-checked).
@@ -125,13 +157,15 @@ impl Tensor {
         let first = parts.first().ok_or_else(|| Error::shape("concat of nothing"))?;
         let rl = first.row_len();
         let mut dims = first.dims.clone();
-        let mut data = Vec::new();
         let mut rows = 0;
         for p in parts {
             if p.row_len() != rl {
                 return Err(Error::shape("concat_rows: row_len mismatch"));
             }
             rows += p.rows();
+        }
+        let mut data = pool::take(rows * rl);
+        for p in parts {
             data.extend_from_slice(&p.data);
         }
         dims[0] = rows;
@@ -147,13 +181,17 @@ impl Tensor {
                 self.dims, dims
             )));
         }
-        Ok(Tensor { dims: dims.to_vec(), data: self.data.clone() })
+        let mut data = pool::take(n);
+        data.extend_from_slice(&self.data);
+        Ok(Tensor { dims: dims.to_vec(), data })
     }
 
     // ---- elementwise ops used by the diffusion schedulers ----------------
 
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
-        Tensor { dims: self.dims.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+        let mut data = pool::take(self.data.len());
+        data.extend(self.data.iter().map(|&x| f(x)));
+        Tensor { dims: self.dims.clone(), data }
     }
 
     pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
@@ -163,10 +201,9 @@ impl Tensor {
                 self.dims, other.dims
             )));
         }
-        Ok(Tensor {
-            dims: self.dims.clone(),
-            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
-        })
+        let mut data = pool::take(self.data.len());
+        data.extend(self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)));
+        Ok(Tensor { dims: self.dims.clone(), data })
     }
 
     pub fn add(&self, other: &Tensor) -> Result<Tensor> {

@@ -1,0 +1,216 @@
+//! Thread-local f32 buffer pool behind every [`Tensor`] allocation.
+//!
+//! The serving hot path churns through short-lived activation tensors:
+//! every `SimBackend` execution materializes fresh output buffers, every
+//! scheduler step and elementwise op allocates a result, and the previous
+//! step's tensors die immediately after. A steady-state trace therefore
+//! spends a measurable slice of its wall time inside the allocator — for
+//! buffers whose sizes repeat exactly batch after batch.
+//!
+//! The pool closes that loop: [`take`] hands out a cleared `Vec<f32>`
+//! with enough capacity (recycled when one is available, freshly
+//! allocated otherwise) and every dropped [`Tensor`] returns its backing
+//! buffer via [`recycle`]. Small buffers (< [`MIN_POOLED`] elements) are
+//! not worth the bookkeeping and bypass the pool; the free list is
+//! bounded by [`MAX_BUFFERS`] / [`MAX_POOLED_BYTES`] so the pool's
+//! footprint tracks the live working set, not the all-time high-water
+//! mark.
+//!
+//! Correctness contract: a pooled buffer is returned *empty* (`len == 0`)
+//! and the caller fully writes it before wrapping it in a `Tensor`, so
+//! recycling can never leak one computation's values into another —
+//! results are bit-identical with the pool on or off. [`stats`] exposes
+//! hit/miss/byte counters; `benches/steady_state.rs` reports them as the
+//! allocation proxy of the committed `BENCH_serve.json` trajectory.
+//!
+//! Thread-local by design: the engine is leader-threaded (see
+//! `coordinator`), so no locks are needed and tests that run on parallel
+//! test threads each see an isolated pool.
+//!
+//! [`Tensor`]: crate::tensor::Tensor
+
+use std::cell::RefCell;
+
+/// Buffers smaller than this many elements (4 KiB of f32) skip the pool.
+pub const MIN_POOLED: usize = 1024;
+
+/// Most buffers the free list retains.
+pub const MAX_BUFFERS: usize = 64;
+
+/// Byte bound on the free list (64 MiB): beyond it, returned buffers are
+/// simply dropped.
+pub const MAX_POOLED_BYTES: usize = 64 << 20;
+
+/// Cumulative pool counters (one set per thread), for the steady-state
+/// bench's allocation proxy and the serve CLI summary.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take` calls served from the free list.
+    pub hits: u64,
+    /// `take` calls that had to allocate fresh.
+    pub misses: u64,
+    /// Buffers accepted back by `recycle`.
+    pub recycled: u64,
+    /// Bytes of fresh heap allocation (4 × requested elements per miss).
+    pub fresh_bytes: u64,
+    /// Bytes served out of the free list instead of the allocator.
+    pub reused_bytes: u64,
+}
+
+impl PoolStats {
+    /// Fraction of `take` calls served from the pool (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct Pool {
+    free: Vec<Vec<f32>>,
+    free_bytes: usize,
+    stats: PoolStats,
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+}
+
+/// An empty `Vec<f32>` with capacity for at least `n` elements — recycled
+/// when the free list has a fit, freshly allocated otherwise. The caller
+/// must fill it completely before exposing it (see the module docs).
+/// (`try_with`: during thread teardown the pool may already be gone — a
+/// fresh allocation is always a correct fallback.)
+pub fn take(n: usize) -> Vec<f32> {
+    POOL.try_with(|p| {
+        let mut pool = p.borrow_mut();
+        if n >= MIN_POOLED {
+            // best-of-first-fit: a buffer big enough but not absurdly
+            // oversized, so one giant decode buffer is not burned on a
+            // small activation request
+            let found = pool
+                .free
+                .iter()
+                .position(|v| v.capacity() >= n && v.capacity() <= n.saturating_mul(4));
+            if let Some(i) = found {
+                let v = pool.free.swap_remove(i);
+                pool.free_bytes -= v.capacity() * 4;
+                pool.stats.hits += 1;
+                pool.stats.reused_bytes += (n * 4) as u64;
+                debug_assert!(v.is_empty());
+                return v;
+            }
+        }
+        pool.stats.misses += 1;
+        pool.stats.fresh_bytes += (n * 4) as u64;
+        Vec::with_capacity(n)
+    })
+    .unwrap_or_else(|_| Vec::with_capacity(n))
+}
+
+/// Return a dead buffer to the free list (dropped instead when it is too
+/// small to pool or the list is at its bound). Called by `Tensor::drop` —
+/// `try_with` keeps drops during thread teardown (pool already gone)
+/// panic-free: the buffer simply returns to the allocator.
+pub fn recycle(mut v: Vec<f32>) {
+    let cap = v.capacity();
+    if cap < MIN_POOLED {
+        return;
+    }
+    let _ = POOL.try_with(|p| {
+        let mut pool = p.borrow_mut();
+        if pool.free.len() >= MAX_BUFFERS || pool.free_bytes + cap * 4 > MAX_POOLED_BYTES {
+            return; // bound the pool: excess buffers go back to the allocator
+        }
+        v.clear();
+        pool.free_bytes += cap * 4;
+        pool.stats.recycled += 1;
+        pool.free.push(std::mem::take(&mut v));
+    });
+}
+
+/// Snapshot of this thread's cumulative pool counters.
+pub fn stats() -> PoolStats {
+    POOL.with(|p| p.borrow().stats)
+}
+
+/// Drop every pooled buffer and zero the counters (bench isolation).
+pub fn reset() {
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        pool.free.clear();
+        pool.free_bytes = 0;
+        pool.stats = PoolStats::default();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_roundtrip_reuses_capacity() {
+        reset();
+        let a = take(4096);
+        assert!(a.capacity() >= 4096 && a.is_empty());
+        recycle(a);
+        let s = stats();
+        assert_eq!((s.misses, s.recycled), (1, 1));
+        let b = take(4096);
+        assert!(b.capacity() >= 4096 && b.is_empty());
+        assert_eq!(stats().hits, 1, "second take of the same size must hit");
+        reset();
+    }
+
+    #[test]
+    fn tiny_buffers_bypass_the_pool() {
+        reset();
+        recycle(Vec::with_capacity(8));
+        assert_eq!(stats().recycled, 0);
+        let v = take(16);
+        assert!(v.capacity() >= 16);
+        assert_eq!(stats().hits, 0);
+        reset();
+    }
+
+    #[test]
+    fn oversized_buffers_are_not_burned_on_small_requests() {
+        reset();
+        recycle(Vec::with_capacity(1 << 20)); // 4 MiB buffer
+        let v = take(MIN_POOLED); // 4 KiB ask: >4x smaller, must not bind it
+        assert!(v.capacity() < 1 << 20);
+        assert_eq!(stats().hits, 0);
+        reset();
+    }
+
+    #[test]
+    fn free_list_is_bounded() {
+        reset();
+        for _ in 0..(MAX_BUFFERS + 8) {
+            recycle(Vec::with_capacity(MIN_POOLED));
+        }
+        assert_eq!(stats().recycled as usize, MAX_BUFFERS);
+        reset();
+    }
+
+    #[test]
+    fn pooled_tensors_are_bit_identical_to_fresh_ones() {
+        use crate::tensor::Tensor;
+        reset();
+        let mk = || Tensor::from_fn(&[64, 64], |i| (i as f32).sin());
+        let cold = mk();
+        // cycle buffers through the pool a few times: values never leak
+        for _ in 0..4 {
+            let warm = mk();
+            assert_eq!(cold, warm);
+            let mapped = warm.map(|x| x * 2.0);
+            assert_eq!(mapped.data[1], cold.data[1] * 2.0);
+        }
+        assert!(stats().hits > 0, "the cycle must actually exercise the pool");
+        reset();
+    }
+}

@@ -90,6 +90,15 @@ impl Json {
         self.as_arr()?.iter().map(|x| x.as_usize()).collect()
     }
 
+    /// Append this value's canonical serialization (stable key order,
+    /// compact — identical bytes to `to_string()`) to `out`. The reusable
+    /// entry point behind [`JsonWriter`] for the canonical-JSON hot paths
+    /// (golden plan grid, timeline span export, bench snapshots): one
+    /// preallocated buffer instead of a fresh `String` per value.
+    pub fn write_to(&self, out: &mut String) {
+        self.write(out);
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -151,6 +160,36 @@ impl std::fmt::Display for Json {
         let mut s = String::new();
         self.write(&mut s);
         f.write_str(&s)
+    }
+}
+
+/// Reusable canonical-JSON writer: one growable buffer serialized into
+/// over and over, instead of a fresh `String` (and its reallocations) per
+/// `to_string()` call. Byte-compatible with `Display` — the golden plan
+/// grid is emitted through this writer and stays byte-identical.
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    buf: String,
+}
+
+impl JsonWriter {
+    /// A writer with an empty buffer.
+    pub fn new() -> JsonWriter {
+        JsonWriter::default()
+    }
+
+    /// A writer whose buffer starts at `capacity` bytes (sized for the
+    /// document it will render, e.g. one grid cell line).
+    pub fn with_capacity(capacity: usize) -> JsonWriter {
+        JsonWriter { buf: String::with_capacity(capacity) }
+    }
+
+    /// Serialize `value` into the reused buffer and return the rendered
+    /// canonical text (valid until the next call).
+    pub fn render(&mut self, value: &Json) -> &str {
+        self.buf.clear();
+        value.write_to(&mut self.buf);
+        &self.buf
     }
 }
 
@@ -378,5 +417,16 @@ mod tests {
     fn usize_arr() {
         let j = Json::parse("[2, 256, 192]").unwrap();
         assert_eq!(j.usize_arr().unwrap(), vec![2, 256, 192]);
+    }
+
+    #[test]
+    fn writer_matches_display_byte_for_byte() {
+        let src = r#"{"a":[1,2.5,"x"],"b":{"c":true,"d":null},"e":"q\"uote\n"}"#;
+        let j = Json::parse(src).unwrap();
+        let mut w = JsonWriter::with_capacity(16);
+        assert_eq!(w.render(&j), j.to_string());
+        // the buffer is reused across renders, not appended to
+        assert_eq!(w.render(&Json::Num(7.0)), "7");
+        assert_eq!(w.render(&j), j.to_string());
     }
 }

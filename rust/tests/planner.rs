@@ -186,6 +186,33 @@ fn committed_golden_snapshot_parses_and_matches_grid_shape() {
 }
 
 #[test]
+fn grid_report_is_unchanged_by_the_plan_cache() {
+    use xdit::coordinator::Engine;
+    use xdit::runtime::Runtime;
+    // the cache must be a pure memoization, not a behavior change: the
+    // canonical golden grid is byte-identical before, while, and after a
+    // cache-fronted engine plans the same cells — and each engine-cached
+    // cell matches the cold planner that grid_report uses
+    let before = grid_report();
+    let rt = Runtime::simulated();
+    for (m, px, cluster) in paper_grid() {
+        for world in GRID_WORLDS {
+            if world > cluster.n_gpus {
+                continue;
+            }
+            let eng = Engine::new(&rt, cluster.clone(), world);
+            let first = eng.plan_for(&m, px, m.default_steps);
+            let cached = eng.plan_for(&m, px, m.default_steps);
+            let cold = Planner::default().plan(&m, px, &cluster, world);
+            assert_eq!(cached.to_json().to_string(), cold.to_json().to_string());
+            assert_eq!(first.to_json().to_string(), cold.to_json().to_string());
+        }
+    }
+    let after = grid_report();
+    assert_eq!(before, after, "grid_report must not be affected by engine caches");
+}
+
+#[test]
 #[ignore = "byte-exact golden diff; CI runs it via `route --grid` (see ci.yml). \
             Regenerate with: cargo run --release -- route --grid > rust/testdata/plans.golden.json"]
 fn golden_snapshot_is_byte_exact() {

@@ -220,7 +220,14 @@ fn mixed_workload_serves_all_groups_with_shared_sessions() {
         .collect();
     let report = pipe.serve_trace(&Trace::new(reqs)).unwrap();
     assert_eq!(report.responses.len(), 8);
-    assert_eq!(report.metrics.sessions_built, report.metrics.batches);
+    // one session per batch — built cold or recycled warm (the two
+    // groups share a session iff the planner routes both step counts to
+    // the same config)
+    assert_eq!(
+        report.metrics.sessions_built + report.metrics.sessions_reused,
+        report.metrics.batches
+    );
+    assert!(report.metrics.sessions_built >= 1);
     // two incompatible groups of 4 with max_batch 4 -> exactly 2 batches
     assert_eq!(report.metrics.batches, 2);
     assert_eq!(report.metrics.occupancy_max, 4);
@@ -238,6 +245,101 @@ fn deadlines_are_tracked_through_the_facade() {
         .build();
     let report = pipe.serve_trace(&trace).unwrap();
     assert_eq!(report.metrics.deadline_misses, report.responses.len() as u64);
+}
+
+#[test]
+fn warm_session_replay_is_bit_identical_to_cold_build() {
+    // the steady-state caches change cost, never answers: replaying the
+    // 64-request Poisson trace with warm sessions + plan memoization must
+    // be bit-identical to the fully cold path (fresh session and cold
+    // planning sweep every batch)
+    let trace = poisson_64();
+    let serve = |plan_cache: bool, session_cap: usize| {
+        let rt = Runtime::simulated();
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(4)
+            .max_batch(4)
+            .plan_cache(plan_cache)
+            .session_cache_capacity(session_cap)
+            .build()
+            .unwrap();
+        pipe.serve_trace(&trace).unwrap()
+    };
+    let warm = serve(true, 8);
+    let cold = serve(false, 0);
+
+    // the warm run actually exercised the caches...
+    assert!(warm.metrics.sessions_reused > 0, "no session was ever reused");
+    assert!(warm.metrics.plan_cache_hits > warm.metrics.plan_cache_misses);
+    assert!(
+        warm.metrics.sessions_built < warm.metrics.batches,
+        "sessions_built must stop scaling with batch count for repeat shapes"
+    );
+    // ...and the cold run did not
+    assert_eq!(cold.metrics.sessions_reused, 0);
+    assert_eq!(cold.metrics.plan_cache_hits, 0);
+    assert_eq!(cold.metrics.sessions_built, cold.metrics.batches);
+
+    // bit-identical service: responses, ordering, latents, timings
+    assert_eq!(warm.responses.len(), cold.responses.len());
+    assert_eq!(warm.rejected.len(), cold.rejected.len());
+    assert_eq!(warm.makespan, cold.makespan);
+    for (w, c) in warm.responses.iter().zip(&cold.responses) {
+        assert_eq!(w.id, c.id, "completion order must not depend on the caches");
+        assert_eq!(w.latent, c.latent, "latents must replay bit-identically");
+        assert_eq!(w.latency, c.latency);
+        assert_eq!(w.model_seconds, c.model_seconds);
+        assert_eq!(w.comm_bytes, c.comm_bytes);
+        assert_eq!(w.parallel_config, c.parallel_config);
+        assert_eq!(w.predicted_seconds, c.predicted_seconds);
+        assert_eq!(w.simulated_seconds, c.simulated_seconds);
+        assert_eq!(w.scheduler, c.scheduler);
+    }
+    assert_eq!(checksum(&warm), checksum(&cold));
+}
+
+#[test]
+fn plan_cache_hits_are_byte_identical_to_cold_plans_across_the_grid() {
+    use xdit::coordinator::planner::{paper_grid, GRID_WORLDS};
+    use xdit::coordinator::Engine;
+    use xdit::Planner;
+    // across the figs 8-17 grid: the engine's memoized plan (second call
+    // = guaranteed hit) must serialize byte-identically to a cold
+    // Planner sweep with the same knobs — memoization, not behavior
+    let rt = Runtime::simulated();
+    let mut cells = 0;
+    for (m, px, cluster) in paper_grid() {
+        for world in GRID_WORLDS {
+            if world > cluster.n_gpus {
+                continue;
+            }
+            let steps = m.default_steps;
+            let eng = Engine::new(&rt, cluster.clone(), world);
+            let cold_engine = eng.plan_for(&m, px, steps); // miss: fills the memo
+            let hit = eng.plan_for(&m, px, steps); // guaranteed hit
+            let oracle = Planner::default().with_steps(steps).plan(&m, px, &cluster, world);
+            let hit_json = hit.to_json().to_string();
+            assert_eq!(
+                hit_json,
+                cold_engine.to_json().to_string(),
+                "{} {} w={world}: hit differs from the miss that filled it",
+                m.name,
+                cluster.name
+            );
+            assert_eq!(
+                hit_json,
+                oracle.to_json().to_string(),
+                "{} {} w={world}: cached plan differs from a cold Planner",
+                m.name,
+                cluster.name
+            );
+            assert_eq!(hit.describe(), oracle.describe());
+            cells += 1;
+        }
+    }
+    assert_eq!(cells, 35, "the full grid must be covered");
 }
 
 #[test]
