@@ -1,0 +1,133 @@
+//! Fleet bench — Data Parallel scaling, 100k-trace determinism, and the
+//! frontier crossover on the paper's 2×8×L40 two-tier cluster.
+//!
+//! Three gates, asserted here and re-run by CI's bench-smoke job:
+//! * **DP scaling**: a saturating trace served by 2 single-node replicas
+//!   (l40x16 carved in half) must yield ≥ 1.8× the throughput of one
+//!   identical single-node engine — Data Parallel moves no bytes between
+//!   replicas, so capacity scales ~linearly;
+//! * **determinism at scale**: a 100k-request Poisson trace replayed
+//!   twice through a fresh 2-replica fleet (power-of-two dispatch, so the
+//!   seeded sampler is on the path) produces identical digests;
+//! * **frontier crossover**: on l40x16 the fleet planner must pick the
+//!   deep 16-GPU hybrid at low arrival rates and >1 replicas near
+//!   saturation, each with a "why" citing the Ethernet-priced tier.
+//!
+//! ```sh
+//! cargo bench --bench fleet
+//! ```
+
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::ModelSpec;
+use xdit::coordinator::Trace;
+use xdit::fleet::{frontier, DispatchPolicy};
+use xdit::pipeline::Pipeline;
+use xdit::runtime::Runtime;
+use xdit::Planner;
+
+/// Requests in the saturating DP-scaling trace.
+const REQUESTS: usize = 96;
+/// Arrival rate that saturates both fleets (throughput = capacity).
+const SATURATING_RATE: f64 = 1e3;
+/// Trace seed (every run is a pure function of it).
+const SEED: u64 = 0xF1EE7;
+/// The DP-scaling acceptance bound (1 -> 2 replicas).
+const MIN_DP_SCALING: f64 = 1.8;
+/// Requests in the determinism trace (the ≥100k acceptance gate).
+const BIG_REQUESTS: usize = 100_000;
+/// Arrival rate of the determinism trace (requests per virtual second).
+const BIG_RATE: f64 = 32.0;
+
+fn main() {
+    let rt = Runtime::simulated();
+
+    // --- DP throughput scaling: 1 vs 2 identical single-node replicas ----
+    let trace = Trace::poisson(SEED, REQUESTS, SATURATING_RATE).steps(1).guidance(1.0).build();
+    let solo = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(8)
+        .replicas(1)
+        .queue_capacity(REQUESTS)
+        .build()
+        .expect("single-node pipeline builds");
+    let duo = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(2))
+        .world(16)
+        .replicas(2)
+        .dispatcher(DispatchPolicy::RoundRobin)
+        .queue_capacity(REQUESTS)
+        .build()
+        .expect("two-node fleet pipeline builds");
+    let r1 = solo.serve_fleet(&trace).expect("solo replay");
+    let r2 = duo.serve_fleet(&trace).expect("duo replay");
+    assert_eq!(r1.served, REQUESTS as u64, "solo must serve everything");
+    assert_eq!(r2.served, REQUESTS as u64, "duo must serve everything");
+    let scaling = r2.throughput() / r1.throughput().max(1e-12);
+    assert!(
+        scaling >= MIN_DP_SCALING,
+        "DP scaling regression: 2 replicas give {:.2} img/s vs {:.2} img/s solo — only \
+         {scaling:.2}x (bound {MIN_DP_SCALING}x)",
+        r2.throughput(),
+        r1.throughput()
+    );
+    println!(
+        "dp-scaling: 1x8 {:.2} img/s -> 2x8 {:.2} img/s = {scaling:.2}x (bound \
+         {MIN_DP_SCALING}x) — PASS",
+        r1.throughput(),
+        r2.throughput()
+    );
+
+    // --- determinism at scale: 100k requests, two fresh replays ----------
+    let big = Trace::poisson(SEED, BIG_REQUESTS, BIG_RATE).steps(1).guidance(1.0).build();
+    let fleet = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(2))
+        .world(16)
+        .replicas(2)
+        .dispatcher(DispatchPolicy::PowerOfTwo { seed: SEED })
+        .max_batch(8)
+        .queue_capacity(256)
+        .build()
+        .expect("two-tier fleet pipeline builds");
+    let t0 = std::time::Instant::now();
+    let first = fleet.serve_fleet(&big).expect("first 100k replay");
+    let second = fleet.serve_fleet(&big).expect("second 100k replay");
+    assert_eq!(first.digest, second.digest, "100k-request replay must be deterministic");
+    assert_eq!(first.served, second.served);
+    assert_eq!(first.submitted, BIG_REQUESTS);
+    println!(
+        "determinism: {} requests x2 replays in {:?}, served {} | digest {:016x} — PASS",
+        BIG_REQUESTS,
+        t0.elapsed(),
+        first.served,
+        first.digest
+    );
+
+    // --- frontier crossover on the paper's 2x8xL40 two-tier cluster ------
+    let m = ModelSpec::by_name("pixart").expect("paper model");
+    let f = frontier(&Planner::default(), &m, 2048, &l40_cluster(2), &[0.05, 0.62])
+        .expect("frontier sweep");
+    let low = &f.rates[0];
+    let high = &f.rates[1];
+    assert_eq!(
+        f.cells[low.best].replicas, 1,
+        "at 0.05 img/s the deep full-cluster hybrid must win:\n{}",
+        f.table()
+    );
+    assert!(
+        f.cells[high.best].replicas > 1,
+        "near saturation more replicas must win:\n{}",
+        f.table()
+    );
+    for p in [low, high] {
+        assert!(
+            p.why.contains("Ethernet") && p.why.contains("GB/s"),
+            "the why must cite the tier-priced comm cost: {}",
+            p.why
+        );
+    }
+    print!("{}", f.table());
+    println!("frontier crossover: deep hybrid at 0.05 img/s, replicas at 0.62 img/s — PASS");
+}

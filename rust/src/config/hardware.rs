@@ -5,7 +5,16 @@
 //! * `l40_cluster(n_nodes)` — nodes of 8×L40-48GB on PCIe Gen4 x16 (two
 //!   4-GPU groups bridged by the CPU QPI), nodes connected by 100 Gbps
 //!   Ethernet;
-//! * `a100_node()` — 8×A100-80GB, full NVLink (600 GB/s any-to-any).
+//! * `a100_node()` / `a100_cluster(n_nodes)` — nodes of 8×A100-80GB with
+//!   full NVLink (600 GB/s any-to-any), Ethernet between nodes.
+//!
+//! A spec is **two-tier**: the per-kind `bw`/`lat` link model prices the
+//! intra-node tier (NVLink / PCIe / PCIe-QPI), while the explicit
+//! [`InterNodeLink`] prices every cross-node hop ([`LinkKind::Ethernet`]).
+//! Single-node specs are the degenerate case — their `inter_node` field is
+//! never consulted because no device pair crosses a node. The fleet layer
+//! carves a multi-node spec into per-replica slices with
+//! [`ClusterSpec::carve`].
 
 use crate::{Error, Result};
 
@@ -34,6 +43,24 @@ pub enum LinkKind {
     Ethernet,
 }
 
+/// The inter-node tier of a two-tier cluster: what every cross-node hop
+/// costs. Defaults to the paper's 100 Gbps Ethernet (10 GB/s effective,
+/// 50 µs per message), which is exactly what the single-tier link models
+/// priced before the tier split — so existing specs behave identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InterNodeLink {
+    /// Unidirectional bandwidth in bytes/s of one node's NIC.
+    pub bw: f64,
+    /// Per-message latency in seconds.
+    pub lat: f64,
+}
+
+impl Default for InterNodeLink {
+    fn default() -> Self {
+        InterNodeLink { bw: 10e9, lat: 50e-6 }
+    }
+}
+
 /// One homogeneous simulated cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
@@ -44,11 +71,16 @@ pub struct ClusterSpec {
     /// GPUs per PCIe root complex (QPI boundary); == gpus_per_node when the
     /// node has a single switch (NVLink systems).
     pub gpus_per_numa: usize,
-    /// Unidirectional bandwidth in bytes/s per link kind.
+    /// Unidirectional bandwidth in bytes/s per link kind — the intra-node
+    /// tier. The `Ethernet` arm is superseded by `inter_node` (kept so the
+    /// function stays total).
     pub bw: fn(LinkKind) -> f64,
-    /// Per-message latency in seconds per link kind.
+    /// Per-message latency in seconds per link kind (intra-node tier; the
+    /// `Ethernet` arm is superseded by `inter_node`).
     pub lat: fn(LinkKind) -> f64,
     pub has_nvlink: bool,
+    /// The inter-node tier: bandwidth/latency of every cross-node hop.
+    pub inter_node: InterNodeLink,
 }
 
 impl ClusterSpec {
@@ -58,6 +90,35 @@ impl ClusterSpec {
 
     pub fn numa_of(&self, dev: usize) -> usize {
         dev / self.gpus_per_numa
+    }
+
+    /// Number of nodes in the cluster (the outer tier's extent).
+    pub fn n_nodes(&self) -> usize {
+        self.n_gpus.div_ceil(self.gpus_per_node)
+    }
+
+    /// Replace the inter-node tier (e.g. model a faster RoCE fabric).
+    pub fn with_inter_node(mut self, inter_node: InterNodeLink) -> ClusterSpec {
+        self.inter_node = inter_node;
+        self
+    }
+
+    /// Tier-aware bandwidth for a link kind: cross-node hops are priced by
+    /// the `inter_node` tier, everything else by the intra-node link model.
+    pub fn link_bw(&self, k: LinkKind) -> f64 {
+        match k {
+            LinkKind::Ethernet => self.inter_node.bw,
+            _ => (self.bw)(k),
+        }
+    }
+
+    /// Tier-aware per-message latency for a link kind (see
+    /// [`link_bw`](ClusterSpec::link_bw)).
+    pub fn link_lat(&self, k: LinkKind) -> f64 {
+        match k {
+            LinkKind::Ethernet => self.inter_node.lat,
+            _ => (self.lat)(k),
+        }
     }
 
     /// Link class between two devices.
@@ -79,7 +140,7 @@ impl ClusterSpec {
             return 0.0;
         }
         let k = self.link(a, b);
-        (self.lat)(k) + bytes / (self.bw)(k)
+        self.link_lat(k) + bytes / self.link_bw(k)
     }
 
     /// The slowest link class inside a device group (collectives are
@@ -111,7 +172,7 @@ impl ClusterSpec {
             return 0.0;
         }
         let k = self.worst_link(group);
-        let mut bw = (self.bw)(k);
+        let mut bw = self.link_bw(k);
         if k == LinkKind::Ethernet {
             // ranks per node sharing the NIC
             let mut per_node = std::collections::BTreeMap::new();
@@ -122,18 +183,69 @@ impl ClusterSpec {
             bw /= sharing;
         }
         let steps = (n - 1) as f64;
-        (self.lat)(k) * steps + bytes * algbw_factor / bw
+        self.link_lat(k) * steps + bytes * algbw_factor / bw
     }
 
-    pub fn by_name(name: &str) -> Result<ClusterSpec> {
-        match name {
-            "l40x8" => Ok(l40_cluster(1)),
-            "l40x16" => Ok(l40_cluster(2)),
-            "a100x8" => Ok(a100_node()),
-            _ => Err(Error::config(format!(
-                "unknown cluster '{name}' (l40x8, l40x16, a100x8)"
-            ))),
+    /// Carve the cluster into `replicas` equal, topology-aligned slices and
+    /// return one slice (they are all identical — the cluster is
+    /// homogeneous). A replica either owns whole nodes or divides one node
+    /// evenly, so a slice never straddles a node boundary asymmetrically.
+    /// `carve(1)` returns the spec unchanged (same name), which is what
+    /// makes single-replica fleet serving bit-identical to `serve_trace`.
+    pub fn carve(&self, replicas: usize) -> Result<ClusterSpec> {
+        if replicas == 0 {
+            return Err(Error::config("cannot carve a cluster into 0 replicas"));
         }
+        if replicas == 1 {
+            return Ok(self.clone());
+        }
+        if self.n_gpus % replicas != 0 {
+            return Err(Error::config(format!(
+                "cannot carve {} GPUs of '{}' into {replicas} equal replicas",
+                self.n_gpus, self.name
+            )));
+        }
+        let per = self.n_gpus / replicas;
+        let aligned = if per >= self.gpus_per_node {
+            per % self.gpus_per_node == 0
+        } else {
+            self.gpus_per_node % per == 0
+        };
+        if !aligned {
+            return Err(Error::config(format!(
+                "replica size {per} does not align with '{}' nodes of {} GPUs",
+                self.name, self.gpus_per_node
+            )));
+        }
+        let mut slice = self.clone();
+        slice.name = format!("{}/r{replicas}", self.name);
+        slice.n_gpus = per;
+        slice.gpus_per_node = self.gpus_per_node.min(per);
+        slice.gpus_per_numa = self.gpus_per_numa.min(per);
+        Ok(slice)
+    }
+
+    /// Parse a cluster name: the paper's testbeds (`l40x8`, `l40x16`,
+    /// `a100x8`) plus the generic two-tier families `l40xN` / `a100xN` for
+    /// any N that is a multiple of 8 (N/8 Ethernet-connected nodes).
+    pub fn by_name(name: &str) -> Result<ClusterSpec> {
+        let parse_nodes = |n: &str| -> Option<usize> {
+            let gpus: usize = n.parse().ok()?;
+            if gpus > 0 && gpus % 8 == 0 {
+                Some(gpus / 8)
+            } else {
+                None
+            }
+        };
+        if let Some(n) = name.strip_prefix("l40x").and_then(parse_nodes) {
+            return Ok(l40_cluster(n));
+        }
+        if let Some(n) = name.strip_prefix("a100x").and_then(parse_nodes) {
+            return Ok(a100_cluster(n));
+        }
+        Err(Error::config(format!(
+            "unknown cluster '{name}' (l40xN or a100xN, N a multiple of 8)"
+        )))
     }
 }
 
@@ -194,20 +306,29 @@ pub fn l40_cluster(n_nodes: usize) -> ClusterSpec {
         bw: l40_bw,
         lat: l40_lat,
         has_nvlink: false,
+        inter_node: InterNodeLink::default(),
     }
 }
 
 /// One node of 8×A100-80GB with NVLink.
 pub fn a100_node() -> ClusterSpec {
+    a100_cluster(1)
+}
+
+/// `n_nodes` nodes of 8×A100-80GB — NVLink inside each node, 100 Gbps
+/// Ethernet between nodes: the genuinely two-tier testbed (a 250 GB/s to
+/// 10 GB/s cliff at every node boundary).
+pub fn a100_cluster(n_nodes: usize) -> ClusterSpec {
     ClusterSpec {
-        name: "a100x8".into(),
+        name: format!("a100x{}", 8 * n_nodes),
         gpu: GpuSpec { name: "A100-80GB".into(), tflops: 250.0, mem_bytes: 80e9 },
-        n_gpus: 8,
+        n_gpus: 8 * n_nodes,
         gpus_per_node: 8,
         gpus_per_numa: 8,
         bw: a100_bw,
         lat: a100_lat,
         has_nvlink: true,
+        inter_node: InterNodeLink::default(),
     }
 }
 
@@ -252,5 +373,90 @@ mod tests {
         let l = l40_cluster(2);
         let b = 100e6;
         assert!(a.p2p_time(0, 1, b) * 10.0 < l.p2p_time(0, 8, b));
+    }
+
+    #[test]
+    fn default_inter_node_matches_the_single_tier_constants() {
+        // the tier split must be a pure refactor for the stock specs:
+        // cross-node pricing through `inter_node` equals what the old
+        // single-tier link models charged
+        for c in [l40_cluster(2), a100_cluster(2)] {
+            assert_eq!(c.link_bw(LinkKind::Ethernet), (c.bw)(LinkKind::Ethernet));
+            assert_eq!(c.link_lat(LinkKind::Ethernet), (c.lat)(LinkKind::Ethernet));
+        }
+        // and a mutated tier actually reprices cross-node hops
+        let fast = l40_cluster(2).with_inter_node(InterNodeLink { bw: 50e9, lat: 5e-6 });
+        assert!(fast.p2p_time(0, 8, 100e6) < l40_cluster(2).p2p_time(0, 8, 100e6));
+        // ...while intra-node hops are untouched
+        assert_eq!(fast.p2p_time(0, 1, 100e6), l40_cluster(2).p2p_time(0, 1, 100e6));
+    }
+
+    #[test]
+    fn n_nodes_counts_the_outer_tier() {
+        assert_eq!(l40_cluster(1).n_nodes(), 1);
+        assert_eq!(l40_cluster(2).n_nodes(), 2);
+        assert_eq!(a100_cluster(4).n_nodes(), 4);
+    }
+
+    #[test]
+    fn carve_whole_nodes() {
+        let c = l40_cluster(2);
+        let r = c.carve(2).unwrap();
+        assert_eq!(r.n_gpus, 8);
+        assert_eq!(r.gpus_per_node, 8);
+        assert_eq!(r.gpus_per_numa, 4);
+        assert_eq!(r.n_nodes(), 1);
+        assert_eq!(r.name, "l40x16/r2");
+        // a whole-node replica prices links exactly like the matching
+        // single-node spec
+        let solo = l40_cluster(1);
+        assert_eq!(r.link(0, 1), solo.link(0, 1));
+        assert_eq!(r.link(0, 5), solo.link(0, 5));
+        assert_eq!(
+            r.collective_time(&[0, 1, 4, 5], 1e6, 1.0),
+            solo.collective_time(&[0, 1, 4, 5], 1e6, 1.0)
+        );
+    }
+
+    #[test]
+    fn carve_within_a_node() {
+        let c = l40_cluster(2);
+        let r = c.carve(4).unwrap();
+        assert_eq!(r.n_gpus, 4);
+        assert_eq!(r.gpus_per_node, 4);
+        assert_eq!(r.gpus_per_numa, 4);
+        // all four devices share one NUMA domain: pure PCIe
+        assert_eq!(r.worst_link(&[0, 1, 2, 3]), LinkKind::Pcie);
+    }
+
+    #[test]
+    fn carve_one_is_identity() {
+        let c = l40_cluster(2);
+        let r = c.carve(1).unwrap();
+        assert_eq!(r.name, c.name);
+        assert_eq!(r.n_gpus, c.n_gpus);
+        assert_eq!(r.gpus_per_node, c.gpus_per_node);
+    }
+
+    #[test]
+    fn carve_rejects_misaligned_splits() {
+        assert!(l40_cluster(2).carve(0).is_err());
+        // 16 % 3 != 0
+        assert!(l40_cluster(2).carve(3).is_err());
+        // per = 16/2 = 8 aligns; per = 24/3 = 8 aligns; but a 12-GPU slice
+        // of 8-GPU nodes would straddle a node boundary
+        assert!(l40_cluster(3).carve(2).is_err());
+    }
+
+    #[test]
+    fn by_name_parses_the_generic_families() {
+        assert_eq!(ClusterSpec::by_name("l40x8").unwrap().n_gpus, 8);
+        assert_eq!(ClusterSpec::by_name("l40x32").unwrap().n_nodes(), 4);
+        let a = ClusterSpec::by_name("a100x16").unwrap();
+        assert_eq!(a.n_nodes(), 2);
+        assert!(a.has_nvlink);
+        assert_eq!(a.link(0, 8), LinkKind::Ethernet);
+        assert!(ClusterSpec::by_name("l40x12").is_err());
+        assert!(ClusterSpec::by_name("h100x8").is_err());
     }
 }

@@ -221,6 +221,11 @@ impl<'a> Engine<'a> {
         self.sessions.entries.truncate(capacity);
     }
 
+    /// Current bound on the warm-session cache.
+    pub fn session_cache_capacity(&self) -> usize {
+        self.sessions.capacity
+    }
+
     /// Current bound on the admission queue.
     pub fn queue_capacity(&self) -> usize {
         self.queue.capacity

@@ -64,9 +64,10 @@ pub struct PlanKey {
 }
 
 /// Stable-within-a-run fingerprint of a cluster spec: covers the topology
-/// numbers, the GPU spec and the identity of the link-model functions.
-/// Used to invalidate the plan/session caches when the engine's cluster
-/// changes (including in-place mutation of the public field).
+/// numbers (both tiers — node count and the inter-node link included), the
+/// GPU spec and the identity of the link-model functions. Used to
+/// invalidate the plan/session caches when the engine's cluster changes
+/// (including in-place mutation of the public field).
 pub fn fingerprint(c: &ClusterSpec) -> u64 {
     let mut h = 0xCBF2_9CE4_8422_2325u64;
     let mut fold = |bytes: &[u8]| {
@@ -79,6 +80,9 @@ pub fn fingerprint(c: &ClusterSpec) -> u64 {
     fold(&(c.n_gpus as u64).to_le_bytes());
     fold(&(c.gpus_per_node as u64).to_le_bytes());
     fold(&(c.gpus_per_numa as u64).to_le_bytes());
+    fold(&(c.n_nodes() as u64).to_le_bytes());
+    fold(&c.inter_node.bw.to_bits().to_le_bytes());
+    fold(&c.inter_node.lat.to_bits().to_le_bytes());
     fold(&[c.has_nvlink as u8]);
     fold(c.gpu.name.as_bytes());
     fold(&c.gpu.tflops.to_bits().to_le_bytes());
@@ -293,6 +297,29 @@ mod tests {
         assert_ne!(fingerprint(&l40_cluster(1)), fingerprint(&a100_node()));
         assert_ne!(fingerprint(&l40_cluster(1)), fingerprint(&l40_cluster(2)));
         assert_eq!(fingerprint(&l40_cluster(1)), fingerprint(&l40_cluster(1)));
+    }
+
+    #[test]
+    fn mutating_the_ethernet_tier_busts_the_cache() {
+        use crate::config::hardware::InterNodeLink;
+        // regression: routing plans priced on a 10 GB/s inter-node tier
+        // must not survive an upgrade of that tier — the fingerprint has
+        // to cover the two-tier fields, not just the single-tier topology
+        let stock = l40_cluster(2);
+        let roce = l40_cluster(2).with_inter_node(InterNodeLink { bw: 50e9, lat: 5e-6 });
+        assert_ne!(fingerprint(&stock), fingerprint(&roce));
+
+        let mut c = PlanCache::default();
+        c.check_cluster(fingerprint(&stock));
+        c.insert(key(2048), plan_for(2048));
+        assert!(c.lookup(&key(2048)).is_some());
+        // the Ethernet tier changed under the engine: everything is wiped
+        assert!(c.check_cluster(fingerprint(&roce)));
+        assert!(c.is_empty());
+        assert!(c.lookup(&key(2048)).is_none());
+        // latency-only mutation invalidates too (both fields are hashed)
+        let tier = InterNodeLink { lat: 5e-6, ..Default::default() };
+        assert_ne!(fingerprint(&stock), fingerprint(&l40_cluster(2).with_inter_node(tier)));
     }
 
     #[test]

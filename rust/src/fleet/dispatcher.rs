@@ -1,0 +1,193 @@
+//! The fleet front door: pluggable request-to-replica dispatch.
+//!
+//! A [`Dispatcher`] owns no replica state — each pick consumes a slice of
+//! [`ReplicaView`] snapshots (pending depth + how far the replica's clock
+//! has run ahead) and returns an index. All three policies are
+//! deterministic: round-robin is a counter, join-shortest-queue is a pure
+//! argmin, and power-of-two-choices draws its two candidates from a seeded
+//! [`Rng`], so a seeded trace replays to the same routing every time.
+
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// How the fleet front door assigns an arriving request to a replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DispatchPolicy {
+    /// Cycle through replicas in index order, ignoring load.
+    RoundRobin,
+    /// Route to the replica with the fewest pending requests (ties broken
+    /// by the earlier virtual clock, then the lower index).
+    JoinShortestQueue,
+    /// Sample two replicas from a seeded RNG and keep the less loaded one
+    /// — the classic O(1) approximation of JSQ. Deterministic per seed.
+    PowerOfTwo {
+        /// Seed of the sampling RNG (the whole routing sequence is a pure
+        /// function of it).
+        seed: u64,
+    },
+}
+
+impl DispatchPolicy {
+    /// Parse a CLI policy name (`rr`/`round-robin`, `jsq`, `po2`); `seed`
+    /// feeds the power-of-two sampler.
+    pub fn parse(s: &str, seed: u64) -> Result<DispatchPolicy> {
+        match s {
+            "rr" | "round-robin" => Ok(DispatchPolicy::RoundRobin),
+            "jsq" | "shortest-queue" => Ok(DispatchPolicy::JoinShortestQueue),
+            "po2" | "power-of-two" => Ok(DispatchPolicy::PowerOfTwo { seed }),
+            _ => Err(Error::config(format!("unknown dispatch policy '{s}' (rr, jsq, po2)"))),
+        }
+    }
+
+    /// Short human label (reports and CLI output).
+    pub fn label(&self) -> String {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin".into(),
+            DispatchPolicy::JoinShortestQueue => "join-shortest-queue".into(),
+            DispatchPolicy::PowerOfTwo { seed } => format!("power-of-two(seed={seed})"),
+        }
+    }
+}
+
+/// What the dispatcher may observe about one replica at pick time.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    /// Requests admitted but not yet completed on this replica.
+    pub pending: usize,
+    /// The replica's virtual clock: when a tick overshot the dispatch
+    /// time, the replica is busy until this instant (tie-breaker between
+    /// equally-deep queues).
+    pub busy_until: f64,
+}
+
+/// Lower key = better target: fewest pending, then the replica that frees
+/// up earliest, then the lowest index (total order, so argmin is unique).
+fn better(views: &[ReplicaView], a: usize, b: usize) -> usize {
+    let (va, vb) = (&views[a], &views[b]);
+    match va
+        .pending
+        .cmp(&vb.pending)
+        .then(va.busy_until.total_cmp(&vb.busy_until))
+        .then(a.cmp(&b))
+    {
+        std::cmp::Ordering::Greater => b,
+        _ => a,
+    }
+}
+
+/// The policy plus its (tiny) mutable state: the round-robin cursor and
+/// the power-of-two sampling RNG. One request = one [`pick`].
+///
+/// [`pick`]: Dispatcher::pick
+#[derive(Debug, Clone)]
+pub struct Dispatcher {
+    policy: DispatchPolicy,
+    rr_next: usize,
+    rng: Rng,
+}
+
+impl Dispatcher {
+    /// A dispatcher for `policy`, its sampler seeded from the policy.
+    pub fn new(policy: DispatchPolicy) -> Dispatcher {
+        let seed = match policy {
+            DispatchPolicy::PowerOfTwo { seed } => seed,
+            _ => 0,
+        };
+        Dispatcher { policy, rr_next: 0, rng: Rng::new(seed) }
+    }
+
+    /// The policy this dispatcher runs.
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Choose the replica for the next request. `views` must be non-empty
+    /// and indexed like the fleet's replica list.
+    pub fn pick(&mut self, views: &[ReplicaView]) -> usize {
+        assert!(!views.is_empty(), "dispatcher needs at least one replica view");
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let k = self.rr_next % views.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                k
+            }
+            DispatchPolicy::JoinShortestQueue => {
+                (1..views.len()).fold(0, |best, i| better(views, best, i))
+            }
+            DispatchPolicy::PowerOfTwo { .. } => {
+                let a = self.rng.below(views.len());
+                let b = self.rng.below(views.len());
+                better(views, a, b)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(pending: &[usize]) -> Vec<ReplicaView> {
+        pending.iter().map(|&p| ReplicaView { pending: p, busy_until: 0.0 }).collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let v = views(&[5, 0, 0]);
+        assert_eq!(
+            (0..6).map(|_| d.pick(&v)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2],
+            "round-robin ignores load"
+        );
+    }
+
+    #[test]
+    fn jsq_is_argmin_with_total_tiebreak() {
+        let mut d = Dispatcher::new(DispatchPolicy::JoinShortestQueue);
+        assert_eq!(d.pick(&views(&[3, 1, 2])), 1);
+        // equal depth: earlier clock wins
+        let v = vec![
+            ReplicaView { pending: 2, busy_until: 7.0 },
+            ReplicaView { pending: 2, busy_until: 3.0 },
+        ];
+        assert_eq!(d.pick(&v), 1);
+        // fully tied: lowest index
+        assert_eq!(d.pick(&views(&[2, 2, 2])), 0);
+    }
+
+    #[test]
+    fn po2_replays_per_seed_and_diverges_across_seeds() {
+        let v = views(&[4, 0, 3, 1, 2, 0, 5, 1]);
+        let run = |seed: u64| {
+            let mut d = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed });
+            (0..64).map(|_| d.pick(&v)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "same seed must replay identically");
+        assert_ne!(run(7), run(8), "distinct seeds must sample differently");
+    }
+
+    #[test]
+    fn po2_never_picks_the_worse_of_its_pair() {
+        // with two replicas the sampled pair is always {0,1} or a
+        // singleton, so po2 must never route to a strictly deeper queue
+        let mut d = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed: 3 });
+        let v = views(&[9, 2]);
+        for _ in 0..32 {
+            let k = d.pick(&v);
+            assert!(k == 1 || v[k].pending == v[1].pending, "picked the deeper queue");
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_names() {
+        assert_eq!(DispatchPolicy::parse("rr", 0).unwrap(), DispatchPolicy::RoundRobin);
+        assert_eq!(DispatchPolicy::parse("jsq", 0).unwrap(), DispatchPolicy::JoinShortestQueue);
+        assert_eq!(
+            DispatchPolicy::parse("po2", 9).unwrap(),
+            DispatchPolicy::PowerOfTwo { seed: 9 }
+        );
+        assert!(DispatchPolicy::parse("random", 0).is_err());
+        assert!(DispatchPolicy::parse("po2", 1).unwrap().label().contains("seed=1"));
+    }
+}

@@ -1,0 +1,249 @@
+//! Fleet layer (L5): multi-replica Data Parallel serving over the
+//! two-tier cluster model.
+//!
+//! xDiT's fourth parallel axis — Data Parallel — lives here, layered
+//! *above* `coordinator`: a [`Fleet`] is N independent replica
+//! [`Engine`]s carved out of one [`ClusterSpec`], each running its own
+//! plan cache, warm-session cache and continuous batcher. A front-door
+//! [`Dispatcher`] assigns arriving requests to replicas under a pluggable
+//! [`DispatchPolicy`] (round-robin, join-shortest-queue, or seeded
+//! power-of-two-choices), and [`Fleet::replay`] drives a whole seeded
+//! Poisson [`Trace`] through the fleet in virtual time — 100k-request
+//! traces replay deterministically, digest-equal across runs.
+//!
+//! The replay loop is submit-order-equivalent to
+//! `Pipeline::serve_trace`: for every arrival it first runs each replica
+//! forward to the arrival instant (tick while busy, then jump idle
+//! clocks), snapshots per-replica [`ReplicaView`]s, lets the dispatcher
+//! pick, and submits. A single-replica fleet therefore reproduces
+//! `serve_trace` bit-identically — that degenerate case is pinned by a
+//! regression test.
+//!
+//! Sizing the fleet is [`planner::frontier`]'s job: sweep (replica count
+//! × intra-replica hybrid), price each cell's collectives on the tier
+//! they actually traverse (cross-node cells pay Ethernet), and rank the
+//! cells by first-order expected latency at each arrival rate.
+//!
+//! [`ClusterSpec`]: crate::config::hardware::ClusterSpec
+
+pub mod dispatcher;
+pub mod planner;
+pub mod report;
+
+pub use dispatcher::{DispatchPolicy, Dispatcher, ReplicaView};
+pub use planner::{frontier, FleetCell, FleetFrontier, RatePoint};
+pub use report::{FleetReport, ReplicaStat};
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Histogram;
+use crate::coordinator::request::GenResponse;
+use crate::coordinator::trace::Trace;
+use crate::{Error, Result};
+use report::{fold, FNV_BASIS};
+
+/// N independent replica engines behind one dispatcher.
+///
+/// Replicas share nothing: each engine owns its queue, batcher, plan
+/// cache and session cache, exactly as N separate `Pipeline`s would —
+/// that is what makes Data Parallel capacity scale linearly. The fleet
+/// only adds the routing decision and the aggregate report.
+pub struct Fleet<'a> {
+    engines: Vec<Engine<'a>>,
+    dispatcher: Dispatcher,
+}
+
+impl<'a> Fleet<'a> {
+    /// A fleet over `engines` (one per replica) dispatching under
+    /// `policy`. Fails on an empty replica list.
+    pub fn new(engines: Vec<Engine<'a>>, policy: DispatchPolicy) -> Result<Fleet<'a>> {
+        if engines.is_empty() {
+            return Err(Error::config("a fleet needs at least one replica engine"));
+        }
+        Ok(Fleet { engines, dispatcher: Dispatcher::new(policy) })
+    }
+
+    /// Number of replicas.
+    pub fn replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The replica engines, indexed like the dispatcher's views.
+    pub fn engines(&self) -> &[Engine<'a>] {
+        &self.engines
+    }
+
+    /// The dispatch policy this fleet routes under.
+    pub fn policy(&self) -> DispatchPolicy {
+        self.dispatcher.policy()
+    }
+
+    /// Replay a trace through the fleet in virtual time and aggregate a
+    /// [`FleetReport`]. Latents are dropped as they complete so a
+    /// 100k-request trace does not hold 100k tensors; use
+    /// [`Fleet::replay_collect`] when the responses themselves matter.
+    ///
+    /// Replay on a *fresh* fleet is deterministic (equal digests across
+    /// runs); reusing a fleet continues its clocks and cumulative
+    /// metrics.
+    pub fn replay(&mut self, trace: &Trace) -> Result<FleetReport> {
+        Ok(self.replay_impl(trace, false)?.0)
+    }
+
+    /// [`Fleet::replay`], but also return every response (completion
+    /// order). Memory scales with the trace — prefer `replay` for large
+    /// traces.
+    pub fn replay_collect(&mut self, trace: &Trace) -> Result<(FleetReport, Vec<GenResponse>)> {
+        self.replay_impl(trace, true)
+    }
+
+    fn replay_impl(
+        &mut self,
+        trace: &Trace,
+        keep: bool,
+    ) -> Result<(FleetReport, Vec<GenResponse>)> {
+        let reqs = trace.requests();
+        let n = self.engines.len();
+        let mut routed = vec![0usize; n];
+        let mut rejected = Vec::new();
+        let mut latency = Histogram::new();
+        let mut digest = FNV_BASIS;
+        let mut served: u64 = 0;
+        let mut kept = Vec::new();
+        let mut record = |replica: usize, resp: GenResponse| {
+            fold(&mut digest, replica as u64);
+            fold(&mut digest, resp.id);
+            fold(&mut digest, resp.latency.to_bits());
+            fold(&mut digest, resp.model_seconds.to_bits());
+            fold(&mut digest, resp.comm_bytes as u64);
+            latency.observe(resp.latency);
+            served += 1;
+            if keep {
+                kept.push(resp);
+            }
+        };
+
+        for req in reqs {
+            let t = req.arrival;
+            // run every replica forward to the arrival instant: busy
+            // replicas tick (possibly overshooting t, exactly like
+            // serve_trace), idle replicas jump their clock
+            for (i, engine) in self.engines.iter_mut().enumerate() {
+                while engine.pending() > 0 && engine.virtual_now() < t {
+                    for resp in engine.tick()? {
+                        record(i, resp);
+                    }
+                }
+                engine.advance_to(t);
+            }
+            let views: Vec<ReplicaView> = self
+                .engines
+                .iter()
+                .map(|e| ReplicaView { pending: e.pending(), busy_until: e.virtual_now() })
+                .collect();
+            let k = self.dispatcher.pick(&views);
+            routed[k] += 1;
+            if let Err(rej) = self.engines[k].submit(req.clone()) {
+                rejected.push(rej);
+            }
+        }
+        // drain: every replica runs to empty
+        for (i, engine) in self.engines.iter_mut().enumerate() {
+            while engine.pending() > 0 {
+                for resp in engine.tick()? {
+                    record(i, resp);
+                }
+            }
+        }
+        drop(record);
+        for rej in &rejected {
+            fold(&mut digest, rej.id);
+        }
+
+        let replicas: Vec<ReplicaStat> = self
+            .engines
+            .iter()
+            .zip(&routed)
+            .map(|(e, &routed)| ReplicaStat {
+                routed,
+                horizon: e.virtual_now(),
+                metrics: e.metrics.clone(),
+            })
+            .collect();
+        let makespan = replicas.iter().fold(0.0f64, |m, r| m.max(r.horizon));
+        let report = FleetReport {
+            policy: self.dispatcher.policy().label(),
+            submitted: reqs.len(),
+            served,
+            rejected,
+            makespan,
+            latency,
+            replicas,
+            digest,
+        };
+        Ok((report, kept))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::l40_cluster;
+    use crate::runtime::Runtime;
+
+    fn engines(rt: &Runtime, n: usize) -> Vec<Engine<'_>> {
+        (0..n).map(|_| Engine::new(rt, l40_cluster(1), 4)).collect()
+    }
+
+    fn trace(n: usize) -> Trace {
+        Trace::poisson(0xF1EE7, n, 2.0).steps(1).guidance(1.0).build()
+    }
+
+    #[test]
+    fn empty_fleet_is_refused() {
+        assert!(Fleet::new(vec![], DispatchPolicy::RoundRobin).is_err());
+    }
+
+    #[test]
+    fn replay_serves_the_whole_trace_and_balances() {
+        let rt = Runtime::simulated();
+        let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::RoundRobin).unwrap();
+        let r = fleet.replay(&trace(16)).unwrap();
+        assert_eq!(r.submitted, 16);
+        assert_eq!(r.served + r.rejected.len() as u64, 16);
+        assert_eq!(r.replicas.len(), 2);
+        assert_eq!(r.replicas[0].routed, 8, "round-robin splits evenly");
+        assert_eq!(r.replicas[1].routed, 8);
+        assert!((r.imbalance() - 1.0).abs() < 1e-12);
+        assert!(r.makespan > 0.0);
+        assert_eq!(r.latency.count, r.served);
+    }
+
+    #[test]
+    fn fresh_fleets_replay_digest_equal() {
+        let rt = Runtime::simulated();
+        let t = trace(24);
+        let run = |policy| {
+            let mut fleet = Fleet::new(engines(&rt, 3), policy).unwrap();
+            fleet.replay(&t).unwrap().digest
+        };
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::PowerOfTwo { seed: 42 },
+        ] {
+            assert_eq!(run(policy), run(policy), "replay must be deterministic ({policy:?})");
+        }
+    }
+
+    #[test]
+    fn replay_collect_returns_every_response() {
+        let rt = Runtime::simulated();
+        let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::JoinShortestQueue).unwrap();
+        let (report, responses) = fleet.replay_collect(&trace(12)).unwrap();
+        assert_eq!(responses.len() as u64, report.served);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), responses.len(), "each request answered once");
+    }
+}

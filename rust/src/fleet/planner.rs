@@ -1,0 +1,361 @@
+//! Fleet planner: sweep (replica count × intra-replica hybrid) and rank
+//! the cells against an arrival rate.
+//!
+//! For every replica count `r` that carves cleanly out of the cluster,
+//! the intra-replica [`Planner`] picks the best hybrid for the carved
+//! slice and prices its collectives on the slice's own topology — a
+//! full-cluster hybrid pays the cross-node Ethernet tier, a single-node
+//! replica stays on NVLink/PCIe. Each cell then gets an M/M/1-style
+//! first-order queueing estimate: utilization `ρ = λ·L/r` and expected
+//! latency `W = L/(1-ρ)` (∞ when saturated), where `L` is the cell's
+//! predicted service time. Low arrival rates reward the deep low-latency
+//! hybrid; high rates reward replicas, whose capacity scales linearly
+//! because Data Parallel moves no bytes between replicas. The resulting
+//! [`FleetFrontier`] names a throughput-optimal cell, a latency-optimal
+//! cell per rate, and a human "why" citing the tier-priced comm cost.
+
+use crate::config::hardware::{ClusterSpec, LinkKind};
+use crate::config::model::ModelSpec;
+use crate::coordinator::planner::{Plan, Planner};
+use crate::{Error, Result};
+
+/// One cell of the sweep: `replicas` copies of a `world`-GPU hybrid.
+#[derive(Debug, Clone)]
+pub struct FleetCell {
+    /// Data-parallel replica count.
+    pub replicas: usize,
+    /// GPUs per replica (= carved slice size).
+    pub world: usize,
+    /// Whether one replica spans nodes (its collectives then pay the
+    /// inter-node Ethernet tier).
+    pub cross_node: bool,
+    /// Predicted service time of one image on one replica (seconds).
+    pub service_seconds: f64,
+    /// Fleet capacity: `replicas / service_seconds` images per second.
+    pub capacity: f64,
+    /// The intra-replica plan the [`Planner`] chose for the carved slice.
+    pub plan: Plan,
+}
+
+impl FleetCell {
+    /// Short label, e.g. `2x8 [cfg=2,ring=4]`.
+    pub fn label(&self) -> String {
+        format!("{}x{} [{}]", self.replicas, self.world, self.plan.config.describe())
+    }
+
+    /// Utilization `ρ = λ·L/r` at arrival rate `rate` (images/second).
+    pub fn utilization(&self, rate: f64) -> f64 {
+        rate * self.service_seconds / self.replicas as f64
+    }
+
+    /// First-order expected latency `W = L/(1-ρ)`; ∞ once saturated.
+    pub fn expected_latency(&self, rate: f64) -> f64 {
+        let rho = self.utilization(rate);
+        if rho < 1.0 {
+            self.service_seconds / (1.0 - rho)
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// The latency-optimal choice at one arrival rate.
+#[derive(Debug, Clone)]
+pub struct RatePoint {
+    /// Arrival rate (images/second) this point was evaluated at.
+    pub rate: f64,
+    /// Index into [`FleetFrontier::cells`] of the latency-optimal cell.
+    pub best: usize,
+    /// The winner's expected latency at this rate (∞ = every cell
+    /// saturates; the fleet needs admission control or more nodes).
+    pub expected_latency: f64,
+    /// The winner's utilization at this rate.
+    pub utilization: f64,
+    /// Human reason the winner beats the natural alternative, citing the
+    /// tier-priced communication cost.
+    pub why: String,
+}
+
+/// The (replica count × hybrid) sweep: every valid carve of the cluster,
+/// a throughput-optimal cell, and a latency-optimal cell per rate.
+#[derive(Debug, Clone)]
+pub struct FleetFrontier {
+    /// Model the sweep was run for.
+    pub model: String,
+    /// Resolution (pixels, square).
+    pub px: usize,
+    /// Cluster name the sweep carved.
+    pub cluster: String,
+    /// One-line topology summary (nodes × GPUs and both link tiers).
+    pub topology: String,
+    /// Sweep cells, ascending replica count (`cells[0]` is the deepest
+    /// full-cluster hybrid).
+    pub cells: Vec<FleetCell>,
+    /// Index of the max-capacity cell (ties go to fewer replicas).
+    pub throughput_optimal: usize,
+    /// Latency-optimal cell per requested arrival rate.
+    pub rates: Vec<RatePoint>,
+}
+
+impl FleetFrontier {
+    /// Human frontier table: cells, the throughput-optimal pick, and one
+    /// line + "why" per arrival rate (the `fleet --frontier` CLI output).
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "fleet frontier: {} @ {}px on {} ({})\n\
+             {:>9}  {:>5}  {:<18}  {:>10}  {:>15}  comm tier\n",
+            self.model,
+            self.px,
+            self.cluster,
+            self.topology,
+            "replicas",
+            "world",
+            "config",
+            "service(s)",
+            "capacity(img/s)",
+        );
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{:>9}  {:>5}  {:<18}  {:>10.3}  {:>15.3}  {}\n",
+                c.replicas,
+                c.world,
+                format!("[{}]", c.plan.config.describe()),
+                c.service_seconds,
+                c.capacity,
+                if c.cross_node { "cross-node Ethernet" } else { "intra-node" },
+            ));
+        }
+        let best = &self.cells[self.throughput_optimal];
+        out.push_str(&format!(
+            "throughput-optimal: {} at {:.3} img/s\n",
+            best.label(),
+            best.capacity
+        ));
+        for p in &self.rates {
+            let w = &self.cells[p.best];
+            let lat = if p.expected_latency.is_finite() {
+                format!("E[latency]={:.2}s", p.expected_latency)
+            } else {
+                "saturated".into()
+            };
+            out.push_str(&format!(
+                "λ={:.2} img/s -> {} ({}, ρ={:.2})\n  why: {}\n",
+                p.rate,
+                w.label(),
+                lat,
+                p.utilization,
+                p.why
+            ));
+        }
+        out
+    }
+}
+
+/// How a cell's collectives are priced, for the "why" strings.
+fn comm_clause(cluster: &ClusterSpec, cell: &FleetCell) -> String {
+    if cell.cross_node {
+        format!(
+            "cross-node collectives priced at the {:.1} GB/s Ethernet tier \
+             ({:.2}s exposed comm)",
+            cluster.link_bw(LinkKind::Ethernet) / 1e9,
+            cell.plan.predicted.comm_exposed,
+        )
+    } else {
+        let (name, kind) = if cluster.has_nvlink {
+            ("NVLink", LinkKind::NvLink)
+        } else {
+            ("PCIe", LinkKind::Pcie)
+        };
+        format!(
+            "collectives on the {:.1} GB/s intra-node {} tier ({:.2}s exposed comm)",
+            cluster.link_bw(kind) / 1e9,
+            name,
+            cell.plan.predicted.comm_exposed,
+        )
+    }
+}
+
+/// Sweep every valid (replica count × hybrid) cell of `cluster` for
+/// `m @ px` and rank the cells at each arrival rate in `rates`
+/// (images/second). The intra-replica `planner` is reused per cell.
+pub fn frontier(
+    planner: &Planner,
+    m: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    rates: &[f64],
+) -> Result<FleetFrontier> {
+    if let Some(bad) = rates.iter().find(|r| !(r.is_finite() && **r > 0.0)) {
+        return Err(Error::config(format!("arrival rate must be positive and finite, got {bad}")));
+    }
+
+    let mut cells = Vec::new();
+    for r in 1..=cluster.n_gpus {
+        if cluster.n_gpus % r != 0 {
+            continue;
+        }
+        let Ok(carved) = cluster.carve(r) else { continue };
+        let plan = planner.plan(m, px, &carved, carved.n_gpus);
+        let service = plan.predicted.total;
+        cells.push(FleetCell {
+            replicas: r,
+            world: carved.n_gpus,
+            cross_node: carved.n_gpus > carved.gpus_per_node,
+            service_seconds: service,
+            capacity: r as f64 / service,
+            plan,
+        });
+    }
+    debug_assert!(!cells.is_empty(), "r=1 always carves");
+
+    let throughput_optimal = cells
+        .iter()
+        .enumerate()
+        .fold(0, |best, (i, c)| if c.capacity > cells[best].capacity { i } else { best });
+
+    let rate_points = rates
+        .iter()
+        .map(|&rate| rate_point(cluster, &cells, throughput_optimal, rate))
+        .collect();
+
+    Ok(FleetFrontier {
+        model: m.name.clone(),
+        px,
+        cluster: cluster.name.clone(),
+        topology: format!(
+            "{} node(s) x {} GPUs, inter-node Ethernet {:.1} GB/s",
+            cluster.n_nodes(),
+            cluster.gpus_per_node,
+            cluster.link_bw(LinkKind::Ethernet) / 1e9,
+        ),
+        cells,
+        throughput_optimal,
+        rates: rate_points,
+    })
+}
+
+/// Rank the cells at one arrival rate and explain the winner.
+fn rate_point(
+    cluster: &ClusterSpec,
+    cells: &[FleetCell],
+    throughput_optimal: usize,
+    rate: f64,
+) -> RatePoint {
+    // latency-optimal cell: min expected latency, ties to fewer replicas
+    let best = cells.iter().enumerate().fold(0, |best, (i, c)| {
+        if c.expected_latency(rate) < cells[best].expected_latency(rate) {
+            i
+        } else {
+            best
+        }
+    });
+    let w = &cells[best];
+    let wl = w.expected_latency(rate);
+
+    let why = if !wl.is_finite() {
+        // every cell saturates: report the capacity ceiling
+        let cap = &cells[throughput_optimal];
+        format!(
+            "λ={rate:.2} img/s exceeds the fleet's best capacity {:.3} img/s ({}, {}); \
+             every cell saturates — shed load or add nodes",
+            cap.capacity,
+            cap.label(),
+            comm_clause(cluster, cap),
+        )
+    } else if best == 0 {
+        // the deepest full-cluster hybrid wins: latency is service time
+        let alt = cells[1..].iter().fold(&cells[cells.len() - 1], |a, c| {
+            if c.expected_latency(rate) < a.expected_latency(rate) {
+                c
+            } else {
+                a
+            }
+        });
+        format!(
+            "queues stay short at λ={rate:.2} img/s (ρ={:.2}), so latency ≈ service time: \
+             {} finishes an image in {:.2}s vs {:.2}s expected for {}, worth paying its {}",
+            w.utilization(rate),
+            w.label(),
+            w.service_seconds,
+            alt.expected_latency(rate),
+            alt.label(),
+            comm_clause(cluster, w),
+        )
+    } else {
+        // replicas win: the deep hybrid's sub-linear scaling can't keep up
+        let deep = &cells[0];
+        let deep_state = if deep.expected_latency(rate).is_finite() {
+            let dw = deep.expected_latency(rate);
+            format!("expects {dw:.2}s at ρ={:.2}", deep.utilization(rate))
+        } else {
+            format!("saturates (capacity {:.3} img/s)", deep.capacity)
+        };
+        format!(
+            "at λ={rate:.2} img/s the deep {} hybrid {deep_state} because deeper sharding \
+             pays for {}; {} replicas scale capacity linearly to {:.3} img/s with {} — \
+             expected latency {:.2}s at ρ={:.2}",
+            deep.label(),
+            comm_clause(cluster, deep),
+            w.replicas,
+            w.capacity,
+            comm_clause(cluster, w),
+            wl,
+            w.utilization(rate),
+        )
+    };
+
+    RatePoint { rate, best, expected_latency: wl, utilization: w.utilization(rate), why }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::l40_cluster;
+
+    #[test]
+    fn single_node_sweep_covers_every_divisor() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let f = frontier(&Planner::default(), &m, 1024, &l40_cluster(1), &[0.1]).unwrap();
+        let counts: Vec<usize> = f.cells.iter().map(|c| c.replicas).collect();
+        assert_eq!(counts, vec![1, 2, 4, 8]);
+        assert!(f.cells.iter().all(|c| !c.cross_node), "one node never crosses Ethernet");
+        for c in &f.cells {
+            assert!((c.capacity - c.replicas as f64 / c.service_seconds).abs() < 1e-12);
+            assert_eq!(c.world * c.replicas, 8, "cells partition the cluster");
+        }
+        assert_eq!(f.rates.len(), 1);
+        let table = f.table();
+        assert!(table.contains("throughput-optimal"), "{table}");
+        assert!(table.contains("img/s"), "{table}");
+    }
+
+    #[test]
+    fn saturated_rate_reports_the_capacity_ceiling() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let f = frontier(&Planner::default(), &m, 2048, &l40_cluster(1), &[1e6]).unwrap();
+        let p = &f.rates[0];
+        assert!(p.expected_latency.is_infinite());
+        assert!(p.why.contains("saturates"), "{}", p.why);
+        assert!(p.why.contains("GB/s"), "{}", p.why);
+    }
+
+    #[test]
+    fn bad_rates_are_rejected() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(frontier(&Planner::default(), &m, 1024, &l40_cluster(1), &[bad]).is_err());
+        }
+    }
+
+    #[test]
+    fn mm1_estimate_blows_up_near_saturation() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let f = frontier(&Planner::default(), &m, 1024, &l40_cluster(1), &[]).unwrap();
+        let c = &f.cells[0];
+        let low = c.expected_latency(c.capacity * 0.1);
+        let high = c.expected_latency(c.capacity * 0.99);
+        assert!(low < high, "latency must grow with load");
+        assert!((c.expected_latency(1e-9) - c.service_seconds).abs() < 1e-6);
+        assert!(c.expected_latency(c.capacity * 1.01).is_infinite());
+    }
+}

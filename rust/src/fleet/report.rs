@@ -1,0 +1,200 @@
+//! What a fleet replay hands back: per-replica stats, aggregate latency
+//! percentiles, a dispatcher-imbalance figure, and a determinism digest.
+//!
+//! The digest is an FNV-1a fold over every response's (replica, id,
+//! latency bits, model-seconds bits, comm bytes) plus every rejection id,
+//! so two replays of the same trace on the same fleet agree on the digest
+//! iff they agreed on every routing decision and every timing result —
+//! that is the "deterministic across runs" acceptance gate in one `u64`.
+
+use crate::coordinator::engine::Rejection;
+use crate::coordinator::metrics::{Histogram, Metrics};
+
+/// FNV-1a offset basis (same constants as `plan_cache::fingerprint`).
+pub(crate) const FNV_BASIS: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Fold one little-endian `u64` into an FNV-1a accumulator.
+pub(crate) fn fold(h: &mut u64, x: u64) {
+    for b in x.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// One replica's share of a fleet replay.
+#[derive(Debug, Clone)]
+pub struct ReplicaStat {
+    /// Requests the dispatcher routed here (admitted or not).
+    pub routed: usize,
+    /// The replica's virtual clock after draining (its local makespan).
+    pub horizon: f64,
+    /// The replica engine's full metrics snapshot (latency/queue-delay
+    /// histograms, occupancy, cache counters, ...).
+    pub metrics: Metrics,
+}
+
+impl ReplicaStat {
+    /// One table row: routing, serving, occupancy and tail latency.
+    pub fn row(&self, idx: usize) -> String {
+        format!(
+            "  replica {idx}: routed={} served={} rejected={} | horizon {:.3}s | \
+             occupancy mean {:.2} | latency p50/p95 {:.3}/{:.3}s",
+            self.routed,
+            self.metrics.served,
+            self.metrics.rejected,
+            self.horizon,
+            self.metrics.mean_occupancy(),
+            self.metrics.latency.quantile(0.50),
+            self.metrics.latency.quantile(0.95),
+        )
+    }
+}
+
+/// Aggregate outcome of [`Fleet::replay`](super::Fleet::replay).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Dispatch policy label the fleet ran under.
+    pub policy: String,
+    /// Requests in the trace (routed = submitted; some may be rejected).
+    pub submitted: usize,
+    /// Requests served to completion across all replicas.
+    pub served: u64,
+    /// Every admission refusal, in arrival order.
+    pub rejected: Vec<Rejection>,
+    /// Fleet makespan: the latest replica clock after draining.
+    pub makespan: f64,
+    /// End-to-end latency across all replicas (aggregate p50/p95/p99).
+    pub latency: Histogram,
+    /// Per-replica breakdown, indexed like the fleet's engine list.
+    pub replicas: Vec<ReplicaStat>,
+    /// FNV-1a fold of every (replica, response) and rejection — equal
+    /// digests mean bit-identical replays (see module docs).
+    pub digest: u64,
+}
+
+impl FleetReport {
+    /// Aggregate latency quantile in seconds (log-bucket upper bound).
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        self.latency.quantile(q)
+    }
+
+    /// Served images per virtual second over the fleet makespan.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.served as f64 / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Dispatcher imbalance: max routed over mean routed (1.0 = perfectly
+    /// even; round-robin pins this to ~1.0, load-aware policies may trade
+    /// a little imbalance for shorter queues).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.replicas.iter().map(|r| r.routed).max().unwrap_or(0);
+        let total: usize = self.replicas.iter().map(|r| r.routed).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        max as f64 * self.replicas.len() as f64 / total as f64
+    }
+
+    /// One-line fleet summary (the CLI prints this above the per-replica
+    /// table).
+    pub fn summary(&self) -> String {
+        format!(
+            "fleet[{}] x{}: submitted={} served={} rejected={} | makespan {:.3}s virtual, \
+             {:.2} img/s | latency p50/p95/p99 {:.3}/{:.3}/{:.3}s | imbalance {:.3} | \
+             digest {:016x}",
+            self.policy,
+            self.replicas.len(),
+            self.submitted,
+            self.served,
+            self.rejected.len(),
+            self.makespan,
+            self.throughput(),
+            self.latency_quantile(0.50),
+            self.latency_quantile(0.95),
+            self.latency_quantile(0.99),
+            self.imbalance(),
+            self.digest,
+        )
+    }
+
+    /// Multi-line per-replica table (one [`ReplicaStat::row`] each).
+    pub fn table(&self) -> String {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r.row(i))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(routed: usize, served: u64) -> ReplicaStat {
+        let metrics = Metrics { served, ..Default::default() };
+        ReplicaStat { routed, horizon: 10.0, metrics }
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        let mut r = FleetReport {
+            policy: "round-robin".into(),
+            submitted: 4,
+            served: 4,
+            rejected: vec![],
+            makespan: 10.0,
+            latency: Histogram::new(),
+            replicas: vec![stat(3, 3), stat(1, 1)],
+            digest: 0,
+        };
+        // max 3, mean 2 -> 1.5
+        assert!((r.imbalance() - 1.5).abs() < 1e-12);
+        r.replicas = vec![stat(2, 2), stat(2, 2)];
+        assert!((r.imbalance() - 1.0).abs() < 1e-12);
+        r.replicas = vec![stat(0, 0), stat(0, 0)];
+        assert_eq!(r.imbalance(), 1.0, "empty fleet reads as balanced");
+    }
+
+    #[test]
+    fn summary_and_table_carry_the_headline_numbers() {
+        let mut latency = Histogram::new();
+        latency.observe(0.5);
+        latency.observe(1.5);
+        let r = FleetReport {
+            policy: "join-shortest-queue".into(),
+            submitted: 2,
+            served: 2,
+            rejected: vec![],
+            makespan: 4.0,
+            latency,
+            replicas: vec![stat(1, 1), stat(1, 1)],
+            digest: 0xDEAD,
+        };
+        let s = r.summary();
+        assert!(s.contains("fleet[join-shortest-queue] x2"), "{s}");
+        assert!(s.contains("0.50 img/s"), "{s}");
+        assert!(s.contains("digest 000000000000dead"), "{s}");
+        assert_eq!(r.table().lines().count(), 2);
+        assert!(r.table().contains("replica 0"), "{}", r.table());
+    }
+
+    #[test]
+    fn fold_matches_fnv_reference() {
+        // folding zero bytes still permutes the accumulator
+        let mut h = FNV_BASIS;
+        fold(&mut h, 0);
+        assert_ne!(h, FNV_BASIS);
+        let mut a = FNV_BASIS;
+        let mut b = FNV_BASIS;
+        fold(&mut a, 1);
+        fold(&mut b, 2);
+        assert_ne!(a, b, "distinct inputs must hash apart");
+    }
+}

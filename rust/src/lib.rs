@@ -17,6 +17,12 @@
 //!   explicit, and explains where the closed forms hold — the `timeline`
 //!   CLI renders it as a Gantt, the [`Planner`] re-scores candidates with
 //!   it under [`Fidelity::Simulated`].
+//! * **L5 ([`fleet`])** — multi-replica Data Parallel serving over the
+//!   two-tier (NVLink/Ethernet) cluster model: replica engines carved out
+//!   of one cluster, a pluggable front-door [`fleet::Dispatcher`], seeded
+//!   Poisson trace replay into a [`FleetReport`], and a frontier planner
+//!   that trades replica count against intra-replica parallelism per
+//!   arrival rate.
 //! * **L2/L1 (build-time Python)** — the DiT compute graph and Pallas
 //!   kernels, AOT-lowered to HLO text in `artifacts/` and executed here via
 //!   the PJRT CPU client (`runtime`). Python never runs on the request path.
@@ -36,6 +42,7 @@ pub mod config;
 pub mod coordinator;
 pub mod diffusion;
 pub mod error;
+pub mod fleet;
 pub mod mesh;
 pub mod model;
 pub mod parallel;
@@ -49,5 +56,6 @@ pub mod vae;
 
 pub use coordinator::{Fidelity, Plan, Planner, Rejection, RoutePolicy, Trace};
 pub use error::{Error, Result};
+pub use fleet::{DispatchPolicy, Fleet, FleetFrontier, FleetReport};
 pub use perf::simulator::Timeline;
 pub use pipeline::{ParallelPolicy, Pipeline, PipelineBuilder, ServeReport};

@@ -7,6 +7,8 @@
 //! Subcommands:
 //!   generate  — generate one image with a chosen parallel config
 //!   serve     — run the serving engine on a synthetic request workload
+//!   fleet     — multi-replica Data Parallel serving (trace replay or the
+//!               replica-count × hybrid frontier sweep)
 //!   route     — show the routing decision (a `Plan`) for a model/cluster
 //!   timeline  — render a strategy's per-rank event timeline as a Gantt
 //!   figures   — regenerate the paper's figure/table series (analytic)
@@ -44,6 +46,21 @@ commands:
              after the serving report; --no-plan-cache disables the
              routing memo for debugging, --session-cache 0 disables
              warm-session reuse)
+  fleet     --replicas 2 --cluster l40x16 --gpus 16 --requests 256
+            --rate 2.0 --steps 2 --px 256 [--model tiny-adaln]
+            [--policy rr|jsq|po2 (default: jsq)] [--seed 0]
+            [--max-batch 4 --capacity 64]
+            (Data Parallel serving: carve the cluster into N replica
+             engines behind a dispatcher and replay a seeded Poisson
+             trace in virtual time; prints the aggregate latency
+             percentiles, the per-replica table, dispatcher imbalance
+             and the determinism digest)
+  fleet     --frontier --model pixart --cluster l40x16 --px 2048
+            [--rates 0.05,0.2,0.4,0.6]
+            (sweep replica count x intra-replica hybrid, pricing
+             cross-node collectives at the inter-node Ethernet tier;
+             prints the throughput-optimal vs latency-optimal frontier
+             with a why per arrival rate)
   route     --model pixart --cluster l40x16 --gpus 16 --px 2048
             [--policy cost|paper (default: cost)] [--memory-cap-gb 48]
             [--top-k 5] [--json]
@@ -84,6 +101,7 @@ fn run(cmd: &str, args: &Args) -> xdit::Result<()> {
     match cmd {
         "generate" => generate(args),
         "serve" => serve(args),
+        "fleet" => fleet_cmd(args),
         "route" => route_cmd(args),
         "timeline" => timeline_cmd(args),
         "figures" => figures(args),
@@ -227,6 +245,69 @@ fn serve(args: &Args) -> xdit::Result<()> {
         "(host wall time {:?} for {} generations, backend {})",
         t0.elapsed(),
         report.responses.len(),
+        rt.backend_name()
+    );
+    Ok(())
+}
+
+fn fleet_cmd(args: &Args) -> xdit::Result<()> {
+    if args.bool("frontier") {
+        // analytic sweep: no runtime needed, works for the paper models
+        let model = ModelSpec::by_name(args.str_or("model", "pixart"))?;
+        let cluster = cluster_of(args)?;
+        let px = args.usize_or("px", 1024)?;
+        let mut rates = Vec::new();
+        for tok in args.str_or("rates", "0.05,0.2,0.4,0.6").split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            rates.push(tok.parse::<f64>().map_err(|_| {
+                xdit::Error::config(format!("bad arrival rate '{tok}' in --rates"))
+            })?);
+        }
+        let planner = xdit::Planner::default();
+        let frontier = xdit::fleet::frontier(&planner, &model, px, &cluster, &rates)?;
+        print!("{}", frontier.table());
+        return Ok(());
+    }
+
+    let rt = Runtime::load_or_simulated(args.str_or("artifacts", "artifacts"))?;
+    let n = args.usize_or("requests", 64)?;
+    let rate = args.f64_or("rate", 2.0)?;
+    let variant = variant_of(args.str_or("model", "tiny-adaln"))?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let policy = xdit::DispatchPolicy::parse(args.str_or("policy", "jsq"), seed)?;
+    let cluster = cluster_of(args)?;
+    let gpus = args.usize_or("gpus", cluster.n_gpus)?;
+
+    let pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(cluster)
+        .world(gpus)
+        .replicas(args.usize_or("replicas", 2)?)
+        .dispatcher(policy)
+        .max_batch(args.usize_or("max-batch", 4)?)
+        .queue_capacity(args.usize_or("capacity", 64)?)
+        .build()?;
+
+    let trace = Trace::poisson(seed, n, rate)
+        .steps(args.usize_or("steps", 2)?)
+        .variants(&[variant])
+        .resolutions(&[args.usize_or("px", 256)?])
+        .build();
+
+    let t0 = std::time::Instant::now();
+    let report = pipe.serve_fleet(&trace)?;
+    println!("{}", report.summary());
+    println!("{}", report.table());
+    for rej in report.rejected.iter().take(8) {
+        println!("  {rej}");
+    }
+    println!(
+        "(host wall time {:?} for {} served, backend {})",
+        t0.elapsed(),
+        report.served,
         rt.backend_name()
     );
     Ok(())

@@ -53,6 +53,7 @@ use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::trace::Trace;
 use crate::coordinator::{Batcher, Metrics};
 use crate::diffusion::SchedulerKind;
+use crate::fleet::{DispatchPolicy, Fleet, FleetReport};
 use crate::parallel::driver::Method;
 use crate::perf::simulator::Timeline;
 use crate::runtime::Runtime;
@@ -137,6 +138,8 @@ pub struct PipelineBuilder<'a> {
     aging_rate: f64,
     plan_cache: bool,
     session_cache_capacity: usize,
+    replicas: usize,
+    dispatch: DispatchPolicy,
 }
 
 impl<'a> Default for PipelineBuilder<'a> {
@@ -157,6 +160,8 @@ impl<'a> Default for PipelineBuilder<'a> {
             aging_rate: 1.0,
             plan_cache: true,
             session_cache_capacity: DEFAULT_SESSION_CACHE_CAPACITY,
+            replicas: 1,
+            dispatch: DispatchPolicy::JoinShortestQueue,
         }
     }
 }
@@ -275,6 +280,22 @@ impl<'a> PipelineBuilder<'a> {
         self
     }
 
+    /// Data Parallel replica count for [`Pipeline::serve_fleet`]
+    /// (default 1). The cluster is carved into `n` equal slices — whole
+    /// nodes when `n` ≤ the node count — and both the cluster size and
+    /// the pipeline's `world` must divide evenly by `n`.
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.replicas = n;
+        self
+    }
+
+    /// Fleet dispatch policy for [`Pipeline::serve_fleet`] (default
+    /// join-shortest-queue).
+    pub fn dispatcher(mut self, policy: DispatchPolicy) -> Self {
+        self.dispatch = policy;
+        self
+    }
+
     fn resolve_cluster_world(&self) -> Result<(ClusterSpec, usize)> {
         let cluster = self.cluster.clone().unwrap_or_else(|| l40_cluster(1));
         let world = self.world.unwrap_or(cluster.n_gpus);
@@ -374,6 +395,20 @@ impl<'a> PipelineBuilder<'a> {
             Error::config("Pipeline::builder() needs .runtime(&rt) before .build()")
         })?;
         let (cluster, world) = self.resolve_cluster_world()?;
+        if self.replicas == 0 {
+            return Err(Error::config("replicas must be >= 1"));
+        }
+        if self.replicas > 1 {
+            // fail fast: serve_fleet will carve the cluster and split the
+            // world across replicas, so both must divide evenly now
+            cluster.carve(self.replicas)?;
+            if world % self.replicas != 0 {
+                return Err(Error::config(format!(
+                    "world {world} does not split across {} replicas",
+                    self.replicas
+                )));
+            }
+        }
         let mut engine = Engine::new(rt, cluster, world);
         engine.batcher = Batcher::new(self.max_batch).with_aging_rate(self.aging_rate);
         engine.set_queue_capacity(self.queue_capacity);
@@ -388,7 +423,12 @@ impl<'a> PipelineBuilder<'a> {
         engine.default_scheduler = self.scheduler;
         engine.set_plan_cache_enabled(self.plan_cache);
         engine.set_session_cache_capacity(self.session_cache_capacity);
-        Ok(Pipeline { engine, policy: self.parallel })
+        Ok(Pipeline {
+            engine,
+            policy: self.parallel,
+            replicas: self.replicas,
+            dispatch: self.dispatch,
+        })
     }
 }
 
@@ -398,6 +438,8 @@ impl<'a> PipelineBuilder<'a> {
 pub struct Pipeline<'a> {
     engine: Engine<'a>,
     policy: ParallelPolicy,
+    replicas: usize,
+    dispatch: DispatchPolicy,
 }
 
 impl<'a> Pipeline<'a> {
@@ -477,6 +519,65 @@ impl<'a> Pipeline<'a> {
             makespan: self.engine.virtual_now(),
             metrics: self.engine.metrics.clone(),
         })
+    }
+
+    /// Replay a virtual-time arrival trace through a Data Parallel fleet:
+    /// `builder.replicas(n)` fresh replica engines, each on an equal
+    /// carve of the cluster with this pipeline's serving knobs (batcher,
+    /// queue bound, caches, routing policy), behind the
+    /// `builder.dispatcher(..)` policy. Replicas are rebuilt per call
+    /// with zeroed clocks, so repeated replays of the same trace are
+    /// digest-equal — and a single-replica fleet reproduces
+    /// [`serve_trace`](Pipeline::serve_trace) bit-identically.
+    ///
+    /// This pipeline's own engine is untouched (its metrics do not
+    /// accumulate fleet work); the per-replica snapshots live in the
+    /// returned [`FleetReport`].
+    pub fn serve_fleet(&self, trace: &Trace) -> Result<FleetReport> {
+        let mut fleet = Fleet::new(self.replica_engines()?, self.dispatch)?;
+        fleet.replay(trace)
+    }
+
+    /// Build the fleet's replica engines: carve the cluster, split the
+    /// world, copy every serving knob off this pipeline's engine.
+    fn replica_engines(&self) -> Result<Vec<Engine<'a>>> {
+        let r = self.replicas;
+        let carved = self.engine.cluster.carve(r)?;
+        if self.engine.world % r != 0 {
+            return Err(Error::config(format!(
+                "world {} does not split across {r} replicas",
+                self.engine.world
+            )));
+        }
+        let world = self.engine.world / r;
+        if let Some(pc) = self.engine.force_config {
+            if pc.world() > world {
+                return Err(Error::config(format!(
+                    "explicit config [{}] needs {} devices but each of the {r} replicas \
+                     serves on {world}",
+                    pc.describe(),
+                    pc.world()
+                )));
+            }
+        }
+        Ok((0..r)
+            .map(|_| {
+                let mut e = Engine::new(self.engine.rt, carved.clone(), world);
+                e.batcher = Batcher::new(self.engine.batcher.max_batch)
+                    .with_aging_rate(self.engine.batcher.aging_rate);
+                e.set_queue_capacity(self.engine.queue_capacity());
+                e.set_plan_cache_enabled(self.engine.plan_cache_enabled());
+                e.set_session_cache_capacity(self.engine.session_cache_capacity());
+                e.force_config = self.engine.force_config;
+                e.route_policy = self.engine.route_policy;
+                e.route_fidelity = self.engine.route_fidelity;
+                e.memory_cap_bytes = self.engine.memory_cap_bytes;
+                e.deadline_admission = self.engine.deadline_admission;
+                e.force_method = self.engine.force_method;
+                e.default_scheduler = self.engine.default_scheduler;
+                e
+            })
+            .collect())
     }
 
     /// Admit one request into the bounded queue (continuous serving). Pair
@@ -709,6 +810,39 @@ mod tests {
             .plan(&m, 2048)
             .unwrap();
         assert!(explicit.simulated_seconds.is_some(), "{}", explicit.why);
+    }
+
+    #[test]
+    fn serve_fleet_replays_deterministically_and_validates_the_carve() {
+        let rt = Runtime::simulated();
+        let pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(8)
+            .replicas(2)
+            .dispatcher(DispatchPolicy::RoundRobin)
+            .max_batch(2)
+            .queue_capacity(16)
+            .build()
+            .unwrap();
+        let trace = Trace::poisson(0xAB, 12, 2.0).steps(1).guidance(1.0).build();
+        let a = pipe.serve_fleet(&trace).unwrap();
+        let b = pipe.serve_fleet(&trace).unwrap();
+        assert_eq!(a.digest, b.digest, "fresh replicas per call: digest-equal replays");
+        assert_eq!(a.replicas.len(), 2);
+        assert_eq!(a.submitted, 12);
+        assert_eq!(a.served + a.rejected.len() as u64, 12);
+        // each replica serves on world/replicas devices of a half-cluster
+        assert!(a.replicas.iter().all(|r| r.metrics.served > 0));
+        // replica validation is fail-fast at build time
+        let misaligned =
+            Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).world(4).replicas(3).build();
+        assert!(misaligned.is_err(), "8 GPUs cannot carve into 3 replicas");
+        let odd_world =
+            Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).world(5).replicas(2).build();
+        assert!(odd_world.is_err(), "world 5 cannot split across 2 replicas");
+        let zero = Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).replicas(0).build();
+        assert!(zero.is_err());
     }
 
     #[test]

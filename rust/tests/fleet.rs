@@ -1,0 +1,188 @@
+//! Fleet layer tests — hermetic (`Runtime::simulated()`): dispatcher
+//! properties over seeded random loads, the single-replica bit-identity
+//! equivalence with `Pipeline::serve_trace`, multi-replica replay
+//! determinism, and the frontier's replicas-vs-depth crossover on the
+//! paper's 2×8×L40 two-tier cluster.
+
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::{BlockVariant, ModelSpec};
+use xdit::coordinator::{Engine, Trace};
+use xdit::fleet::{frontier, DispatchPolicy, Dispatcher, Fleet, ReplicaView};
+use xdit::pipeline::Pipeline;
+use xdit::runtime::Runtime;
+use xdit::util::rng::Rng;
+use xdit::Planner;
+
+/// The PR 2 serving trace: 64 Poisson arrivals, 2 variants, 3 priority
+/// classes (same seed/shape as `tests/serving.rs::poisson_64`).
+fn poisson_64() -> Trace {
+    Trace::poisson(0xD17, 64, 2.0)
+        .steps(1)
+        .guidance(1.0)
+        .variants(&[BlockVariant::AdaLn, BlockVariant::Cross])
+        .priorities(&[0, 0, 1])
+        .build()
+}
+
+#[test]
+fn jsq_never_routes_to_a_strictly_longer_queue() {
+    // property: over seeded random view slices, the JSQ pick is a global
+    // argmin — no alternative replica ever has a strictly shorter queue
+    let mut rng = Rng::new(0x15C4);
+    let mut d = Dispatcher::new(DispatchPolicy::JoinShortestQueue);
+    for _ in 0..500 {
+        let n = 1 + rng.below(8);
+        let views: Vec<ReplicaView> = (0..n)
+            .map(|_| ReplicaView {
+                pending: rng.below(16),
+                busy_until: rng.below(1000) as f64 / 10.0,
+            })
+            .collect();
+        let k = d.pick(&views);
+        let min = views.iter().map(|v| v.pending).min().unwrap();
+        assert_eq!(
+            views[k].pending, min,
+            "JSQ picked queue depth {} but a replica with {} exists",
+            views[k].pending, min
+        );
+    }
+}
+
+#[test]
+fn power_of_two_is_deterministic_per_seed() {
+    let mut rng = Rng::new(0x9A7);
+    let loads: Vec<Vec<ReplicaView>> = (0..200)
+        .map(|_| {
+            (0..4)
+                .map(|_| ReplicaView { pending: rng.below(12), busy_until: 0.0 })
+                .collect()
+        })
+        .collect();
+    let run = |seed: u64| {
+        let mut d = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed });
+        loads.iter().map(|v| d.pick(v)).collect::<Vec<_>>()
+    };
+    assert_eq!(run(1), run(1), "same seed, same routing sequence");
+    assert_eq!(run(77), run(77));
+    assert_ne!(run(1), run(77), "different seeds must explore differently");
+    // with two replicas the sampled pair always includes the shorter
+    // queue, so po2 never picks a strictly worse replica
+    let mut d = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed: 5 });
+    for _ in 0..200 {
+        let a = rng.below(20);
+        let b = rng.below(20);
+        let views = [
+            ReplicaView { pending: a, busy_until: 0.0 },
+            ReplicaView { pending: b, busy_until: 0.0 },
+        ];
+        let k = d.pick(&views);
+        assert!(views[k].pending <= a.min(b), "po2 with 2 replicas must pick the min");
+    }
+}
+
+#[test]
+fn single_replica_fleet_is_bit_identical_to_serve_trace() {
+    let trace = poisson_64();
+    let rt = Runtime::simulated();
+
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .max_batch(4)
+        .build()
+        .unwrap();
+    let expected = pipe.serve_trace(&trace).unwrap();
+
+    // a bare engine with the same knobs (Engine defaults = builder
+    // defaults: max_batch 4, queue 64, caches on)
+    let engine = Engine::new(&rt, l40_cluster(1), 4);
+    let mut fleet = Fleet::new(vec![engine], DispatchPolicy::JoinShortestQueue).unwrap();
+    let (report, responses) = fleet.replay_collect(&trace).unwrap();
+
+    assert_eq!(report.submitted, expected.submitted);
+    assert_eq!(responses.len(), expected.responses.len());
+    for (x, y) in responses.iter().zip(&expected.responses) {
+        assert_eq!(x.id, y.id, "completion order must match serve_trace");
+        assert_eq!(x.latency, y.latency);
+        assert_eq!(x.model_seconds, y.model_seconds);
+        assert_eq!(x.comm_bytes, y.comm_bytes);
+        assert_eq!(x.parallel_config, y.parallel_config);
+        assert_eq!(x.predicted_seconds, y.predicted_seconds);
+        assert_eq!(x.simulated_seconds, y.simulated_seconds);
+        assert_eq!(x.scheduler, y.scheduler);
+        assert_eq!(x.latent, y.latent, "latents must be bit-identical");
+    }
+    assert_eq!(report.makespan, expected.makespan);
+    assert_eq!(report.rejected.len(), expected.rejected.len());
+    let m = &report.replicas[0].metrics;
+    assert_eq!(m.served, expected.metrics.served);
+    assert_eq!(m.batches, expected.metrics.batches);
+    assert_eq!(m.occupancy_sum, expected.metrics.occupancy_sum);
+    assert_eq!(m.latency.sum, expected.metrics.latency.sum);
+    assert_eq!(m.queue_delay.sum, expected.metrics.queue_delay.sum);
+}
+
+#[test]
+fn two_replica_fleet_replays_deterministically() {
+    let trace = poisson_64();
+    let run = |policy| {
+        let rt = Runtime::simulated();
+        let pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(8)
+            .replicas(2)
+            .dispatcher(policy)
+            .max_batch(4)
+            .build()
+            .unwrap();
+        let r = pipe.serve_fleet(&trace).unwrap();
+        assert_eq!(r.submitted, 64);
+        assert_eq!(r.served + r.rejected.len() as u64, 64);
+        assert_eq!(r.replicas.iter().map(|s| s.routed).sum::<usize>(), 64);
+        (r.digest, r.makespan, r.served)
+    };
+    for policy in [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::PowerOfTwo { seed: 0xD17 },
+    ] {
+        assert_eq!(run(policy), run(policy), "fleet replay must be deterministic ({policy:?})");
+    }
+}
+
+#[test]
+fn frontier_crossover_on_the_two_tier_l40x16() {
+    let m = ModelSpec::by_name("pixart").unwrap();
+    let f = frontier(&Planner::default(), &m, 2048, &l40_cluster(2), &[0.05, 0.62]).unwrap();
+
+    // the deep 16-GPU hybrid spans both nodes; single-node carves do not
+    assert_eq!(f.cells[0].replicas, 1);
+    assert!(f.cells[0].cross_node, "the full-cluster hybrid crosses Ethernet");
+    assert!(f.cells.iter().filter(|c| c.replicas > 1).all(|c| !c.cross_node));
+
+    // low traffic: latency-optimal = the deep hybrid, despite Ethernet
+    let low = &f.rates[0];
+    assert_eq!(f.cells[low.best].replicas, 1, "\n{}", f.table());
+    // near saturation: the deep hybrid's sub-linear cross-node scaling
+    // loses to Data Parallel replicas
+    let high = &f.rates[1];
+    assert!(f.cells[high.best].replicas > 1, "\n{}", f.table());
+    assert!(high.expected_latency.is_finite());
+
+    // both whys cite the tier-priced comm cost
+    for p in &f.rates {
+        assert!(p.why.contains("Ethernet"), "{}", p.why);
+        assert!(p.why.contains("GB/s"), "{}", p.why);
+    }
+    // the crossover's mechanism: going 8 -> 16 GPUs over Ethernet is
+    // sub-linear (less than 2x faster), so two single-node replicas out-
+    // capacity the deep hybrid — while the deep hybrid keeps the lowest
+    // single-image service time
+    let deep = &f.cells[0];
+    let duo = f.cells.iter().find(|c| c.replicas == 2).unwrap();
+    assert!(deep.service_seconds > duo.service_seconds / 2.0, "16-GPU scaling must be sub-2x");
+    assert!(duo.capacity > deep.capacity);
+    assert!(deep.service_seconds < duo.service_seconds);
+}
