@@ -96,6 +96,45 @@ fn main() {
     let sessions_constant = m.sessions_built <= DISTINCT_SHAPES && m.batches > DISTINCT_SHAPES;
     let ticks_per_sec = m.ticks as f64 / wall.as_secs_f64().max(1e-9);
 
+    // --- staged execution: decode of N overlaps denoise of N+1 ------------
+    // same seeded trace with every other request decoding; the staged
+    // engine (bounded denoise→decode queue, patch-parallel VAE) must
+    // never have a worse virtual makespan than the serial reference
+    let staged_trace = Trace::poisson(SEED, REQUESTS, RATE)
+        .steps(STEPS)
+        .guidance(1.0)
+        .variants(&[BlockVariant::AdaLn, BlockVariant::Cross])
+        .decode_every(2)
+        .build();
+    let mut serial_pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .queue_capacity(REQUESTS)
+        .build()
+        .expect("serial pipeline builds");
+    let serial_report = serial_pipe.serve_trace(&staged_trace).expect("serial replay succeeds");
+    let mut staged_pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .queue_capacity(REQUESTS)
+        .stage_overlap(true)
+        .vae_parallelism(4)
+        .stage_queue_capacity(2)
+        .build()
+        .expect("staged pipeline builds");
+    let staged_report = staged_pipe.serve_trace(&staged_trace).expect("staged replay succeeds");
+    assert_eq!(staged_report.responses.len(), serial_report.responses.len());
+    assert!(
+        staged_report.makespan <= serial_report.makespan + 1e-9,
+        "staged execution regressed the makespan: {} vs serial {}",
+        staged_report.makespan,
+        serial_report.makespan
+    );
+    let (_, denoise_frac, decode_frac) = staged_report.stage_occupancy();
+    let stage_stats = staged_report.metrics.stages.clone();
+
     // --- plans/sec: cold sweep vs PlanCache hit ---------------------------
     // paper-scale cell with a big enumeration space (pixart @ 2048px on
     // 16 GPUs), so "cold" is the real per-batch cost the cache removes
@@ -178,6 +217,17 @@ fn main() {
             ]),
         ),
         (
+            "stages",
+            obj(vec![
+                ("serial_makespan_s", num(serial_report.makespan)),
+                ("overlap_makespan_s", num(staged_report.makespan)),
+                ("denoise_busy_frac", num(denoise_frac)),
+                ("decode_busy_frac", num(decode_frac)),
+                ("queue_depth_p95", num(stage_stats.queue_depth.p95() as f64)),
+                ("decode_stalls", num(stage_stats.decode_stalls as f64)),
+            ]),
+        ),
+        (
             "pool",
             obj(vec![
                 ("hits", num(pool_stats.hits as f64)),
@@ -215,6 +265,13 @@ fn main() {
         pool_stats.hit_rate() * 100.0,
         pool_stats.fresh_bytes as f64 / 1e6,
         pool_stats.reused_bytes as f64 / 1e6
+    );
+    println!(
+        "staged: serial {:.3}s -> overlap {:.3}s virtual makespan, {} | {} — PASS",
+        serial_report.makespan,
+        staged_report.makespan,
+        stage_stats.report(staged_report.makespan),
+        if staged_report.makespan <= serial_report.makespan { "never worse" } else { "WORSE" }
     );
     println!(
         "sessions: {} built / {} reused over {} batches — {}",

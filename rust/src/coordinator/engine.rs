@@ -28,8 +28,20 @@
 //! cluster serves batches one after another (the whole mesh is owned by one
 //! generation at a time, as in xDiT); latency = finish - arrival, split
 //! into queue delay (arrival -> launch) and execution (launch -> finish).
+//!
+//! Staged execution (`stage_overlap`, off by default): each request flows
+//! text-encode → denoise → VAE-decode with one virtual clock per stage
+//! and a bounded denoise→decode queue (`stage_queue_capacity`), so the
+//! decode of request N overlaps the denoise of request N+1 — the PipeDiT
+//! decoupling. `virtual_now()` stays the *denoise* clock (admission keeps
+//! flowing while decode drains); [`Engine::horizon`] is the true end of
+//! the run including the decode tail. Outputs are bit-identical to the
+//! serial path (the same decode runs, just earlier relative to later
+//! denoises) and the makespan is provably never worse — see the
+//! "Staged execution (L4.5)" chapter of `DESIGN.md` for the induction.
 
 use std::cell::RefCell;
+use std::collections::VecDeque;
 
 use crate::comm::Clocks;
 use crate::config::hardware::ClusterSpec;
@@ -53,6 +65,9 @@ pub const DEFAULT_QUEUE_CAPACITY: usize = 64;
 
 /// Default bound on warm sessions the engine keeps between batches.
 pub const DEFAULT_SESSION_CACHE_CAPACITY: usize = 8;
+
+/// Default bound on the denoise→decode inter-stage queue (staged mode).
+pub const DEFAULT_STAGE_QUEUE_CAPACITY: usize = 2;
 
 /// Shape of a warm session: requests routed to the same (variant,
 /// resolution, config) can reuse the mesh/model the last batch built.
@@ -145,6 +160,19 @@ pub struct Engine<'a> {
     /// Pipeline-level scheduler default; per-request overrides win, the
     /// model's benchmark scheduler is the final fallback.
     pub default_scheduler: Option<SchedulerKind>,
+    /// Staged execution: overlap the VAE decode of request N with the
+    /// denoise of request N+1 on per-stage virtual clocks (off = the
+    /// serial reference path; outputs are bit-identical either way).
+    pub stage_overlap: bool,
+    /// Devices the parallel VAE shards each decode across patch-wise
+    /// (`None` = `min(plan world, 8)`, the auto default). The latent row
+    /// count must divide by it with a per-device strip of 2/4/8 rows —
+    /// `decode_latent` rejects other values.
+    pub vae_parallelism: Option<usize>,
+    /// Bound on the denoise→decode queue in staged mode: when this many
+    /// decodes are still queued, the next decode-bound denoise launch
+    /// stalls (backpressure — `Metrics::stages` counts the stalls).
+    pub stage_queue_capacity: usize,
     /// Bounded admission queue. Engine admission itself is leader-side
     /// (`submit` takes `&mut self`); cross-thread producers feed an
     /// *external* `RequestQueue` handle the leader drains into a `Trace`
@@ -164,8 +192,20 @@ pub struct Engine<'a> {
     sessions: SessionCache<'a>,
     /// Patch-parallel VAE, built once per engine on first decode.
     vae: Option<ParallelVae<'a>>,
-    /// Virtual clock of the serving horizon.
+    /// Virtual clock of the denoise stage (the serving horizon in serial
+    /// mode; admission and batching key off this clock in both modes).
     now: f64,
+    /// Virtual clock of the text-encode stage (staged mode; monotone in
+    /// arrival order, so it never gates anything on the tiny family's
+    /// zero-cost encode — kept for honest stage structure).
+    enc_clock: f64,
+    /// Virtual clock of the VAE-decode stage (staged mode): when the
+    /// decoder finishes its last queued decode.
+    dec_clock: f64,
+    /// Decode start times of the most recent `stage_queue_capacity`
+    /// decodes (staged mode): the front entry is when the denoiser's
+    /// queue slot frees up — the backpressure gate.
+    decode_starts: VecDeque<f64>,
 }
 
 impl<'a> Engine<'a> {
@@ -185,12 +225,18 @@ impl<'a> Engine<'a> {
             deadline_admission: false,
             force_method: None,
             default_scheduler: None,
+            stage_overlap: false,
+            vae_parallelism: None,
+            stage_queue_capacity: DEFAULT_STAGE_QUEUE_CAPACITY,
             queue: RequestQueue::new(DEFAULT_QUEUE_CAPACITY),
             waiting: WaitingSet::new(1.0),
             plan_cache: RefCell::new(PlanCache::default()),
             sessions: SessionCache::new(DEFAULT_SESSION_CACHE_CAPACITY),
             vae: None,
             now: 0.0,
+            enc_clock: 0.0,
+            dec_clock: 0.0,
+            decode_starts: VecDeque::new(),
         }
     }
 
@@ -518,14 +564,25 @@ impl<'a> Engine<'a> {
             let mut image = None;
             let mut decode_time = 0.0;
             if req.decode {
-                let (img, t) = self.decode_latent(&r.latent, pc.world().min(8))?;
+                let n = self.vae_parallelism.unwrap_or_else(|| pc.world().min(8)).max(1);
+                let (img, t) = self.decode_latent(&r.latent, n)?;
                 image = Some(img);
                 decode_time = t;
             }
-            let start = self.now.max(req.arrival);
-            let exec = model_seconds + decode_time;
-            let finish = start + exec;
-            self.now = finish;
+            let (start, exec, finish) = if self.stage_overlap {
+                self.staged_times(req.arrival, req.decode, model_seconds, decode_time)
+            } else {
+                // the serial reference path: denoise + decode charged
+                // back-to-back on the single clock (kept literal so the
+                // bit-identity of the off mode is auditable)
+                let start = self.now.max(req.arrival);
+                let exec = model_seconds + decode_time;
+                let finish = start + exec;
+                self.now = finish;
+                (start, exec, finish)
+            };
+            self.metrics.stages.denoise_busy += model_seconds;
+            self.metrics.stages.decode_busy += decode_time;
             let latency = finish - req.arrival;
             self.metrics.latency.observe(latency);
             self.metrics.queue_delay.observe(start - req.arrival);
@@ -550,34 +607,116 @@ impl<'a> Engine<'a> {
                 px: req.px,
             });
         }
-        self.metrics.horizon = self.now;
+        self.metrics.horizon = self.horizon();
         self.sessions.store(skey, sess);
         self.sync_cache_metrics();
         Ok(out)
     }
 
+    /// Staged-mode timing of one request: advance the per-stage clocks
+    /// and return `(start, exec, finish)`.
+    ///
+    /// Recurrences (request k, arrival `a`, denoise `m`, decode `d`):
+    /// * encode finishes at `e = max(enc_clock, a)` (zero-cost stage);
+    /// * denoise starts at `start = max(now, e, gate)` where `gate` is
+    ///   the decode *start* of the request `capacity` decodes back — the
+    ///   bounded-queue backpressure (a denoise may not finish into a full
+    ///   queue, so it is not launched before a slot frees);
+    /// * denoise finishes at `now = start + m`;
+    /// * the decode runs `[max(dec_clock, now), .. + d]` on the decode
+    ///   clock, overlapping later denoises.
+    ///
+    /// Induction vs the serial path (`S_k = max(F_{k-1}, a_k)`,
+    /// `F_k = S_k + m_k + d_k`): every staged clock is `<= F_{k-1}` when
+    /// request k launches, so `start_k <= S_k` and `finish_k <= F_k` —
+    /// the staged makespan is never worse, and strictly better whenever a
+    /// decode overlaps the next denoise. `tests/stages.rs` property-tests
+    /// both directions.
+    fn staged_times(
+        &mut self,
+        arrival: f64,
+        decode: bool,
+        model_seconds: f64,
+        decode_time: f64,
+    ) -> (f64, f64, f64) {
+        let e_fin = self.enc_clock.max(arrival);
+        self.enc_clock = e_fin;
+        let cap = self.stage_queue_capacity.max(1);
+        let ready = self.now.max(e_fin);
+        let gate = match (decode, self.decode_starts.front()) {
+            (true, Some(&slot)) if self.decode_starts.len() >= cap => slot,
+            _ => 0.0,
+        };
+        let start = ready.max(gate);
+        if start > ready {
+            self.metrics.stages.decode_stalls += 1;
+            self.metrics.stages.stall_seconds += start - ready;
+        }
+        let den_fin = start + model_seconds;
+        self.now = den_fin;
+        if !decode {
+            return (start, den_fin - start, den_fin);
+        }
+        let v_start = self.dec_clock.max(den_fin);
+        let v_fin = v_start + decode_time;
+        self.dec_clock = v_fin;
+        // queue depth at enqueue: this request plus every earlier decode
+        // the decoder has not yet started (bounded by `cap` via the gate)
+        let depth = 1 + self.decode_starts.iter().filter(|&&s| s > den_fin).count();
+        self.metrics.stages.queue_depth.observe(depth);
+        self.decode_starts.push_back(v_start);
+        while self.decode_starts.len() > cap {
+            self.decode_starts.pop_front();
+        }
+        (start, v_fin - start, v_fin)
+    }
+
     /// Decode a final latent with the engine-owned parallel VAE over `n`
     /// simulated devices. Returns the image and the simulated decode time.
+    /// Also tracks the peak per-device activation bytes of the decode in
+    /// `Metrics::stages` (the `vae::memory` budget quantity).
     pub fn decode_latent(&mut self, latent: &Tensor, n: usize) -> Result<(Tensor, f64)> {
         self.ensure_vae()?;
         let vae = self.vae.as_ref().unwrap();
         let z = latent.reshape(&[vae.hw, vae.hw, vae.c])?;
+        let peak = crate::vae::vae_peak_bytes(8 * vae.hw, vae.c) / n.max(1) as f64;
         let mut clocks = Clocks::new(self.cluster.n_gpus);
         let img = vae.decode_parallel(&z, n, &self.cluster, &mut clocks)?;
+        if peak > self.metrics.stages.decode_peak_bytes {
+            self.metrics.stages.decode_peak_bytes = peak;
+        }
         Ok((img, clocks.makespan()))
     }
 
     /// Current end of the virtual serving horizon (seconds since engine
-    /// start) — where the next arriving request would start.
+    /// start) — where the next arriving request would start *denoising*.
+    /// In staged mode the decode stage may still be draining past this
+    /// point; [`Engine::horizon`] includes that tail.
     pub fn virtual_now(&self) -> f64 {
         self.now
     }
 
-    /// Advance the virtual clock to `t` (idle gap between arrivals in a
-    /// trace replay). Never moves backwards.
+    /// True end of the run across all stages: the denoise clock or the
+    /// decode drain, whichever is later. Equal to [`virtual_now`] when
+    /// staging is off.
+    ///
+    /// [`virtual_now`]: Engine::virtual_now
+    pub fn horizon(&self) -> f64 {
+        self.now.max(self.dec_clock)
+    }
+
+    /// Advance the virtual clocks to `t` (idle gap between arrivals in a
+    /// trace replay). Never moves backwards — and never *below* a stage
+    /// clock that is already past `t`.
     pub fn advance_to(&mut self, t: f64) {
         if t > self.now {
             self.now = t;
+        }
+        if t > self.enc_clock {
+            self.enc_clock = t;
+        }
+        if t > self.dec_clock {
+            self.dec_clock = t;
         }
     }
 
@@ -652,6 +791,46 @@ mod tests {
         // the split accounting adds up
         assert_eq!(eng.metrics.queue_delay.count, 3);
         assert_eq!(eng.metrics.exec_time.count, 3);
+    }
+
+    #[test]
+    fn staged_times_bounds_the_decode_queue_with_backpressure() {
+        // synthetic stage durations so the magnitudes are controlled:
+        // decode (1.0s) is 10x slower than denoise (0.1s), so the
+        // denoise→decode queue must fill and stall the denoiser
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        eng.stage_overlap = true;
+        eng.stage_queue_capacity = 1;
+        let mut finish = 0.0;
+        for _ in 0..8 {
+            finish = eng.staged_times(0.0, true, 0.1, 1.0).2;
+        }
+        let s = &eng.metrics.stages;
+        assert!(s.decode_stalls > 0, "cap=1 with decode >> denoise must stall");
+        assert!(s.stall_seconds > 0.0);
+        assert!(s.queue_depth.max() <= 1, "depth above capacity: {}", s.queue_depth.max());
+        assert_eq!(s.queue_depth.count, 8);
+        // never worse than the serial reference 8·(0.1 + 1.0), and
+        // strictly better because decode overlaps the next denoise
+        assert!(finish <= 8.0 * 1.1 + 1e-9);
+        assert!(finish < 8.0 * 1.1 - 1e-9, "decode must overlap denoise");
+        // decode-heavy steady state: one decode in flight back to back
+        assert!((eng.horizon() - finish).abs() < 1e-12);
+        assert!(eng.virtual_now() < eng.horizon(), "decode tail drains past the denoise clock");
+
+        // a roomier queue stalls strictly less and never lands later
+        let rt2 = setup();
+        let mut wide = Engine::new(&rt2, l40_cluster(1), 4);
+        wide.stage_overlap = true;
+        wide.stage_queue_capacity = 4;
+        let mut wide_finish = 0.0;
+        for _ in 0..8 {
+            wide_finish = wide.staged_times(0.0, true, 0.1, 1.0).2;
+        }
+        assert!(wide.metrics.stages.stall_seconds <= s.stall_seconds);
+        assert!(wide_finish <= finish + 1e-9);
+        assert!(wide.metrics.stages.queue_depth.max() <= 4);
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Serving metrics: latency histograms (log buckets), throughput counters,
-//! the queue-delay vs execution-time split, and batch-occupancy stats of
-//! the continuous-batching scheduler.
+//! the queue-delay vs execution-time split, batch-occupancy stats of
+//! the continuous-batching scheduler, and the per-stage occupancy block
+//! of the staged engine ([`StageStats`]).
+
+use crate::coordinator::stages::StageStats;
 
 /// Log-bucketed latency histogram over seconds (~1ms to ~1000s).
 #[derive(Debug, Clone)]
@@ -116,6 +119,10 @@ pub struct Metrics {
     pub occupancy_max: u64,
     /// Requests that finished after their declared deadline.
     pub deadline_misses: u64,
+    /// Per-stage busy seconds, inter-stage queue depths, and decode
+    /// backpressure stalls (the staged-execution block; busy seconds
+    /// accumulate on the serial path too).
+    pub stages: StageStats,
 }
 
 impl Metrics {

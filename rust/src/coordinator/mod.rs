@@ -36,6 +36,8 @@ pub mod queue;
 pub mod request;
 /// Routing policy layer (§5.2.4 heuristic + cost-model default).
 pub mod router;
+/// Per-stage occupancy + bounded-queue stats of the staged engine.
+pub mod stages;
 /// Deterministic virtual-time arrival traces.
 pub mod trace;
 
@@ -47,4 +49,5 @@ pub use planner::{Fidelity, Plan, Planner, RoutePolicy};
 pub use queue::RequestQueue;
 pub use request::{GenRequest, GenResponse, RequestId};
 pub use router::{paper_heuristic, route, route_with_policy};
+pub use stages::{DepthStats, StageStats};
 pub use trace::Trace;

@@ -1,0 +1,192 @@
+//! Per-stage accounting for the staged execution path (L4.5): busy
+//! seconds of the text-encode / denoise / VAE-decode stages, the bounded
+//! inter-stage queue depth distribution, and decode backpressure stalls.
+//!
+//! The staged engine (see `coordinator::engine`) keeps one virtual clock
+//! per stage and hands each request from stage to stage through a bounded
+//! queue. The numbers here answer the questions the single `horizon`
+//! figure cannot: how busy was each stage, how deep did the
+//! denoise→decode queue run, and how often did a full queue stall the
+//! denoiser (backpressure). They are embedded in
+//! [`Metrics`](crate::coordinator::metrics::Metrics) and surface in
+//! `ServeReport::summary()` / the `serve` CLI as the per-stage occupancy
+//! block.
+
+/// Exact distribution of small non-negative integers (inter-stage queue
+/// depths). The log-bucketed latency [`Histogram`] is built for seconds
+/// spanning six decades; depths are tiny integers (bounded by the queue
+/// capacity), so this counts them exactly instead — `p50`/`p95` return
+/// actually-observed depths, not bucket upper bounds.
+///
+/// [`Histogram`]: crate::coordinator::metrics::Histogram
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DepthStats {
+    /// `counts[d]` = observations of depth `d`.
+    counts: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+}
+
+impl DepthStats {
+    /// An empty distribution.
+    pub fn new() -> DepthStats {
+        DepthStats::default()
+    }
+
+    /// Record one observation of `depth`.
+    pub fn observe(&mut self, depth: usize) {
+        if self.counts.len() <= depth {
+            self.counts.resize(depth + 1, 0);
+        }
+        self.counts[depth] += 1;
+        self.count += 1;
+    }
+
+    /// Exact quantile: the smallest depth `d` such that at least
+    /// `q * count` observations are `<= d` (0 when empty).
+    pub fn quantile(&self, q: f64) -> usize {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (d, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return d;
+            }
+        }
+        self.counts.len().saturating_sub(1)
+    }
+
+    /// Median observed depth.
+    pub fn p50(&self) -> usize {
+        self.quantile(0.50)
+    }
+
+    /// 95th-percentile observed depth.
+    pub fn p95(&self) -> usize {
+        self.quantile(0.95)
+    }
+
+    /// Largest observed depth (0 when empty).
+    pub fn max(&self) -> usize {
+        self.counts.iter().rposition(|&c| c > 0).unwrap_or(0)
+    }
+}
+
+/// Per-stage occupancy and backpressure counters of the staged engine.
+///
+/// Busy seconds accumulate on both the serial and the staged path (the
+/// work per stage is identical — staging only changes *when* it runs);
+/// the queue/stall fields only move when `stage_overlap` is on, because
+/// the serial path has no inter-stage queue to stall on.
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    /// Virtual seconds the text-encode stage was busy. The tiny-family
+    /// conditioning path is folded into the denoise forward, so the
+    /// engine charges this stage zero seconds — the stage exists
+    /// structurally (it gates admission ordering) and the field keeps the
+    /// report shape honest for backends with a real encoder.
+    pub encode_busy: f64,
+    /// Virtual seconds the denoise stage was busy (`model_seconds`).
+    pub denoise_busy: f64,
+    /// Virtual seconds the VAE-decode stage was busy.
+    pub decode_busy: f64,
+    /// Denoise launches delayed because the denoise→decode queue was at
+    /// capacity (backpressure events).
+    pub decode_stalls: u64,
+    /// Total virtual seconds denoise launches spent stalled on the full
+    /// decode queue.
+    pub stall_seconds: f64,
+    /// Depth of the denoise→decode queue observed at every decode
+    /// enqueue (bounded by the queue capacity — the stall above is what
+    /// enforces the bound).
+    pub queue_depth: DepthStats,
+    /// Peak per-device activation bytes of any parallel decode this
+    /// engine ran (`vae_peak_bytes(out_px, c) / n` — the quantity
+    /// `vae::memory::vae_fits` budgets against).
+    pub decode_peak_bytes: f64,
+}
+
+impl StageStats {
+    /// Busy fraction of `horizon` for each stage:
+    /// `(encode, denoise, decode)`. Zero horizon yields zeros.
+    pub fn occupancy(&self, horizon: f64) -> (f64, f64, f64) {
+        if horizon <= 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (
+            self.encode_busy / horizon,
+            self.denoise_busy / horizon,
+            self.decode_busy / horizon,
+        )
+    }
+
+    /// One-line per-stage occupancy block for reports: busy fractions at
+    /// `horizon`, queue depth p50/p95, and the backpressure stall total.
+    pub fn report(&self, horizon: f64) -> String {
+        let (e, d, v) = self.occupancy(horizon);
+        format!(
+            "stages: encode {:.0}% / denoise {:.0}% / decode {:.0}% busy | \
+             decode queue depth p50/p95 {}/{} | {} stalls ({:.3}s)",
+            e * 100.0,
+            d * 100.0,
+            v * 100.0,
+            self.queue_depth.p50(),
+            self.queue_depth.p95(),
+            self.decode_stalls,
+            self.stall_seconds,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_stats_are_exact() {
+        let mut d = DepthStats::new();
+        for depth in [1usize, 1, 1, 2, 2, 3] {
+            d.observe(depth);
+        }
+        assert_eq!(d.count, 6);
+        assert_eq!(d.p50(), 1, "median of 1,1,1,2,2,3");
+        assert_eq!(d.p95(), 3);
+        assert_eq!(d.max(), 3);
+        assert_eq!(d.quantile(1.0), 3);
+        // empty distribution divides cleanly
+        let empty = DepthStats::new();
+        assert_eq!(empty.p50(), 0);
+        assert_eq!(empty.max(), 0);
+    }
+
+    #[test]
+    fn occupancy_fractions() {
+        let mut s = StageStats::default();
+        s.denoise_busy = 3.0;
+        s.decode_busy = 1.0;
+        let (e, d, v) = s.occupancy(4.0);
+        assert_eq!(e, 0.0);
+        assert!((d - 0.75).abs() < 1e-12);
+        assert!((v - 0.25).abs() < 1e-12);
+        assert_eq!(s.occupancy(0.0), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn report_contains_the_pinned_segments() {
+        let mut s = StageStats::default();
+        s.denoise_busy = 2.0;
+        s.decode_busy = 1.0;
+        s.decode_stalls = 2;
+        s.stall_seconds = 0.5;
+        s.queue_depth.observe(1);
+        s.queue_depth.observe(2);
+        let r = s.report(4.0);
+        assert!(r.contains("denoise 50%"), "{r}");
+        assert!(r.contains("decode 25%"), "{r}");
+        assert!(r.contains("depth p50/p95 1/2"), "{r}");
+        assert!(r.contains("2 stalls (0.500s)"), "{r}");
+    }
+}

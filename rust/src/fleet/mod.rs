@@ -165,7 +165,7 @@ impl<'a> Fleet<'a> {
             .zip(&routed)
             .map(|(e, &routed)| ReplicaStat {
                 routed,
-                horizon: e.virtual_now(),
+                horizon: e.horizon(),
                 metrics: e.metrics.clone(),
             })
             .collect();

@@ -8,8 +8,11 @@
 //!   the five parallel strategies (TP, SP-Ulysses, SP-Ring, DistriFusion,
 //!   PipeFusion), CFG parallelism, the hybrid mesh with the KV-consistency
 //!   fix, the patch-parallel VAE, a serving front-end
-//!   (router/batcher/engine), and the analytic performance model that
-//!   regenerates every figure/table of the paper.
+//!   (router/batcher/engine) with optional staged execution — text-encode,
+//!   denoise and VAE-decode on per-stage clocks with a bounded
+//!   denoise→decode queue, so decode of batch N overlaps denoise of
+//!   batch N+1 — and the analytic performance model that regenerates
+//!   every figure/table of the paper.
 //! * **L4 ([`perf::simulator`])** — the discrete-event overlap simulator:
 //!   lowers any valid [`config::parallel::ParallelConfig`] into a per-GPU
 //!   event [`Timeline`] (busy/idle/comm spans, critical path, achieved

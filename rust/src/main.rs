@@ -39,13 +39,20 @@ commands:
             --cluster l40x8 [--scheduler ddim|dpm|flow_match]
             [--capacity 64 --max-batch 4 --deadline-slack 10 --seed 0]
             [--no-plan-cache] [--session-cache 8]
+            [--stage-overlap] [--vae 4] [--stage-queue 2]
+            [--decode-every 1]
             (replays a deterministic Poisson trace through the
              continuous-batching scheduler; runs on the simulated
              backend when artifacts are absent. Prints a steady-state
              summary — plan-cache hit rate, sessions reused vs built —
              after the serving report; --no-plan-cache disables the
              routing memo for debugging, --session-cache 0 disables
-             warm-session reuse)
+             warm-session reuse. --stage-overlap runs the staged
+             engine: VAE decode of batch N overlaps denoise of batch
+             N+1 behind a bounded queue (--stage-queue), with the
+             decode patch-sharded over --vae devices; --decode-every k
+             decodes every k-th request. The report gains a per-stage
+             occupancy line either way)
   fleet     --replicas 2 --cluster l40x16 --gpus 16 --requests 256
             --rate 2.0 --steps 2 --px 256 [--model tiny-adaln]
             [--policy rr|jsq|po2 (default: jsq)] [--seed 0]
@@ -74,12 +81,17 @@ commands:
             [--strategy serial|cfg|tp|ulysses|ring|distrifusion|
              pipefusion|hybrid|all (default: hybrid)]
             [--steps 4] [--width 72] [--json]
+            [--batches 4 --stage-overlap --vae 2 --stage-queue 2]
             (discrete-event overlap simulator: lowers the strategy into
              per-rank compute/comm/idle spans and renders an ASCII Gantt
              with makespan, closed-form comparison, achieved overlap and
              the critical path; --json emits the full span timeline.
              'hybrid' asks the auto-planner at simulated fidelity, so
-             the printed why cites the critical path)
+             the printed why cites the critical path. --batches lowers
+             the staged serving pipeline instead: denoise ranks feed
+             dedicated --vae decode ranks through a bounded queue, and
+             with --stage-overlap the decode 'v' spans of batch N render
+             under the denoise '#' spans of batch N+1)
   figures   --which fig8|fig14|table1|table3|memory [--px 1024]
   inspect   [--artifacts artifacts]
 ";
@@ -211,7 +223,7 @@ fn serve(args: &Args) -> xdit::Result<()> {
     let rate = args.f64_or("rate", 0.5)?;
     let variant = variant_of(args.str_or("model", "tiny-adaln"))?;
 
-    let mut pipe = Pipeline::builder()
+    let mut builder = Pipeline::builder()
         .runtime(&rt)
         .cluster(cluster_of(args)?)
         .world(args.usize_or("gpus", 8)?)
@@ -219,13 +231,21 @@ fn serve(args: &Args) -> xdit::Result<()> {
         .queue_capacity(args.usize_or("capacity", 64)?)
         .plan_cache(!args.bool("no-plan-cache"))
         .session_cache_capacity(args.usize_or("session-cache", 8)?)
-        .build()?;
+        .stage_overlap(args.bool("stage-overlap"))
+        .stage_queue_capacity(args.usize_or("stage-queue", 2)?);
+    if args.has("vae") {
+        builder = builder.vae_parallelism(args.usize_or("vae", 1)?);
+    }
+    let mut pipe = builder.build()?;
 
     let mut trace = Trace::poisson(args.usize_or("seed", 0)? as u64, n, rate)
         .steps(args.usize_or("steps", 4)?)
         .variants(&[variant])
         .resolutions(&[args.usize_or("px", 256)?])
         .priorities(&[0, 0, 0, 1]);
+    if args.has("decode-every") {
+        trace = trace.decode_every(args.usize_or("decode-every", 0)?);
+    }
     if args.has("scheduler") {
         trace = trace.schedulers(&[SchedulerKind::parse(args.str_or("scheduler", ""))?]);
     }
@@ -368,7 +388,9 @@ fn route_cmd(args: &Args) -> xdit::Result<()> {
 }
 
 fn timeline_cmd(args: &Args) -> xdit::Result<()> {
-    use xdit::perf::simulator::{render, simulate, strategy_config, STRATEGIES};
+    use xdit::perf::simulator::{
+        render, simulate, simulate_stages, strategy_config, StageSpec, STRATEGIES,
+    };
     let model = ModelSpec::by_name(args.str_or("model", "pixart"))?;
     let cluster = cluster_of(args)?;
     let gpus = args.usize_or("gpus", cluster.n_gpus)?;
@@ -407,8 +429,21 @@ fn timeline_cmd(args: &Args) -> xdit::Result<()> {
         let (method, pc) = strategy_config(strat, &model, px, &cluster, gpus, steps)?;
         (method, pc, None)
     };
-    let mut tl = simulate(&model, px, &cluster, method, &pc, steps);
-    if let Some(name) = label {
+    let staged = args.has("batches") || args.bool("stage-overlap");
+    let mut tl = if staged {
+        // lower the staged serving pipeline: denoise ranks feed the
+        // dedicated decode ranks through the bounded queue
+        let spec = StageSpec {
+            batches: args.usize_or("batches", 4)?,
+            vae_parallelism: args.usize_or("vae", 2)?,
+            queue_capacity: args.usize_or("stage-queue", 2)?,
+            overlap: args.bool("stage-overlap"),
+        };
+        simulate_stages(&model, px, &cluster, method, &pc, steps, spec)
+    } else {
+        simulate(&model, px, &cluster, method, &pc, steps)
+    };
+    if let Some(name) = label.filter(|_| !staged) {
         tl.strategy = name;
     }
     if args.bool("json") {

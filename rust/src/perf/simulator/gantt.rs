@@ -17,7 +17,7 @@ pub const MAX_WIDTH: usize = 240;
 /// Dominant span kind of `rank` inside the window `[t0, t1)`, or `None`
 /// when the rank has already finished.
 fn dominant(tl: &Timeline, rank: usize, t0: f64, t1: f64) -> Option<SpanKind> {
-    let mut acc = [0.0f64; 3]; // compute, comm, idle
+    let mut acc = [0.0f64; 4]; // compute, comm, decode, idle
     for s in &tl.ranks[rank].spans {
         let lo = s.start.max(t0);
         let hi = s.end.min(t1);
@@ -25,7 +25,8 @@ fn dominant(tl: &Timeline, rank: usize, t0: f64, t1: f64) -> Option<SpanKind> {
             let slot = match s.kind {
                 SpanKind::Compute => 0,
                 SpanKind::Comm => 1,
-                SpanKind::Idle => 2,
+                SpanKind::Decode => 2,
+                SpanKind::Idle => 3,
             };
             acc[slot] += hi - lo;
         }
@@ -33,12 +34,16 @@ fn dominant(tl: &Timeline, rank: usize, t0: f64, t1: f64) -> Option<SpanKind> {
     if acc.iter().all(|&a| a <= 0.0) {
         return None;
     }
-    // ties favour showing communication, then compute — the rarer and
-    // more diagnostic signals
-    if acc[1] >= acc[0] && acc[1] >= acc[2] {
+    // ties favour showing communication, then compute, then decode — the
+    // rarer and more diagnostic signals (decode only ever shares a slice
+    // with idle on its dedicated ranks, so compute-before-decode keeps
+    // the pre-staged renderings byte-identical)
+    if acc[1] >= acc[0] && acc[1] >= acc[2] && acc[1] >= acc[3] {
         Some(SpanKind::Comm)
-    } else if acc[0] >= acc[2] {
+    } else if acc[0] >= acc[2] && acc[0] >= acc[3] {
         Some(SpanKind::Compute)
+    } else if acc[2] >= acc[3] {
+        Some(SpanKind::Decode)
     } else {
         Some(SpanKind::Idle)
     }
@@ -90,7 +95,7 @@ pub fn render(tl: &Timeline, width: usize) -> String {
         ));
     }
     out.push_str(&format!(
-        "{:>9} 0s{:>pad$}{:.3}s   (# compute  ~ comm  . idle)\n",
+        "{:>9} 0s{:>pad$}{:.3}s   (# compute  ~ comm  v decode  . idle)\n",
         "",
         "",
         tl.makespan,

@@ -34,6 +34,8 @@
 //! charges them once per *step*, another divergence the simulator makes
 //! visible on CFG models.
 
+use std::collections::VecDeque;
+
 use crate::config::hardware::ClusterSpec;
 use crate::config::model::{BlockVariant, ModelSpec};
 use crate::config::parallel::ParallelConfig;
@@ -42,6 +44,7 @@ use crate::perf::latency::{
     best_patches, cfg_latent_bytes, predict_latency, ring_sync_cost, Method,
 };
 use crate::perf::simulator::timeline::{Sim, Timeline};
+use crate::vae::memory::{vae_decode_flops, vae_decode_time};
 
 /// Everything the per-strategy lowerings share, precomputed once.
 struct Cell<'a> {
@@ -343,6 +346,117 @@ fn lower_hybrid(
     }
 }
 
+/// Shape of a staged serve to lower into the event simulator: how many
+/// batches flow through the denoise→decode pipeline and how the decode
+/// stage is provisioned. Mirrors the `coordinator::Engine` staged-mode
+/// knobs (`stage_overlap`, `vae_parallelism`, `stage_queue_capacity`).
+#[derive(Debug, Clone, Copy)]
+pub struct StageSpec {
+    /// Batches pushed through the pipeline (clamped to >= 1).
+    pub batches: usize,
+    /// Patch-parallel VAE degree: the number of dedicated decode ranks
+    /// appended after the denoise ranks (clamped to >= 1).
+    pub vae_parallelism: usize,
+    /// Bounded denoise→decode queue: with `k` decodes in flight whose
+    /// start has not yet freed a slot, the next denoise stalls (clamped
+    /// to >= 1).
+    pub queue_capacity: usize,
+    /// `true` overlaps decode of batch N with denoise of batch N+1
+    /// (subject to the queue bound); `false` replays the serial engine,
+    /// draining each decode before the next denoise launches.
+    pub overlap: bool,
+}
+
+/// Lower a staged serve — `spec.batches` generations flowing through the
+/// denoise→decode pipeline — into a per-rank [`Timeline`].
+///
+/// Ranks `0..world` run the denoise stage: each batch is one Compute
+/// span whose duration is the full event-simulated makespan of a single
+/// generation under `(method, pc, steps)` (the same [`simulate`] the
+/// `timeline` CLI plays for one image). Ranks `world..world+vae_n` are
+/// the dedicated decode stage: each batch decodes as one exposed-comm
+/// span (the halo exchange + stitch of the patch-parallel VAE) followed
+/// by one [`SpanKind::Decode`](crate::perf::simulator::SpanKind::Decode)
+/// span (the conv stack at `1/n` per rank), priced by
+/// `vae::memory::vae_decode_time` on the worst link of the first
+/// `vae_n` devices — the quantities the serving engine charges.
+///
+/// With `overlap` off, denoise of batch N+1 waits for decode of batch N
+/// to *finish* (one clock, the serial engine) and the makespan equals
+/// the closed form `batches · (denoise + decode)` attached to the
+/// result. With `overlap` on, it waits only for decode of batch
+/// N−capacity to *start* (the bounded-queue gate), so the decode tail
+/// of each batch hides behind the next denoise and the makespan is
+/// never worse — the Gantt shows `v` spans of batch N under `#` spans
+/// of batch N+1.
+pub fn simulate_stages(
+    m: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    method: Method,
+    pc: &ParallelConfig,
+    steps: usize,
+    spec: StageSpec,
+) -> Timeline {
+    let world = pc.world().max(1);
+    let vae_n = spec.vae_parallelism.max(1);
+    let batches = spec.batches.max(1);
+    let cap = spec.queue_capacity.max(1);
+    // one batch of denoising = the full event simulation of one image
+    let den_t = simulate(m, px, cluster, method, pc, steps).makespan;
+    // decode priced on the worst link among the first vae_n devices,
+    // split into its conv-compute part (the Decode span) and the halo +
+    // stitch + launch remainder (an exposed Comm span)
+    let group: Vec<usize> = (0..vae_n.min(cluster.n_gpus.max(1))).collect();
+    let k = cluster.worst_link(&group);
+    let dec_t =
+        vae_decode_time(px, vae_n, cluster.gpu.tflops, cluster.link_bw(k), cluster.link_lat(k));
+    let dec_compute = vae_decode_flops(px) / (cluster.gpu.tflops * 1e12 * 0.15) / vae_n as f64;
+    let dec_comm = (dec_t - dec_compute).max(0.0);
+    let denoise_ranks: Vec<usize> = (0..world).collect();
+    let decode_ranks: Vec<usize> = (world..world + vae_n).collect();
+    let mut sim = Sim::new(world + vae_n);
+    // start times of the last <= cap decodes (the engine's bounded queue)
+    let mut dec_starts: VecDeque<f64> = VecDeque::new();
+    let mut dec_fin = 0.0f64;
+    for _ in 0..batches {
+        let gate = if !spec.overlap {
+            dec_fin
+        } else if dec_starts.len() >= cap {
+            *dec_starts.front().unwrap()
+        } else {
+            0.0
+        };
+        for &r in &denoise_ranks {
+            sim.wait(r, gate, "decode gate");
+            sim.compute(r, den_t, "denoise");
+        }
+        let den_fin = sim.now(denoise_ranks[0]);
+        for &r in &decode_ranks {
+            sim.wait(r, den_fin, "await latent");
+        }
+        let dec_start = sim.now(decode_ranks[0]);
+        for &r in &decode_ranks {
+            sim.exposed(r, dec_comm, "vae halo");
+            sim.decode(r, dec_compute, "vae decode");
+        }
+        dec_fin = sim.now(decode_ranks[0]);
+        dec_starts.push_back(dec_start);
+        while dec_starts.len() > cap {
+            dec_starts.pop_front();
+        }
+    }
+    sim.finish(
+        "staged",
+        m.name.clone(),
+        px,
+        cluster.name.clone(),
+        format!("{}+vae={vae_n}", pc.describe()),
+        steps,
+        batches as f64 * (den_t + dec_t),
+    )
+}
+
 /// Flat (no-pipeline) USP step: the hybrid row's exposed Ulysses
 /// collectives plus the ring-attention residue, once per CFG forward.
 fn lower_flat_usp(sim: &mut Sim, cell: &Cell, group: &[usize]) {
@@ -517,6 +631,54 @@ mod tests {
             }
         }
         assert!(skip > 0.0, "skip-connection P2P must appear as exposed spans");
+    }
+
+    #[test]
+    fn staged_lowering_overlaps_decode_with_next_denoise() {
+        use crate::perf::simulator::timeline::SpanKind;
+        let m = pixart();
+        let c = l40_cluster(1);
+        let pc = Method::SpUlysses.single_config(4);
+        let spec = StageSpec { batches: 4, vae_parallelism: 2, queue_capacity: 2, overlap: false };
+        let off = simulate_stages(&m, 1024, &c, Method::SpUlysses, &pc, 2, spec);
+        let on = simulate_stages(
+            &m,
+            1024,
+            &c,
+            Method::SpUlysses,
+            &pc,
+            2,
+            StageSpec { overlap: true, ..spec },
+        );
+        // overlap off replays the serial engine: the makespan is exactly
+        // the closed form batches·(denoise + decode)
+        assert!(
+            (off.makespan - off.closed_form).abs() < 1e-9 * off.closed_form,
+            "{} vs {}",
+            off.makespan,
+            off.closed_form
+        );
+        // overlap on is strictly better here (each decode tail hides
+        // behind the next batch's denoise) and never worse by induction
+        assert!(on.makespan < off.makespan, "{} !< {}", on.makespan, off.makespan);
+        // dedicated decode ranks carry the distinct Decode span kind and
+        // the Gantt renders it with its own glyph
+        assert_eq!(on.world(), 4 + 2);
+        let decode_s: f64 = on.ranks[4..].iter().map(|r| r.seconds(SpanKind::Decode)).sum();
+        assert!(decode_s > 0.0, "decode ranks must carry Decode spans");
+        assert!(on.ranks[..4].iter().all(|r| r.seconds(SpanKind::Decode) == 0.0));
+        assert!(on.gantt(120).contains('v'), "{}", on.gantt(120));
+        // a tighter queue bound can only delay denoise launches
+        let tight = simulate_stages(
+            &m,
+            1024,
+            &c,
+            Method::SpUlysses,
+            &pc,
+            2,
+            StageSpec { overlap: true, queue_capacity: 1, ..spec },
+        );
+        assert!(tight.makespan >= on.makespan - 1e-12);
     }
 
     #[test]

@@ -25,13 +25,18 @@
 //! Figs 8–17 grid and asserts the agreement band cell by cell;
 //! `coordinator::planner` re-scores its top candidates with this
 //! simulator under `Fidelity::Simulated`.
+//!
+//! [`simulate_stages`] additionally lowers the *staged* serving pipeline
+//! (denoise ranks feeding dedicated patch-parallel VAE decode ranks
+//! through a bounded queue) so the decode-behind-denoise overlap of the
+//! staged engine shows up in the same Gantt with its own span kind.
 
 mod gantt;
 mod lower;
 mod timeline;
 
 pub use gantt::{render, MAX_WIDTH, MIN_WIDTH};
-pub use lower::simulate;
+pub use lower::{simulate, simulate_stages, StageSpec};
 pub use timeline::{RankTimeline, Span, SpanKind, Timeline};
 
 use crate::config::hardware::ClusterSpec;

@@ -24,6 +24,10 @@ pub enum SpanKind {
     Compute,
     /// Communication time that blocked the rank (exposed, not hidden).
     Comm,
+    /// VAE-decode compute (the staged pipeline's third stage — kept
+    /// distinct from [`SpanKind::Compute`] so the Gantt shows the
+    /// denoise/decode overlap).
+    Decode,
     /// Waiting on a dependency or a barrier.
     Idle,
 }
@@ -34,6 +38,7 @@ impl SpanKind {
         match self {
             SpanKind::Compute => "compute",
             SpanKind::Comm => "comm",
+            SpanKind::Decode => "decode",
             SpanKind::Idle => "idle",
         }
     }
@@ -43,6 +48,7 @@ impl SpanKind {
         match self {
             SpanKind::Compute => '#',
             SpanKind::Comm => '~',
+            SpanKind::Decode => 'v',
             SpanKind::Idle => '.',
         }
     }
@@ -325,6 +331,12 @@ impl Sim {
     /// Charge `dt` seconds of exposed (blocking) communication to `rank`.
     pub(crate) fn exposed(&mut self, rank: usize, dt: f64, label: &'static str) {
         self.push(rank, SpanKind::Comm, label, dt);
+    }
+
+    /// Charge `dt` seconds of VAE-decode compute to `rank` (the staged
+    /// lowering's distinct span kind).
+    pub(crate) fn decode(&mut self, rank: usize, dt: f64, label: &'static str) {
+        self.push(rank, SpanKind::Decode, label, dt);
     }
 
     /// Account `dt` transfer seconds that were fully hidden behind

@@ -13,14 +13,27 @@ use crate::runtime::{ArgValue, Runtime};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
+/// Patch-parallel VAE decoder bound to a loaded [`Runtime`]: splits the
+/// latent rows across `n` simulated devices, exchanges `halo` boundary
+/// rows, decodes each strip through the row-windowed AOT entrypoints and
+/// stitches the result — matching
+/// [`decode_full`](ParallelVae::decode_full) up to conv-boundary
+/// tolerance.
 pub struct ParallelVae<'a> {
     rt: &'a Runtime,
+    /// Neighbour rows each strip needs on either side (the manifest's
+    /// `vae_halo`; the receptive-field reach of the conv stack).
     pub halo: usize,
+    /// Latent spatial extent in rows/cols (`latent_hw`); the decoded
+    /// image is `8·hw` pixels square.
     pub hw: usize,
+    /// Latent channel count (`c_latent`).
     pub c: usize,
 }
 
 impl<'a> ParallelVae<'a> {
+    /// Bind a decoder to `rt`, reading the halo width and latent shape
+    /// from the runtime's manifest.
     pub fn new(rt: &'a Runtime) -> Result<ParallelVae<'a>> {
         Ok(ParallelVae {
             rt,

@@ -107,6 +107,28 @@ fn fenced_code_blocks_declare_a_language() {
 }
 
 #[test]
+fn staged_execution_is_documented() {
+    // the staged-execution layer (PR 7) must stay documented in both
+    // top-level docs: the DESIGN chapter and the README user guide
+    let design = read("DESIGN.md");
+    assert!(
+        design.contains("Staged execution (L4.5)"),
+        "DESIGN.md lost its 'Staged execution (L4.5)' chapter"
+    );
+    for module in ["coordinator/stages.rs", "fleet/dispatcher.rs", "fleet/report.rs"] {
+        assert!(design.contains(module), "DESIGN.md module inventory lost {module}");
+    }
+    let readme = read("README.md");
+    assert!(
+        readme.contains("Stages & parallel VAE"),
+        "README.md lost its 'Stages & parallel VAE' section"
+    );
+    for flag in ["--stage-overlap", "--vae", "--stage-queue"] {
+        assert!(readme.contains(flag), "README.md no longer documents the {flag} flag");
+    }
+}
+
+#[test]
 fn docs_exist_and_are_nonempty() {
     for doc in DOCS {
         let text = read(doc);

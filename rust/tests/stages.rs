@@ -1,0 +1,214 @@
+//! Staged-execution tests (the L4.5 layer): bit-identity of the staged
+//! engine against the serial reference, the never-worse makespan
+//! property over random cells, bounded-queue capacity monotonicity, the
+//! fleet digest staying put while staging is off, and the parallel-VAE
+//! memory accounting.
+//!
+//! Fully hermetic: every test runs on `Runtime::simulated()`.
+
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::BlockVariant;
+use xdit::coordinator::Trace;
+use xdit::pipeline::Pipeline;
+use xdit::runtime::Runtime;
+use xdit::testing::{check, gen};
+use xdit::vae::vae_peak_bytes;
+
+/// The `tests/serving.rs` trace with every other request decoding
+/// through the parallel VAE.
+fn decode_trace() -> Trace {
+    Trace::poisson(0xD17, 64, 2.0)
+        .steps(1)
+        .guidance(1.0)
+        .variants(&[BlockVariant::AdaLn, BlockVariant::Cross])
+        .priorities(&[0, 0, 1])
+        .decode_every(2)
+        .build()
+}
+
+/// A 4-GPU pipeline with the staged knobs pinned explicitly, so the
+/// serial and staged runs price their decodes identically.
+fn pipeline(rt: &Runtime, overlap: bool, vae: usize, cap: usize) -> Pipeline<'_> {
+    Pipeline::builder()
+        .runtime(rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .max_batch(4)
+        .queue_capacity(64)
+        .stage_overlap(overlap)
+        .vae_parallelism(vae)
+        .stage_queue_capacity(cap)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn staged_outputs_are_bit_identical_and_makespan_never_worse() {
+    let trace = decode_trace();
+    let rt1 = Runtime::simulated();
+    let rt2 = Runtime::simulated();
+    let serial = pipeline(&rt1, false, 4, 2).serve_trace(&trace).unwrap();
+    let staged = pipeline(&rt2, true, 4, 2).serve_trace(&trace).unwrap();
+
+    // staging reorders *time*, never data: the same requests complete
+    // with bit-identical latents and decoded images (completion order may
+    // shift — the staged clock admits arrivals slightly earlier)
+    assert_eq!(serial.responses.len(), staged.responses.len());
+    assert_eq!(serial.rejected.len(), staged.rejected.len());
+    let mut a: Vec<_> = serial.responses.iter().collect();
+    let mut b: Vec<_> = staged.responses.iter().collect();
+    a.sort_by_key(|r| r.id);
+    b.sort_by_key(|r| r.id);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id, "both modes must serve the same request set");
+        assert_eq!(x.latent, y.latent, "latents must be bit-identical");
+        assert_eq!(x.image.is_some(), y.image.is_some());
+        if let (Some(xi), Some(yi)) = (&x.image, &y.image) {
+            assert_eq!(xi, yi, "decoded images must be bit-identical");
+        }
+    }
+
+    // overlapping decode with the next denoise can only shrink the run
+    assert!(
+        staged.makespan <= serial.makespan + 1e-9,
+        "staged {} worse than serial {}",
+        staged.makespan,
+        serial.makespan
+    );
+
+    // the report carries the per-stage occupancy block
+    let (encode, denoise, decode) = staged.stage_occupancy();
+    assert_eq!(encode, 0.0, "tiny family folds conditioning into denoise");
+    assert!(denoise > 0.0 && decode > 0.0, "denoise {denoise} decode {decode}");
+    let s = staged.summary();
+    assert!(s.contains("stages:"), "{s}");
+    assert!(s.contains("decode queue depth p50/p95"), "{s}");
+}
+
+#[test]
+fn staged_makespan_never_worse_property() {
+    // random cells: world, decode cadence, queue capacity, VAE degree,
+    // arrival rate — staged must never lose to serial, and outputs must
+    // stay identical
+    check("staged never worse than serial", 10, |rng| {
+        let world = gen::pow2_upto(rng, 8);
+        let vae = gen::pow2_upto(rng, 8).max(2); // hw=16 strips: 2/4/8
+        let cap = gen::usize_in(rng, 1, 3);
+        let every = gen::usize_in(rng, 1, 3);
+        let requests = gen::usize_in(rng, 12, 32);
+        let rate = 0.5 + rng.below(70) as f64 / 10.0;
+        let seed = rng.below(1 << 30) as u64;
+        let trace = Trace::poisson(seed, requests, rate)
+            .steps(1)
+            .guidance(1.0)
+            .variants(&[BlockVariant::AdaLn, BlockVariant::Cross])
+            .decode_every(every)
+            .build();
+        let rt1 = Runtime::simulated();
+        let rt2 = Runtime::simulated();
+        let run = |rt, overlap| {
+            let mut pipe = Pipeline::builder()
+                .runtime(rt)
+                .cluster(l40_cluster(1))
+                .world(world)
+                .queue_capacity(requests)
+                .stage_overlap(overlap)
+                .vae_parallelism(vae)
+                .stage_queue_capacity(cap)
+                .build()
+                .unwrap();
+            pipe.serve_trace(&trace).unwrap()
+        };
+        let serial = run(&rt1, false);
+        let staged = run(&rt2, true);
+        if staged.makespan > serial.makespan + 1e-9 {
+            return Err(format!(
+                "world={world} vae={vae} cap={cap} every={every}: staged {} > serial {}",
+                staged.makespan, serial.makespan
+            ));
+        }
+        let mut a: Vec<_> = serial.responses.iter().collect();
+        let mut b: Vec<_> = staged.responses.iter().collect();
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        for (x, y) in a.iter().zip(&b) {
+            if x.id != y.id || x.latent != y.latent {
+                return Err(format!("output mismatch on id {}/{}", x.id, y.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn queue_capacity_is_monotone_and_a_wide_queue_never_stalls() {
+    let trace = decode_trace();
+    let rt = Runtime::simulated();
+    let tight = pipeline(&rt, true, 4, 1).serve_trace(&trace).unwrap();
+    let rt2 = Runtime::simulated();
+    let roomy = pipeline(&rt2, true, 4, 3).serve_trace(&trace).unwrap();
+    let rt3 = Runtime::simulated();
+    let wide = pipeline(&rt3, true, 4, 64).serve_trace(&trace).unwrap();
+
+    // a bigger queue can only launch denoises earlier
+    assert!(roomy.makespan <= tight.makespan + 1e-9);
+    assert!(wide.makespan <= roomy.makespan + 1e-9);
+    // with capacity >= the decode count the gate never engages
+    assert_eq!(wide.metrics.stages.decode_stalls, 0);
+    assert_eq!(wide.metrics.stages.stall_seconds, 0.0);
+    // depth observations never exceed the configured bound
+    assert!(tight.metrics.stages.queue_depth.max() <= 1);
+    assert!(roomy.metrics.stages.queue_depth.max() <= 3);
+    // every decode enqueue was observed
+    let decodes = trace.requests().iter().filter(|r| r.decode).count() as u64;
+    assert_eq!(tight.metrics.stages.queue_depth.count, decodes);
+}
+
+#[test]
+fn fleet_digest_is_unchanged_while_staging_is_off() {
+    // the staged knobs must be invisible to the serial path: a fleet
+    // built with non-default queue capacity (overlap off) replays to the
+    // same digest as the all-defaults fleet
+    let trace = Trace::poisson(7, 48, 2.0)
+        .steps(1)
+        .guidance(1.0)
+        .variants(&[BlockVariant::AdaLn, BlockVariant::Cross])
+        .decode_every(2)
+        .build();
+    let run = |knobs: bool| {
+        let rt = Runtime::simulated();
+        let mut b = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(8)
+            .replicas(2)
+            .queue_capacity(64);
+        if knobs {
+            b = b.stage_overlap(false).stage_queue_capacity(5);
+        }
+        let pipe = b.build().unwrap();
+        pipe.serve_fleet(&trace).unwrap()
+    };
+    let baseline = run(false);
+    let with_knobs = run(true);
+    assert_eq!(baseline.digest, with_knobs.digest, "serial path perturbed by staged knobs");
+    assert_eq!(baseline.served, with_knobs.served);
+}
+
+#[test]
+fn parallel_vae_memory_accounting_matches_the_budget_model() {
+    // tiny family: latent hw 16 -> 128px output, c_latent 4; the engine
+    // must record vae_peak_bytes(128, 4) / n as the per-device peak
+    let trace = decode_trace();
+    for n in [2usize, 4] {
+        let rt = Runtime::simulated();
+        let report = pipeline(&rt, true, n, 2).serve_trace(&trace).unwrap();
+        let expect = vae_peak_bytes(128, 4) / n as f64;
+        let got = report.metrics.stages.decode_peak_bytes;
+        assert!(
+            (got - expect).abs() < 1e-6,
+            "n={n}: recorded peak {got} vs budget model {expect}"
+        );
+        assert_eq!(report.metrics.vae_builds, 1, "one ParallelVae per engine");
+    }
+}
