@@ -7,14 +7,17 @@ pub struct Clocks {
 }
 
 impl Clocks {
+    /// `n` device clocks, all starting at zero.
     pub fn new(n: usize) -> Clocks {
         Clocks { t: vec![0.0; n] }
     }
 
+    /// Number of device clocks.
     pub fn n(&self) -> usize {
         self.t.len()
     }
 
+    /// Current virtual time of device `dev`.
     pub fn get(&self, dev: usize) -> f64 {
         self.t[dev]
     }
@@ -46,6 +49,7 @@ impl Clocks {
         self.t.iter().copied().fold(0.0, f64::max)
     }
 
+    /// Rewind every clock to zero (session reuse across batches).
     pub fn reset(&mut self) {
         self.t.iter_mut().for_each(|x| *x = 0.0);
     }

@@ -4,9 +4,19 @@
 //! Algorithm-bandwidth factors (paper §4.1.3, nccl-tests PERFORMANCE.md):
 //! AllReduce 2(n-1)/n, AllGather/ReduceScatter (n-1)/n, AllToAll ~(n-1)/n
 //! per rank, ring P2P 1.
+//!
+//! Every typed collective prices through
+//! [`ClusterSpec::collective_cost`], so a [`Communicator`] built with
+//! [`Communicator::with_algo`]`(`[`CollectiveAlgo::Hierarchical`]`)`
+//! charges the two-level decomposition (intra-node phase over the fast
+//! tier, leaders-only Ethernet exchange, intra-node redistribution) while
+//! moving exactly the same data. The default stays
+//! [`CollectiveAlgo::FlatRing`], which is byte-exact with the historical
+//! one-level pricing — existing executors and digests are unchanged
+//! unless a caller opts in.
 
-use crate::config::hardware::ClusterSpec;
 use crate::comm::clock::Clocks;
+use crate::config::hardware::{ClusterSpec, CollectiveAlgo, CollectiveKind};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -14,7 +24,9 @@ use crate::{Error, Result};
 /// validation).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CommOp {
+    /// Op label (`all_gather`, `all_reduce`, `p2p`, `ring_shift`, ...).
     pub kind: &'static str,
+    /// Device ranks that participated.
     pub group: Vec<usize>,
     /// Payload bytes per rank.
     pub bytes: usize,
@@ -25,22 +37,27 @@ pub struct CommOp {
 /// Ledger of all communication performed in a run.
 #[derive(Debug, Default, Clone)]
 pub struct CommLedger {
+    /// Every op recorded, in issue order.
     pub ops: Vec<CommOp>,
 }
 
 impl CommLedger {
+    /// Total bytes moved across all ops (per-rank payload × group size).
     pub fn total_bytes(&self) -> usize {
         self.ops.iter().map(|o| o.bytes * o.group.len().max(1)).sum()
     }
 
+    /// Total virtual seconds charged across all ops.
     pub fn total_time(&self) -> f64 {
         self.ops.iter().map(|o| o.time).sum()
     }
 
+    /// Number of recorded ops with the given label.
     pub fn count(&self, kind: &str) -> usize {
         self.ops.iter().filter(|o| o.kind == kind).count()
     }
 
+    /// Bytes moved by ops with the given label (payload × group size).
     pub fn bytes_of(&self, kind: &str) -> usize {
         self.ops
             .iter()
@@ -52,14 +69,29 @@ impl CommLedger {
 
 /// Communicator: collectives + async P2P over a cluster, charging clocks.
 pub struct Communicator<'a> {
+    /// Cluster whose link model prices every transfer.
     pub cluster: &'a ClusterSpec,
+    /// Per-rank virtual clocks advanced by each op.
     pub clocks: &'a mut Clocks,
+    /// Accounting of every op performed (Table-1 validation, tests).
     pub ledger: CommLedger,
+    /// Collective algorithm charged by the typed collectives
+    /// ([`all_gather`](Communicator::all_gather) and friends). P2P and
+    /// ring paths are algorithm-free.
+    pub algo: CollectiveAlgo,
 }
 
 impl<'a> Communicator<'a> {
+    /// A communicator with the historical flat-ring pricing.
     pub fn new(cluster: &'a ClusterSpec, clocks: &'a mut Clocks) -> Self {
-        Communicator { cluster, clocks, ledger: CommLedger::default() }
+        Communicator { cluster, clocks, ledger: CommLedger::default(), algo: CollectiveAlgo::FlatRing }
+    }
+
+    /// Select the collective algorithm charged by the typed collectives
+    /// (data movement is identical either way).
+    pub fn with_algo(mut self, algo: CollectiveAlgo) -> Self {
+        self.algo = algo;
+        self
     }
 
     fn record(&mut self, kind: &'static str, group: &[usize], bytes: usize, time: f64) {
@@ -74,9 +106,8 @@ impl<'a> Communicator<'a> {
         }
         let bytes = parts.iter().map(|p| p.size_bytes()).max().unwrap_or(0);
         let n = group.len();
-        let t = self
-            .cluster
-            .collective_time(group, bytes as f64, (n as f64 - 1.0) / n as f64 * n as f64);
+        let t =
+            self.cluster.collective_cost(group, bytes as f64, CollectiveKind::AllGather, self.algo);
         // note: per-rank payload is `bytes`; total moved per rank is
         // (n-1)/n * n * bytes = (n-1) * bytes.
         let start = self.clocks.sync(group);
@@ -94,8 +125,8 @@ impl<'a> Communicator<'a> {
             return Err(Error::Comm("all_reduce: group/parts mismatch".into()));
         }
         let bytes = parts[0].size_bytes();
-        let n = group.len() as f64;
-        let t = self.cluster.collective_time(group, bytes as f64, 2.0 * (n - 1.0) / n);
+        let t =
+            self.cluster.collective_cost(group, bytes as f64, CollectiveKind::AllReduce, self.algo);
         let start = self.clocks.sync(group);
         for &d in group {
             self.clocks.wait_until(d, start + t);
@@ -122,7 +153,8 @@ impl<'a> Communicator<'a> {
             .enumerate()
             .map(|(j, t)| if j == 0 { 0 } else { t.size_bytes() })
             .sum();
-        let t = self.cluster.collective_time(group, bytes as f64, 1.0);
+        let t =
+            self.cluster.collective_cost(group, bytes as f64, CollectiveKind::AllToAll, self.algo);
         let start = self.clocks.sync(group);
         for &d in group {
             self.clocks.wait_until(d, start + t);
@@ -270,6 +302,34 @@ mod tests {
         // rank 1 now holds rank 0's block
         assert_eq!(out[1].data, vec![0.0]);
         assert_eq!(out[0].data, vec![2.0]);
+    }
+
+    #[test]
+    fn hierarchical_algo_same_data_less_cross_node_time() {
+        let c = l40_cluster(2);
+        let parts: Vec<Tensor> = (0..16).map(|i| mk(&[i as f32; 4096])).collect();
+        let group: Vec<usize> = (0..16).collect();
+        let mut flat_clocks = Clocks::new(16);
+        let mut flat = Communicator::new(&c, &mut flat_clocks);
+        let flat_out = flat.all_gather(&group, &parts).unwrap();
+        let flat_t = flat.clocks.get(0);
+        let mut hier_clocks = Clocks::new(16);
+        let mut hier =
+            Communicator::new(&c, &mut hier_clocks).with_algo(CollectiveAlgo::Hierarchical);
+        let hier_out = hier.all_gather(&group, &parts).unwrap();
+        let hier_t = hier.clocks.get(0);
+        // identical data movement, strictly cheaper virtual time
+        assert_eq!(flat_out[0].data, hier_out[0].data);
+        assert!(hier_t < flat_t, "hier {hier_t} !< flat {flat_t}");
+        // and inside one node the algorithms price identically
+        let mut a = Clocks::new(16);
+        let mut b = Clocks::new(16);
+        Communicator::new(&c, &mut a).all_gather(&[0, 1, 2, 3], &parts[..4]).unwrap();
+        Communicator::new(&c, &mut b)
+            .with_algo(CollectiveAlgo::Hierarchical)
+            .all_gather(&[0, 1, 2, 3], &parts[..4])
+            .unwrap();
+        assert_eq!(a.get(0).to_bits(), b.get(0).to_bits());
     }
 
     #[test]

@@ -7,6 +7,15 @@
 //! clocks advance monotonically; collectives synchronize the group clock;
 //! async P2P (PipeFusion/DistriFusion overlap) produces a completion time
 //! that the receiver observes only when it consumes the message.
+//!
+//! Collectives price through an explicit algorithm
+//! ([`CollectiveAlgo`](crate::config::hardware::CollectiveAlgo)): the
+//! default flat one-level ring, or the two-level hierarchical
+//! decomposition (intra-node phase on the fast tier, leaders-only
+//! Ethernet exchange, intra-node redistribution) selected with
+//! [`Communicator::with_algo`]. The data moved is identical either way;
+//! only the virtual time charged differs — see the "Communication model"
+//! chapter of `DESIGN.md` for the per-tier cost formulas.
 
 pub mod clock;
 pub mod collectives;

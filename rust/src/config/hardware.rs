@@ -61,6 +61,105 @@ impl Default for InterNodeLink {
     }
 }
 
+/// Collective primitives the cost model prices. The variant fixes the
+/// NCCL-style ring algorithm-bandwidth factor used by the flat lowering
+/// (see [`CollectiveKind::flat_factor`]) and the three-phase decomposition
+/// used by [`CollectiveAlgo::Hierarchical`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    /// Every rank contributes one part of `bytes`; all ranks end with all
+    /// parts. Ring factor `n-1` on the per-rank part size.
+    AllGather,
+    /// Reduce a `bytes` buffer, leaving each rank one shard. Ring factor
+    /// `(n-1)/n` on the buffer size.
+    ReduceScatter,
+    /// Reduce-scatter + all-gather: ring factor `2(n-1)/n` on the buffer.
+    AllReduce,
+    /// Every rank sends `bytes` total, split across the other ranks
+    /// (Ulysses). Factor `1.0` on the per-rank send volume.
+    AllToAll,
+}
+
+impl CollectiveKind {
+    /// The ring algorithm-bandwidth factor applied to this kind's `bytes`
+    /// argument by the flat one-level lowering. These match what the
+    /// closed-form model has always charged, so
+    /// [`CollectiveAlgo::FlatRing`] pricing is byte-exact with the
+    /// historical [`ClusterSpec::collective_time`] call sites.
+    pub fn flat_factor(self, n: usize) -> f64 {
+        let nf = n as f64;
+        match self {
+            // written as (n-1)/n * n — numerically n-1, but kept in the
+            // historical call-site form so FlatRing pricing stays
+            // bit-exact for every group size (the product is not exactly
+            // n-1 for non-dyadic n)
+            CollectiveKind::AllGather => (nf - 1.0) / nf * nf,
+            CollectiveKind::ReduceScatter => (nf - 1.0) / nf,
+            CollectiveKind::AllReduce => 2.0 * (nf - 1.0) / nf,
+            CollectiveKind::AllToAll => 1.0,
+        }
+    }
+
+    /// Short lowercase label (`all_gather`, `all_reduce`, ...).
+    pub fn label(self) -> &'static str {
+        match self {
+            CollectiveKind::AllGather => "all_gather",
+            CollectiveKind::ReduceScatter => "reduce_scatter",
+            CollectiveKind::AllReduce => "all_reduce",
+            CollectiveKind::AllToAll => "all_to_all",
+        }
+    }
+}
+
+/// Which collective algorithm prices a group's communication.
+///
+/// `FlatRing` is the historical one-level ring: every rank is a ring peer,
+/// the slowest link in the group bottlenecks every step, and cross-node
+/// traffic divides each node's NIC bandwidth by the ranks sharing it.
+/// `Hierarchical` decomposes a multi-node group into three phases — an
+/// intra-node collective over the fast tier, a leaders-only exchange over
+/// Ethernet (one rank per node talks, so the NIC is never shared), and an
+/// intra-node broadcast/scatter of the result. On a single-node group the
+/// two are identical by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveAlgo {
+    /// One-level ring over the whole group (NCCL default on flat fabrics).
+    FlatRing,
+    /// Two-level: intra-node phase, inter-node leader exchange, intra-node
+    /// redistribution.
+    Hierarchical,
+}
+
+impl CollectiveAlgo {
+    /// Parse a CLI/user spelling: `flat` / `flat-ring` or `hier` /
+    /// `hierarchical`.
+    pub fn parse(s: &str) -> Result<CollectiveAlgo> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" | "flat-ring" | "flatring" | "ring" => Ok(CollectiveAlgo::FlatRing),
+            "hier" | "hierarchical" => Ok(CollectiveAlgo::Hierarchical),
+            other => Err(Error::config(format!(
+                "unknown collective algorithm '{other}' (flat|hier)"
+            ))),
+        }
+    }
+
+    /// Stable short key used in plan-cache fingerprints and JSON output.
+    pub fn key(self) -> &'static str {
+        match self {
+            CollectiveAlgo::FlatRing => "flat",
+            CollectiveAlgo::Hierarchical => "hier",
+        }
+    }
+
+    /// Human label for `route`/`timeline` output and "why" strings.
+    pub fn label(self) -> &'static str {
+        match self {
+            CollectiveAlgo::FlatRing => "flat ring",
+            CollectiveAlgo::Hierarchical => "hierarchical",
+        }
+    }
+}
+
 /// One homogeneous simulated cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
@@ -184,6 +283,155 @@ impl ClusterSpec {
         }
         let steps = (n - 1) as f64;
         self.link_lat(k) * steps + bytes * algbw_factor / bw
+    }
+
+    /// Algorithm-aware collective time for `bytes` per rank over `group`.
+    ///
+    /// [`CollectiveAlgo::FlatRing`] delegates to
+    /// [`collective_time`](ClusterSpec::collective_time) with the kind's
+    /// ring factor — byte-exact with the historical call sites.
+    /// [`CollectiveAlgo::Hierarchical`] decomposes a multi-node group into
+    /// three phases:
+    ///
+    /// 1. **intra-node** collective over the fast tier, in parallel across
+    ///    nodes (the slowest node bounds the phase);
+    /// 2. **inter-node leader exchange** over Ethernet — one rank per node
+    ///    talks, so the NIC-sharing division of the flat ring never
+    ///    applies, and only node-aggregated payloads cross the wire;
+    /// 3. **intra-node** broadcast/scatter of the remote results.
+    ///
+    /// The reduction collectives sum the phases (each depends on the
+    /// previous one's full result); the all-to-all streams independent
+    /// per-destination chunks through all three tiers at once, so it pays
+    /// the slowest tier's byte rate plus one pipeline fill/drain.
+    ///
+    /// A group confined to one node degenerates to the flat ring exactly
+    /// (same code path), and a group with one rank per node degenerates to
+    /// a leaders-only ring that prices identically to flat.
+    pub fn collective_cost(
+        &self,
+        group: &[usize],
+        bytes: f64,
+        kind: CollectiveKind,
+        algo: CollectiveAlgo,
+    ) -> f64 {
+        let n = group.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        let flat = self.collective_time(group, bytes, kind.flat_factor(n));
+        if algo == CollectiveAlgo::FlatRing {
+            return flat;
+        }
+        let mut per_node: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+        for &d in group {
+            per_node.entry(self.node_of(d)).or_default().push(d);
+        }
+        let n_nodes = per_node.len();
+        if n_nodes <= 1 {
+            // single-node group: hierarchy has nothing to exploit
+            return flat;
+        }
+        let nf = n as f64;
+        let nodes = n_nodes as f64;
+        let ether_steps = nodes - 1.0;
+        let ether_lat = self.inter_node.lat * ether_steps;
+        let ether_bw = self.inter_node.bw;
+        // phase-time helpers: max over nodes of an intra-node collective
+        let intra_max = |f: &dyn Fn(&[usize], f64) -> f64| {
+            per_node.values().map(|sub| f(sub, sub.len() as f64)).fold(0.0f64, f64::max)
+        };
+        match kind {
+            CollectiveKind::AllGather => {
+                // 1. per-node all-gather of the local parts
+                let gather = intra_max(&|sub, g| self.collective_time(sub, bytes, g - 1.0));
+                // 2. leaders ring-allgather the node aggregates: the
+                //    busiest leader receives every remote part
+                let inbound = per_node
+                    .values()
+                    .map(|sub| (nf - sub.len() as f64) * bytes)
+                    .fold(0.0f64, f64::max);
+                let leaders = ether_lat + inbound / ether_bw;
+                // 3. each leader pipelines the remote parts to its peers
+                let bcast = intra_max(&|sub, g| {
+                    self.collective_time(sub, (nf - g) * bytes, 1.0)
+                });
+                gather + leaders + bcast
+            }
+            CollectiveKind::ReduceScatter => {
+                let reduce = intra_max(&|sub, g| {
+                    self.collective_time(sub, bytes, (g - 1.0) / g)
+                });
+                let leaders = ether_lat + bytes * ether_steps / nodes / ether_bw;
+                let scatter = intra_max(&|sub, g| {
+                    self.collective_time(sub, bytes / g.max(1.0), 1.0)
+                });
+                reduce + leaders + scatter
+            }
+            CollectiveKind::AllReduce => {
+                // reduce-scatter in the node, allreduce across leaders,
+                // all-gather back out — the classic two-level allreduce
+                let reduce = intra_max(&|sub, g| {
+                    self.collective_time(sub, bytes, (g - 1.0) / g)
+                });
+                let leaders = ether_lat + bytes * 2.0 * ether_steps / nodes / ether_bw;
+                let gather = intra_max(&|sub, g| {
+                    self.collective_time(sub, bytes, (g - 1.0) / g)
+                });
+                reduce + leaders + gather
+            }
+            CollectiveKind::AllToAll => {
+                // Unlike the reduction collectives, the three phases are
+                // not dependent stages: per-destination chunks stream, so
+                // ranks funnel remote-bound data to their leader over the
+                // fast tier WHILE the leaders exchange node aggregates
+                // over Ethernet and inbound chunks scatter to local
+                // ranks. In steady state the slowest tier's byte rate
+                // governs; the intra-node hop chains and the leader hop
+                // only fill and drain the pipe once. A node of g ranks
+                // exchanges g*b*(n-g)/(n-1) bytes with its peers over the
+                // wire (leader-only: no NIC sharing).
+                let intra_lat = |sub: &[usize]| {
+                    if sub.len() <= 1 {
+                        0.0
+                    } else {
+                        self.link_lat(self.worst_link(sub)) * (sub.len() as f64 - 1.0)
+                    }
+                };
+                let intra_stream = |sub: &[usize], vol: f64| {
+                    if sub.len() <= 1 {
+                        0.0
+                    } else {
+                        vol / self.link_bw(self.worst_link(sub))
+                    }
+                };
+                // pipe fill (send-side funnel) + drain (receive-side scatter)
+                let fill = per_node.values().map(|sub| intra_lat(sub)).fold(0.0f64, f64::max);
+                // steady-state byte time of each tier: local exchange +
+                // funnel moves each rank's full payload once ...
+                let funnel =
+                    per_node.values().map(|sub| intra_stream(sub, bytes)).fold(0.0f64, f64::max);
+                // ... the busiest leader streams its node's remote-bound
+                // aggregate outward ...
+                let outbound = per_node
+                    .values()
+                    .map(|sub| {
+                        let g = sub.len() as f64;
+                        g * bytes * (nf - g) / (nf - 1.0)
+                    })
+                    .fold(0.0f64, f64::max);
+                let wire = outbound / ether_bw;
+                // ... and the inbound remote aggregate scatters locally
+                let scatter = per_node
+                    .values()
+                    .map(|sub| {
+                        let g = sub.len() as f64;
+                        intra_stream(sub, g * bytes * (nf - g) / (nf - 1.0))
+                    })
+                    .fold(0.0f64, f64::max);
+                ether_lat + 2.0 * fill + funnel.max(wire).max(scatter)
+            }
+        }
     }
 
     /// Carve the cluster into `replicas` equal, topology-aligned slices and
@@ -446,6 +694,105 @@ mod tests {
         // per = 16/2 = 8 aligns; per = 24/3 = 8 aligns; but a 12-GPU slice
         // of 8-GPU nodes would straddle a node boundary
         assert!(l40_cluster(3).carve(2).is_err());
+    }
+
+    #[test]
+    fn single_node_hierarchical_is_byte_exact_with_flat() {
+        // hierarchy has nothing to exploit inside one node: the two algos
+        // must price identically (same code path, not merely close)
+        let kinds = [
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllToAll,
+        ];
+        for c in [l40_cluster(1), a100_node(), l40_cluster(2)] {
+            let group: Vec<usize> = (0..8).collect(); // first node only
+            for kind in kinds {
+                for bytes in [1e3, 1e6, 1e9] {
+                    let flat = c.collective_cost(&group, bytes, kind, CollectiveAlgo::FlatRing);
+                    let hier =
+                        c.collective_cost(&group, bytes, kind, CollectiveAlgo::Hierarchical);
+                    assert_eq!(flat.to_bits(), hier.to_bits(), "{kind:?} bytes={bytes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_ring_matches_the_historical_factors() {
+        // CollectiveKind::flat_factor must reproduce what call sites have
+        // always passed to collective_time directly
+        let c = l40_cluster(2);
+        let group: Vec<usize> = (0..16).collect();
+        let n = group.len() as f64;
+        let b = 4e6;
+        assert_eq!(
+            c.collective_cost(&group, b, CollectiveKind::AllReduce, CollectiveAlgo::FlatRing),
+            c.collective_time(&group, b, 2.0 * (n - 1.0) / n)
+        );
+        assert_eq!(
+            c.collective_cost(&group, b, CollectiveKind::AllGather, CollectiveAlgo::FlatRing),
+            c.collective_time(&group, b, (n - 1.0) / n * n)
+        );
+        assert_eq!(
+            c.collective_cost(&group, b, CollectiveKind::AllToAll, CollectiveAlgo::FlatRing),
+            c.collective_time(&group, b, 1.0)
+        );
+    }
+
+    #[test]
+    fn hierarchical_never_worse_when_ethernet_is_the_slow_tier() {
+        // on both stock multi-node testbeds the inter-node tier is far
+        // slower than any intra-node link, so the leader exchange always
+        // beats funneling NIC-shared ring traffic
+        let kinds = [
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllToAll,
+        ];
+        for c in [l40_cluster(2), a100_cluster(2), l40_cluster(4), a100_cluster(4)] {
+            let group: Vec<usize> = (0..c.n_gpus).collect();
+            for kind in kinds {
+                for bytes in [1e3, 1e6, 64e6, 1e9] {
+                    let flat = c.collective_cost(&group, bytes, kind, CollectiveAlgo::FlatRing);
+                    let hier =
+                        c.collective_cost(&group, bytes, kind, CollectiveAlgo::Hierarchical);
+                    assert!(
+                        hier <= flat,
+                        "{} {kind:?} bytes={bytes}: hier {hier} > flat {flat}",
+                        c.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_rank_per_node_degenerates_to_a_leader_ring() {
+        // with one rank per node the "hierarchy" IS the flat ring (no NIC
+        // sharing either way): the decomposition must not invent savings
+        let c = l40_cluster(4);
+        let group = [0usize, 8, 16, 24];
+        for kind in [CollectiveKind::AllGather, CollectiveKind::AllReduce] {
+            let flat = c.collective_cost(&group, 8e6, kind, CollectiveAlgo::FlatRing);
+            let hier = c.collective_cost(&group, 8e6, kind, CollectiveAlgo::Hierarchical);
+            let rel = (flat - hier).abs() / flat;
+            assert!(rel < 1e-9, "{kind:?}: flat {flat} vs hier {hier}");
+        }
+    }
+
+    #[test]
+    fn collective_algo_parse_and_keys() {
+        assert_eq!(CollectiveAlgo::parse("flat").unwrap(), CollectiveAlgo::FlatRing);
+        assert_eq!(CollectiveAlgo::parse("ring").unwrap(), CollectiveAlgo::FlatRing);
+        assert_eq!(CollectiveAlgo::parse("hier").unwrap(), CollectiveAlgo::Hierarchical);
+        assert_eq!(CollectiveAlgo::parse("Hierarchical").unwrap(), CollectiveAlgo::Hierarchical);
+        assert!(CollectiveAlgo::parse("auto").is_err());
+        assert_eq!(CollectiveAlgo::FlatRing.key(), "flat");
+        assert_eq!(CollectiveAlgo::Hierarchical.key(), "hier");
+        assert_eq!(CollectiveKind::AllReduce.label(), "all_reduce");
     }
 
     #[test]

@@ -44,7 +44,7 @@ use std::cell::RefCell;
 use std::collections::VecDeque;
 
 use crate::comm::Clocks;
-use crate::config::hardware::ClusterSpec;
+use crate::config::hardware::{ClusterSpec, CollectiveAlgo};
 use crate::config::model::{BlockVariant, ModelSpec};
 use crate::config::parallel::ParallelConfig;
 use crate::coordinator::batcher::{Batch, Batcher, WaitingSet};
@@ -157,6 +157,10 @@ pub struct Engine<'a> {
     pub deadline_admission: bool,
     /// Override the strategy implied by the config (None = `pick_method`).
     pub force_method: Option<driver::Method>,
+    /// Pin the collective algorithm plans are priced with (`None` = the
+    /// planner auto-selects: flat ring everywhere, two-level hierarchical
+    /// where a candidate's collectives span nodes and it strictly wins).
+    pub collective_algo: Option<CollectiveAlgo>,
     /// Pipeline-level scheduler default; per-request overrides win, the
     /// model's benchmark scheduler is the final fallback.
     pub default_scheduler: Option<SchedulerKind>,
@@ -224,6 +228,7 @@ impl<'a> Engine<'a> {
             memory_cap_bytes: None,
             deadline_admission: false,
             force_method: None,
+            collective_algo: None,
             default_scheduler: None,
             stage_overlap: false,
             vae_parallelism: None,
@@ -397,6 +402,7 @@ impl<'a> Engine<'a> {
             memory_cap_bits: self.memory_cap_bytes.map(f64::to_bits),
             force_config: self.force_config,
             force_method: self.force_method,
+            collective_algo: self.collective_algo,
         }
     }
 
@@ -417,6 +423,7 @@ impl<'a> Engine<'a> {
             steps: Some(steps),
             memory_cap_bytes: self.memory_cap_bytes,
             fidelity: self.route_fidelity,
+            collective_algo: self.collective_algo,
         }
     }
 

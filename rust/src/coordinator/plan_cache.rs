@@ -2,7 +2,8 @@
 //!
 //! A routing [`Plan`] is a *pure function* of
 //! `(model, px, steps, world, policy, fidelity, memory cap, forced
-//! config/method)` and of the cluster spec — yet before this cache the
+//! config/method, forced collective algorithm)` and of the cluster spec —
+//! yet before this cache the
 //! engine re-ran `ParallelConfig::enumerate` plus the full latency /
 //! memory / comm scoring sweep for **every launched batch**, even when
 //! thousands of requests in a row shared the same shape. The cache keys
@@ -30,7 +31,7 @@
 
 use std::collections::HashMap;
 
-use crate::config::hardware::ClusterSpec;
+use crate::config::hardware::{ClusterSpec, CollectiveAlgo};
 use crate::config::parallel::ParallelConfig;
 use crate::coordinator::planner::{Fidelity, Plan, RoutePolicy};
 use crate::parallel::driver;
@@ -61,6 +62,11 @@ pub struct PlanKey {
     pub force_config: Option<ParallelConfig>,
     /// Engine-forced strategy, if any (`Engine::force_method`).
     pub force_method: Option<driver::Method>,
+    /// Engine-pinned collective algorithm, if any (`None` = planner
+    /// auto-selects per candidate). Part of the key because the same
+    /// `(model, px, world, ...)` tuple prices differently under flat vs
+    /// hierarchical collectives.
+    pub collective_algo: Option<CollectiveAlgo>,
 }
 
 /// Stable-within-a-run fingerprint of a cluster spec: covers the topology
@@ -254,6 +260,7 @@ mod tests {
             memory_cap_bits: None,
             force_config: None,
             force_method: None,
+            collective_algo: None,
         }
     }
 
@@ -320,6 +327,33 @@ mod tests {
         // latency-only mutation invalidates too (both fields are hashed)
         let tier = InterNodeLink { lat: 5e-6, ..Default::default() };
         assert_ne!(fingerprint(&stock), fingerprint(&l40_cluster(2).with_inter_node(tier)));
+    }
+
+    #[test]
+    fn forcing_a_collective_algo_busts_the_cache() {
+        // regression (same pattern as the Ethernet-tier bust): a plan
+        // memoized under auto algorithm selection must not be served when
+        // the engine is later pinned to flat or hierarchical collectives —
+        // the forced algorithm is part of the routing key, not a detail
+        // the planner can absorb.
+        let auto = key(2048);
+        let flat = PlanKey { collective_algo: Some(CollectiveAlgo::FlatRing), ..key(2048) };
+        let hier = PlanKey { collective_algo: Some(CollectiveAlgo::Hierarchical), ..key(2048) };
+        assert_ne!(auto, flat);
+        assert_ne!(flat, hier);
+
+        let mut c = PlanCache::default();
+        c.check_cluster(fingerprint(&l40_cluster(2)));
+        c.insert(auto.clone(), plan_for(2048));
+        assert!(c.lookup(&auto).is_some());
+        // pinning an algorithm is a different decision: must miss cold
+        assert!(c.lookup(&flat).is_none());
+        assert!(c.lookup(&hier).is_none());
+        // and each pinned decision memoizes independently
+        c.insert(flat.clone(), plan_for(2048));
+        assert!(c.lookup(&flat).is_some());
+        assert!(c.lookup(&hier).is_none());
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! the heuristic's pick fits memory: the heuristic's config is in the
 //! enumeration and both are scored by the same model.
 
-use crate::config::hardware::ClusterSpec;
+use crate::config::hardware::{ClusterSpec, CollectiveAlgo};
 use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
 use crate::coordinator::engine::pick_method;
@@ -33,10 +33,10 @@ use crate::coordinator::router::paper_heuristic;
 use crate::parallel::driver;
 use crate::perf::comm_model::config_comm_bytes;
 use crate::perf::latency::{
-    predict_latency, serial_latency, LatencyBreakdown, Method as PerfMethod,
+    predict_latency_with, serial_latency, LatencyBreakdown, Method as PerfMethod,
 };
 use crate::perf::memory_model::{config_memory, HBM_USABLE_FRACTION};
-use crate::perf::simulator::{simulate, Timeline};
+use crate::perf::simulator::{simulate_with, Timeline};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -142,6 +142,10 @@ pub struct Plan {
     /// Whether the config fits the memory budget the planner used. A plan
     /// with `fits == false` is the least-bad choice of an infeasible set.
     pub fits: bool,
+    /// Collective algorithm the winning price assumed: `FlatRing` unless
+    /// the two-level hierarchy ([`ClusterSpec::collective_cost`]) was
+    /// strictly cheaper for this config's cross-node collectives.
+    pub collective_algo: CollectiveAlgo,
     /// Discrete-event simulated makespan in seconds, when the planner ran
     /// at `Fidelity::Simulated` (None under the closed-form default).
     pub simulated_seconds: Option<f64>,
@@ -167,7 +171,7 @@ impl Plan {
     /// output).
     pub fn describe(&self) -> String {
         let mut out = format!(
-            "{} @ {}px ({} tokens): [{}] via {} — predicted {:.2}s \
+            "{} @ {}px ({} tokens): [{}] via {} ({} collectives) — predicted {:.2}s \
              ({:.2}s compute, {:.2}s exposed comm) vs serial {:.2}s ({:.1}x), \
              comm {:.2} GB/device, peak mem {:.1} GB{}\n  why: {}",
             self.model,
@@ -175,6 +179,7 @@ impl Plan {
             self.s_img,
             self.config.describe(),
             self.method.key(),
+            self.collective_algo.label(),
             self.predicted.total,
             self.predicted.compute,
             self.predicted.comm_exposed,
@@ -207,6 +212,12 @@ impl Plan {
         o.insert("comm_bytes".into(), Json::Num(self.comm_bytes.round()));
         o.insert("peak_mem_bytes".into(), Json::Num(self.peak_memory_bytes.round()));
         o.insert("fits".into(), Json::Bool(self.fits));
+        if self.collective_algo == CollectiveAlgo::Hierarchical {
+            // only when the hierarchy strictly beat the flat ring — every
+            // cell the hierarchy cannot touch (single-node groups) stays
+            // byte-identical with the pre-hierarchy snapshot
+            o.insert("algo".into(), Json::Str(self.collective_algo.key().into()));
+        }
         if let Some(sim) = self.simulated_seconds {
             // only present under Fidelity::Simulated — the closed-form
             // golden snapshot stays byte-identical
@@ -230,6 +241,12 @@ pub struct Planner {
     /// Scoring fidelity: closed forms only (default), or a simulator
     /// re-scoring pass over the top candidates.
     pub fidelity: Fidelity,
+    /// Collective-algorithm override. `None` (default) auto-selects per
+    /// config: flat ring always, the two-level hierarchy additionally
+    /// priced when the intra-image group spans nodes — whichever is
+    /// strictly cheaper wins (ties stay flat). `Some(algo)` forces one
+    /// algorithm for every candidate (`--collective-algo` on the CLI).
+    pub collective_algo: Option<CollectiveAlgo>,
 }
 
 impl Planner {
@@ -258,6 +275,13 @@ impl Planner {
         self
     }
 
+    /// Force one collective algorithm for every candidate instead of the
+    /// per-config auto-selection.
+    pub fn with_collective_algo(mut self, algo: CollectiveAlgo) -> Self {
+        self.collective_algo = Some(algo);
+        self
+    }
+
     fn steps_for(&self, m: &ModelSpec) -> usize {
         self.steps.unwrap_or(m.default_steps)
     }
@@ -276,7 +300,7 @@ impl Planner {
         pc: &ParallelConfig,
     ) -> Plan {
         let steps = self.steps_for(m);
-        let predicted = predict_latency(m, px, cluster, PerfMethod::Hybrid, pc, steps);
+        let (algo, predicted) = self.price(m, px, cluster, pc, steps);
         let mem = config_memory(m, px, pc).total();
         Plan {
             model: m.name.clone(),
@@ -293,10 +317,60 @@ impl Planner {
             comm_bytes: steps as f64 * config_comm_bytes(m, px, pc),
             peak_memory_bytes: mem,
             fits: mem < self.cap_for(cluster) * HBM_USABLE_FRACTION,
+            collective_algo: algo,
             simulated_seconds: None,
             candidates: 0,
             pruned: 0,
             why: String::new(),
+        }
+    }
+
+    /// Price one config under the planner's collective-algorithm policy.
+    /// An explicit override prices with that algorithm; auto (`None`)
+    /// prices the flat ring and — when the intra-image group spans nodes —
+    /// also the two-level hierarchy, keeping whichever is strictly
+    /// cheaper. Ties stay flat, so every cell the hierarchy cannot touch
+    /// is byte-identical with flat-only pricing. The `PaperHeuristic`
+    /// policy always prices flat: it is the historical oracle the
+    /// cost-model plans are compared against.
+    fn price(
+        &self,
+        m: &ModelSpec,
+        px: usize,
+        cluster: &ClusterSpec,
+        pc: &ParallelConfig,
+        steps: usize,
+    ) -> (CollectiveAlgo, LatencyBreakdown) {
+        if let Some(algo) = self.collective_algo {
+            let lb = predict_latency_with(m, px, cluster, PerfMethod::Hybrid, pc, steps, algo);
+            return (algo, lb);
+        }
+        let flat = predict_latency_with(
+            m,
+            px,
+            cluster,
+            PerfMethod::Hybrid,
+            pc,
+            steps,
+            CollectiveAlgo::FlatRing,
+        );
+        let n_intra = (pc.world().max(1) / pc.cfg.max(1)).max(1);
+        if self.policy == RoutePolicy::PaperHeuristic || n_intra <= cluster.gpus_per_node {
+            return (CollectiveAlgo::FlatRing, flat);
+        }
+        let hier = predict_latency_with(
+            m,
+            px,
+            cluster,
+            PerfMethod::Hybrid,
+            pc,
+            steps,
+            CollectiveAlgo::Hierarchical,
+        );
+        if hier.total < flat.total {
+            (CollectiveAlgo::Hierarchical, hier)
+        } else {
+            (CollectiveAlgo::FlatRing, flat)
         }
     }
 
@@ -378,6 +452,12 @@ impl Planner {
                 heuristic.predicted.total / best.predicted.total.max(1e-12)
             )
         };
+        if best.collective_algo == CollectiveAlgo::Hierarchical {
+            best.why.push_str(
+                "; two-level hierarchical collectives (intra-node ring + node-leader \
+                 exchange) save the shared inter-node ethernet tier",
+            );
+        }
         best
     }
 
@@ -403,7 +483,15 @@ impl Planner {
         let mut best_idx = 0;
         let mut best_tl: Option<Timeline> = None;
         for (i, p) in top.iter_mut().enumerate() {
-            let tl = simulate(m, px, cluster, PerfMethod::Hybrid, &p.config, steps);
+            let tl = simulate_with(
+                m,
+                px,
+                cluster,
+                PerfMethod::Hybrid,
+                &p.config,
+                steps,
+                p.collective_algo,
+            );
             p.simulated_seconds = Some(tl.makespan);
             let better = best_tl.as_ref().map(|b| tl.makespan < b.makespan).unwrap_or(true);
             if better {
@@ -415,11 +503,13 @@ impl Planner {
         let mut best = top.swap_remove(best_idx);
         best.why = format!(
             "event simulator re-scored the top-{k} of {} closed-form candidates \
-             ({} pruned): [{}] wins at {:.2}s simulated ({:.0}% overlap achieved); {}",
+             ({} pruned): [{}] wins at {:.2}s simulated with {} collectives \
+             ({:.0}% overlap achieved); {}",
             best.candidates,
             best.pruned,
             best.config.describe(),
             tl.makespan,
+            best.collective_algo.label(),
             tl.achieved_overlap() * 100.0,
             tl.critical_path()
         );
@@ -449,13 +539,21 @@ impl Planner {
         let method = match plan.method {
             driver::Method::Serial => {
                 let pc = ParallelConfig::new(plan.config.cfg.max(1), 1, 1, 1);
-                return simulate(m, plan.px, cluster, PerfMethod::Hybrid, &pc, plan.steps);
+                return simulate_with(
+                    m,
+                    plan.px,
+                    cluster,
+                    PerfMethod::Hybrid,
+                    &pc,
+                    plan.steps,
+                    plan.collective_algo,
+                );
             }
             driver::Method::Tp => PerfMethod::Tp,
             driver::Method::DistriFusion => PerfMethod::DistriFusion,
             _ => PerfMethod::Hybrid,
         };
-        simulate(m, plan.px, cluster, method, &plan.config, plan.steps)
+        simulate_with(m, plan.px, cluster, method, &plan.config, plan.steps, plan.collective_algo)
     }
 }
 
@@ -486,20 +584,33 @@ impl Planner {
                 warmup_extra: 0.0,
                 total: plan.serial_seconds,
             },
-            driver::Method::Tp => {
-                predict_latency(m, plan.px, cluster, PerfMethod::Tp, &plan.config, plan.steps)
-            }
-            driver::Method::DistriFusion => predict_latency(
+            driver::Method::Tp => predict_latency_with(
+                m,
+                plan.px,
+                cluster,
+                PerfMethod::Tp,
+                &plan.config,
+                plan.steps,
+                plan.collective_algo,
+            ),
+            driver::Method::DistriFusion => predict_latency_with(
                 m,
                 plan.px,
                 cluster,
                 PerfMethod::DistriFusion,
                 &plan.config,
                 plan.steps,
+                plan.collective_algo,
             ),
-            _ => {
-                predict_latency(m, plan.px, cluster, PerfMethod::Hybrid, &plan.config, plan.steps)
-            }
+            _ => predict_latency_with(
+                m,
+                plan.px,
+                cluster,
+                PerfMethod::Hybrid,
+                &plan.config,
+                plan.steps,
+                plan.collective_algo,
+            ),
         };
         let row = match method {
             driver::Method::Serial => {
@@ -529,7 +640,11 @@ impl Planner {
 
 /// The (model, representative px, cluster) cells of the paper's Figs 8–17
 /// evaluation grid — shared by the golden-plan snapshot, the planner
-/// bench and the acceptance tests.
+/// bench and the acceptance tests. The four two-node rows at the end
+/// (appended with the hierarchical-collective planner) exercise the
+/// models whose head counts admit a node-spanning Ulysses group
+/// (pixart/hunyuan: 16 heads), where the two-level hierarchy actually
+/// has a cross-node collective to reprice.
 pub fn paper_grid() -> Vec<(ModelSpec, usize, ClusterSpec)> {
     [
         ("pixart", 2048, "l40x16"),
@@ -540,6 +655,10 @@ pub fn paper_grid() -> Vec<(ModelSpec, usize, ClusterSpec)> {
         ("sd3", 2048, "a100x8"),
         ("flux", 1024, "a100x8"),
         ("hunyuan", 2048, "a100x8"),
+        ("pixart", 4096, "l40x16"),
+        ("hunyuan", 2048, "l40x16"),
+        ("pixart", 2048, "a100x16"),
+        ("hunyuan", 2048, "a100x16"),
     ]
     .into_iter()
     .map(|(name, px, cluster)| {
@@ -555,11 +674,43 @@ pub fn paper_grid() -> Vec<(ModelSpec, usize, ClusterSpec)> {
 /// World sizes swept per grid cell (clamped to the cluster).
 pub const GRID_WORLDS: [usize; 5] = [1, 2, 4, 8, 16];
 
+/// Best sequence-parallel-only plan (cfg = 1, pipefusion = 1 — the
+/// paper's "SP" figure series) for a cell under `planner`'s pricing, or
+/// `None` when no pure-SP config validates for the world size. The
+/// multi-node golden cells record this series under both collective
+/// algorithms: it is where a node-spanning Ulysses group competes with
+/// ring splits, so it is where the hierarchy flips winners.
+pub fn best_sp_plan(
+    planner: &Planner,
+    m: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    world: usize,
+) -> Option<Plan> {
+    ParallelConfig::enumerate(world, m, m.seq_len(px))
+        .into_iter()
+        .filter(|pc| pc.cfg == 1 && pc.pipefusion == 1 && !pc.is_serial())
+        .map(|pc| planner.score(m, px, cluster, &pc))
+        .min_by(|a, b| a.predicted.total.total_cmp(&b.predicted.total))
+}
+
 /// The canonical golden-plan snapshot: one JSON object per (model,
 /// cluster, world) cell — cost-model plan plus the heuristic baseline —
 /// one cell per line so CI diffs read like a review. Byte-stable:
 /// everything numeric is integral, keys are sorted, ordering follows
 /// [`paper_grid`] × [`GRID_WORLDS`].
+///
+/// Cells whose intra-image group can span nodes (world > GPUs per node)
+/// additionally record the collective-algorithm provenance:
+/// * `sp_flat_config`/`sp_flat_us` — the best pure-SP plan priced with
+///   the flat ring, vs `sp_config`/`sp_us` under auto algorithm
+///   selection (a differing config is a hierarchy-flipped winner);
+/// * `ulysses_flat_us`/`ulysses_hier_us` — the deepest Ulysses closed
+///   form under both algorithms, when `ulysses = world` validates;
+/// * `algo: "hier"` on the winning plan itself when the hierarchy
+///   strictly beat the flat ring for it.
+/// Single-node cells carry none of these keys and stay byte-identical
+/// with the flat-only snapshot.
 pub fn grid_report() -> String {
     use crate::util::json::JsonWriter;
     let planner = Planner::default();
@@ -588,6 +739,49 @@ pub fn grid_report() -> String {
                 "heuristic_us".into(),
                 Json::Num((base.predicted.total * 1e6).round()),
             );
+            if world > cluster.gpus_per_node {
+                // multi-node cell: record the SP figure series under both
+                // collective algorithms so the golden diff shows where
+                // the hierarchy strictly wins and which winners it flips
+                let flat = Planner::default().with_collective_algo(CollectiveAlgo::FlatRing);
+                if let (Some(sp_flat), Some(sp_auto)) = (
+                    best_sp_plan(&flat, &m, px, &cluster, world),
+                    best_sp_plan(&planner, &m, px, &cluster, world),
+                ) {
+                    cell.insert(
+                        "sp_flat_config".into(),
+                        Json::Str(sp_flat.config.describe()),
+                    );
+                    cell.insert(
+                        "sp_flat_us".into(),
+                        Json::Num((sp_flat.predicted.total * 1e6).round()),
+                    );
+                    cell.insert("sp_config".into(), Json::Str(sp_auto.config.describe()));
+                    cell.insert(
+                        "sp_us".into(),
+                        Json::Num((sp_auto.predicted.total * 1e6).round()),
+                    );
+                }
+                let deep = PerfMethod::SpUlysses.single_config(world);
+                if deep.validate(&m, m.seq_len(px)).is_ok() {
+                    let steps = m.default_steps;
+                    for (key, algo) in [
+                        ("ulysses_flat_us", CollectiveAlgo::FlatRing),
+                        ("ulysses_hier_us", CollectiveAlgo::Hierarchical),
+                    ] {
+                        let lb = predict_latency_with(
+                            &m,
+                            px,
+                            &cluster,
+                            PerfMethod::SpUlysses,
+                            &deep,
+                            steps,
+                            algo,
+                        );
+                        cell.insert(key.into(), Json::Num((lb.total * 1e6).round()));
+                    }
+                }
+            }
             if !first {
                 out.push_str(",\n");
             }
@@ -603,6 +797,7 @@ pub fn grid_report() -> String {
 mod tests {
     use super::*;
     use crate::config::hardware::{a100_node, l40_cluster};
+    use crate::perf::latency::predict_latency;
 
     #[test]
     fn planner_matches_bruteforce_argmin() {
@@ -816,8 +1011,9 @@ mod tests {
         assert_eq!(a, b);
         let parsed = Json::parse(&a).unwrap();
         let cells = parsed.as_arr().unwrap();
-        // 3 l40x16 rows x 5 worlds + 1 l40x8 row x 4 + 4 a100x8 rows x 4
-        assert_eq!(cells.len(), 35);
+        // 5 l40x16 rows x 5 worlds + 1 l40x8 row x 4 + 4 a100x8 rows x 4
+        // + 2 a100x16 rows x 5
+        assert_eq!(cells.len(), 55);
         for cell in cells {
             let world = cell.get("world").unwrap().as_usize().unwrap();
             assert!(GRID_WORLDS.contains(&world));
@@ -829,5 +1025,69 @@ mod tests {
             // memory — a raw per-cell comparison here would misfire if a
             // future grid cell memory-prunes the heuristic's choice)
         }
+    }
+
+    #[test]
+    fn grid_hierarchy_never_slower_and_flips_a_winner() {
+        // the acceptance bar of the hierarchical-collective planner, read
+        // off the golden grid itself: hierarchy never predicted-slower
+        // than the flat ring anywhere, strictly faster in >= 5 multi-node
+        // cells, and at least one cell's SP-series winner flips
+        let parsed = Json::parse(&grid_report()).unwrap();
+        let mut strictly_faster = 0;
+        let mut flips = 0;
+        let mut sp_cells = 0;
+        for cell in parsed.as_arr().unwrap() {
+            if let (Ok(uf), Ok(uh)) =
+                (cell.get("ulysses_flat_us"), cell.get("ulysses_hier_us"))
+            {
+                let (uf, uh) = (uf.as_f64().unwrap(), uh.as_f64().unwrap());
+                assert!(uh <= uf, "hier slower than flat in {cell:?}");
+                if uh < uf {
+                    strictly_faster += 1;
+                }
+            }
+            if let (Ok(sf), Ok(sa)) = (cell.get("sp_flat_us"), cell.get("sp_us")) {
+                sp_cells += 1;
+                let (sf, sa) = (sf.as_f64().unwrap(), sa.as_f64().unwrap());
+                assert!(sa <= sf, "auto SP pricing worse than flat in {cell:?}");
+                if cell.get("sp_flat_config").unwrap() != cell.get("sp_config").unwrap() {
+                    flips += 1;
+                }
+            }
+        }
+        assert!(sp_cells >= 5, "expected >= 5 multi-node SP cells, got {sp_cells}");
+        assert!(
+            strictly_faster >= 5,
+            "hierarchy must win strictly in >= 5 multi-node cells, got {strictly_faster}"
+        );
+        assert!(flips >= 1, "the hierarchy must flip at least one SP-series winner");
+    }
+
+    #[test]
+    fn auto_algo_tags_only_strict_hierarchy_wins() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        // single node: nothing to exploit, every plan stays flat and the
+        // JSON carries no "algo" key
+        let single = Planner::default().plan(&m, 2048, &l40_cluster(1), 8);
+        assert_eq!(single.collective_algo, CollectiveAlgo::FlatRing);
+        assert!(!single.to_json().to_string().contains("\"algo\""));
+        // forced hierarchy is honored even where it cannot win
+        let forced = Planner::default()
+            .with_collective_algo(CollectiveAlgo::Hierarchical)
+            .plan(&m, 2048, &l40_cluster(1), 8);
+        assert_eq!(forced.collective_algo, CollectiveAlgo::Hierarchical);
+        assert_eq!(forced.predicted.total.to_bits(), single.predicted.total.to_bits());
+        assert!(forced.to_json().to_string().contains("\"algo\""));
+        assert!(forced.describe().contains("hierarchical collectives"));
+        // auto on a two-node SP series: the node-spanning Ulysses config
+        // must price hierarchical when that is strictly cheaper
+        let c = crate::config::hardware::a100_cluster(2);
+        let deep = Planner::default().score(&m, 2048, &c, &ParallelConfig::new(1, 1, 16, 1));
+        assert_eq!(deep.collective_algo, CollectiveAlgo::Hierarchical);
+        let flat_deep = Planner::default()
+            .with_collective_algo(CollectiveAlgo::FlatRing)
+            .score(&m, 2048, &c, &ParallelConfig::new(1, 1, 16, 1));
+        assert!(deep.predicted.total < flat_deep.predicted.total);
     }
 }

@@ -14,7 +14,7 @@
 //! [`FleetFrontier`] names a throughput-optimal cell, a latency-optimal
 //! cell per rate, and a human "why" citing the tier-priced comm cost.
 
-use crate::config::hardware::{ClusterSpec, LinkKind};
+use crate::config::hardware::{ClusterSpec, CollectiveAlgo, LinkKind};
 use crate::config::model::ModelSpec;
 use crate::coordinator::planner::{Plan, Planner};
 use crate::{Error, Result};
@@ -151,15 +151,27 @@ impl FleetFrontier {
     }
 }
 
-/// How a cell's collectives are priced, for the "why" strings.
+/// How a cell's collectives are priced, for the "why" strings: the tier
+/// they run on *and* the algorithm the plan was priced with — a flat ring
+/// bottlenecks every step on the shared-NIC Ethernet tier, while the
+/// hierarchical decomposition only sends node leaders across it.
 fn comm_clause(cluster: &ClusterSpec, cell: &FleetCell) -> String {
     if cell.cross_node {
-        format!(
-            "cross-node collectives priced at the {:.1} GB/s Ethernet tier \
-             ({:.2}s exposed comm)",
-            cluster.link_bw(LinkKind::Ethernet) / 1e9,
-            cell.plan.predicted.comm_exposed,
-        )
+        let eth = cluster.link_bw(LinkKind::Ethernet) / 1e9;
+        match cell.plan.collective_algo {
+            CollectiveAlgo::Hierarchical => format!(
+                "cross-node collectives priced hierarchically: intra-node phases on the \
+                 fast tier, a leaders-only exchange on the {eth:.1} GB/s Ethernet tier \
+                 ({:.2}s exposed comm)",
+                cell.plan.predicted.comm_exposed,
+            ),
+            CollectiveAlgo::FlatRing => format!(
+                "cross-node collectives priced as a flat ring over the {eth:.1} GB/s \
+                 Ethernet tier, NIC shared by every rank on the node \
+                 ({:.2}s exposed comm)",
+                cell.plan.predicted.comm_exposed,
+            ),
+        }
     } else {
         let (name, kind) = if cluster.has_nvlink {
             ("NVLink", LinkKind::NvLink)
@@ -337,6 +349,36 @@ mod tests {
         assert!(p.expected_latency.is_infinite());
         assert!(p.why.contains("saturates"), "{}", p.why);
         assert!(p.why.contains("GB/s"), "{}", p.why);
+    }
+
+    #[test]
+    fn cross_node_clause_cites_the_collective_algorithm() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let two_nodes = l40_cluster(2);
+        let f = frontier(&Planner::default(), &m, 1024, &two_nodes, &[]).unwrap();
+        let deep = f.cells.iter().find(|c| c.cross_node).expect("r=1 spans both nodes");
+        let clause = comm_clause(&two_nodes, deep);
+        // the clause names the algorithm the plan was actually priced with
+        match deep.plan.collective_algo {
+            CollectiveAlgo::FlatRing => {
+                assert!(clause.contains("flat ring"), "{clause}");
+                assert!(clause.contains("NIC shared"), "{clause}");
+            }
+            CollectiveAlgo::Hierarchical => {
+                assert!(clause.contains("hierarchically"), "{clause}");
+                assert!(clause.contains("leaders-only"), "{clause}");
+            }
+        }
+        assert!(clause.contains("Ethernet"), "{clause}");
+        // and a pinned-hierarchical planner surfaces the leader exchange
+        let hier = Planner::default().with_collective_algo(CollectiveAlgo::Hierarchical);
+        let fh = frontier(&hier, &m, 1024, &two_nodes, &[]).unwrap();
+        let dh = fh.cells.iter().find(|c| c.cross_node).unwrap();
+        let ch = comm_clause(&two_nodes, dh);
+        assert!(ch.contains("leaders-only"), "{ch}");
+        // single-node replicas never mention the Ethernet tier
+        let intra = f.cells.iter().find(|c| !c.cross_node).unwrap();
+        assert!(!comm_clause(&two_nodes, intra).contains("Ethernet"));
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //!   figures   — regenerate the paper's figure/table series (analytic)
 //!   inspect   — list AOT artifacts and model dims
 
-use xdit::config::hardware::ClusterSpec;
+use xdit::config::hardware::{ClusterSpec, CollectiveAlgo};
 use xdit::config::model::{BlockVariant, ModelSpec};
 use xdit::config::parallel::ParallelConfig;
 use xdit::coordinator::{GenRequest, Trace};
@@ -70,16 +70,26 @@ commands:
              with a why per arrival rate)
   route     --model pixart --cluster l40x16 --gpus 16 --px 2048
             [--policy cost|paper (default: cost)] [--memory-cap-gb 48]
+            [--collective-algo flat|hier|auto (default: auto)]
             [--top-k 5] [--json]
             (cost-model auto-planner: enumerates every valid hybrid
              config, prunes by per-GPU memory, ranks by predicted
              latency; prints latency/comm/memory for the winner and a
-             top-k table, or the canonical JSON plan with --json)
+             top-k table, or the canonical JSON plan with --json.
+             --collective-algo pins how collectives are priced: flat
+             one-level rings or two-level hierarchical — intra-node
+             phases on the fast tier, leaders-only exchange on
+             Ethernet; auto prices both on node-spanning candidates
+             and keeps hierarchical only where it strictly wins, with
+             the why citing the tier it saves on)
   route     --grid   (emit the canonical golden-plan JSON for the full
-             figs 8-17 model x cluster x world grid — the CI snapshot)
+             figs 8-17 model x cluster x world grid — the CI snapshot;
+             multi-node cells carry the flat-vs-hierarchical
+             provenance keys the golden test pins)
   timeline  --model pixart --cluster l40x16 --gpus 16 --px 2048
             [--strategy serial|cfg|tp|ulysses|ring|distrifusion|
              pipefusion|hybrid|all (default: hybrid)]
+            [--collective-algo flat|hier|auto (default: auto)]
             [--steps 4] [--width 72] [--json]
             [--batches 4 --stage-overlap --vae 2 --stage-queue 2]
             (discrete-event overlap simulator: lowers the strategy into
@@ -87,7 +97,11 @@ commands:
              with makespan, closed-form comparison, achieved overlap and
              the critical path; --json emits the full span timeline.
              'hybrid' asks the auto-planner at simulated fidelity, so
-             the printed why cites the critical path. --batches lowers
+             the printed why cites the critical path; single-image
+             timelines print the collective algorithm they were lowered
+             with (--collective-algo pins it; TP and Ulysses partially
+             hide their per-layer collectives behind the next layer's
+             compute either way). --batches lowers
              the staged serving pipeline instead: denoise ranks feed
              dedicated --vae decode ranks through a bounded queue, and
              with --stage-overlap the decode 'v' spans of batch N render
@@ -127,6 +141,16 @@ fn run(cmd: &str, args: &Args) -> xdit::Result<()> {
 
 fn cluster_of(args: &Args) -> xdit::Result<ClusterSpec> {
     ClusterSpec::by_name(args.str_or("cluster", "l40x8"))
+}
+
+/// `--collective-algo flat|hier|auto`: `auto` (the default) returns None,
+/// leaving the planner's per-candidate selection in charge.
+fn collective_algo_of(args: &Args) -> xdit::Result<Option<CollectiveAlgo>> {
+    let s = args.str_or("collective-algo", "auto");
+    if s.eq_ignore_ascii_case("auto") {
+        return Ok(None);
+    }
+    Ok(Some(CollectiveAlgo::parse(s)?))
 }
 
 fn variant_of(name: &str) -> xdit::Result<BlockVariant> {
@@ -349,6 +373,9 @@ fn route_cmd(args: &Args) -> xdit::Result<()> {
     if args.has("memory-cap-gb") {
         b = b.memory_cap_gb(args.f64_or("memory-cap-gb", 0.0)?);
     }
+    if let Some(algo) = collective_algo_of(args)? {
+        b = b.collective_algo(algo);
+    }
     let plan = b.plan(&model, px)?;
     if args.bool("json") {
         println!("{}", plan.to_json());
@@ -389,7 +416,7 @@ fn route_cmd(args: &Args) -> xdit::Result<()> {
 
 fn timeline_cmd(args: &Args) -> xdit::Result<()> {
     use xdit::perf::simulator::{
-        render, simulate, simulate_stages, strategy_config, StageSpec, STRATEGIES,
+        render, simulate, simulate_stages, simulate_with, strategy_config, StageSpec, STRATEGIES,
     };
     let model = ModelSpec::by_name(args.str_or("model", "pixart"))?;
     let cluster = cluster_of(args)?;
@@ -415,19 +442,24 @@ fn timeline_cmd(args: &Args) -> xdit::Result<()> {
         return Ok(());
     }
 
+    let forced_algo = collective_algo_of(args)?;
+
     let label = STRATEGIES.iter().find(|s| **s == strat).copied();
-    let (method, pc, why) = if strat == "hybrid" {
+    let (method, pc, why, algo) = if strat == "hybrid" {
         // the auto-planner at simulated fidelity: memory-pruned ranking,
         // the event simulator breaking ties, the why citing the winner's
-        // critical path
-        let plan = xdit::Planner::default()
-            .with_fidelity(xdit::Fidelity::Simulated)
-            .with_steps(steps)
-            .plan(&model, px, &cluster, gpus);
-        (Method::Hybrid, plan.config, Some(plan.why))
+        // critical path (and the collective algorithm the plan is priced
+        // with — forced by --collective-algo, auto-selected otherwise)
+        let mut planner =
+            xdit::Planner::default().with_fidelity(xdit::Fidelity::Simulated).with_steps(steps);
+        if let Some(a) = forced_algo {
+            planner = planner.with_collective_algo(a);
+        }
+        let plan = planner.plan(&model, px, &cluster, gpus);
+        (Method::Hybrid, plan.config, Some(plan.why), plan.collective_algo)
     } else {
         let (method, pc) = strategy_config(strat, &model, px, &cluster, gpus, steps)?;
-        (method, pc, None)
+        (method, pc, None, forced_algo.unwrap_or(CollectiveAlgo::FlatRing))
     };
     let staged = args.has("batches") || args.bool("stage-overlap");
     let mut tl = if staged {
@@ -441,7 +473,7 @@ fn timeline_cmd(args: &Args) -> xdit::Result<()> {
         };
         simulate_stages(&model, px, &cluster, method, &pc, steps, spec)
     } else {
-        simulate(&model, px, &cluster, method, &pc, steps)
+        simulate_with(&model, px, &cluster, method, &pc, steps, algo)
     };
     if let Some(name) = label.filter(|_| !staged) {
         tl.strategy = name;
@@ -451,6 +483,9 @@ fn timeline_cmd(args: &Args) -> xdit::Result<()> {
         return Ok(());
     }
     print!("{}", render(&tl, width));
+    if !staged {
+        println!("collectives: {}", algo.label());
+    }
     if let Some(why) = why {
         println!("why: {why}");
     }

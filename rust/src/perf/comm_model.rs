@@ -1,19 +1,32 @@
-//! Closed-form per-step communication volumes — the paper's Table 1.
+//! Closed-form per-step communication volumes — the paper's Table 1 —
+//! and where those bytes land on a two-tier cluster.
 //!
 //! Volumes are bytes *per device per diffusion step* (fp16 activations, as
 //! deployed), before the algorithm-bandwidth factor. `O(p×hs)` in the paper
-//! is `seq × hidden × 2 bytes` here.
+//! is `seq × hidden × 2 bytes` here. [`comm_bytes`] prices the single-method
+//! rows, [`config_comm_bytes`] composes them for a hybrid config, and
+//! [`ethernet_bytes`] projects a collective's volume onto the inter-node
+//! Ethernet tier under flat-ring vs hierarchical lowering — the quantity
+//! the two-level algorithm of
+//! [`ClusterSpec::collective_cost`](crate::config::hardware::ClusterSpec::collective_cost)
+//! exists to shrink (see the "Communication model" chapter of `DESIGN.md`).
 
+use crate::config::hardware::{ClusterSpec, CollectiveAlgo, CollectiveKind};
 use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
 
 /// Paper Table 1 rows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Row {
+    /// Megatron-style TP: two all-reduces per transformer layer.
     TensorParallel,
+    /// Displaced patch parallelism: stale K/V all-gather per layer.
     DistriFusion,
+    /// Ring attention: K/V blocks circulate the ring every layer.
     SpRing,
+    /// Ulysses sequence parallelism: four all-to-alls per layer.
     SpUlysses,
+    /// Patch-level pipeline: one activation patch in + out per micro-step.
     PipeFusion,
 }
 
@@ -85,6 +98,87 @@ pub fn config_comm_bytes(m: &ModelSpec, px: usize, pc: &ParallelConfig) -> f64 {
         total += (px as f64 / 8.0).powi(2) * m.c_latent as f64 * 2.0;
     }
     total
+}
+
+/// Bytes a collective puts on the inter-node Ethernet tier, per step.
+///
+/// `bytes` is the per-rank payload (the same argument
+/// [`ClusterSpec::collective_cost`] takes). For a group confined to one
+/// node nothing crosses Ethernet and the answer is `0.0` for either
+/// algorithm. For a node-spanning group:
+///
+/// * **Flat ring** — every rank is a ring peer, so each rank's full ring
+///   volume (`bytes × flat_factor`) funnels through the node seams: the
+///   whole collective is priced at the shared-NIC Ethernet bottleneck.
+/// * **Hierarchical** — only the phase-2 leader exchange crosses: node
+///   aggregates for all-gather, one reduced buffer (twice for all-reduce)
+///   for the reduction kinds, and the node-to-node slices
+///   `g·bytes·(n−g)/(n−1)` for all-to-all.
+///
+/// The ratio of the two is the wire saving the planner's "why" string
+/// cites when it picks hierarchical collectives.
+///
+/// ```
+/// use xdit::config::hardware::{ClusterSpec, CollectiveAlgo, CollectiveKind};
+/// use xdit::perf::comm_model::ethernet_bytes;
+///
+/// // a 16-rank Ulysses all-to-all spanning both nodes of l40x16,
+/// // 1 MB payload per rank
+/// let c = ClusterSpec::by_name("l40x16")?;
+/// let group: Vec<usize> = (0..16).collect();
+/// let flat = ethernet_bytes(&c, &group, 1e6, CollectiveKind::AllToAll,
+///                           CollectiveAlgo::FlatRing);
+/// let hier = ethernet_bytes(&c, &group, 1e6, CollectiveKind::AllToAll,
+///                           CollectiveAlgo::Hierarchical);
+/// assert_eq!(flat, 16.0 * 1e6);           // every rank's payload crosses
+/// // hierarchical: each node's leader ships only the node-to-node slice,
+/// // 8 ranks x 1 MB x 8/15 each way
+/// assert!((hier - 2.0 * (8.0 * 1e6 * 8.0 / 15.0)).abs() < 1.0);
+/// assert!(hier < 0.54 * flat);
+/// # Ok::<(), xdit::Error>(())
+/// ```
+///
+/// [`ClusterSpec::collective_cost`]:
+/// crate::config::hardware::ClusterSpec::collective_cost
+pub fn ethernet_bytes(
+    cluster: &ClusterSpec,
+    group: &[usize],
+    bytes: f64,
+    kind: CollectiveKind,
+    algo: CollectiveAlgo,
+) -> f64 {
+    let n = group.len();
+    if n <= 1 {
+        return 0.0;
+    }
+    let mut per_node: std::collections::BTreeMap<usize, usize> = Default::default();
+    for &d in group {
+        *per_node.entry(cluster.node_of(d)).or_insert(0) += 1;
+    }
+    let nodes = per_node.len();
+    if nodes <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    match algo {
+        CollectiveAlgo::FlatRing => nf * bytes * kind.flat_factor(n),
+        CollectiveAlgo::Hierarchical => {
+            let steps = nodes as f64 - 1.0;
+            match kind {
+                // every node aggregate traverses the leaders-only ring
+                CollectiveKind::AllGather => nf * bytes * steps,
+                CollectiveKind::ReduceScatter => bytes * steps,
+                CollectiveKind::AllReduce => 2.0 * bytes * steps,
+                CollectiveKind::AllToAll => per_node
+                    .values()
+                    .map(|&g| {
+                        let g = g as f64;
+                        g * bytes * (nf - g) / (nf - 1.0)
+                    })
+                    .sum(),
+            }
+        }
+    }
 }
 
 /// Memory cost multipliers of Table 1 (params, KV), as fractions of the
@@ -166,6 +260,40 @@ mod tests {
             + comm_bytes(Row::PipeFusion, &m, s, 2) / 2.0
             + cfg_only;
         assert!((config_comm_bytes(&m, px, &hybrid) - parts).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ethernet_bytes_shrink_under_hierarchy() {
+        use crate::config::hardware::l40_cluster;
+        let c = l40_cluster(2);
+        let group: Vec<usize> = (0..16).collect();
+        let kinds = [
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllToAll,
+        ];
+        for kind in kinds {
+            let flat = ethernet_bytes(&c, &group, 1e6, kind, CollectiveAlgo::FlatRing);
+            let hier = ethernet_bytes(&c, &group, 1e6, kind, CollectiveAlgo::Hierarchical);
+            assert!(flat > 0.0, "{kind:?}");
+            assert!(
+                hier < flat,
+                "{kind:?}: hierarchical must put fewer bytes on Ethernet ({hier} vs {flat})"
+            );
+            // a single-node group never touches the Ethernet tier
+            let local: Vec<usize> = (0..8).collect();
+            for algo in [CollectiveAlgo::FlatRing, CollectiveAlgo::Hierarchical] {
+                assert_eq!(ethernet_bytes(&c, &local, 1e6, kind, algo), 0.0);
+            }
+        }
+        // the all-reduce saving is the classic two-level one: 2(n-1)/n x n
+        // per-rank volumes collapse to two reduced buffers per extra node
+        let flat = ethernet_bytes(&c, &group, 1e6, CollectiveKind::AllReduce,
+                                  CollectiveAlgo::FlatRing);
+        let hier = ethernet_bytes(&c, &group, 1e6, CollectiveKind::AllReduce,
+                                  CollectiveAlgo::Hierarchical);
+        assert!((flat / hier - 15.0).abs() < 1e-9, "flat/hier = {}", flat / hier);
     }
 
     #[test]

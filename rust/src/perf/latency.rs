@@ -15,7 +15,7 @@
 //!   (~serial) step; skip-connection models add non-adjacent P2P that
 //!   breaks overlap (Fig 17).
 
-use crate::config::hardware::ClusterSpec;
+use crate::config::hardware::{ClusterSpec, CollectiveAlgo, CollectiveKind};
 use crate::config::model::{BlockVariant, ModelSpec};
 use crate::config::parallel::ParallelConfig;
 use crate::perf::flops;
@@ -103,7 +103,8 @@ fn intra_group(_cluster: &ClusterSpec, world: usize, cfg: usize, branch: usize) 
     (0..n_intra).map(|i| branch * n_intra + i).collect()
 }
 
-/// Per-generation latency of a (method, config) on `world` devices.
+/// Per-generation latency of a (method, config) on `world` devices,
+/// priced with the historical flat-ring collectives.
 pub fn predict_latency(
     m: &ModelSpec,
     px: usize,
@@ -111,6 +112,24 @@ pub fn predict_latency(
     method: Method,
     pc: &ParallelConfig,
     steps: usize,
+) -> LatencyBreakdown {
+    predict_latency_with(m, px, cluster, method, pc, steps, CollectiveAlgo::FlatRing)
+}
+
+/// Per-generation latency of a (method, config) with an explicit
+/// collective algorithm. [`CollectiveAlgo::FlatRing`] is bit-exact with
+/// [`predict_latency`]; [`CollectiveAlgo::Hierarchical`] reprices the TP
+/// allreduce, the Ulysses all-to-all, and the DistriFusion allgather
+/// through the two-level decomposition ([`ClusterSpec::collective_cost`]).
+/// Ring hops and patch/latent P2P are algorithm-free either way.
+pub fn predict_latency_with(
+    m: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    method: Method,
+    pc: &ParallelConfig,
+    steps: usize,
+    algo: CollectiveAlgo,
 ) -> LatencyBreakdown {
     let world = pc.world().max(1);
     let cfg = pc.cfg;
@@ -133,11 +152,12 @@ pub fn predict_latency(
 
     let (comm_exposed_step, warmup_extra) = match method {
         Method::Tp => {
-            let t = 2.0 * l * cluster.collective_time(&group, hs, 2.0 * (n - 1.0) / n);
+            let t = 2.0 * l * cluster.collective_cost(&group, hs, CollectiveKind::AllReduce, algo);
             (t * branch_factor, 0.0)
         }
         Method::SpUlysses => {
-            let t = l * cluster.collective_time(&group, 4.0 * hs / n, 1.0);
+            let t =
+                l * cluster.collective_cost(&group, 4.0 * hs / n, CollectiveKind::AllToAll, algo);
             (t * branch_factor, 0.0)
         }
         Method::SpRing => {
@@ -156,7 +176,20 @@ pub fn predict_latency(
             (exposed * branch_factor, 0.0)
         }
         Method::DistriFusion => {
-            let t_comm = cluster.collective_time(&group, 2.0 * hs * l / n, n - 1.0);
+            // flat keeps the historical `n - 1.0` factor form (bit-exact
+            // with prior releases); hierarchical reprices the stale-KV
+            // allgather through the two-level decomposition
+            let t_comm = match algo {
+                CollectiveAlgo::FlatRing => {
+                    cluster.collective_time(&group, 2.0 * hs * l / n, n - 1.0)
+                }
+                CollectiveAlgo::Hierarchical => cluster.collective_cost(
+                    &group,
+                    2.0 * hs * l / n,
+                    CollectiveKind::AllGather,
+                    algo,
+                ),
+            };
             let exposed = (t_comm - compute_step).max(0.0);
             // one synchronous warmup step ~ serial compute on the group
             let warm = flops::compute_time(step_fl, tfl) * branch_factor - compute_step;
@@ -190,7 +223,8 @@ pub fn predict_latency(
             let nsp = pc.sp_degree() as f64;
             if pc.ulysses > 1 {
                 let g: Vec<usize> = group[..pc.ulysses].to_vec();
-                exposed += l * cluster.collective_time(&g, 4.0 * hs / n, 1.0);
+                exposed +=
+                    l * cluster.collective_cost(&g, 4.0 * hs / n, CollectiveKind::AllToAll, algo);
             }
             if pc.ring > 1 {
                 let g: Vec<usize> = group[..pc.sp_degree()].to_vec();
@@ -239,7 +273,8 @@ pub fn predict_latency(
 }
 
 /// Best hybrid configuration for a world size (exhaustive over valid
-/// configs, as the paper's per-figure "hybrid" series does).
+/// configs, as the paper's per-figure "hybrid" series does), priced with
+/// flat-ring collectives.
 pub fn best_hybrid(
     m: &ModelSpec,
     px: usize,
@@ -247,17 +282,29 @@ pub fn best_hybrid(
     world: usize,
     steps: usize,
 ) -> (ParallelConfig, LatencyBreakdown) {
+    best_hybrid_with(m, px, cluster, world, steps, CollectiveAlgo::FlatRing)
+}
+
+/// [`best_hybrid`] with an explicit collective algorithm.
+pub fn best_hybrid_with(
+    m: &ModelSpec,
+    px: usize,
+    cluster: &ClusterSpec,
+    world: usize,
+    steps: usize,
+    algo: CollectiveAlgo,
+) -> (ParallelConfig, LatencyBreakdown) {
     let s_img = m.seq_len(px);
     let mut best: Option<(ParallelConfig, LatencyBreakdown)> = None;
     for pc in ParallelConfig::enumerate(world, m, s_img) {
-        let lb = predict_latency(m, px, cluster, Method::Hybrid, &pc, steps);
+        let lb = predict_latency_with(m, px, cluster, Method::Hybrid, &pc, steps, algo);
         if best.as_ref().map(|(_, b)| lb.total < b.total).unwrap_or(true) {
             best = Some((pc, lb));
         }
     }
     best.unwrap_or_else(|| {
         let pc = ParallelConfig::serial();
-        let lb = predict_latency(m, px, cluster, Method::Hybrid, &pc, steps);
+        let lb = predict_latency_with(m, px, cluster, Method::Hybrid, &pc, steps, algo);
         (pc, lb)
     })
 }
@@ -380,6 +427,72 @@ mod tests {
             &m, 2048, &c, Method::SpUlysses, &Method::SpUlysses.single_config(8), 50,
         );
         assert!(pf.total > ul.total, "skip penalty missing: pf {} ul {}", pf.total, ul.total);
+    }
+
+    #[test]
+    fn hierarchical_closed_forms_never_worse_cross_node() {
+        // on the two-tier testbeds the leader exchange beats the
+        // NIC-shared flat ring for every collective-bearing method
+        let m = pixart();
+        let c = l40_cluster(2);
+        for meth in [Method::Tp, Method::SpUlysses, Method::DistriFusion] {
+            let pc = meth.single_config(16);
+            let flat = predict_latency(&m, 2048, &c, meth, &pc, 20);
+            let hier = predict_latency_with(
+                &m,
+                2048,
+                &c,
+                meth,
+                &pc,
+                20,
+                CollectiveAlgo::Hierarchical,
+            );
+            assert!(
+                hier.total <= flat.total,
+                "{meth:?}: hier {} > flat {}",
+                hier.total,
+                flat.total
+            );
+        }
+        // strictly better where the collective dominates (Ulysses at 16
+        // ranks funnels 8 ranks through each NIC under the flat ring)
+        let pc = Method::SpUlysses.single_config(16);
+        let flat = predict_latency(&m, 2048, &c, Method::SpUlysses, &pc, 20);
+        let hier = predict_latency_with(
+            &m,
+            2048,
+            &c,
+            Method::SpUlysses,
+            &pc,
+            20,
+            CollectiveAlgo::Hierarchical,
+        );
+        assert!(hier.total < flat.total);
+    }
+
+    #[test]
+    fn hierarchical_closed_forms_bit_exact_single_node() {
+        // a single-node group gives hierarchy nothing to exploit: the two
+        // algorithms must agree to the bit for every method
+        let m = pixart();
+        for c in [l40_cluster(1), a100_node()] {
+            for meth in
+                [Method::Tp, Method::SpUlysses, Method::SpRing, Method::PipeFusion, Method::Hybrid]
+            {
+                let pc = meth.single_config(8);
+                let flat = predict_latency(&m, 2048, &c, meth, &pc, 20);
+                let hier = predict_latency_with(
+                    &m,
+                    2048,
+                    &c,
+                    meth,
+                    &pc,
+                    20,
+                    CollectiveAlgo::Hierarchical,
+                );
+                assert_eq!(flat.total.to_bits(), hier.total.to_bits(), "{meth:?} on {}", c.name);
+            }
+        }
     }
 
     #[test]

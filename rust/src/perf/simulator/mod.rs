@@ -16,15 +16,20 @@
 //! renderable as an ASCII Gantt ([`render`], the `xdit timeline`
 //! command) or exportable as canonical JSON ([`Timeline::to_json`]).
 //!
-//! Where a strategy's overlap is total or absent (serial, CFG pair, TP,
-//! SP-Ulysses, SP-Ring, DistriFusion) the simulated makespan reproduces
-//! the closed form exactly; where overlap is partial and pipelined
+//! Where a strategy's overlap is total or absent (serial, CFG pair,
+//! SP-Ring, DistriFusion) the simulated makespan reproduces the closed
+//! form exactly; where overlap is partial (TP and SP-Ulysses hide a
+//! bounded fraction of their per-layer collectives — [`TP_OVERLAP`],
+//! [`ULYSSES_OVERLAP`] — behind the next layer's compute) or pipelined
 //! (PipeFusion, hybrids) the two models *disagree*, and the divergence is
 //! the signal — e.g. the event pipeline amortizes the fill bubble the
-//! closed form charges every step. `benches/simulator.rs` sweeps the
+//! closed form charges every step, and the simulated TP/Ulysses makespan
+//! lands strictly under the fully-exposed closed form but never below
+//! the busiest rank's compute. `benches/simulator.rs` sweeps the
 //! Figs 8–17 grid and asserts the agreement band cell by cell;
 //! `coordinator::planner` re-scores its top candidates with this
-//! simulator under `Fidelity::Simulated`.
+//! simulator under `Fidelity::Simulated` — [`simulate_with`] makes the
+//! re-scoring see the plan's collective algorithm too.
 //!
 //! [`simulate_stages`] additionally lowers the *staged* serving pipeline
 //! (denoise ranks feeding dedicated patch-parallel VAE decode ranks
@@ -36,7 +41,7 @@ mod lower;
 mod timeline;
 
 pub use gantt::{render, MAX_WIDTH, MIN_WIDTH};
-pub use lower::{simulate, simulate_stages, StageSpec};
+pub use lower::{simulate, simulate_stages, simulate_with, StageSpec, TP_OVERLAP, ULYSSES_OVERLAP};
 pub use timeline::{RankTimeline, Span, SpanKind, Timeline};
 
 use crate::config::hardware::ClusterSpec;

@@ -66,7 +66,7 @@
 //! `Engine`, `Session` and `driver` remain the internal layers the facade
 //! composes; see `DESIGN.md` for the module inventory.
 
-use crate::config::hardware::{l40_cluster, ClusterSpec};
+use crate::config::hardware::{l40_cluster, ClusterSpec, CollectiveAlgo};
 use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
 use crate::coordinator::engine::{
@@ -169,6 +169,7 @@ pub struct PipelineBuilder<'a> {
     deadline_admission: bool,
     scheduler: Option<SchedulerKind>,
     method: Option<Method>,
+    collective_algo: Option<CollectiveAlgo>,
     max_batch: usize,
     queue_capacity: usize,
     aging_rate: f64,
@@ -194,6 +195,7 @@ impl<'a> Default for PipelineBuilder<'a> {
             deadline_admission: false,
             scheduler: None,
             method: None,
+            collective_algo: None,
             max_batch: 4,
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             aging_rate: 1.0,
@@ -278,6 +280,16 @@ impl<'a> PipelineBuilder<'a> {
     /// Force a strategy instead of the one the config implies.
     pub fn method(mut self, method: Method) -> Self {
         self.method = Some(method);
+        self
+    }
+
+    /// Pin the collective algorithm every plan is priced with — flat ring
+    /// or two-level hierarchical — instead of the default auto-selection
+    /// (flat everywhere; hierarchical only where a candidate's collectives
+    /// span nodes *and* it strictly lowers the predicted cost). The CLI's
+    /// `--collective-algo flat|hier` maps here; `auto` leaves it unset.
+    pub fn collective_algo(mut self, algo: CollectiveAlgo) -> Self {
+        self.collective_algo = Some(algo);
         self
     }
 
@@ -402,6 +414,9 @@ impl<'a> PipelineBuilder<'a> {
         if let Some(gb) = self.memory_cap_gb {
             planner = planner.with_memory_cap_gb(gb);
         }
+        if let Some(algo) = self.collective_algo {
+            planner = planner.with_collective_algo(algo);
+        }
         planner
     }
 
@@ -495,6 +510,7 @@ impl<'a> PipelineBuilder<'a> {
         engine.memory_cap_bytes = self.memory_cap_gb.map(|gb| gb * 1e9);
         engine.deadline_admission = self.deadline_admission;
         engine.force_method = self.method;
+        engine.collective_algo = self.collective_algo;
         engine.default_scheduler = self.scheduler;
         engine.stage_overlap = self.stage_overlap;
         engine.vae_parallelism = self.vae_parallelism;

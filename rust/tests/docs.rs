@@ -129,6 +129,41 @@ fn staged_execution_is_documented() {
 }
 
 #[test]
+fn communication_model_is_documented() {
+    // the hierarchical-collectives layer must stay documented in both
+    // top-level docs: the DESIGN L3.5 chapter (cost formulas, overlap
+    // semantics, the ASCII flat-vs-hierarchical timeline) and the README
+    // user guide (the override flag + the golden provenance keys)
+    let design = read("DESIGN.md");
+    assert!(
+        design.contains("Communication model (L3.5)"),
+        "DESIGN.md lost its 'Communication model (L3.5)' chapter"
+    );
+    for needle in [
+        "T_flat(bytes)",              // flat alpha-beta formula block
+        "leaders-only exchange",      // hierarchical phase 2
+        "TP_OVERLAP = 0.25",          // overlap-fraction semantics
+        "hierarchically-hidden",      // the contrasting ASCII timeline
+        "ethernet_bytes",             // the wire projection
+    ] {
+        assert!(design.contains(needle), "DESIGN.md comm chapter lost '{needle}'");
+    }
+    let readme = read("README.md");
+    assert!(
+        readme.contains("Hierarchical collectives"),
+        "README.md lost its 'Hierarchical collectives' section"
+    );
+    for needle in [
+        "--collective-algo",       // the route/timeline override flag
+        "sp_flat_config",          // golden provenance keys ...
+        "ulysses_hier_us",         // ... both families
+        "byte-identical",          // the single-node regeneration note
+    ] {
+        assert!(readme.contains(needle), "README.md comm docs lost '{needle}'");
+    }
+}
+
+#[test]
 fn docs_exist_and_are_nonempty() {
     for doc in DOCS {
         let text = read(doc);

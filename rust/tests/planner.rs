@@ -175,6 +175,7 @@ fn committed_golden_snapshot_parses_and_matches_grid_shape() {
         live.as_arr().unwrap().len(),
         "golden snapshot cell count out of sync with the grid definition"
     );
+    let mut multi_node = 0usize;
     for cell in cells {
         for key in [
             "model", "cluster", "world", "px", "config", "method", "predicted_us", "comm_bytes",
@@ -182,7 +183,24 @@ fn committed_golden_snapshot_parses_and_matches_grid_shape() {
         ] {
             assert!(cell.opt(key).is_some(), "golden cell missing '{key}': {cell}");
         }
+        // node-spanning cells carry the flat-vs-hierarchical provenance
+        // keys (the SP-only series priced both ways); single-node cells
+        // must NOT — their snapshot stays byte-identical to the
+        // pre-hierarchical golden
+        let world = cell.get("world").unwrap().as_usize().unwrap();
+        let spans_nodes = world > 8; // both grid families have 8 GPUs/node
+        for key in ["sp_flat_config", "sp_flat_us", "sp_config", "sp_us"] {
+            assert_eq!(
+                cell.opt(key).is_some(),
+                spans_nodes,
+                "'{key}' presence wrong for world={world}: {cell}"
+            );
+        }
+        if spans_nodes {
+            multi_node += 1;
+        }
     }
+    assert!(multi_node >= 5, "grid must keep >= 5 node-spanning cells, got {multi_node}");
 }
 
 #[test]

@@ -1,0 +1,639 @@
+#!/usr/bin/env python3
+"""Exact-arithmetic mirror of `xdit route --grid` for regenerating
+rust/testdata/plans.golden.json without a Rust toolchain.
+
+The authoritative generator is the Rust binary (CI's golden-plans job runs
+`cargo run --release -- route --grid` and byte-diffs the snapshot); this
+script transcribes the same IEEE-double arithmetic in the same operation
+order so the emitted grid is byte-identical. Validate fidelity first:
+
+    python3 tools/regen_golden.py --check-legacy   # byte-compare the
+        # flat-only 8-row grid against a pre-hierarchy snapshot
+    python3 tools/regen_golden.py > rust/testdata/plans.golden.json
+
+Every formula cites the Rust source it mirrors; if the cost model changes,
+change it here too (or just regenerate with cargo and delete this).
+"""
+
+import math
+import sys
+
+# ---------------------------------------------------------------- models
+# rust/src/config/model.rs::all_models (paper family only)
+
+MODELS = {
+    # name: (hidden, heads, layers, s_txt, params, text_encoder_bytes,
+    #        uses_cfg, frames, default_steps, variant)
+    "pixart": (1152, 16, 28, 120, 0.6e9, 18e9, True, 1, 20, "cross"),
+    "sd3": (1536, 24, 24, 160, 2.0e9, 19e9, True, 1, 20, "mmdit"),
+    "flux": (3072, 24, 57, 512, 12.0e9, 9.1e9, False, 1, 28, "mmdit"),
+    "hunyuan": (1408, 16, 40, 256, 1.5e9, 7.7e9, True, 1, 50, "skip"),
+    "cogvideox": (3072, 30, 42, 226, 5.0e9, 8.9e9, True, 13, 50, "mmdit"),
+}
+
+C_LATENT = 4
+
+
+class Model:
+    def __init__(self, name):
+        (self.hidden, self.heads, self.layers, self.s_txt, self.params,
+         self.text_encoder_bytes, self.uses_cfg, self.frames,
+         self.default_steps, self.variant) = MODELS[name]
+        self.name = name
+
+    def in_context_text(self):
+        return self.variant == "mmdit"
+
+    def seq_len(self, px):
+        return (px // 16) * (px // 16) * self.frames
+
+    def attn_seq_len(self, px):
+        return self.seq_len(px) + (self.s_txt if self.in_context_text() else 0)
+
+    def param_bytes(self):
+        return self.params * 2.0
+
+    def step_flops(self, px):
+        s = float(self.attn_seq_len(px))
+        h = float(self.hidden)
+        dense = 2.0 * self.params * s
+        attn = 4.0 * s * s * h * float(self.layers)
+        return dense + attn
+
+
+# -------------------------------------------------------------- clusters
+# rust/src/config/hardware.rs
+
+NVLINK, PCIE, PCIEQPI, ETHERNET = 0, 1, 2, 3  # link_rank order
+
+
+class Cluster:
+    def __init__(self, name):
+        if name.startswith("l40x"):
+            self.tflops, self.mem_bytes = 90.0, 48e9
+            self.has_nvlink, self.gpus_per_numa = False, 4
+            self.bw = {PCIE: 24e9, PCIEQPI: 12e9}
+            self.lat = {PCIE: 8e-6, PCIEQPI: 12e-6}
+        elif name.startswith("a100x"):
+            self.tflops, self.mem_bytes = 250.0, 80e9
+            self.has_nvlink, self.gpus_per_numa = True, 8
+            self.bw = {NVLINK: 250e9}
+            self.lat = {NVLINK: 3e-6}
+        else:
+            raise ValueError(name)
+        self.name = name
+        self.n_gpus = int(name.split("x")[1])
+        self.gpus_per_node = 8
+        self.inter_bw, self.inter_lat = 10e9, 50e-6
+
+    def node_of(self, d):
+        return d // self.gpus_per_node
+
+    def link(self, a, b):
+        if self.node_of(a) != self.node_of(b):
+            return ETHERNET
+        if self.has_nvlink:
+            return NVLINK
+        if a // self.gpus_per_numa != b // self.gpus_per_numa:
+            return PCIEQPI
+        return PCIE
+
+    def link_bw(self, k):
+        return self.inter_bw if k == ETHERNET else self.bw[k]
+
+    def link_lat(self, k):
+        return self.inter_lat if k == ETHERNET else self.lat[k]
+
+    def p2p_time(self, a, b, bytes_):
+        if a == b:
+            return 0.0
+        k = self.link(a, b)
+        return self.link_lat(k) + bytes_ / self.link_bw(k)
+
+    def worst_link(self, group):
+        worst = NVLINK
+        for i, a in enumerate(group):
+            for b in group[i + 1:]:
+                k = self.link(a, b)
+                if k > worst:
+                    worst = k
+        return worst
+
+    def collective_time(self, group, bytes_, factor):
+        n = len(group)
+        if n <= 1:
+            return 0.0
+        k = self.worst_link(group)
+        bw = self.link_bw(k)
+        if k == ETHERNET:
+            per_node = {}
+            for d in group:
+                per_node[self.node_of(d)] = per_node.get(self.node_of(d), 0) + 1
+            bw /= float(max(per_node.values()))
+        steps = float(n - 1)
+        return self.link_lat(k) * steps + bytes_ * factor / bw
+
+    def collective_cost(self, group, bytes_, kind, algo):
+        # rust/src/config/hardware.rs::collective_cost
+        n = len(group)
+        if n <= 1:
+            return 0.0
+        flat = self.collective_time(group, bytes_, flat_factor(kind, n))
+        if algo == "flat":
+            return flat
+        per_node = {}
+        for d in group:
+            per_node.setdefault(self.node_of(d), []).append(d)
+        subs = [per_node[k] for k in sorted(per_node)]
+        if len(subs) <= 1:
+            return flat
+        nf = float(n)
+        nodes = float(len(subs))
+        ether_steps = nodes - 1.0
+        ether_lat = self.inter_lat * ether_steps
+        ether_bw = self.inter_bw
+
+        def intra_max(f):
+            best = 0.0
+            for sub in subs:
+                best = max(best, f(sub, float(len(sub))))
+            return best
+
+        if kind == "all_gather":
+            gather = intra_max(lambda sub, g: self.collective_time(sub, bytes_, g - 1.0))
+            inbound = max((nf - float(len(sub))) * bytes_ for sub in subs)
+            leaders = ether_lat + inbound / ether_bw
+            bcast = intra_max(
+                lambda sub, g: self.collective_time(sub, (nf - g) * bytes_, 1.0))
+            return gather + leaders + bcast
+        if kind == "reduce_scatter":
+            reduce = intra_max(
+                lambda sub, g: self.collective_time(sub, bytes_, (g - 1.0) / g))
+            leaders = ether_lat + bytes_ * ether_steps / nodes / ether_bw
+            scatter = intra_max(
+                lambda sub, g: self.collective_time(sub, bytes_ / max(g, 1.0), 1.0))
+            return reduce + leaders + scatter
+        if kind == "all_reduce":
+            reduce = intra_max(
+                lambda sub, g: self.collective_time(sub, bytes_, (g - 1.0) / g))
+            leaders = ether_lat + bytes_ * 2.0 * ether_steps / nodes / ether_bw
+            gather = intra_max(
+                lambda sub, g: self.collective_time(sub, bytes_, (g - 1.0) / g))
+            return reduce + leaders + gather
+        if kind == "all_to_all":
+            # pipelined: slowest tier's byte rate + fill/drain latencies
+
+            def intra_lat(sub):
+                if len(sub) <= 1:
+                    return 0.0
+                return self.link_lat(self.worst_link(sub)) * (float(len(sub)) - 1.0)
+
+            def intra_stream(sub, vol):
+                if len(sub) <= 1:
+                    return 0.0
+                return vol / self.link_bw(self.worst_link(sub))
+
+            fill = 0.0
+            for sub in subs:
+                fill = max(fill, intra_lat(sub))
+            funnel = 0.0
+            for sub in subs:
+                funnel = max(funnel, intra_stream(sub, bytes_))
+            wire = 0.0
+            for sub in subs:
+                g = float(len(sub))
+                wire = max(wire, g * bytes_ * (nf - g) / (nf - 1.0))
+            wire = wire / ether_bw
+            scatter = 0.0
+            for sub in subs:
+                g = float(len(sub))
+                scatter = max(scatter, intra_stream(sub, g * bytes_ * (nf - g) / (nf - 1.0)))
+            return ether_lat + 2.0 * fill + max(funnel, wire, scatter)
+        raise ValueError(kind)
+
+
+def flat_factor(kind, n):
+    nf = float(n)
+    if kind == "all_gather":
+        return (nf - 1.0) / nf * nf
+    if kind == "reduce_scatter":
+        return (nf - 1.0) / nf
+    if kind == "all_reduce":
+        return 2.0 * (nf - 1.0) / nf
+    return 1.0  # all_to_all
+
+
+# -------------------------------------------------------- parallel config
+# rust/src/config/parallel.rs
+
+
+class PC:
+    def __init__(self, cfg, pf, ul, ring, patches=None):
+        self.cfg, self.pipefusion, self.ulysses, self.ring = cfg, pf, ul, ring
+        self.patches = patches if patches is not None else (pf if pf > 1 else 1)
+
+    def key(self):
+        return (self.cfg, self.pipefusion, self.ulysses, self.ring, self.patches)
+
+    def world(self):
+        return self.cfg * self.pipefusion * self.ulysses * self.ring
+
+    def sp_degree(self):
+        return self.ulysses * self.ring
+
+    def seq_shards(self):
+        return self.patches * self.sp_degree()
+
+    def is_serial(self):
+        return self.world() == 1
+
+    def describe(self):
+        parts = []
+        if self.cfg > 1:
+            parts.append("cfg=%d" % self.cfg)
+        if self.pipefusion > 1:
+            parts.append("pipefusion=%d(M=%d)" % (self.pipefusion, self.patches))
+        if self.ulysses > 1:
+            parts.append("ulysses=%d" % self.ulysses)
+        if self.ring > 1:
+            parts.append("ring=%d" % self.ring)
+        return ",".join(parts) if parts else "serial"
+
+    def valid(self, m, s_img):
+        if self.cfg > 2 or self.cfg == 0:
+            return False
+        if self.cfg == 2 and not m.uses_cfg:
+            return False
+        if 0 in (self.pipefusion, self.ulysses, self.ring, self.patches):
+            return False
+        if m.heads % self.ulysses != 0:
+            return False
+        if self.pipefusion > m.layers:
+            return False
+        if self.pipefusion > 1 and self.patches < self.pipefusion:
+            return False
+        if self.pipefusion > 1 and m.variant == "skip" and self.pipefusion > 2:
+            return False
+        shards = self.seq_shards()
+        if s_img % shards != 0:
+            return False
+        if m.in_context_text() and m.s_txt % self.sp_degree() != 0:
+            return False
+        if self.ring > 1 and s_img // shards == 0:
+            return False
+        return True
+
+
+def serial_pc():
+    return PC(1, 1, 1, 1, patches=1)
+
+
+def divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def enumerate_configs(world, m, s_img):
+    out, seen = [], set()
+    for cfg in (1, 2):
+        if world % cfg != 0:
+            continue
+        rest = world // cfg
+        for pf in divisors(rest):
+            rest2 = rest // pf
+            for ul in divisors(rest2):
+                ring = rest2 // ul
+                for mul in ((0, 2) if pf > 1 else (0,)):
+                    c = PC(cfg, pf, ul, ring)
+                    if mul > 0:
+                        c = PC(cfg, pf, ul, ring, patches=pf * mul)
+                    if c.valid(m, s_img) and c.key() not in seen:
+                        seen.add(c.key())
+                        out.append(c)
+    return out
+
+
+# ------------------------------------------------------------ cost models
+
+
+def compute_time(flops, tflops):
+    return flops / (tflops * 1e12)
+
+
+def ring_sync_cost(cluster):
+    return 15e-6 if cluster.has_nvlink else 40e-6
+
+
+def predict_latency(m, px, cluster, method, pc, steps, algo):
+    # rust/src/perf/latency.rs::predict_latency_with (Hybrid + SpUlysses)
+    world = max(pc.world(), 1)
+    cfg = pc.cfg
+    branches = 2 if m.uses_cfg else 1
+    n_intra = world // cfg
+    s = m.attn_seq_len(px)
+    group = list(range(n_intra))
+    tfl = cluster.tflops
+
+    step_fl = m.step_flops(px)
+    branch_factor = float(branches) / float(cfg)
+    compute_step = compute_time(step_fl, tfl) / float(n_intra) * branch_factor
+
+    hs = float(s) * float(m.hidden) * 2.0
+    l = float(m.layers)
+    n = float(n_intra)
+
+    if method == "ulysses":
+        t = l * cluster.collective_cost(group, 4.0 * hs / n, "all_to_all", algo)
+        comm, warm = t * branch_factor, 0.0
+    elif method == "hybrid":
+        exposed = 0.0
+        nsp = float(pc.sp_degree())
+        if pc.ulysses > 1:
+            g = group[:pc.ulysses]
+            exposed += l * cluster.collective_cost(g, 4.0 * hs / n, "all_to_all", algo)
+        if pc.ring > 1:
+            g = group[:pc.sp_degree()]
+            hop_bytes = 2.0 * hs / nsp / float(pc.patches)
+            hop_t = cluster.collective_time(g, hop_bytes, 1.0) / max(
+                float(pc.ring) - 1.0, 1.0)
+            blk = compute_time(
+                4.0 * (float(s) / nsp) * (float(s) / nsp) * float(m.hidden)
+                / float(pc.patches), tfl)
+            sync = ring_sync_cost(cluster)
+            exposed += (max(hop_t - blk, 0.0) + sync) * (float(pc.ring) - 1.0) * l
+        warm = 0.0
+        if pc.pipefusion > 1:
+            m_patches = max(pc.patches, 2)
+            micro = compute_step / float(m_patches)
+            exposed += (float(pc.pipefusion) - 1.0) * micro
+            patch_bytes = hs / float(m_patches) / nsp
+            stride = pc.sp_degree()
+            worst = 0.0
+            for i in range(stride, n_intra, stride):
+                worst = max(worst, cluster.p2p_time(group[i - stride], group[i],
+                                                    patch_bytes))
+            exposed += max(worst - micro, 0.0) * float(m_patches)
+            warm = max(compute_time(step_fl, tfl) * branch_factor - compute_step, 0.0)
+        if cfg == 2:
+            latent_bytes = (float(px) / 8.0) * (float(px) / 8.0) * float(C_LATENT) * 2.0
+            exposed += cluster.p2p_time(0, world // 2, latent_bytes)
+        comm = exposed
+    else:
+        raise ValueError(method)
+
+    total = float(steps) * (compute_step + comm) + warm
+    return total
+
+
+def config_comm_bytes(m, px, pc):
+    # rust/src/perf/comm_model.rs::config_comm_bytes
+    s = m.attn_seq_len(px)
+    hs = float(s) * float(m.hidden) * 2.0
+    l = float(m.layers)
+    total = 0.0
+    if pc.ulysses > 1:
+        total += 4.0 / float(pc.ulysses) * hs * l
+    if pc.ring > 1:
+        total += 2.0 * hs * l
+    if pc.pipefusion > 1:
+        total += 2.0 * hs / float(pc.sp_degree())
+    if pc.cfg == 2:
+        total += (float(px) / 8.0) * (float(px) / 8.0) * float(C_LATENT) * 2.0
+    return total
+
+
+def config_memory_total(m, px, pc):
+    # rust/src/perf/memory_model.rs::config_memory
+    s = float(m.attn_seq_len(px))
+    sp = float(pc.sp_degree())
+    pf = float(pc.pipefusion)
+    kv_full = 2.0 * s * float(m.hidden) * 2.0 * float(m.layers)
+    if pc.pipefusion > 1:
+        kv = kv_full / pf / sp
+    else:
+        kv = kv_full / float(m.layers) / sp
+    act_shard = s / (sp * float(max(pc.patches, 1))) * float(m.hidden) * 2.0
+    activations = (8.0 * act_shard
+                   + (float(px) / 8.0) * (float(px) / 8.0) * float(C_LATENT) * 4.0)
+    params = m.param_bytes() / pf
+    return params + m.text_encoder_bytes + kv + activations
+
+
+HBM_USABLE_FRACTION = 0.92
+
+
+def pick_method(pc):
+    if pc.pipefusion > 1 and pc.sp_degree() > 1:
+        return "hybrid"
+    if pc.pipefusion > 1:
+        return "pipefusion"
+    if pc.sp_degree() > 1:
+        return "sp"
+    return "serial"
+
+
+def paper_heuristic(m, px, cluster, world):
+    # rust/src/coordinator/router.rs::paper_heuristic
+    s_img = m.seq_len(px)
+    if world <= 1:
+        return serial_pc()
+    cfg = 2 if m.uses_cfg and world % 2 == 0 else 1
+    state = {"intra": world // cfg, "pipe": 1, "ulysses": 1, "ring": 1}
+
+    def try_cfg(pipe, ul, ring):
+        pc = PC(cfg, pipe, ul, ring)
+        return pc if pc.valid(m, s_img) else None
+
+    def grow(dim):
+        while state["intra"] % 2 == 0:
+            p2, u2, r2 = state["pipe"], state["ulysses"], state["ring"]
+            if dim == "p":
+                p2 *= 2
+            elif dim == "u":
+                u2 *= 2
+            else:
+                r2 *= 2
+            if try_cfg(p2, u2, r2) is not None:
+                state["pipe"], state["ulysses"], state["ring"] = p2, u2, r2
+                state["intra"] //= 2
+            else:
+                break
+
+    if cluster.has_nvlink:
+        grow("u"), grow("p"), grow("r")
+    else:
+        grow("p"), grow("r"), grow("u")
+    pc = try_cfg(state["pipe"], state["ulysses"], state["ring"])
+    return pc if pc is not None else serial_pc()
+
+
+# ---------------------------------------------------------------- planner
+
+
+def price(m, px, cluster, pc, steps, forced_algo):
+    # rust/src/coordinator/planner.rs::Planner::price (CostModel policy)
+    if forced_algo is not None:
+        return forced_algo, predict_latency(m, px, cluster, "hybrid", pc, steps,
+                                            forced_algo)
+    flat = predict_latency(m, px, cluster, "hybrid", pc, steps, "flat")
+    n_intra = max(max(pc.world(), 1) // max(pc.cfg, 1), 1)
+    if n_intra <= cluster.gpus_per_node:
+        return "flat", flat
+    hier = predict_latency(m, px, cluster, "hybrid", pc, steps, "hier")
+    if hier < flat:
+        return "hier", hier
+    return "flat", flat
+
+
+def score(m, px, cluster, pc, forced_algo):
+    steps = m.default_steps
+    algo, total = price(m, px, cluster, pc, steps, forced_algo)
+    mem = config_memory_total(m, px, pc)
+    return {
+        "pc": pc,
+        "algo": algo,
+        "total": total,
+        "mem": mem,
+        "fits": mem < cluster.mem_bytes * HBM_USABLE_FRACTION,
+        "comm": float(steps) * config_comm_bytes(m, px, pc),
+    }
+
+
+def plan(m, px, cluster, world, forced_algo=None):
+    plans = [score(m, px, cluster, pc, forced_algo)
+             for pc in enumerate_configs(world, m, m.seq_len(px))]
+    if not plans:
+        return score(m, px, cluster, paper_heuristic(m, px, cluster, world),
+                     forced_algo)
+    plans.sort(key=lambda p: (not p["fits"], p["total"]))  # stable, like Rust
+    return plans[0]
+
+
+def heuristic_total(m, px, cluster, world):
+    # PaperHeuristic policy always prices flat
+    pc = paper_heuristic(m, px, cluster, world)
+    return pc, predict_latency(m, px, cluster, "hybrid", pc, m.default_steps, "flat")
+
+
+def best_sp_plan(m, px, cluster, world, forced_algo):
+    cands = [pc for pc in enumerate_configs(world, m, m.seq_len(px))
+             if pc.cfg == 1 and pc.pipefusion == 1 and not pc.is_serial()]
+    if not cands:
+        return None
+    best = None
+    for pc in cands:
+        p = score(m, px, cluster, pc, forced_algo)
+        if best is None or p["total"] < best["total"]:  # first min, like min_by
+            best = p
+    return best
+
+
+# ----------------------------------------------------------- JSON output
+
+
+def rust_round(x):
+    f = math.floor(x)
+    d = x - f
+    if d > 0.5 or (d == 0.5 and x >= 0.0):
+        f += 1
+    return f
+
+
+def jstr(s):
+    return '"%s"' % s
+
+
+def render_cell(cell):
+    parts = []
+    for k in sorted(cell):
+        v = cell[k]
+        if isinstance(v, bool):
+            parts.append('%s:%s' % (jstr(k), "true" if v else "false"))
+        elif isinstance(v, int):
+            parts.append('%s:%d' % (jstr(k), v))
+        else:
+            parts.append('%s:%s' % (jstr(k), jstr(v)))
+    return "{%s}" % ",".join(parts)
+
+
+GRID_WORLDS = [1, 2, 4, 8, 16]
+
+LEGACY_GRID = [
+    ("pixart", 2048, "l40x16"),
+    ("sd3", 2048, "l40x16"),
+    ("flux", 1024, "l40x16"),
+    ("cogvideox", 480, "l40x8"),
+    ("pixart", 2048, "a100x8"),
+    ("sd3", 2048, "a100x8"),
+    ("flux", 1024, "a100x8"),
+    ("hunyuan", 2048, "a100x8"),
+]
+
+PAPER_GRID = LEGACY_GRID + [
+    ("pixart", 4096, "l40x16"),
+    ("hunyuan", 2048, "l40x16"),
+    ("pixart", 2048, "a100x16"),
+    ("hunyuan", 2048, "a100x16"),
+]
+
+
+def grid_report(rows, legacy):
+    """legacy=True reproduces the pre-hierarchy generator: flat-only
+    pricing, no provenance keys (the --check-legacy fidelity gate)."""
+    lines = []
+    for name, px, cname in rows:
+        m = Model(name)
+        cluster = Cluster(cname)
+        for world in GRID_WORLDS:
+            if world > cluster.n_gpus:
+                continue
+            best = plan(m, px, cluster, world, "flat" if legacy else None)
+            hpc, htotal = heuristic_total(m, px, cluster, world)
+            cell = {
+                "model": m.name,
+                "cluster": cluster.name,
+                "world": world,
+                "px": px,
+                "config": best["pc"].describe(),
+                "method": pick_method(best["pc"]),
+                "predicted_us": rust_round(best["total"] * 1e6),
+                "comm_bytes": rust_round(best["comm"]),
+                "peak_mem_bytes": rust_round(best["mem"]),
+                "fits": best["fits"],
+                "heuristic_config": hpc.describe(),
+                "heuristic_us": rust_round(htotal * 1e6),
+            }
+            if not legacy and best["algo"] == "hier":
+                cell["algo"] = "hier"
+            if not legacy and world > cluster.gpus_per_node:
+                sp_flat = best_sp_plan(m, px, cluster, world, "flat")
+                sp_auto = best_sp_plan(m, px, cluster, world, None)
+                if sp_flat is not None and sp_auto is not None:
+                    cell["sp_flat_config"] = sp_flat["pc"].describe()
+                    cell["sp_flat_us"] = rust_round(sp_flat["total"] * 1e6)
+                    cell["sp_config"] = sp_auto["pc"].describe()
+                    cell["sp_us"] = rust_round(sp_auto["total"] * 1e6)
+                deep = PC(1, 1, world, 1)
+                if deep.valid(m, m.seq_len(px)):
+                    for key, algo in (("ulysses_flat_us", "flat"),
+                                      ("ulysses_hier_us", "hier")):
+                        t = predict_latency(m, px, cluster, "ulysses", deep,
+                                            m.default_steps, algo)
+                        cell[key] = rust_round(t * 1e6)
+            lines.append(render_cell(cell))
+    return "[\n" + ",\n".join(lines) + "\n]\n"
+
+
+if __name__ == "__main__":
+    if "--check-legacy" in sys.argv:
+        got = grid_report(LEGACY_GRID, legacy=True)
+        path = sys.argv[sys.argv.index("--check-legacy") + 1] \
+            if len(sys.argv) > sys.argv.index("--check-legacy") + 1 \
+            else "rust/testdata/plans.golden.json"
+        want = open(path).read()
+        if got == want:
+            print("legacy grid byte-identical to", path)
+        else:
+            sys.stdout.write(got)
+            sys.exit("MISMATCH vs " + path)
+    else:
+        sys.stdout.write(grid_report(PAPER_GRID, legacy=False))
