@@ -76,4 +76,20 @@ fn main() {
         let n = reqs.len() as f64;
         println!("{:<26} {:>12.3e} {:>10.1}", label, mse_acc / n, psnr_acc / n);
     }
+    // --- degrade ladder, rung 1 (engine::maybe_degrade) -------------------
+    // Under overload the batch tier sheds quality before throughput: the
+    // first rung halves the step count (6 -> ceil(6/2) = 3). Price exactly
+    // what that rung costs in latent fidelity against the full-step serial
+    // reference — the quality side of the `overload` row that
+    // benches/steady_state.rs snapshots into BENCH_serve.json.
+    let mut mse_acc = 0.0;
+    let mut psnr_acc = 0.0;
+    for (req, reference) in reqs.iter().zip(&references) {
+        let degraded = req.clone().with_steps(req.steps.div_ceil(2));
+        let r = reference_pipe.generate(&degraded).unwrap();
+        mse_acc += r.latent.mse(reference).unwrap();
+        psnr_acc += r.latent.psnr(reference).unwrap();
+    }
+    let n = reqs.len() as f64;
+    println!("{:<26} {:>12.3e} {:>10.1}", "degrade rung1 (3 steps)", mse_acc / n, psnr_acc / n);
 }

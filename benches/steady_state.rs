@@ -25,7 +25,7 @@ use std::time::Duration;
 
 use xdit::config::hardware::{l40_cluster, ClusterSpec};
 use xdit::config::model::{BlockVariant, ModelSpec};
-use xdit::coordinator::{Engine, Trace};
+use xdit::coordinator::{Engine, GenRequest, SloClass, Trace};
 use xdit::pipeline::Pipeline;
 use xdit::runtime::Runtime;
 use xdit::tensor::pool;
@@ -46,6 +46,13 @@ const MIN_CACHED_SPEEDUP: f64 = 10.0;
 /// Distinct batch shapes in the trace (2 variants × 1 resolution): the
 /// ceiling `sessions_built` must stay under while batches grow.
 const DISTINCT_SHAPES: u64 = 2;
+/// Requests in the overload burst (all arriving at t=0, SLO tiers round-
+/// robin) — sized so the degrade ladder's backlog thresholds land on
+/// deterministic admission indices.
+const OVERLOAD: usize = 96;
+/// Batch-tier requests the degrade ladder must shed quality from: the
+/// `id % 3 == 2` admissions at backlog ≥ OVERLOAD/2 (ids 50, 53, …, 95).
+const EXPECTED_DEGRADED: u64 = 16;
 
 fn num(v: f64) -> Json {
     Json::Num(v)
@@ -135,6 +142,39 @@ fn main() {
     let (_, denoise_frac, decode_frac) = staged_report.stage_occupancy();
     let stage_stats = staged_report.metrics.stages.clone();
 
+    // --- overload: an SLO-tiered burst through the degrade ladder ---------
+    // all OVERLOAD requests land at t=0 with tiers round-robin, so every
+    // admission index — and therefore every backlog threshold of the
+    // ladder — is deterministic regardless of service-time magnitudes
+    let classes = [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+    let burst: Vec<GenRequest> = (0..OVERLOAD as u64)
+        .map(|i| {
+            GenRequest::new(i, "overload")
+                .with_steps(STEPS)
+                .with_guidance(1.0)
+                .with_slo(classes[i as usize % classes.len()])
+        })
+        .collect();
+    let mut overload_pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .queue_capacity(OVERLOAD)
+        .degrade(true)
+        .build()
+        .expect("overload pipeline builds");
+    let overload_report =
+        overload_pipe.serve_trace(&Trace::new(burst)).expect("overload replay succeeds");
+    let om = overload_report.metrics.clone();
+    assert_eq!(overload_report.responses.len(), OVERLOAD, "degraded work is still served");
+    assert!(overload_report.rejected.is_empty(), "the ladder sheds quality, not requests");
+    assert_eq!(
+        om.degraded, EXPECTED_DEGRADED,
+        "degrade ladder must trigger on the deterministic backlog thresholds"
+    );
+    let p99_interactive = om.latency_quantile_class(SloClass::Interactive, 0.99);
+    let p99_batch = om.latency_quantile_class(SloClass::Batch, 0.99);
+
     // --- plans/sec: cold sweep vs PlanCache hit ---------------------------
     // paper-scale cell with a big enumeration space (pixart @ 2048px on
     // 16 GPUs), so "cold" is the real per-batch cost the cache removes
@@ -167,7 +207,7 @@ fn main() {
         // only value-diffs deterministic counters once a measured
         // snapshot replaces it
         ("provenance", Json::Str("measured".into())),
-        ("schema_version", num(1.0)),
+        ("schema_version", num(2.0)),
         (
             "trace",
             obj(vec![
@@ -228,6 +268,23 @@ fn main() {
             ]),
         ),
         (
+            "overload",
+            obj(vec![
+                ("requests", num(OVERLOAD as f64)),
+                ("served", num(overload_report.responses.len() as f64)),
+                ("rejected", num(overload_report.rejected.len() as f64)),
+                ("degraded", num(om.degraded as f64)),
+                ("preempted", num(om.preemptions as f64)),
+                (
+                    "deadline_misses_interactive",
+                    num(om.deadline_misses_by_class[SloClass::Interactive.index()] as f64),
+                ),
+                ("p99_interactive_s", num(p99_interactive)),
+                ("p99_batch_s", num(p99_batch)),
+                ("virtual_makespan_s", num(overload_report.makespan)),
+            ]),
+        ),
+        (
             "pool",
             obj(vec![
                 ("hits", num(pool_stats.hits as f64)),
@@ -272,6 +329,16 @@ fn main() {
         staged_report.makespan,
         stage_stats.report(staged_report.makespan),
         if staged_report.makespan <= serial_report.makespan { "never worse" } else { "WORSE" }
+    );
+    println!(
+        "overload: {}/{OVERLOAD} served, {} degraded (expected {EXPECTED_DEGRADED}), \
+         {} preempted | p99 interactive {:.3}s vs batch {:.3}s | interactive misses={} — PASS",
+        overload_report.responses.len(),
+        om.degraded,
+        om.preemptions,
+        p99_interactive,
+        p99_batch,
+        om.deadline_misses_by_class[SloClass::Interactive.index()]
     );
     println!(
         "sessions: {} built / {} reused over {} batches — {}",

@@ -82,9 +82,19 @@ impl Batcher {
         self
     }
 
+    /// Static (time-independent) priority of a request: the user
+    /// priority plus its SLO class boost. Interactive work outranks
+    /// standard, standard outranks batch; within a tier the user
+    /// priority still orders requests. Boosts are finite and constant,
+    /// so batch-tier aging still bounds starvation — it just takes
+    /// `boost_gap / aging_rate` extra virtual seconds to catch up.
+    pub fn static_priority(r: &GenRequest) -> f64 {
+        r.priority as f64 + r.slo.priority_boost()
+    }
+
     /// Effective priority of a waiting request at virtual time `now`.
     pub fn effective_priority(&self, r: &GenRequest, now: f64) -> f64 {
-        r.priority as f64 + self.aging_rate * (now - r.arrival).max(0.0)
+        Self::static_priority(r) + self.aging_rate * (now - r.arrival).max(0.0)
     }
 
     /// Continuous-batching selection — the **reference implementation**
@@ -260,7 +270,7 @@ impl Bucket {
     }
 
     fn absorb(&mut self, r: &GenRequest, aging: f64) {
-        let prio = r.priority as f64;
+        let prio = Batcher::static_priority(r);
         self.max_s = self.max_s.max(prio - aging * r.arrival);
         self.max_prio = self.max_prio.max(prio);
         if let Some(d) = r.deadline {
@@ -340,6 +350,31 @@ impl WaitingSet {
     /// Distinct compatibility groups currently waiting.
     pub fn groups(&self) -> usize {
         self.buckets.len()
+    }
+
+    /// Remove a waiting request by id (mid-flight cancellation). Linear
+    /// in the backlog — cancellation is rare, selection is the hot path.
+    /// Rebuilds the touched bucket's aggregates (the removed member may
+    /// have carried an extremum) and drops the bucket when emptied.
+    pub fn remove(&mut self, id: u64) -> Option<GenRequest> {
+        let aging = self.aging_rate;
+        let mut found: Option<(BatchKey, usize)> = None;
+        for (key, bucket) in &self.buckets {
+            if let Some(pos) = bucket.members.iter().position(|r| r.id == id) {
+                found = Some((*key, pos));
+                break;
+            }
+        }
+        let (key, pos) = found?;
+        let bucket = self.buckets.get_mut(&key).expect("bucket just found");
+        let req = bucket.members.remove(pos);
+        if bucket.members.is_empty() {
+            self.buckets.remove(&key);
+        } else {
+            bucket.recompute(aging);
+        }
+        self.len -= 1;
+        Some(req)
     }
 
     /// Rebuild the aggregates if the batcher's aging rate changed since
@@ -514,7 +549,10 @@ mod tests {
                 if rng.below(3) == 0 {
                     r = r.with_deadline(rng.below(32) as f64 * 0.5);
                 }
-                r
+                // SLO boosts (±1e3) and class deadline slacks (30/240)
+                // are dyadic, so the FP-exactness argument still holds
+                use crate::coordinator::request::SloClass;
+                r.with_slo(*rng.pick(&SloClass::ALL))
             };
             let mut reference: Vec<GenRequest> = Vec::new();
             let mut indexed = WaitingSet::new(b.aging_rate);
@@ -581,6 +619,57 @@ mod tests {
         assert_eq!(first.requests[0].id, 0, "aged request must outrank fresh priority");
         assert_eq!(ws.len(), 1);
         assert_eq!(ws.groups(), 1);
+    }
+
+    #[test]
+    fn slo_boost_orders_tiers_but_aging_still_wins() {
+        use crate::coordinator::request::SloClass;
+        let b = Batcher::new(4).with_aging_rate(1.0);
+        // an interactive request freshly arrived outranks a batch-tier
+        // request of much higher user priority
+        let mut waiting = vec![
+            req(0, BlockVariant::AdaLn, 4).with_priority(100).with_slo(SloClass::Batch),
+            req(1, BlockVariant::MmDit, 4).with_priority(0).with_slo(SloClass::Interactive),
+        ];
+        let first = b.next_batch(&mut waiting, 0.0).unwrap();
+        assert_eq!(first.requests[0].id, 1, "interactive boost dominates user priority");
+        // but the boost gap is finite: after boost_gap/aging seconds of
+        // waiting, the batch-tier request outranks fresh interactive work
+        let gap = SloClass::Interactive.priority_boost() - SloClass::Batch.priority_boost();
+        let mut waiting = vec![
+            req(0, BlockVariant::AdaLn, 4).with_arrival(0.0).with_slo(SloClass::Batch),
+            req(1, BlockVariant::MmDit, 4).with_arrival(gap + 1.0).with_slo(SloClass::Interactive),
+        ];
+        let first = b.next_batch(&mut waiting, gap + 1.0).unwrap();
+        assert_eq!(first.requests[0].id, 0, "aging must still bound batch-tier starvation");
+        // and the indexed path agrees on the boost
+        let mut ws = WaitingSet::new(1.0);
+        ws.push(req(0, BlockVariant::AdaLn, 4).with_priority(100).with_slo(SloClass::Batch));
+        ws.push(req(1, BlockVariant::MmDit, 4).with_priority(0).with_slo(SloClass::Interactive));
+        let first = b.next_batch_indexed(&mut ws, 0.0).unwrap();
+        assert_eq!(first.requests[0].id, 1);
+    }
+
+    #[test]
+    fn waiting_set_remove_maintains_len_and_aggregates() {
+        let b = Batcher::new(4).with_aging_rate(0.0);
+        let mut ws = WaitingSet::new(0.0);
+        ws.push(req(0, BlockVariant::AdaLn, 4).with_priority(5));
+        ws.push(req(1, BlockVariant::AdaLn, 4).with_priority(1));
+        ws.push(req(2, BlockVariant::MmDit, 4).with_priority(3));
+        // removing the priority-5 extremum must rebuild the bucket's
+        // aggregates: the MmDit group (prio 3) now outranks AdaLn (prio 1)
+        let removed = ws.remove(0).expect("request 0 is waiting");
+        assert_eq!(removed.id, 0);
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws.groups(), 2);
+        let batch = b.next_batch_indexed(&mut ws, 0.0).unwrap();
+        assert_eq!(batch.requests[0].id, 2, "aggregates must drop the removed extremum");
+        // removing the last member of a group drops the bucket
+        assert!(ws.remove(1).is_some());
+        assert_eq!(ws.groups(), 0);
+        assert!(ws.is_empty());
+        assert!(ws.remove(1).is_none(), "double-cancel is a no-op");
     }
 
     #[test]

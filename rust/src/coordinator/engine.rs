@@ -52,7 +52,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::plan_cache::{fingerprint, PlanCache, PlanKey};
 use crate::coordinator::planner::{Fidelity, Plan, Planner, RoutePolicy};
 use crate::coordinator::queue::{PushError, RequestQueue};
-use crate::coordinator::request::{GenRequest, GenResponse, RequestId};
+use crate::coordinator::request::{GenRequest, GenResponse, RequestId, SloClass};
+use crate::coordinator::trace::TraceEventKind;
 use crate::diffusion::SchedulerKind;
 use crate::parallel::{driver, GenParams, Session};
 use crate::runtime::Runtime;
@@ -68,6 +69,16 @@ pub const DEFAULT_SESSION_CACHE_CAPACITY: usize = 8;
 
 /// Default bound on the denoise→decode inter-stage queue (staged mode).
 pub const DEFAULT_STAGE_QUEUE_CAPACITY: usize = 2;
+
+/// Most preemption slices a single request may absorb. After this many,
+/// a batch-tier batch runs to completion even if an interactive deadline
+/// is at risk — a hard bound that makes live-lock impossible (each slice
+/// also advances the virtual clock, so progress is monotone anyway).
+pub const MAX_PREEMPTIONS: u32 = 4;
+
+/// Lowest resolution the overload degrade ladder may drop a batch-tier
+/// request to (half of the tiny family's native 256px grid).
+pub const MIN_DEGRADE_PX: usize = 128;
 
 /// Shape of a warm session: requests routed to the same (variant,
 /// resolution, config) can reuse the mesh/model the last batch built.
@@ -127,6 +138,20 @@ impl std::fmt::Display for Rejection {
     }
 }
 
+/// Outcome of an [`Engine::cancel`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// Removed from the admission queue; the capacity slot is refunded
+    /// immediately (a blocked producer can admit into it).
+    Queued,
+    /// Removed mid-flight from the batcher's waiting set — the request
+    /// was admitted but had not launched in a batch yet.
+    MidFlight,
+    /// Unknown id: never admitted, already completed, or already
+    /// cancelled. Cancellation is idempotent.
+    NotFound,
+}
+
 /// The continuous-batching serving engine (see the module docs for the
 /// admission path and lifecycle invariants). Internal: user code enters
 /// through `crate::pipeline::Pipeline`.
@@ -177,6 +202,30 @@ pub struct Engine<'a> {
     /// decodes are still queued, the next decode-bound denoise launch
     /// stalls (backpressure — `Metrics::stages` counts the stalls).
     pub stage_queue_capacity: usize,
+    /// Batch-tier preemption (on by default). When the replay loop's
+    /// lookahead says an interactive request will arrive mid-batch and
+    /// miss its deadline unless served promptly, an all-batch-tier batch
+    /// yields at the arrival with its completed steps credited
+    /// (`maybe_preempt`). Disable for a preemption-free control replay —
+    /// latents are bit-identical either way, only latencies move.
+    pub preemption: bool,
+    /// Degrade-under-overload ladder (opt-in): at admission, batch-tier
+    /// requests lose diffusion steps (backlog ≥ half capacity) and then
+    /// resolution (backlog ≥ three quarters) — trading batch-tier output
+    /// quality for queue headroom. Quantified by `benches/fig19_quality`.
+    pub degrade: bool,
+    /// Per-class admission budgets: `Some(n)` caps the pending requests
+    /// of that class admitted through `submit` (index by
+    /// `SloClass::index()`). `None` = only the shared queue bound.
+    pub slo_budgets: [Option<usize>; SloClass::COUNT],
+    /// The replay loop's preemption lookahead: the next not-yet-admitted
+    /// interactive request as (arrival, deadline, estimated exec
+    /// seconds). Stale entries (arrival ≤ now) are ignored.
+    preempt_lookahead: Option<(f64, Option<f64>, f64)>,
+    /// Pending (submitted, unserved) counts per SLO class — the budget
+    /// quantity. Tracks the `submit`/`tick` path only; `serve` windows
+    /// bypass admission and the budgets with it.
+    pending_by_class: [usize; SloClass::COUNT],
     /// Bounded admission queue. Engine admission itself is leader-side
     /// (`submit` takes `&mut self`); cross-thread producers feed an
     /// *external* `RequestQueue` handle the leader drains into a `Trace`
@@ -233,6 +282,11 @@ impl<'a> Engine<'a> {
             stage_overlap: false,
             vae_parallelism: None,
             stage_queue_capacity: DEFAULT_STAGE_QUEUE_CAPACITY,
+            preemption: true,
+            degrade: false,
+            slo_budgets: [None; SloClass::COUNT],
+            preempt_lookahead: None,
+            pending_by_class: [0; SloClass::COUNT],
             queue: RequestQueue::new(DEFAULT_QUEUE_CAPACITY),
             waiting: WaitingSet::new(1.0),
             plan_cache: RefCell::new(PlanCache::default()),
@@ -287,7 +341,25 @@ impl<'a> Engine<'a> {
     /// *total* admitted-but-unserved set, not just the mpsc front, so a
     /// live submit/tick loop cannot grow `waiting` without bound.
     /// Rejections are counted.
-    pub fn submit(&mut self, req: GenRequest) -> std::result::Result<(), Rejection> {
+    pub fn submit(&mut self, mut req: GenRequest) -> std::result::Result<(), Rejection> {
+        if self.degrade && req.slo == SloClass::Batch {
+            self.maybe_degrade(&mut req);
+        }
+        let class = req.slo;
+        if let Some(budget) = self.slo_budgets[class.index()] {
+            if self.pending_by_class[class.index()] >= budget {
+                self.metrics.rejected += 1;
+                return Err(Rejection {
+                    id: req.id,
+                    reason: format!(
+                        "slo budget: {} {} requests pending >= class budget {}",
+                        self.pending_by_class[class.index()],
+                        class.name(),
+                        budget
+                    ),
+                });
+            }
+        }
         if self.deadline_admission {
             let rej = self.deadline_rejection(&req);
             // the admission check planned through the cache: reflect its
@@ -310,7 +382,10 @@ impl<'a> Engine<'a> {
             });
         }
         match self.queue.push(req) {
-            Ok(()) => Ok(()),
+            Ok(()) => {
+                self.pending_by_class[class.index()] += 1;
+                Ok(())
+            }
             // unreachable in practice: the pre-check bounds pending() which
             // dominates queue.len(), and the engine never closes its own
             // queue — kept as defense with the same backpressure contract
@@ -330,6 +405,98 @@ impl<'a> Engine<'a> {
     /// Requests admitted but not yet completed.
     pub fn pending(&self) -> usize {
         self.waiting.len() + self.queue.len()
+    }
+
+    /// Overload degrade ladder (opt-in via [`Engine::degrade`]): shed
+    /// batch-tier work *quality* instead of rejecting it. Backlog at half
+    /// the queue capacity halves the step count; at three quarters the
+    /// resolution halves too (floored at [`MIN_DEGRADE_PX`]). Degraded
+    /// outputs are *different* outputs — the bit-identity invariant only
+    /// covers non-degraded requests, which is why the ladder is opt-in.
+    fn maybe_degrade(&mut self, req: &mut GenRequest) {
+        let backlog = self.pending();
+        let cap = self.queue.capacity.max(1);
+        if backlog * 2 < cap {
+            return;
+        }
+        let mut touched = false;
+        let halved = req.steps.div_ceil(2).max(1);
+        if halved < req.steps {
+            req.steps = halved;
+            touched = true;
+        }
+        if backlog * 4 >= cap * 3 && req.px / 2 >= MIN_DEGRADE_PX {
+            req.px /= 2;
+            touched = true;
+        }
+        if touched {
+            self.metrics.degraded += 1;
+        }
+    }
+
+    /// Cancel a request by id, wherever it currently is. Queued requests
+    /// refund their admission slot immediately; mid-flight (admitted,
+    /// waiting for a batch) requests leave the waiting set and are never
+    /// launched. Completed or unknown ids are a no-op (`NotFound`) —
+    /// cancellation is idempotent and never un-serves a response.
+    pub fn cancel(&mut self, id: RequestId) -> CancelOutcome {
+        if let Some(r) = self.queue.remove(id) {
+            self.metrics.cancelled_queued += 1;
+            self.dec_pending(r.slo);
+            return CancelOutcome::Queued;
+        }
+        if let Some(r) = self.waiting.remove(id) {
+            self.metrics.cancelled_midflight += 1;
+            self.dec_pending(r.slo);
+            return CancelOutcome::MidFlight;
+        }
+        CancelOutcome::NotFound
+    }
+
+    fn dec_pending(&mut self, class: SloClass) {
+        let c = &mut self.pending_by_class[class.index()];
+        *c = c.saturating_sub(1);
+    }
+
+    /// Apply a mid-trace cluster mutation ([`TraceEventKind`]) to the
+    /// engine's world. The mutated spec's fingerprint differs, so the
+    /// next planning decision self-invalidates the plan *and* session
+    /// caches and re-plans against the new topology — the PR 5
+    /// invalidation seam, now exercised mid-trace. `Cancel` events route
+    /// to [`Engine::cancel`]. The serving world only ever clamps *down*
+    /// (to the surviving GPU count); regrowth adds planner headroom for
+    /// engines built at a larger world but never exceeds the original.
+    pub fn apply_cluster_event(&mut self, kind: TraceEventKind) {
+        match kind {
+            TraceEventKind::RankFail => {
+                self.cluster.n_gpus = self.cluster.n_gpus.saturating_sub(1).max(1);
+            }
+            TraceEventKind::NodeShrink => {
+                let node = self.cluster.gpus_per_node.max(1);
+                self.cluster.n_gpus = self.cluster.n_gpus.saturating_sub(node).max(1);
+            }
+            TraceEventKind::NodeGrow => {
+                self.cluster.n_gpus += self.cluster.gpus_per_node.max(1);
+            }
+            TraceEventKind::Straggler(f) => {
+                if f.is_finite() && f > 0.0 {
+                    self.cluster.gpu.tflops *= f;
+                }
+            }
+            TraceEventKind::Cancel(id) => {
+                self.cancel(id);
+                return;
+            }
+        }
+        self.world = self.world.min(self.cluster.n_gpus).max(1);
+    }
+
+    /// Feed the replay loop's preemption lookahead: the next
+    /// not-yet-admitted interactive request as (arrival, deadline,
+    /// estimated exec seconds). `None` (or a stale arrival ≤ now)
+    /// disables preemption for the next batch.
+    pub fn set_preempt_lookahead(&mut self, lookahead: Option<(f64, Option<f64>, f64)>) {
+        self.preempt_lookahead = lookahead;
     }
 
     /// The plan the engine would run a request under: the forced config
@@ -457,12 +624,94 @@ impl<'a> Engine<'a> {
         self.metrics.ticks += 1;
         self.waiting.extend(self.queue.drain_upto(usize::MAX));
         match self.batcher.next_batch_indexed(&mut self.waiting, self.now) {
-            Some(batch) => self.execute_batch(batch),
+            Some(batch) => match self.maybe_preempt(batch)? {
+                Some(batch) => self.execute_batch(batch),
+                // preempted: the members are back in the waiting set with
+                // progress credited and the clock sits at the interactive
+                // arrival — the next tick serves the urgent work first
+                None => Ok(Vec::new()),
+            },
             None => {
                 self.metrics.idle_ticks += 1;
                 Ok(Vec::new())
             }
         }
+    }
+
+    /// Batch-tier preemption decision for a selected batch. Returns the
+    /// batch unchanged ("run it") unless ALL of the following hold, in
+    /// which case the batch yields (`None`) at the interactive arrival:
+    ///
+    /// * preemption is on and a lookahead `(arr, deadline, exec)` with
+    ///   `arr > now` is set;
+    /// * every member is batch-tier with preemption budget left
+    ///   ([`MAX_PREEMPTIONS`]);
+    /// * the interactive request would arrive mid-batch
+    ///   (`arr < est_finish`), would miss its deadline if it waited for
+    ///   the batch (`est_finish + exec > deadline`), and preempting
+    ///   actually saves it (`arr + exec <= deadline`).
+    ///
+    /// The yield credits each member the whole steps its fair share of
+    /// the `[now, arr)` window covers (never to completion — at least one
+    /// step remains so the final pass always runs and produces the
+    /// latent), re-admits the members, and advances the clock to `arr`.
+    /// Only the *remaining* steps are charged when a member finally runs,
+    /// so a preempted request pays its compute once; the latent is
+    /// produced from the original parameters in one piece, which is what
+    /// keeps preempted outputs bit-identical to a preemption-free replay.
+    fn maybe_preempt(&mut self, batch: Batch) -> Result<Option<Batch>> {
+        if !self.preemption {
+            return Ok(Some(batch));
+        }
+        let Some((arr, deadline, est_exec)) = self.preempt_lookahead else {
+            return Ok(Some(batch));
+        };
+        if arr <= self.now {
+            return Ok(Some(batch));
+        }
+        let preemptible = batch
+            .requests
+            .iter()
+            .all(|r| r.slo == SloClass::Batch && r.preemptions < MAX_PREEMPTIONS);
+        if !preemptible {
+            return Ok(Some(batch));
+        }
+        let first = &batch.requests[0];
+        let spec = ModelSpec::for_variant(first.variant)?;
+        let plan = self.plan_for(&spec, first.px, first.steps);
+        self.sync_cache_metrics();
+        let per_step = plan.per_step(first.steps);
+        if per_step <= 0.0 || !per_step.is_finite() {
+            return Ok(Some(batch));
+        }
+        let remaining: usize =
+            batch.requests.iter().map(|r| r.steps - r.steps_done.min(r.steps)).sum();
+        let est_finish = self.now + per_step * remaining as f64;
+        let dl = deadline.unwrap_or(f64::INFINITY);
+        let arrives_mid_batch = arr < est_finish;
+        let misses_if_waiting = est_finish + est_exec > dl;
+        let saved_by_preempting = arr + est_exec <= dl;
+        if !(arrives_mid_batch && misses_if_waiting && saved_by_preempting) {
+            return Ok(Some(batch));
+        }
+        // fair-share slice of the [now, arr) window across the members
+        let window = arr - self.now;
+        let k = (window / (per_step * batch.len() as f64)).floor() as usize;
+        let mut charged = 0.0;
+        for mut r in batch.requests {
+            let rem = r.steps - r.steps_done.min(r.steps);
+            let credit = k.min(rem.saturating_sub(1));
+            charged += credit as f64 * per_step;
+            r.steps_done += credit;
+            r.preemptions += 1;
+            self.waiting.push(r);
+        }
+        self.metrics.preemptions += 1;
+        self.metrics.model_seconds += charged;
+        self.metrics.stages.denoise_busy += charged;
+        self.now = arr;
+        self.metrics.horizon = self.horizon();
+        Ok(None)
     }
 
     /// Serve exactly this window of requests to completion, bypassing the
@@ -565,7 +814,18 @@ impl<'a> Engine<'a> {
             // the session's clocks/ledger persist across the batch;
             // driver::generate reports per-generation deltas
             let r = driver::generate(&mut sess, method, &params)?;
-            let model_seconds = r.makespan;
+            // progress credit: a preempted request already paid for
+            // `steps_done` of its steps in the slice window, so only the
+            // remaining fraction is charged here. `frac` is exactly 1.0
+            // for never-preempted requests (`x * 1.0 == x` bit-exactly,
+            // so the pre-SLO timing arithmetic is unchanged).
+            let done = req.steps_done.min(req.steps);
+            let frac = if req.steps == 0 {
+                1.0
+            } else {
+                (req.steps - done) as f64 / req.steps as f64
+            };
+            let model_seconds = r.makespan * frac;
             let comm_bytes = r.comm_bytes;
 
             let mut image = None;
@@ -591,14 +851,15 @@ impl<'a> Engine<'a> {
             self.metrics.stages.denoise_busy += model_seconds;
             self.metrics.stages.decode_busy += decode_time;
             let latency = finish - req.arrival;
-            self.metrics.latency.observe(latency);
+            self.metrics.observe_latency(req.slo, latency);
             self.metrics.queue_delay.observe(start - req.arrival);
             self.metrics.exec_time.observe(exec);
             if matches!(req.deadline, Some(d) if finish > d) {
-                self.metrics.deadline_misses += 1;
+                self.metrics.observe_deadline_miss(req.slo);
             }
             self.metrics.served += 1;
             self.metrics.model_seconds += model_seconds;
+            self.dec_pending(req.slo);
             out.push(GenResponse {
                 id: req.id,
                 latent: r.latent,
@@ -1067,6 +1328,173 @@ mod tests {
         // the per-batch event simulation rides along in every response
         assert!(out[0].simulated_seconds > 0.0);
         assert_eq!(out[0].simulated_seconds, out.last().unwrap().simulated_seconds);
+    }
+
+    #[test]
+    fn cancel_queued_and_midflight_requests() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        eng.set_queue_capacity(2);
+        eng.submit(GenRequest::new(0, "a")).unwrap();
+        eng.submit(GenRequest::new(1, "b")).unwrap();
+        // cancel-while-queued refunds the admission slot immediately
+        assert_eq!(eng.cancel(1), CancelOutcome::Queued);
+        assert_eq!(eng.metrics.cancelled_queued, 1);
+        assert_eq!(eng.pending(), 1);
+        eng.submit(GenRequest::new(2, "c")).expect("cancellation refunded capacity");
+        // two incompatible groups: one tick serves one, parks the other
+        // in the waiting set — cancel it mid-flight
+        let mut r = GenRequest::new(3, "d");
+        r.steps = 8;
+        assert_eq!(eng.cancel(3), CancelOutcome::NotFound, "not yet submitted");
+        let served = eng.tick().unwrap();
+        assert_eq!(served.len(), 2);
+        eng.submit(r).unwrap();
+        eng.submit(GenRequest::new(4, "e")).unwrap();
+        let first = eng.tick().unwrap();
+        assert_eq!(first.len(), 1, "one group launches, the other waits");
+        let waiting_id = if first[0].id == 3 { 4 } else { 3 };
+        assert_eq!(eng.cancel(waiting_id), CancelOutcome::MidFlight);
+        assert_eq!(eng.metrics.cancelled_midflight, 1);
+        assert_eq!(eng.pending(), 0);
+        // a cancelled request is never served and cancel is idempotent
+        assert!(eng.tick().unwrap().is_empty());
+        assert_eq!(eng.cancel(waiting_id), CancelOutcome::NotFound);
+        assert_eq!(eng.metrics.served, 3);
+        assert_eq!(eng.metrics.cancelled(), 2);
+    }
+
+    #[test]
+    fn slo_budgets_cap_per_class_admission() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        eng.slo_budgets[SloClass::Batch.index()] = Some(1);
+        let bulk = |id: u64| GenRequest::new(id, "bulk").with_slo(SloClass::Batch);
+        eng.submit(bulk(0)).unwrap();
+        let rej = eng.submit(bulk(1)).unwrap_err();
+        assert!(rej.reason.contains("slo budget"), "{}", rej.reason);
+        // other classes are not charged against the batch budget
+        eng.submit(GenRequest::new(2, "std")).unwrap();
+        // cancellation refunds the class budget ...
+        assert_eq!(eng.cancel(0), CancelOutcome::Queued);
+        eng.submit(bulk(3)).unwrap();
+        // ... and so does completion
+        while !eng.tick().unwrap().is_empty() {}
+        eng.submit(bulk(4)).unwrap();
+        assert_eq!(eng.metrics.rejected, 1);
+    }
+
+    #[test]
+    fn degrade_ladder_sheds_steps_then_resolution() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        eng.degrade = true;
+        eng.set_queue_capacity(4);
+        let bulk = |id: u64| GenRequest::new(id, "bulk").with_slo(SloClass::Batch);
+        for id in 0..4u64 {
+            eng.submit(bulk(id)).unwrap();
+        }
+        // backlog 0,1: untouched; backlog 2 (≥ cap/2): steps halve;
+        // backlog 3 (≥ 3·cap/4): resolution halves too
+        assert_eq!(eng.metrics.degraded, 2);
+        let mut responses = Vec::new();
+        while let Ok(out) = eng.tick() {
+            if out.is_empty() {
+                break;
+            }
+            responses.extend(out);
+        }
+        assert_eq!(responses.len(), 4);
+        assert!(responses.iter().any(|r| r.px == MIN_DEGRADE_PX), "level-2 degrade missing");
+        assert!(responses.iter().any(|r| r.px == 256), "early admissions must stay untouched");
+        // standard-tier requests are never degraded, even under overload
+        let mut eng2 = Engine::new(&rt, l40_cluster(1), 4);
+        eng2.degrade = true;
+        eng2.set_queue_capacity(2);
+        eng2.submit(GenRequest::new(0, "a")).unwrap();
+        eng2.submit(GenRequest::new(1, "b")).unwrap();
+        assert_eq!(eng2.metrics.degraded, 0);
+    }
+
+    #[test]
+    fn preemption_slices_batch_work_and_keeps_latents_bit_identical() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(1), 4);
+        let spec = ModelSpec::for_variant(BlockVariant::AdaLn).unwrap();
+        let total = eng.plan_for(&spec, 256, 4).predicted.total;
+        assert!(total > 0.0);
+        let mut bulk = GenRequest::new(0, "bulk").with_slo(SloClass::Batch);
+        bulk.steps = 4;
+        eng.submit(bulk).unwrap();
+        // an interactive request lands 60% into the batch with a deadline
+        // that waiting would miss but prompt service meets
+        let arr = 0.6 * total;
+        let dl = 1.7 * total;
+        eng.set_preempt_lookahead(Some((arr, Some(dl), total)));
+        let out = eng.tick().unwrap();
+        assert!(out.is_empty(), "the batch must yield, not complete");
+        assert_eq!(eng.metrics.preemptions, 1);
+        assert_eq!(eng.virtual_now(), arr, "the clock advances to the interactive arrival");
+        assert_eq!(eng.pending(), 1, "the preempted request re-entered the waiting set");
+        // the stale lookahead (arr <= now) no longer preempts: the batch
+        // resumes and finishes, charged only for its remaining steps
+        let out = eng.tick().unwrap();
+        assert_eq!(out.len(), 1);
+        let resumed = &out[0];
+        let mut control = Engine::new(&rt, l40_cluster(1), 4);
+        control.preemption = false;
+        let mut same = GenRequest::new(0, "bulk").with_slo(SloClass::Batch);
+        same.steps = 4;
+        let ctrl = control.serve(vec![same]).unwrap();
+        assert_eq!(resumed.latent, ctrl[0].latent, "preemption must not change output bits");
+        assert!(
+            resumed.model_seconds < ctrl[0].model_seconds,
+            "progress credit: only remaining steps charged ({} vs {})",
+            resumed.model_seconds,
+            ctrl[0].model_seconds
+        );
+        // interactive batches are never preempted
+        let mut eng2 = Engine::new(&rt, l40_cluster(1), 4);
+        let mut int = GenRequest::new(1, "urgent").with_slo(SloClass::Interactive);
+        int.steps = 4;
+        eng2.submit(int).unwrap();
+        eng2.set_preempt_lookahead(Some((arr, Some(dl), total)));
+        assert_eq!(eng2.tick().unwrap().len(), 1);
+        assert_eq!(eng2.metrics.preemptions, 0);
+    }
+
+    #[test]
+    fn cluster_events_mutate_topology_and_invalidate_caches_once() {
+        let rt = setup();
+        let mut eng = Engine::new(&rt, l40_cluster(2), 16);
+        let spec = ModelSpec::for_variant(BlockVariant::AdaLn).unwrap();
+        eng.plan_for(&spec, 256, 2); // prime: first check records the fp
+        let gpus = eng.cluster.n_gpus;
+        // a straggler slowdown flips the fingerprint exactly once
+        eng.apply_cluster_event(TraceEventKind::Straggler(0.5));
+        eng.plan_for(&spec, 256, 2);
+        let (_, _, inv) = eng.plan_cache.borrow().counters();
+        assert_eq!(inv, 1, "one mutation, one invalidation");
+        // planning again without a new event does NOT invalidate again
+        eng.plan_for(&spec, 256, 2);
+        let (_, _, inv) = eng.plan_cache.borrow().counters();
+        assert_eq!(inv, 1);
+        // rank failure loses one GPU and clamps the serving world
+        eng.apply_cluster_event(TraceEventKind::RankFail);
+        assert_eq!(eng.cluster.n_gpus, gpus - 1);
+        assert!(eng.world <= eng.cluster.n_gpus);
+        eng.plan_for(&spec, 256, 2);
+        let (_, _, inv) = eng.plan_cache.borrow().counters();
+        assert_eq!(inv, 2);
+        // shrink then grow moves a whole node each way
+        eng.apply_cluster_event(TraceEventKind::NodeShrink);
+        assert_eq!(eng.cluster.n_gpus, gpus - 1 - eng.cluster.gpus_per_node);
+        eng.apply_cluster_event(TraceEventKind::NodeGrow);
+        assert_eq!(eng.cluster.n_gpus, gpus - 1);
+        // cancel events route to Engine::cancel (no topology change)
+        eng.submit(GenRequest::new(7, "x")).unwrap();
+        eng.apply_cluster_event(TraceEventKind::Cancel(7));
+        assert_eq!(eng.metrics.cancelled_queued, 1);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! the continuous-batching scheduler, and the per-stage occupancy block
 //! of the staged engine ([`StageStats`]).
 
+use crate::coordinator::request::SloClass;
 use crate::coordinator::stages::StageStats;
 
 /// Log-bucketed latency histogram over seconds (~1ms to ~1000s).
@@ -119,6 +120,24 @@ pub struct Metrics {
     pub occupancy_max: u64,
     /// Requests that finished after their declared deadline.
     pub deadline_misses: u64,
+    /// Deadline misses split by SLO class (`SloClass::index()` order).
+    /// The aggregate counter hides interactive-tier misses behind
+    /// batch-tier mass; SLO accounting needs the split.
+    pub deadline_misses_by_class: [u64; SloClass::COUNT],
+    /// End-to-end latency split by SLO class (`SloClass::index()` order).
+    pub latency_by_class: [Histogram; SloClass::COUNT],
+    /// Batch-tier preemption slices taken to protect an interactive
+    /// deadline (each slice re-enqueues the batch with progress credited).
+    pub preemptions: u64,
+    /// Requests cancelled while still in the admission queue (capacity
+    /// refunded immediately).
+    pub cancelled_queued: u64,
+    /// Requests cancelled after admission, while waiting mid-flight in
+    /// the batcher's waiting set.
+    pub cancelled_midflight: u64,
+    /// Batch-tier requests degraded (steps and/or resolution reduced)
+    /// by the overload ladder at admission.
+    pub degraded: u64,
     /// Per-stage busy seconds, inter-stage queue depths, and decode
     /// backpressure stalls (the staged-execution block; busy seconds
     /// accumulate on the serial path too).
@@ -133,6 +152,60 @@ impl Metrics {
         } else {
             0.0
         }
+    }
+
+    /// Record one served request's end-to-end latency in both the
+    /// aggregate histogram and its SLO class's histogram.
+    pub fn observe_latency(&mut self, class: SloClass, v: f64) {
+        self.latency.observe(v);
+        self.latency_by_class[class.index()].observe(v);
+    }
+
+    /// Record a deadline miss against the aggregate and per-class
+    /// counters.
+    pub fn observe_deadline_miss(&mut self, class: SloClass) {
+        self.deadline_misses += 1;
+        self.deadline_misses_by_class[class.index()] += 1;
+    }
+
+    /// Total cancellations (queued + mid-flight).
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled_queued + self.cancelled_midflight
+    }
+
+    /// Latency quantile restricted to one SLO class (0 when the class
+    /// served nothing).
+    pub fn latency_quantile_class(&self, class: SloClass, q: f64) -> f64 {
+        self.latency_by_class[class.index()].quantile(q)
+    }
+
+    /// Per-class latency/deadline rows, one line per class that served
+    /// at least one request (empty string when everything is Standard
+    /// and the split adds no information).
+    pub fn slo_report(&self) -> String {
+        let mut out = String::new();
+        let split = SloClass::ALL
+            .iter()
+            .any(|c| *c != SloClass::Standard && self.latency_by_class[c.index()].count > 0);
+        if !split {
+            return out;
+        }
+        for class in SloClass::ALL {
+            let h = &self.latency_by_class[class.index()];
+            if h.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  slo {:<11} served={} p50/p99 {:.3}/{:.3}s (mean {:.3}s) deadline misses={}\n",
+                class.name(),
+                h.count,
+                h.quantile(0.50),
+                h.quantile(0.99),
+                h.mean(),
+                self.deadline_misses_by_class[class.index()],
+            ));
+        }
+        out
     }
 
     /// Record a launched batch of `n` requests.
@@ -187,6 +260,7 @@ impl Metrics {
              latency p50/p95/p99 {:.3}/{:.3}/{:.3}s (mean {:.3}s max {:.3}s) | \
              queue delay mean {:.3}s p95 {:.3}s | exec mean {:.3}s | \
              batches={} occupancy mean {:.2} max {} | deadline misses={} | \
+             preempted={} cancelled={}+{} degraded={} | \
              sessions={}+{} reused | plan cache {}/{} | vae_builds={}",
             self.served,
             self.rejected,
@@ -204,6 +278,10 @@ impl Metrics {
             self.mean_occupancy(),
             self.occupancy_max,
             self.deadline_misses,
+            self.preemptions,
+            self.cancelled_queued,
+            self.cancelled_midflight,
+            self.degraded,
             self.sessions_built,
             self.sessions_reused,
             self.plan_cache_hits,
@@ -280,5 +358,41 @@ mod tests {
         assert!(r.contains("exec mean"), "{r}");
         assert!(r.contains("occupancy mean 2.00"), "{r}");
         assert!(r.contains("p50/p95/p99"), "{r}");
+        assert!(r.contains("preempted=0 cancelled=0+0 degraded=0"), "{r}");
+    }
+
+    #[test]
+    fn per_class_latency_split_tracks_each_tier() {
+        let mut m = Metrics::default();
+        m.observe_latency(SloClass::Interactive, 0.010);
+        m.observe_latency(SloClass::Interactive, 0.020);
+        m.observe_latency(SloClass::Batch, 8.0);
+        m.observe_deadline_miss(SloClass::Interactive);
+        // aggregate sees all three; the split keeps the tiers apart
+        assert_eq!(m.latency.count, 3);
+        assert_eq!(m.latency_by_class[SloClass::Interactive.index()].count, 2);
+        assert_eq!(m.latency_by_class[SloClass::Batch.index()].count, 1);
+        assert!(
+            m.latency_quantile_class(SloClass::Interactive, 0.99)
+                < m.latency_quantile_class(SloClass::Batch, 0.99)
+        );
+        assert_eq!(m.deadline_misses, 1);
+        assert_eq!(m.deadline_misses_by_class[SloClass::Interactive.index()], 1);
+        let s = m.slo_report();
+        assert!(s.contains("slo interactive"), "{s}");
+        assert!(s.contains("slo batch"), "{s}");
+        assert!(!s.contains("slo standard"), "{s}");
+        // an all-Standard run collapses to no split at all
+        let mut plain = Metrics::default();
+        plain.observe_latency(SloClass::Standard, 1.0);
+        assert!(plain.slo_report().is_empty());
+    }
+
+    #[test]
+    fn cancellation_counters_sum() {
+        let mut m = Metrics::default();
+        m.cancelled_queued = 3;
+        m.cancelled_midflight = 2;
+        assert_eq!(m.cancelled(), 5);
     }
 }

@@ -36,18 +36,21 @@ pub mod queue;
 pub mod request;
 /// Routing policy layer (§5.2.4 heuristic + cost-model default).
 pub mod router;
+/// Seeded adversarial serving scenarios (bursts, stragglers, failures).
+pub mod scenarios;
 /// Per-stage occupancy + bounded-queue stats of the staged engine.
 pub mod stages;
 /// Deterministic virtual-time arrival traces.
 pub mod trace;
 
 pub use batcher::{Batch, Batcher, WaitingSet};
-pub use engine::{Engine, Rejection};
+pub use engine::{CancelOutcome, Engine, Rejection};
 pub use metrics::Metrics;
 pub use plan_cache::{PlanCache, PlanKey};
 pub use planner::{Fidelity, Plan, Planner, RoutePolicy};
 pub use queue::RequestQueue;
-pub use request::{GenRequest, GenResponse, RequestId};
+pub use request::{GenRequest, GenResponse, RequestId, SloClass};
 pub use router::{paper_heuristic, route, route_with_policy};
+pub use scenarios::Scenario;
 pub use stages::{DepthStats, StageStats};
-pub use trace::Trace;
+pub use trace::{Trace, TraceEvent, TraceEventKind};

@@ -184,6 +184,14 @@ impl PlanCache {
         }
     }
 
+    /// The cluster fingerprint the cache is currently filled against
+    /// (`None` until the first [`PlanCache::check_cluster`]). Exposed so
+    /// elasticity tests can assert that a mid-trace cluster mutation
+    /// flipped the fingerprint exactly once per event.
+    pub fn cluster_fp(&self) -> Option<u64> {
+        self.cluster_fp
+    }
+
     /// Memoized plan for `key`, counting the hit/miss.
     pub fn lookup(&mut self, key: &PlanKey) -> Option<Plan> {
         if !self.enabled {
@@ -354,6 +362,28 @@ mod tests {
         assert!(c.lookup(&flat).is_some());
         assert!(c.lookup(&hier).is_none());
         assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn straggler_slowdown_flips_and_restores_the_fingerprint() {
+        // elasticity regression: a straggler event scales gpu.tflops by a
+        // power of two, so applying the inverse factor must restore the
+        // original fingerprint bit-exactly (fp hashes the f64 bits)
+        let stock = l40_cluster(1);
+        let mut slowed = l40_cluster(1);
+        slowed.gpu.tflops *= 0.5;
+        assert_ne!(fingerprint(&stock), fingerprint(&slowed));
+        slowed.gpu.tflops *= 2.0;
+        assert_eq!(fingerprint(&stock), fingerprint(&slowed));
+
+        let mut c = PlanCache::default();
+        assert_eq!(c.cluster_fp(), None);
+        c.check_cluster(fingerprint(&stock));
+        assert_eq!(c.cluster_fp(), Some(fingerprint(&stock)));
+        let mut again = l40_cluster(1);
+        again.gpu.tflops *= 0.5;
+        assert!(c.check_cluster(fingerprint(&again)));
+        assert_eq!(c.cluster_fp(), Some(fingerprint(&again)));
     }
 
     #[test]

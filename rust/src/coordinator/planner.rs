@@ -167,6 +167,14 @@ impl Plan {
         }
     }
 
+    /// Predicted seconds per diffusion step for a `steps`-step run of
+    /// this plan — the granularity the engine's preemption slicer
+    /// credits progress at (`steps` is clamped to ≥ 1 so a degenerate
+    /// probe cannot divide by zero).
+    pub fn per_step(&self, steps: usize) -> f64 {
+        self.predicted.total / steps.max(1) as f64
+    }
+
     /// Multi-line human-readable report of the plan (the `route` CLI
     /// output).
     pub fn describe(&self) -> String {
@@ -798,6 +806,15 @@ mod tests {
     use super::*;
     use crate::config::hardware::{a100_node, l40_cluster};
     use crate::perf::latency::predict_latency;
+
+    #[test]
+    fn per_step_divides_the_predicted_total() {
+        let m = ModelSpec::by_name("pixart").unwrap();
+        let plan = Planner::default().with_steps(20).plan(&m, 1024, &l40_cluster(1), 4);
+        assert!((plan.per_step(20) * 20.0 - plan.predicted.total).abs() < 1e-12);
+        // a zero-step probe clamps instead of dividing by zero
+        assert_eq!(plan.per_step(0), plan.predicted.total);
+    }
 
     #[test]
     fn planner_matches_bruteforce_argmin() {

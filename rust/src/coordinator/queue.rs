@@ -86,6 +86,22 @@ impl RequestQueue {
         g.q.drain(..n).collect()
     }
 
+    /// Remove a request by id before it was drained (cancellation while
+    /// queued). Returns the request so the caller can account for it; the
+    /// freed slot is immediately available to new pushes — cancellation
+    /// refunds admission capacity.
+    pub fn remove(&self, id: u64) -> Option<GenRequest> {
+        let mut g = self.inner.lock().unwrap();
+        let pos = g.q.iter().position(|r| r.id == id)?;
+        let req = g.q.remove(pos);
+        // the slot no longer counts against capacity, so a blocked
+        // producer could now succeed; accepted stays as-is (the request
+        // WAS admitted) — conservation checks account cancellations
+        // separately.
+        self.notify.notify_one();
+        req
+    }
+
     /// Requests currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().q.len()
@@ -146,6 +162,23 @@ mod tests {
         assert!(matches!(q.push(GenRequest::new(1, "b")), Err(PushError::Closed(_))));
         assert_eq!(q.pop().unwrap().id, 0);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn remove_refunds_capacity() {
+        let q = RequestQueue::new(2);
+        q.push(GenRequest::new(0, "a")).unwrap();
+        q.push(GenRequest::new(1, "b")).unwrap();
+        assert!(matches!(q.push(GenRequest::new(2, "c")), Err(PushError::Backpressure(_))));
+        // cancelling a queued request frees its slot immediately
+        let removed = q.remove(1).expect("request 1 is queued");
+        assert_eq!(removed.id, 1);
+        q.push(GenRequest::new(3, "d")).expect("slot was refunded");
+        // FIFO order of the survivors is preserved
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 3);
+        // unknown ids are a no-op
+        assert!(q.remove(42).is_none());
     }
 
     #[test]

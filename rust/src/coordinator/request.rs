@@ -13,6 +13,83 @@ use crate::diffusion::SchedulerKind;
 /// Caller-assigned request identifier (echoed in responses/rejections).
 pub type RequestId = u64;
 
+/// Service-level objective tier of a request (ROADMAP item 4).
+///
+/// The class drives *scheduling*, never *numerics*: it is deliberately
+/// excluded from `GenRequest::batch_key` so a mixed-tier trace still
+/// batches by compiled shape. Interactive work gets a priority boost and
+/// a tight default deadline; batch work is preemptible and (opt-in)
+/// degradable under overload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum SloClass {
+    /// Latency-sensitive, tight deadline; may preempt batch-tier work.
+    Interactive,
+    /// The default tier: scheduled on priority + aging, never preempted.
+    #[default]
+    Standard,
+    /// Throughput tier: preemptible, degradable, loosest deadline.
+    Batch,
+}
+
+impl SloClass {
+    /// Number of SLO classes (sizes the per-class metric arrays).
+    pub const COUNT: usize = 3;
+
+    /// All classes, in `index()` order.
+    pub const ALL: [SloClass; SloClass::COUNT] =
+        [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    /// Dense index for per-class metric arrays.
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    /// Priority boost folded into the batcher's urgency score. Large
+    /// enough to dominate user priorities (small ints) without making
+    /// batch-tier aging unable to catch up.
+    pub fn priority_boost(self) -> f64 {
+        match self {
+            SloClass::Interactive => 1.0e3,
+            SloClass::Standard => 0.0,
+            SloClass::Batch => -1.0e3,
+        }
+    }
+
+    /// Default completion-deadline slack (virtual seconds past arrival)
+    /// applied by the trace/scenario builders when a request has no
+    /// explicit deadline. Batch tier has no deadline.
+    pub fn deadline_slack(self) -> Option<f64> {
+        match self {
+            SloClass::Interactive => Some(30.0),
+            SloClass::Standard => Some(240.0),
+            SloClass::Batch => None,
+        }
+    }
+
+    /// Parse a CLI/scenario spelling of a class name.
+    pub fn by_name(name: &str) -> Option<SloClass> {
+        match name {
+            "interactive" | "int" => Some(SloClass::Interactive),
+            "standard" | "std" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase spelling (metrics report rows, CLI echo).
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+}
+
 /// Default target resolution (pixels, square) — matches the tiny family's
 /// native 256-token latent grid (256px / patch 16).
 pub const DEFAULT_PX: usize = 256;
@@ -50,6 +127,16 @@ pub struct GenRequest {
     /// clock as `arrival`). Missing it is recorded in `Metrics`, not an
     /// error — the engine still serves the request.
     pub deadline: Option<f64>,
+    /// SLO tier (scheduling only — excluded from `batch_key`).
+    pub slo: SloClass,
+    /// Diffusion steps already credited by a preemption slice. Only the
+    /// *remaining* virtual time is charged when the request finally runs;
+    /// the latent itself is always produced from the original `steps`, so
+    /// preemption cannot change the output bits.
+    pub steps_done: usize,
+    /// How many times this request has been preempted. Bounded by the
+    /// engine (`MAX_PREEMPTIONS`) so batch-tier work cannot live-lock.
+    pub preemptions: u32,
 }
 
 impl GenRequest {
@@ -69,6 +156,9 @@ impl GenRequest {
             decode: false,
             priority: 0,
             deadline: None,
+            slo: SloClass::Standard,
+            steps_done: 0,
+            preemptions: 0,
         }
     }
 
@@ -129,6 +219,17 @@ impl GenRequest {
     /// Absolute completion deadline on the virtual clock.
     pub fn with_deadline(mut self, deadline: f64) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Assign the SLO tier. If the request has no explicit deadline yet,
+    /// the class default slack (relative to the *current* `arrival`) is
+    /// applied — call after `with_arrival` for non-zero arrivals.
+    pub fn with_slo(mut self, slo: SloClass) -> Self {
+        self.slo = slo;
+        if self.deadline.is_none() {
+            self.deadline = slo.deadline_slack().map(|s| self.arrival + s);
+        }
         self
     }
 
@@ -233,5 +334,35 @@ mod tests {
         let a = GenRequest::new(1, "x");
         let b = GenRequest::new(2, "y").with_priority(9).with_deadline(1.0);
         assert_eq!(a.batch_key(), b.batch_key());
+        // the SLO tier is scheduling-only: mixed tiers still co-batch
+        let c = GenRequest::new(3, "z").with_slo(SloClass::Interactive);
+        let d = GenRequest::new(4, "w").with_slo(SloClass::Batch);
+        assert_eq!(c.batch_key(), d.batch_key());
+        assert_eq!(a.batch_key(), c.batch_key());
+    }
+
+    #[test]
+    fn slo_defaults_and_deadline_inheritance() {
+        // default tier is Standard with no implicit deadline
+        let a = GenRequest::new(1, "x");
+        assert_eq!(a.slo, SloClass::Standard);
+        assert_eq!(a.deadline, None);
+        // with_slo applies the class slack relative to arrival ...
+        let b = GenRequest::new(2, "y").with_arrival(10.0).with_slo(SloClass::Interactive);
+        assert_eq!(b.deadline, Some(10.0 + 30.0));
+        // ... never overrides an explicit deadline ...
+        let c = GenRequest::new(3, "z").with_deadline(5.0).with_slo(SloClass::Interactive);
+        assert_eq!(c.deadline, Some(5.0));
+        // ... and batch tier stays deadline-free
+        let d = GenRequest::new(4, "w").with_slo(SloClass::Batch);
+        assert_eq!(d.deadline, None);
+        // boosts are ordered and round-trip through the CLI spellings
+        assert!(SloClass::Interactive.priority_boost() > SloClass::Standard.priority_boost());
+        assert!(SloClass::Standard.priority_boost() > SloClass::Batch.priority_boost());
+        for class in SloClass::ALL {
+            assert_eq!(SloClass::by_name(class.name()), Some(class));
+            assert_eq!(SloClass::ALL[class.index()], class);
+        }
+        assert_eq!(SloClass::by_name("gold"), None);
     }
 }

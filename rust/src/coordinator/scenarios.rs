@@ -1,0 +1,334 @@
+//! Seeded adversarial serving scenarios.
+//!
+//! Each [`Scenario`] is a *pure function* of `(seed, n)` producing a
+//! [`Trace`]: arrivals, SLO classes, model mixes and mid-trace cluster
+//! events all derive from one seeded [`Rng`], so a scenario replays
+//! bit-identically — the property `tests/scenarios.rs` pins. The catalog
+//! deliberately covers the failure modes a static Poisson workload never
+//! exercises: thundering-herd bursts, diurnal load swings, mixed
+//! image+video (CogVideoX-shaped) traffic, straggler ranks, and
+//! mid-trace failures that force the `PlanCache` invalidation seam.
+
+use crate::config::model::BlockVariant;
+use crate::coordinator::request::{GenRequest, SloClass, DEFAULT_PX};
+use crate::coordinator::trace::{Trace, TraceEvent, TraceEventKind};
+use crate::util::rng::Rng;
+
+/// Prompt pool shared by the scenario generators (sampled per request).
+const PROMPTS: [&str; 4] =
+    ["a red fox in snow", "city skyline at dusk", "an astronaut sketch", "a bowl of fruit"];
+
+/// A named adversarial serving scenario (see the module docs). The CLI
+/// exposes the catalog as `serve --scenario <name>`; `tests/scenarios.rs`
+/// replays every variant against the SLO invariants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Quiet trickle, a lull, then a thundering herd at ~25× the base
+    /// rate with interactive requests inside the burst.
+    Burst,
+    /// Four alternating low/high "time of day" phases — the load swings
+    /// the batcher must absorb without starving the batch tier.
+    Diurnal,
+    /// Mixed image and video traffic: cheap AdaLn image requests plus
+    /// CogVideoX-shaped MM-DiT clips (long sequences, more steps) on the
+    /// batch tier — the two populations must not starve each other.
+    MixedMedia,
+    /// A straggler rank halves cluster throughput mid-trace, then
+    /// recovers — the fingerprint must flip on both edges and restore
+    /// bit-exactly (the slowdown factors are powers of two).
+    Straggler,
+    /// Rank failure, node drain and node re-join mid-trace, plus two
+    /// cancellations — every event forces a re-plan on the next batch.
+    FailureReplan,
+}
+
+impl Scenario {
+    /// Every scenario, in catalog order.
+    pub const ALL: [Scenario; 5] = [
+        Scenario::Burst,
+        Scenario::Diurnal,
+        Scenario::MixedMedia,
+        Scenario::Straggler,
+        Scenario::FailureReplan,
+    ];
+
+    /// Stable CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Burst => "burst",
+            Scenario::Diurnal => "diurnal",
+            Scenario::MixedMedia => "mixed-media",
+            Scenario::Straggler => "straggler",
+            Scenario::FailureReplan => "failure-replan",
+        }
+    }
+
+    /// Parse a CLI name (the inverse of [`Scenario::name`]).
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Scenario::ALL.iter().copied().find(|s| s.name() == name)
+    }
+
+    /// One-line description for `--help` and reports.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Scenario::Burst => "quiet trickle, then a thundering herd with interactive work",
+            Scenario::Diurnal => "alternating low/high load phases (virtual time of day)",
+            Scenario::MixedMedia => "image traffic plus CogVideoX-shaped video clips",
+            Scenario::Straggler => "mid-trace straggler slowdown and recovery",
+            Scenario::FailureReplan => "rank fail, node drain/re-join and cancellations",
+        }
+    }
+
+    /// Materialize the deterministic trace: a pure function of
+    /// `(seed, n)`. `n` is clamped to ≥ 8 so every scenario keeps its
+    /// shape (bursts need a pre-burst population, events need arrivals
+    /// on both sides of the fire time).
+    pub fn trace(&self, seed: u64, n: usize) -> Trace {
+        let n = n.max(8);
+        match self {
+            Scenario::Burst => burst(seed, n),
+            Scenario::Diurnal => diurnal(seed, n),
+            Scenario::MixedMedia => mixed_media(seed, n),
+            Scenario::Straggler => straggler(seed, n),
+            Scenario::FailureReplan => failure_replan(seed, n),
+        }
+    }
+}
+
+/// A request with the scenario defaults (cheap, deterministic per-id
+/// seed) at `arrival`, classed by `slo`.
+fn request(rng: &mut Rng, seed: u64, id: u64, arrival: f64, slo: SloClass) -> GenRequest {
+    GenRequest::new(id, *rng.pick(&PROMPTS))
+        .with_steps(2)
+        .with_arrival(arrival)
+        .with_seed(seed.wrapping_add(id))
+        .with_slo(slo)
+}
+
+fn burst(seed: u64, n: usize) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(n);
+    let quiet = n / 2;
+    let mut t = 0.0;
+    for i in 0..n as u64 {
+        if i == quiet as u64 {
+            // the lull before the herd: the engine drains fully, then
+            // the second half arrives ~25× faster than the first
+            t += 5.0;
+        }
+        t += if (i as usize) < quiet { rng.exp(0.8) } else { rng.exp(20.0) };
+        let slo = if (i as usize) >= quiet {
+            // the burst mixes urgent work into the herd
+            *rng.pick(&[SloClass::Interactive, SloClass::Standard, SloClass::Batch])
+        } else {
+            *rng.pick(&[SloClass::Standard, SloClass::Batch])
+        };
+        requests.push(request(&mut rng, seed, i, t, slo));
+    }
+    Trace::new(requests)
+}
+
+fn diurnal(seed: u64, n: usize) -> Trace {
+    let mut rng = Rng::new(seed);
+    // four "times of day": night trickle, morning ramp, midday plateau,
+    // evening peak — the rate the exponential gaps are drawn at
+    let phase_rates = [0.5, 4.0, 1.0, 6.0];
+    let per_phase = n.div_ceil(phase_rates.len());
+    let mut requests = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for i in 0..n as u64 {
+        let phase = (i as usize / per_phase).min(phase_rates.len() - 1);
+        t += rng.exp(phase_rates[phase]);
+        // peak phases skew interactive, troughs skew batch
+        let slo = if phase_rates[phase] >= 4.0 {
+            *rng.pick(&[SloClass::Interactive, SloClass::Standard])
+        } else {
+            *rng.pick(&[SloClass::Standard, SloClass::Batch])
+        };
+        requests.push(request(&mut rng, seed, i, t, slo));
+    }
+    Trace::new(requests)
+}
+
+fn mixed_media(seed: u64, n: usize) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for i in 0..n as u64 {
+        t += rng.exp(1.5);
+        let is_video = rng.below(4) == 0;
+        let r = if is_video {
+            // CogVideoX-shaped: MM-DiT, longer sequence, more steps —
+            // bulky clips ride the batch tier
+            request(&mut rng, seed, i, t, SloClass::Batch)
+                .with_variant(BlockVariant::MmDit)
+                .with_steps(8)
+                .with_resolution(2 * DEFAULT_PX)
+        } else {
+            let slo = *rng.pick(&[SloClass::Interactive, SloClass::Standard]);
+            request(&mut rng, seed, i, t, slo)
+        };
+        requests.push(r);
+    }
+    Trace::new(requests)
+}
+
+fn straggler(seed: u64, n: usize) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for i in 0..n as u64 {
+        t += rng.exp(1.5);
+        let slo = *rng.pick(&[SloClass::Interactive, SloClass::Standard, SloClass::Batch]);
+        requests.push(request(&mut rng, seed, i, t, slo));
+    }
+    let horizon = t;
+    // slowdown and recovery are powers of two, so the recovered cluster
+    // fingerprint matches the original bit-exactly
+    let events = vec![
+        TraceEvent { at: 0.25 * horizon, kind: TraceEventKind::Straggler(0.5) },
+        TraceEvent { at: 0.75 * horizon, kind: TraceEventKind::Straggler(2.0) },
+    ];
+    Trace::new(requests).with_events(events)
+}
+
+fn failure_replan(seed: u64, n: usize) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for i in 0..n as u64 {
+        t += rng.exp(1.5);
+        let slo = *rng.pick(&[SloClass::Standard, SloClass::Batch]);
+        requests.push(request(&mut rng, seed, i, t, slo));
+    }
+    let horizon = t;
+    // cancel two mid-trace requests right after they arrive (one early,
+    // one late) — queued or mid-flight depending on load at that instant
+    let c1 = &requests[n / 3];
+    let c2 = &requests[2 * n / 3];
+    let events = vec![
+        TraceEvent { at: c1.arrival, kind: TraceEventKind::Cancel(c1.id) },
+        TraceEvent { at: 0.2 * horizon, kind: TraceEventKind::RankFail },
+        TraceEvent { at: 0.4 * horizon, kind: TraceEventKind::NodeShrink },
+        TraceEvent { at: c2.arrival, kind: TraceEventKind::Cancel(c2.id) },
+        TraceEvent { at: 0.7 * horizon, kind: TraceEventKind::NodeGrow },
+    ];
+    Trace::new(requests).with_events(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn same_trace(a: &Trace, b: &Trace) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.requests().iter().zip(b.requests()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.slo, y.slo);
+            assert_eq!(x.variant, y.variant);
+            assert_eq!(x.steps, y.steps);
+            assert_eq!(x.px, y.px);
+            assert_eq!(x.seed, y.seed);
+        }
+        assert_eq!(a.events(), b.events());
+    }
+
+    #[test]
+    fn every_scenario_is_deterministic_in_the_seed() {
+        for s in Scenario::ALL {
+            same_trace(&s.trace(42, 32), &s.trace(42, 32));
+            let other = s.trace(43, 32);
+            let base = s.trace(42, 32);
+            let differs = base
+                .requests()
+                .iter()
+                .zip(other.requests())
+                .any(|(x, y)| x.arrival != y.arrival || x.prompt != y.prompt);
+            assert!(differs, "{}: the seed must matter", s.name());
+        }
+    }
+
+    #[test]
+    fn names_round_trip_and_describe() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::by_name(s.name()), Some(s));
+            assert!(!s.describe().is_empty());
+        }
+        assert_eq!(Scenario::by_name("nope"), None);
+    }
+
+    #[test]
+    fn burst_arrives_much_faster_than_the_trickle() {
+        let (trickle, herd) = Scenario::Burst.trace(7, 64).mean_gaps();
+        assert!(
+            herd * 5.0 < trickle,
+            "burst gaps ({herd:.4}s) must be far below trickle gaps ({trickle:.4}s)"
+        );
+        let t = Scenario::Burst.trace(7, 64);
+        assert!(
+            t.requests().iter().any(|r| r.slo == SloClass::Interactive),
+            "the herd carries interactive work"
+        );
+    }
+
+    #[test]
+    fn mixed_media_has_both_populations() {
+        let t = Scenario::MixedMedia.trace(11, 64);
+        let videos = t.requests().iter().filter(|r| r.variant == BlockVariant::MmDit);
+        let clips: Vec<_> = videos.collect();
+        assert!(!clips.is_empty(), "some requests must be video-shaped");
+        assert!(clips.len() < 48, "video must stay the minority population");
+        for c in &clips {
+            assert_eq!(c.slo, SloClass::Batch);
+            assert_eq!(c.steps, 8);
+            assert_eq!(c.px, 2 * DEFAULT_PX);
+        }
+        assert!(t.requests().iter().any(|r| r.variant == BlockVariant::AdaLn));
+    }
+
+    #[test]
+    fn event_scenarios_schedule_sorted_mutations() {
+        let s = Scenario::Straggler.trace(3, 32);
+        assert_eq!(s.events().len(), 2);
+        assert!(matches!(s.events()[0].kind, TraceEventKind::Straggler(f) if f == 0.5));
+        assert!(matches!(s.events()[1].kind, TraceEventKind::Straggler(f) if f == 2.0));
+
+        let f = Scenario::FailureReplan.trace(3, 32);
+        assert_eq!(f.events().len(), 5);
+        let mut prev = 0.0;
+        for e in f.events() {
+            assert!(e.at >= prev, "events must be sorted");
+            prev = e.at;
+        }
+        let cancels =
+            f.events().iter().filter(|e| matches!(e.kind, TraceEventKind::Cancel(_))).count();
+        assert_eq!(cancels, 2);
+        // burst / diurnal / mixed-media keep the world static
+        assert!(Scenario::Burst.trace(3, 32).events().is_empty());
+        assert!(Scenario::Diurnal.trace(3, 32).events().is_empty());
+        assert!(Scenario::MixedMedia.trace(3, 32).events().is_empty());
+    }
+
+    #[test]
+    fn tiny_n_is_clamped_so_shapes_survive() {
+        for s in Scenario::ALL {
+            assert!(s.trace(1, 0).len() >= 8, "{}: n clamps to 8", s.name());
+        }
+    }
+}
+
+#[cfg(test)]
+impl Trace {
+    /// (mean trickle gap, mean herd gap) of a burst trace — test helper.
+    fn mean_gaps(&self) -> (f64, f64) {
+        let arr: Vec<f64> = self.requests().iter().map(|r| r.arrival).collect();
+        let half = arr.len() / 2;
+        let mean = |xs: &[f64]| -> f64 {
+            let gaps: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+            gaps.iter().sum::<f64>() / gaps.len().max(1) as f64
+        };
+        (mean(&arr[..half]), mean(&arr[half..]))
+    }
+}

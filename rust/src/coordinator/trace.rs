@@ -8,17 +8,49 @@
 //! batches, same latencies, same latents.
 
 use crate::config::model::BlockVariant;
-use crate::coordinator::request::{GenRequest, DEFAULT_PX};
+use crate::coordinator::request::{GenRequest, RequestId, SloClass, DEFAULT_PX};
 use crate::diffusion::SchedulerKind;
 use crate::util::rng::Rng;
 
-/// A virtual-time request trace, sorted by (arrival, id). The request
-/// list is private so the sortedness/finiteness invariants the replay
-/// loop depends on cannot be bypassed — construct via [`Trace::new`] or
-/// [`Trace::poisson`], read via [`Trace::requests`].
+/// What a mid-trace [`TraceEvent`] does to the world when the replay
+/// clock reaches it. Cluster mutations flip the `ClusterSpec`
+/// fingerprint, which invalidates the `PlanCache` and session cache and
+/// forces a re-plan on the next batch (the PR 5 invalidation seam).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEventKind {
+    /// One rank dies: the cluster loses a GPU (world clamps to fit).
+    RankFail,
+    /// A whole node drains: the cluster loses `gpus_per_node` GPUs.
+    NodeShrink,
+    /// A node joins: the cluster gains `gpus_per_node` GPUs.
+    NodeGrow,
+    /// Straggler: every GPU's effective throughput is scaled by the
+    /// factor (< 1 slows the cluster down, 1.0 restores it).
+    Straggler(f64),
+    /// Cancel the request with this id (queued or mid-flight; a no-op
+    /// if it already completed).
+    Cancel(RequestId),
+}
+
+/// A scheduled mid-trace event: at virtual time `at`, mutate the world.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual time the event fires (same clock as request arrivals).
+    pub at: f64,
+    /// What happens.
+    pub kind: TraceEventKind,
+}
+
+/// A virtual-time request trace, sorted by (arrival, id), plus an
+/// optional sorted schedule of mid-trace [`TraceEvent`]s. The lists are
+/// private so the sortedness/finiteness invariants the replay loop
+/// depends on cannot be bypassed — construct via [`Trace::new`] or
+/// [`Trace::poisson`], attach events via [`Trace::with_events`], read
+/// via [`Trace::requests`] / [`Trace::events`].
 #[derive(Debug, Clone)]
 pub struct Trace {
     requests: Vec<GenRequest>,
+    events: Vec<TraceEvent>,
 }
 
 impl Trace {
@@ -33,12 +65,31 @@ impl Trace {
             }
         }
         requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
-        Trace { requests }
+        Trace { requests, events: Vec::new() }
+    }
+
+    /// Attach a mid-trace event schedule (replacing any previous one).
+    /// Non-finite fire times are coerced to 0.0, then the schedule is
+    /// sorted by fire time so the replay cursor is well-defined.
+    pub fn with_events(mut self, mut events: Vec<TraceEvent>) -> Trace {
+        for e in &mut events {
+            if !e.at.is_finite() {
+                e.at = 0.0;
+            }
+        }
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        self.events = events;
+        self
     }
 
     /// The requests in replay (arrival) order.
     pub fn requests(&self) -> &[GenRequest] {
         &self.requests
+    }
+
+    /// The mid-trace events in fire order (empty for a static world).
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
     }
 
     /// A Poisson arrival process: `n` requests with exponential
@@ -55,6 +106,7 @@ impl Trace {
             schedulers: vec![None],
             resolutions: vec![DEFAULT_PX],
             priorities: vec![0],
+            slos: vec![SloClass::Standard],
             deadline_slack: None,
             decode_every: 0,
             prompts: vec![
@@ -94,6 +146,7 @@ pub struct PoissonTrace {
     schedulers: Vec<Option<SchedulerKind>>,
     resolutions: Vec<usize>,
     priorities: Vec<i32>,
+    slos: Vec<SloClass>,
     deadline_slack: Option<f64>,
     decode_every: usize,
     prompts: Vec<String>,
@@ -144,6 +197,16 @@ impl PoissonTrace {
         self
     }
 
+    /// SLO-class mix (sampled per request). Classes without an explicit
+    /// `deadline_slack` inherit their class default slack (interactive
+    /// tight, standard loose, batch none).
+    pub fn slos(mut self, slos: &[SloClass]) -> Self {
+        if !slos.is_empty() {
+            self.slos = slos.to_vec();
+        }
+        self
+    }
+
     /// Give every request a deadline `slack` virtual seconds after arrival.
     pub fn deadline_slack(mut self, slack: f64) -> Self {
         self.deadline_slack = Some(slack);
@@ -184,6 +247,13 @@ impl PoissonTrace {
             }
             if let Some(slack) = self.deadline_slack {
                 r = r.with_deadline(t + slack);
+            }
+            // after the explicit deadline: with_slo only fills a missing
+            // deadline from the class default slack. The all-Standard
+            // default skips the draw entirely so pre-SLO traces replay
+            // with a bit-identical RNG stream (and no implicit deadline).
+            if self.slos.len() > 1 || self.slos[0] != SloClass::Standard {
+                r = r.with_slo(*rng.pick(&self.slos));
             }
             if self.decode_every > 0 && i % self.decode_every as u64 == 0 {
                 r = r.with_decode(true);
@@ -237,6 +307,59 @@ mod tests {
         assert!(t.requests.iter().any(|r| r.px == 512));
         assert!(t.requests.iter().all(|r| r.deadline == Some(r.arrival + 3.0)));
         assert_eq!(t.requests.iter().filter(|r| r.decode).count(), 8);
+    }
+
+    #[test]
+    fn slo_mix_preserves_the_default_rng_stream() {
+        // the all-Standard default must not consume RNG draws: pre-SLO
+        // traces replay bit-identically (same arrivals, same prompts)
+        let plain = Trace::poisson(42, 16, 1.5).build();
+        let explicit = Trace::poisson(42, 16, 1.5).slos(&[SloClass::Standard]).build();
+        for (x, y) in plain.requests.iter().zip(&explicit.requests) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.slo, SloClass::Standard);
+            assert_eq!(x.deadline, None, "default trace must stay deadline-free");
+        }
+        // a real mix samples classes and fills class-default deadlines
+        let mixed = Trace::poisson(42, 64, 1.5)
+            .slos(&[SloClass::Interactive, SloClass::Standard, SloClass::Batch])
+            .build();
+        assert!(mixed.requests.iter().any(|r| r.slo == SloClass::Interactive));
+        assert!(mixed.requests.iter().any(|r| r.slo == SloClass::Batch));
+        for r in &mixed.requests {
+            match r.slo {
+                SloClass::Batch => assert_eq!(r.deadline, None),
+                c => assert_eq!(r.deadline, Some(r.arrival + c.deadline_slack().unwrap())),
+            }
+        }
+        // deterministic: same seed, same class assignment
+        let mixed2 = Trace::poisson(42, 64, 1.5)
+            .slos(&[SloClass::Interactive, SloClass::Standard, SloClass::Batch])
+            .build();
+        for (x, y) in mixed.requests.iter().zip(&mixed2.requests) {
+            assert_eq!(x.slo, y.slo);
+        }
+        // explicit slack wins over the class default
+        let slacked = Trace::poisson(9, 16, 1.0)
+            .slos(&[SloClass::Interactive])
+            .deadline_slack(2.0)
+            .build();
+        assert!(slacked.requests.iter().all(|r| r.deadline == Some(r.arrival + 2.0)));
+    }
+
+    #[test]
+    fn events_sort_by_fire_time_and_coerce_nonfinite() {
+        let t = Trace::new(vec![GenRequest::new(0, "a")]).with_events(vec![
+            TraceEvent { at: 5.0, kind: TraceEventKind::NodeShrink },
+            TraceEvent { at: f64::NAN, kind: TraceEventKind::Straggler(0.5) },
+            TraceEvent { at: 2.0, kind: TraceEventKind::Cancel(0) },
+        ]);
+        let fires: Vec<f64> = t.events().iter().map(|e| e.at).collect();
+        assert_eq!(fires, vec![0.0, 2.0, 5.0], "NaN coerced to 0, schedule sorted");
+        assert_eq!(t.events()[0].kind, TraceEventKind::Straggler(0.5));
+        // a plain trace carries no events
+        assert!(Trace::poisson(1, 4, 1.0).build().events().is_empty());
     }
 
     #[test]

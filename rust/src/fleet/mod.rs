@@ -34,10 +34,10 @@ pub use dispatcher::{DispatchPolicy, Dispatcher, ReplicaView};
 pub use planner::{frontier, FleetCell, FleetFrontier, RatePoint};
 pub use report::{FleetReport, ReplicaStat};
 
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{CancelOutcome, Engine};
 use crate::coordinator::metrics::Histogram;
 use crate::coordinator::request::GenResponse;
-use crate::coordinator::trace::Trace;
+use crate::coordinator::trace::{Trace, TraceEventKind};
 use crate::{Error, Result};
 use report::{fold, FNV_BASIS};
 
@@ -102,6 +102,8 @@ impl<'a> Fleet<'a> {
         keep: bool,
     ) -> Result<(FleetReport, Vec<GenResponse>)> {
         let reqs = trace.requests();
+        let events = trace.events();
+        let mut next_event = 0;
         let n = self.engines.len();
         let mut routed = vec![0usize; n];
         let mut rejected = Vec::new();
@@ -124,6 +126,16 @@ impl<'a> Fleet<'a> {
 
         for req in reqs {
             let t = req.arrival;
+            // fire every mid-trace event scheduled strictly before this
+            // arrival (strict, so a cancel stamped at its target's own
+            // arrival fires after the submission): cluster mutations hit
+            // all replicas (the fleet shares the physical cluster),
+            // cancels find whichever replica holds the target — a
+            // cancelled request never reaches the digest
+            while next_event < events.len() && events[next_event].at < t {
+                self.apply_event(events[next_event].kind);
+                next_event += 1;
+            }
             // run every replica forward to the arrival instant: busy
             // replicas tick (possibly overshooting t, exactly like
             // serve_trace), idle replicas jump their clock
@@ -145,6 +157,11 @@ impl<'a> Fleet<'a> {
             if let Err(rej) = self.engines[k].submit(req.clone()) {
                 rejected.push(rej);
             }
+        }
+        // events scheduled past the last arrival fire before the drain
+        while next_event < events.len() {
+            self.apply_event(events[next_event].kind);
+            next_event += 1;
         }
         // drain: every replica runs to empty
         for (i, engine) in self.engines.iter_mut().enumerate() {
@@ -181,6 +198,24 @@ impl<'a> Fleet<'a> {
             digest,
         };
         Ok((report, kept))
+    }
+
+    /// Fire one mid-trace event against the fleet: cancels probe the
+    /// replicas until one holds the target (at most one can — requests
+    /// are dispatched to exactly one replica); every other event mutates
+    /// each replica's carved cluster, so all of them re-plan.
+    fn apply_event(&mut self, kind: TraceEventKind) {
+        if let TraceEventKind::Cancel(id) = kind {
+            for e in &mut self.engines {
+                if e.cancel(id) != CancelOutcome::NotFound {
+                    return;
+                }
+            }
+        } else {
+            for e in &mut self.engines {
+                e.apply_cluster_event(kind);
+            }
+        }
     }
 }
 
@@ -232,6 +267,45 @@ mod tests {
             DispatchPolicy::PowerOfTwo { seed: 42 },
         ] {
             assert_eq!(run(policy), run(policy), "replay must be deterministic ({policy:?})");
+        }
+    }
+
+    #[test]
+    fn cancelled_requests_never_reach_the_digest() {
+        use crate::coordinator::trace::TraceEvent;
+        let rt = Runtime::simulated();
+        let base = trace(12);
+        let victim = base.requests().iter().find(|r| r.id == 5).unwrap();
+        let with_cancel = base.clone().with_events(vec![TraceEvent {
+            at: victim.arrival,
+            kind: TraceEventKind::Cancel(5),
+        }]);
+        let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::RoundRobin).unwrap();
+        let (report, responses) = fleet.replay_collect(&with_cancel).unwrap();
+        assert!(responses.iter().all(|r| r.id != 5), "cancelled request must never be served");
+        let cancelled: u64 = report.replicas.iter().map(|r| r.metrics.cancelled()).sum();
+        assert_eq!(cancelled, 1);
+        assert_eq!(report.served + cancelled + report.rejected.len() as u64, 12);
+        // the digest of the cancelled replay differs from the plain one
+        // (one fewer response folded in), but replays deterministically
+        let mut fleet2 = Fleet::new(engines(&rt, 2), DispatchPolicy::RoundRobin).unwrap();
+        assert_eq!(fleet2.replay(&with_cancel).unwrap().digest, report.digest);
+        let mut plain = Fleet::new(engines(&rt, 2), DispatchPolicy::RoundRobin).unwrap();
+        assert_ne!(plain.replay(&base).unwrap().digest, report.digest);
+    }
+
+    #[test]
+    fn cluster_events_hit_every_replica() {
+        let rt = Runtime::simulated();
+        let t = trace(8);
+        let shaken = t.clone().with_events(vec![TraceEvent {
+            at: 0.5 * t.last_arrival(),
+            kind: TraceEventKind::RankFail,
+        }]);
+        let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::RoundRobin).unwrap();
+        fleet.replay(&shaken).unwrap();
+        for e in fleet.engines() {
+            assert_eq!(e.cluster.n_gpus, 7, "each replica's carve lost a GPU");
         }
     }
 

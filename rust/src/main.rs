@@ -17,7 +17,7 @@
 use xdit::config::hardware::{ClusterSpec, CollectiveAlgo};
 use xdit::config::model::{BlockVariant, ModelSpec};
 use xdit::config::parallel::ParallelConfig;
-use xdit::coordinator::{GenRequest, Trace};
+use xdit::coordinator::{GenRequest, Scenario, SloClass, Trace, TraceEvent, TraceEventKind};
 use xdit::diffusion::SchedulerKind;
 use xdit::parallel::driver;
 use xdit::perf::latency::{best_hybrid, predict_latency, serial_latency, Method};
@@ -41,6 +41,9 @@ commands:
             [--no-plan-cache] [--session-cache 8]
             [--stage-overlap] [--vae 4] [--stage-queue 2]
             [--decode-every 1]
+            [--slo interactive,standard,batch] [--cancel id@t,...]
+            [--scenario burst|diurnal|mixed-media|straggler|
+             failure-replan] [--degrade] [--no-preempt]
             (replays a deterministic Poisson trace through the
              continuous-batching scheduler; runs on the simulated
              backend when artifacts are absent. Prints a steady-state
@@ -52,7 +55,14 @@ commands:
              N+1 behind a bounded queue (--stage-queue), with the
              decode patch-sharded over --vae devices; --decode-every k
              decodes every k-th request. The report gains a per-stage
-             occupancy line either way)
+             occupancy line either way. --slo samples each request's
+             SLO class from the given mix (interactive requests can
+             preempt all-batch-tier batches; --no-preempt disables
+             that for a control replay); --cancel schedules
+             cancellations at virtual times; --scenario replays a
+             seeded adversarial scenario from the catalog instead of
+             the plain Poisson trace; --degrade opts batch-tier
+             requests into the overload quality-shedding ladder)
   fleet     --replicas 2 --cluster l40x16 --gpus 16 --requests 256
             --rate 2.0 --steps 2 --px 256 [--model tiny-adaln]
             [--policy rr|jsq|po2 (default: jsq)] [--seed 0]
@@ -239,6 +249,49 @@ fn generate(args: &Args) -> xdit::Result<()> {
     Ok(())
 }
 
+/// `--slo interactive,standard,batch`: a comma-separated class mix the
+/// trace samples per request (aliases: int, std).
+fn parse_slo_mix(s: &str) -> xdit::Result<Vec<SloClass>> {
+    let mut mix = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        mix.push(SloClass::by_name(tok).ok_or_else(|| {
+            xdit::Error::config(format!(
+                "unknown SLO class '{tok}' (interactive|standard|batch)"
+            ))
+        })?);
+    }
+    Ok(mix)
+}
+
+/// `--cancel id@t,id@t`: cancellation events at virtual time `t` for
+/// request `id`, merged into the trace's event schedule.
+fn parse_cancellations(s: &str) -> xdit::Result<Vec<TraceEvent>> {
+    let mut events = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let (id, at) = tok.split_once('@').ok_or_else(|| {
+            xdit::Error::config(format!("bad --cancel entry '{tok}' (expected id@t)"))
+        })?;
+        let id: u64 = id
+            .trim()
+            .parse()
+            .map_err(|_| xdit::Error::config(format!("bad request id in --cancel '{tok}'")))?;
+        let at: f64 = at
+            .trim()
+            .parse()
+            .map_err(|_| xdit::Error::config(format!("bad fire time in --cancel '{tok}'")))?;
+        events.push(TraceEvent { at, kind: TraceEventKind::Cancel(id) });
+    }
+    Ok(events)
+}
+
 fn serve(args: &Args) -> xdit::Result<()> {
     // the serving demo runs anywhere: real artifacts when built, the
     // hermetic simulator otherwise
@@ -256,27 +309,55 @@ fn serve(args: &Args) -> xdit::Result<()> {
         .plan_cache(!args.bool("no-plan-cache"))
         .session_cache_capacity(args.usize_or("session-cache", 8)?)
         .stage_overlap(args.bool("stage-overlap"))
-        .stage_queue_capacity(args.usize_or("stage-queue", 2)?);
+        .stage_queue_capacity(args.usize_or("stage-queue", 2)?)
+        .preemption(!args.bool("no-preempt"))
+        .degrade(args.bool("degrade"));
     if args.has("vae") {
         builder = builder.vae_parallelism(args.usize_or("vae", 1)?);
     }
     let mut pipe = builder.build()?;
 
-    let mut trace = Trace::poisson(args.usize_or("seed", 0)? as u64, n, rate)
-        .steps(args.usize_or("steps", 4)?)
-        .variants(&[variant])
-        .resolutions(&[args.usize_or("px", 256)?])
-        .priorities(&[0, 0, 0, 1]);
-    if args.has("decode-every") {
-        trace = trace.decode_every(args.usize_or("decode-every", 0)?);
-    }
-    if args.has("scheduler") {
-        trace = trace.schedulers(&[SchedulerKind::parse(args.str_or("scheduler", ""))?]);
-    }
-    if args.has("deadline-slack") {
-        trace = trace.deadline_slack(args.f64_or("deadline-slack", 10.0)?);
-    }
-    let trace = trace.build();
+    let seed = args.usize_or("seed", 0)? as u64;
+    let trace = if args.has("scenario") {
+        // a named adversarial scenario replaces the plain Poisson trace
+        let name = args.str_or("scenario", "burst");
+        let scenario = Scenario::by_name(name).ok_or_else(|| {
+            let names: Vec<&str> = Scenario::ALL.iter().map(|s| s.name()).collect();
+            xdit::Error::config(format!(
+                "unknown scenario '{name}' (available: {})",
+                names.join(", ")
+            ))
+        })?;
+        println!("scenario {} — {}", scenario.name(), scenario.describe());
+        scenario.trace(seed, n)
+    } else {
+        let mut trace = Trace::poisson(seed, n, rate)
+            .steps(args.usize_or("steps", 4)?)
+            .variants(&[variant])
+            .resolutions(&[args.usize_or("px", 256)?])
+            .priorities(&[0, 0, 0, 1]);
+        if args.has("decode-every") {
+            trace = trace.decode_every(args.usize_or("decode-every", 0)?);
+        }
+        if args.has("scheduler") {
+            trace = trace.schedulers(&[SchedulerKind::parse(args.str_or("scheduler", ""))?]);
+        }
+        if args.has("deadline-slack") {
+            trace = trace.deadline_slack(args.f64_or("deadline-slack", 10.0)?);
+        }
+        if args.has("slo") {
+            trace = trace.slos(&parse_slo_mix(args.str_or("slo", "standard"))?);
+        }
+        trace.build()
+    };
+    let trace = match parse_cancellations(args.str_or("cancel", ""))? {
+        cancels if cancels.is_empty() => trace,
+        cancels => {
+            let mut events = trace.events().to_vec();
+            events.extend(cancels);
+            trace.with_events(events)
+        }
+    };
 
     let t0 = std::time::Instant::now();
     let report = pipe.serve_trace(&trace)?;

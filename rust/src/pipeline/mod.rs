@@ -70,11 +70,11 @@ use crate::config::hardware::{l40_cluster, ClusterSpec, CollectiveAlgo};
 use crate::config::model::ModelSpec;
 use crate::config::parallel::ParallelConfig;
 use crate::coordinator::engine::{
-    Engine, Rejection, DEFAULT_QUEUE_CAPACITY, DEFAULT_SESSION_CACHE_CAPACITY,
+    CancelOutcome, Engine, Rejection, DEFAULT_QUEUE_CAPACITY, DEFAULT_SESSION_CACHE_CAPACITY,
     DEFAULT_STAGE_QUEUE_CAPACITY,
 };
 use crate::coordinator::planner::{Fidelity, Plan, Planner, RoutePolicy};
-use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::coordinator::request::{GenRequest, GenResponse, RequestId, SloClass};
 use crate::coordinator::trace::Trace;
 use crate::coordinator::{Batcher, Metrics};
 use crate::diffusion::SchedulerKind;
@@ -127,6 +127,18 @@ impl ServeReport {
         self.metrics.latency.quantile(q)
     }
 
+    /// Approximate latency quantile over one SLO class only (interactive
+    /// p99 and batch p99 are different promises — see `SloClass`).
+    pub fn latency_quantile_class(&self, class: SloClass, q: f64) -> f64 {
+        self.metrics.latency_quantile_class(class, q)
+    }
+
+    /// Requests cancelled over the pipeline's lifetime (queued +
+    /// mid-flight) — cancelled requests are never in `responses`.
+    pub fn cancelled(&self) -> u64 {
+        self.metrics.cancelled()
+    }
+
     /// Mean requests per launched batch (continuous-batching occupancy).
     pub fn mean_occupancy(&self) -> f64 {
         self.metrics.mean_occupancy()
@@ -146,11 +158,14 @@ impl ServeReport {
     /// decode queue depth, backpressure stalls).
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} served={} rejected={} | engine: {}\n{}",
+            "submitted={} served={} rejected={} | engine: {}\n{}{}",
             self.submitted,
             self.responses.len(),
             self.rejected.len(),
             self.metrics.report(),
+            // per-SLO-class latency/deadline rows (empty when the whole
+            // workload is standard-tier — the pre-SLO summary unchanged)
+            self.metrics.slo_report(),
             self.metrics.stages.report(self.metrics.horizon)
         )
     }
@@ -180,6 +195,9 @@ pub struct PipelineBuilder<'a> {
     stage_overlap: bool,
     vae_parallelism: Option<usize>,
     stage_queue_capacity: usize,
+    preemption: bool,
+    degrade: bool,
+    slo_budgets: [Option<usize>; SloClass::COUNT],
 }
 
 impl<'a> Default for PipelineBuilder<'a> {
@@ -206,6 +224,9 @@ impl<'a> Default for PipelineBuilder<'a> {
             stage_overlap: false,
             vae_parallelism: None,
             stage_queue_capacity: DEFAULT_STAGE_QUEUE_CAPACITY,
+            preemption: true,
+            degrade: false,
+            slo_budgets: [None; SloClass::COUNT],
         }
     }
 }
@@ -383,6 +404,32 @@ impl<'a> PipelineBuilder<'a> {
         self
     }
 
+    /// Batch-tier preemption during trace replay (default on): when the
+    /// next interactive arrival would miss its deadline behind an
+    /// all-batch-tier batch, the batch yields with its progress credited.
+    /// Off = the preemption-free control replay (outputs bit-identical,
+    /// only latencies move).
+    pub fn preemption(mut self, enabled: bool) -> Self {
+        self.preemption = enabled;
+        self
+    }
+
+    /// Degrade-under-overload ladder (default off): batch-tier requests
+    /// shed diffusion steps (backlog ≥ half the queue capacity) and then
+    /// resolution (≥ three quarters) at admission instead of being
+    /// rejected. Quality cost quantified by `benches/fig19_quality`.
+    pub fn degrade(mut self, enabled: bool) -> Self {
+        self.degrade = enabled;
+        self
+    }
+
+    /// Cap the pending (admitted, unserved) requests of one SLO class —
+    /// per-class admission budgets on top of the shared queue bound.
+    pub fn slo_budget(mut self, class: SloClass, budget: usize) -> Self {
+        self.slo_budgets[class.index()] = Some(budget);
+        self
+    }
+
     fn resolve_cluster_world(&self) -> Result<(ClusterSpec, usize)> {
         let cluster = self.cluster.clone().unwrap_or_else(|| l40_cluster(1));
         let world = self.world.unwrap_or(cluster.n_gpus);
@@ -515,6 +562,9 @@ impl<'a> PipelineBuilder<'a> {
         engine.stage_overlap = self.stage_overlap;
         engine.vae_parallelism = self.vae_parallelism;
         engine.stage_queue_capacity = self.stage_queue_capacity;
+        engine.preemption = self.preemption;
+        engine.degrade = self.degrade;
+        engine.slo_budgets = self.slo_budgets;
         engine.set_plan_cache_enabled(self.plan_cache);
         engine.set_session_cache_capacity(self.session_cache_capacity);
         Ok(Pipeline {
@@ -583,29 +633,58 @@ impl<'a> Pipeline<'a> {
     /// and every tick re-forms compatibility batches from whatever is
     /// waiting. Deterministic: the same trace on a fresh pipeline yields
     /// bit-identical responses and metrics.
+    ///
+    /// Mid-trace [`TraceEvent`](crate::coordinator::TraceEvent)s fire
+    /// when the clock reaches them: cluster mutations flip the spec
+    /// fingerprint (the next batch re-plans against the new topology),
+    /// cancel events route to [`Pipeline::cancel`]. Before each tick the
+    /// loop hands the engine a lookahead at the next future interactive
+    /// arrival, which is what arms batch-tier preemption
+    /// (`builder.preemption(..)`, on by default).
     pub fn serve_trace(&mut self, trace: &Trace) -> Result<ServeReport> {
         let reqs = trace.requests();
+        let events = trace.events();
         let mut responses = Vec::with_capacity(reqs.len());
         let mut rejected = Vec::new();
         let mut next = 0;
+        let mut next_event = 0;
         loop {
-            // admit everything that has arrived by the current virtual time
-            while next < reqs.len() && reqs[next].arrival <= self.engine.virtual_now() {
-                if let Err(rej) = self.engine.submit(reqs[next].clone()) {
-                    rejected.push(rej);
+            // interleave admissions and event firings in timestamp order;
+            // an arrival wins a tie, so a cancel stamped at its target's
+            // own arrival finds the request already admitted
+            let now = self.engine.virtual_now();
+            loop {
+                let arrival_due = next < reqs.len() && reqs[next].arrival <= now;
+                let event_due = next_event < events.len() && events[next_event].at <= now;
+                if event_due && (!arrival_due || events[next_event].at < reqs[next].arrival) {
+                    self.engine.apply_cluster_event(events[next_event].kind);
+                    next_event += 1;
+                } else if arrival_due {
+                    if let Err(rej) = self.engine.submit(reqs[next].clone()) {
+                        rejected.push(rej);
+                    }
+                    next += 1;
+                } else {
+                    break;
                 }
-                next += 1;
             }
             if self.engine.pending() == 0 {
-                if next < reqs.len() {
-                    // idle gap: jump the virtual clock to the next arrival
-                    self.engine.advance_to(reqs[next].arrival);
+                // idle gap: jump the virtual clock to whatever comes
+                // first — the next arrival or the next scheduled event
+                let arrival = reqs.get(next).map(|r| r.arrival).unwrap_or(f64::INFINITY);
+                let fire = events.get(next_event).map(|e| e.at).unwrap_or(f64::INFINITY);
+                let horizon = arrival.min(fire);
+                if horizon.is_finite() {
+                    self.engine.advance_to(horizon);
                     continue;
                 }
                 break;
             }
+            let lookahead = self.next_interactive(reqs, next);
+            self.engine.set_preempt_lookahead(lookahead);
             responses.extend(self.engine.tick()?);
         }
+        self.engine.set_preempt_lookahead(None);
         Ok(ServeReport {
             submitted: reqs.len(),
             responses,
@@ -613,6 +692,33 @@ impl<'a> Pipeline<'a> {
             makespan: self.engine.horizon(),
             metrics: self.engine.metrics.clone(),
         })
+    }
+
+    /// The replay loop's preemption lookahead: the next interactive
+    /// request still in the future, as (arrival, deadline, estimated
+    /// exec seconds from its own routed plan). `None` when the rest of
+    /// the trace carries no future interactive work — the common case,
+    /// which costs nothing (no planning happens).
+    fn next_interactive(
+        &self,
+        reqs: &[GenRequest],
+        from: usize,
+    ) -> Option<(f64, Option<f64>, f64)> {
+        let now = self.engine.virtual_now();
+        let r = reqs[from..]
+            .iter()
+            .find(|r| r.slo == SloClass::Interactive && r.arrival > now)?;
+        let spec = ModelSpec::for_variant(r.variant).ok()?;
+        let est = self.engine.plan_for(&spec, r.px, r.steps).predicted.total;
+        Some((r.arrival, r.deadline, est))
+    }
+
+    /// Cancel a request wherever it currently is (admission queue or
+    /// waiting set): the typed form of the CLI's `--cancel id@t` and of
+    /// `Cancel` trace events. Completed requests are a no-op
+    /// ([`CancelOutcome::NotFound`]) — cancellation never un-serves.
+    pub fn cancel(&mut self, id: RequestId) -> CancelOutcome {
+        self.engine.cancel(id)
     }
 
     /// Replay a virtual-time arrival trace through a Data Parallel fleet:
@@ -672,6 +778,9 @@ impl<'a> Pipeline<'a> {
                 e.stage_overlap = self.engine.stage_overlap;
                 e.vae_parallelism = self.engine.vae_parallelism;
                 e.stage_queue_capacity = self.engine.stage_queue_capacity;
+                e.preemption = self.engine.preemption;
+                e.degrade = self.engine.degrade;
+                e.slo_budgets = self.engine.slo_budgets;
                 e
             })
             .collect())

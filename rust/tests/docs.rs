@@ -164,6 +164,38 @@ fn communication_model_is_documented() {
 }
 
 #[test]
+fn slo_elasticity_is_documented() {
+    // the SLO/elasticity layer (ROADMAP item 4) must stay documented in
+    // both top-level docs: the DESIGN L5.5 chapter (classes, preemption
+    // bit-identity, degrade ladder, cancellation, mutation seam, the
+    // scenario catalog) and the README user guide (the serve flags and
+    // every catalog variant name)
+    let design = read("DESIGN.md");
+    assert!(
+        design.contains("SLO & elasticity (L5.5)"),
+        "DESIGN.md lost its 'SLO & elasticity (L5.5)' chapter"
+    );
+    for needle in [
+        "coordinator/scenarios.rs", // the seeded scenario catalog
+        "maybe_preempt",            // the step-boundary preemption slicer
+        "bit-identical",            // its headline invariant
+        "degrade ladder",           // overload quality shedding
+        "Engine::cancel",           // two-phase cancellation
+        "apply_cluster_event",      // mid-trace topology mutation
+        "plan_cache_invalidations", // the PR 5 invalidation seam
+    ] {
+        assert!(design.contains(needle), "DESIGN.md SLO chapter lost '{needle}'");
+    }
+    let readme = read("README.md");
+    for flag in ["--slo", "--cancel", "--scenario", "--degrade", "--no-preempt"] {
+        assert!(readme.contains(flag), "README.md no longer documents the {flag} flag");
+    }
+    for name in ["burst", "diurnal", "mixed-media", "straggler", "failure-replan"] {
+        assert!(readme.contains(name), "README.md lost the '{name}' scenario variant");
+    }
+}
+
+#[test]
 fn docs_exist_and_are_nonempty() {
     for doc in DOCS {
         let text = read(doc);

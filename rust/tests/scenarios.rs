@@ -1,0 +1,241 @@
+//! The adversarial scenario suite (ROADMAP item 4) — fully hermetic:
+//! every seeded [`Scenario`] from the catalog is replayed through the
+//! serving facade on `Runtime::simulated()` and checked against the SLO
+//! invariants: nothing is lost or starved, per-class p99 stays bounded,
+//! interactive deadlines hold below saturation, replays pin to a stable
+//! digest, and neither preemption nor mid-trace cluster mutations ever
+//! change the output bits of a non-cancelled request.
+
+use std::collections::BTreeSet;
+
+use xdit::config::hardware::l40_cluster;
+use xdit::coordinator::{GenRequest, Scenario, SloClass, Trace, TraceEventKind};
+use xdit::pipeline::Pipeline;
+use xdit::runtime::Runtime;
+use xdit::ServeReport;
+
+const SEED: u64 = 0x5C3A;
+const N: usize = 24;
+
+fn serve(trace: &Trace, preempt: bool, capacity: usize) -> ServeReport {
+    let rt = Runtime::simulated();
+    let mut pipe = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(1))
+        .world(4)
+        .max_batch(4)
+        .queue_capacity(capacity)
+        .preemption(preempt)
+        .build()
+        .unwrap();
+    pipe.serve_trace(trace).unwrap()
+}
+
+/// FNV-1a over completion order, latency bits and latent bits — the
+/// digest a scenario replay is pinned on.
+fn digest(report: &ServeReport) -> u64 {
+    fn fold(h: &mut u64, v: u64) {
+        for b in v.to_le_bytes() {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for r in &report.responses {
+        fold(&mut h, r.id);
+        fold(&mut h, r.latency.to_bits());
+        for v in &r.latent.data {
+            fold(&mut h, v.to_bits() as u64);
+        }
+    }
+    h
+}
+
+/// Ids cancelled by the trace's own events.
+fn cancel_targets(trace: &Trace) -> BTreeSet<u64> {
+    trace
+        .events()
+        .iter()
+        .filter_map(|e| match e.kind {
+            TraceEventKind::Cancel(id) => Some(id),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn every_scenario_replays_to_a_stable_digest() {
+    // two fresh pipelines per scenario: same trace in, same bits out —
+    // completion order, latencies, latents, counters, makespan
+    let mut digests = Vec::new();
+    for s in Scenario::ALL {
+        let trace = s.trace(SEED, N);
+        let a = serve(&trace, true, N);
+        let b = serve(&trace, true, N);
+        assert_eq!(a.responses.len(), b.responses.len(), "{}", s.name());
+        for (x, y) in a.responses.iter().zip(&b.responses) {
+            assert_eq!(x.id, y.id, "{}: completion order drifted", s.name());
+            assert_eq!(x.latency, y.latency, "{}: latency drifted", s.name());
+            assert_eq!(x.latent, y.latent, "{}: latent bits drifted", s.name());
+        }
+        assert_eq!(a.makespan, b.makespan, "{}", s.name());
+        assert_eq!(a.metrics.preemptions, b.metrics.preemptions, "{}", s.name());
+        assert_eq!(a.cancelled(), b.cancelled(), "{}", s.name());
+        assert_eq!(
+            a.metrics.plan_cache_invalidations,
+            b.metrics.plan_cache_invalidations,
+            "{}",
+            s.name()
+        );
+        assert_eq!(digest(&a), digest(&b), "{}: the digest must pin the replay", s.name());
+        digests.push(digest(&a));
+    }
+    // five genuinely different workloads must not collapse to one answer
+    digests.sort_unstable();
+    digests.dedup();
+    assert_eq!(digests.len(), Scenario::ALL.len(), "scenario digests collapsed");
+}
+
+#[test]
+fn no_request_is_lost_or_starved_in_any_scenario() {
+    for s in Scenario::ALL {
+        let trace = s.trace(SEED ^ 1, N);
+        let report = serve(&trace, true, trace.len());
+        assert_eq!(report.submitted, trace.len(), "{}", s.name());
+        // conservation with cancellation in the ledger; the roomy queue
+        // means backpressure never hides a request
+        assert!(report.rejected.is_empty(), "{}: spurious rejection", s.name());
+        assert_eq!(
+            report.responses.len() + report.cancelled() as usize,
+            trace.len(),
+            "{}: served + cancelled must cover every arrival",
+            s.name()
+        );
+        let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), report.responses.len(), "{}: duplicated response id", s.name());
+        // every id is served exactly once — except the cancel targets,
+        // which must never surface
+        let cancelled = cancel_targets(&trace);
+        for r in trace.requests() {
+            assert_eq!(
+                ids.binary_search(&r.id).is_ok(),
+                !cancelled.contains(&r.id),
+                "{}: id {} {}",
+                s.name(),
+                r.id,
+                if cancelled.contains(&r.id) { "was served despite a cancel" } else { "starved" }
+            );
+        }
+        // the batch tier keeps flowing wherever the mix includes it
+        let offered_batch = trace
+            .requests()
+            .iter()
+            .filter(|r| r.slo == SloClass::Batch && !cancelled.contains(&r.id))
+            .count();
+        if offered_batch > 0 {
+            let served_batch = report.metrics.latency_by_class[SloClass::Batch.index()].count;
+            assert!(served_batch > 0, "{}: batch tier starved outright", s.name());
+        }
+        // per-class p99 stays bounded by the horizon (latency can never
+        // exceed it; the log-bucket quantile rounds up by at most 2x)
+        for class in SloClass::ALL {
+            if report.metrics.latency_by_class[class.index()].count == 0 {
+                continue;
+            }
+            let p99 = report.latency_quantile_class(class, 0.99);
+            let bound = (2.0 * report.makespan).max(0.004);
+            assert!(
+                p99 <= bound,
+                "{}: {} p99 {p99}s breaches the horizon bound {bound}s",
+                s.name(),
+                class.name()
+            );
+        }
+        if s == Scenario::FailureReplan {
+            // both cancels land (stamped at their targets' own arrivals),
+            // and the topology events forced at least one re-plan
+            assert_eq!(report.cancelled(), 2, "failure-replan cancels both targets");
+            assert!(report.metrics.plan_cache_invalidations >= 1);
+        }
+    }
+}
+
+#[test]
+fn interactive_deadlines_hold_below_saturation() {
+    // probe the virtual cost of the scenario request shape, then stretch
+    // the burst's arrivals to twice that service time: offered load sits
+    // well below capacity, so interactive work must never miss its class
+    // deadline and every class's p99 collapses to ~one service time
+    let g = serve(&Trace::new(vec![GenRequest::new(0, "probe").with_steps(2)]), true, 4).makespan;
+    assert!(
+        g > 0.0 && g < 30.0,
+        "tiny-model service time {g}s must sit inside the 30s interactive slack"
+    );
+    let burst = Scenario::Burst.trace(SEED, N);
+    let spaced: Vec<GenRequest> = burst
+        .requests()
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut r = r.clone();
+            r.arrival = i as f64 * 2.0 * g;
+            // re-stamp the class deadline against the stretched arrival
+            r.deadline = r.slo.deadline_slack().map(|s| r.arrival + s);
+            r
+        })
+        .collect();
+    let report = serve(&Trace::new(spaced), true, N);
+    assert_eq!(report.responses.len(), N, "below saturation everything is served");
+    assert_eq!(
+        report.metrics.deadline_misses_by_class[SloClass::Interactive.index()],
+        0,
+        "zero interactive deadline misses below saturation"
+    );
+    for class in SloClass::ALL {
+        if report.metrics.latency_by_class[class.index()].count == 0 {
+            continue;
+        }
+        let p99 = report.latency_quantile_class(class, 0.99);
+        let bound = (8.0 * g).max(0.008);
+        assert!(
+            p99 <= bound,
+            "{}: p99 {p99}s vs service time {g}s (bound {bound}s)",
+            class.name()
+        );
+    }
+}
+
+#[test]
+fn elasticity_never_changes_noncancelled_output_bits() {
+    // preemption on vs off across the scenarios that exercise it most
+    // (interactive pressure, mid-trace mutations, cancellations): the
+    // service *set* and every served latent must be bit-identical — the
+    // elastic machinery moves work in time, never in value
+    for s in [Scenario::Burst, Scenario::Straggler, Scenario::FailureReplan] {
+        let trace = s.trace(SEED ^ 2, N);
+        let on = serve(&trace, true, trace.len());
+        let off = serve(&trace, false, trace.len());
+        let cancelled = cancel_targets(&trace);
+        for r in on.responses.iter().chain(&off.responses) {
+            assert!(!cancelled.contains(&r.id), "{}: cancelled id {} served", s.name(), r.id);
+        }
+        let ids = |rep: &ServeReport| {
+            let mut v: Vec<u64> = rep.responses.iter().map(|r| r.id).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(ids(&on), ids(&off), "{}: service sets differ", s.name());
+        for id in ids(&on) {
+            let a = on.responses.iter().find(|r| r.id == id).unwrap();
+            let b = off.responses.iter().find(|r| r.id == id).unwrap();
+            assert_eq!(
+                a.latent,
+                b.latent,
+                "{}: request {id}'s bits depend on preemption",
+                s.name()
+            );
+        }
+    }
+}

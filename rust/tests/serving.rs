@@ -6,9 +6,9 @@
 //! execution-time metrics split.
 
 use xdit::config::hardware::l40_cluster;
-use xdit::config::model::BlockVariant;
+use xdit::config::model::{BlockVariant, ModelSpec};
 use xdit::config::parallel::ParallelConfig;
-use xdit::coordinator::{Engine, GenRequest, Trace};
+use xdit::coordinator::{Engine, GenRequest, SloClass, Trace, TraceEvent, TraceEventKind};
 use xdit::pipeline::Pipeline;
 use xdit::runtime::Runtime;
 
@@ -373,4 +373,202 @@ fn submit_tick_live_loop_matches_trace_replay_semantics() {
         assert_eq!(x.id, y.id);
         assert_eq!(x.latent, y.latent);
     }
+}
+
+#[test]
+fn preemption_keeps_latents_bit_identical_to_a_preemption_free_replay() {
+    // the preemption-safety property (ROADMAP item 4): slicing a
+    // batch-tier request to protect an interactive deadline must change
+    // *when* things run and what they are charged, never what they
+    // compute. Every margin below is derived from the engine's own cost
+    // surface (predicted totals drive the decision, a probed actual
+    // makespan pads the deadline), so nothing is hand-guessed.
+    let rt = Runtime::simulated();
+    let spec = ModelSpec::for_variant(BlockVariant::AdaLn).unwrap();
+    let probe = Engine::new(&rt, l40_cluster(1), 4);
+    let t16 = probe.plan_for(&spec, 256, 16).predicted.total;
+    let e1 = probe.plan_for(&spec, 256, 1).predicted.total;
+    assert!(t16 > 0.0 && e1 > 0.0);
+    // actual virtual makespan of the interactive shape served alone — the
+    // same shape re-run later is charged identically (time-invariance),
+    // so a deadline padded by it can always be met by a preempting run
+    let m1 = {
+        let rt = Runtime::simulated();
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(4)
+            .build()
+            .unwrap();
+        pipe.serve_trace(&Trace::new(vec![GenRequest::new(9, "probe").with_steps(1)]))
+            .unwrap()
+            .makespan
+    };
+    // the interactive request lands mid-batch (arr < predicted finish),
+    // would miss its deadline behind the full batch, and is saved by
+    // yielding — the three predicates of the preemption decision
+    let arr = 0.5 * t16;
+    let dl = arr + e1.max(m1) + 0.25 * t16;
+
+    let run = |preempt: bool| {
+        let rt = Runtime::simulated();
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(4)
+            .aging_rate(0.0)
+            .preemption(preempt)
+            .build()
+            .unwrap();
+        let bulk = GenRequest::new(0, "bulk").with_steps(16).with_slo(SloClass::Batch);
+        let urgent = GenRequest::new(1, "urgent")
+            .with_steps(1)
+            .with_arrival(arr)
+            .with_deadline(dl)
+            .with_slo(SloClass::Interactive);
+        pipe.serve_trace(&Trace::new(vec![bulk, urgent])).unwrap()
+    };
+    let on = run(true);
+    let off = run(false);
+
+    assert_eq!(on.metrics.preemptions, 1, "the batch-tier request must actually yield");
+    assert_eq!(off.metrics.preemptions, 0);
+    // the preempted request's output bits are unchanged...
+    let bulk_on = on.responses.iter().find(|r| r.id == 0).unwrap();
+    let bulk_off = off.responses.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(bulk_on.latent, bulk_off.latent, "preemption changed the preempted latent");
+    // ...while the resumed run charges strictly less compute (the sliced
+    // steps were already credited at preemption time)
+    assert!(
+        bulk_on.model_seconds < bulk_off.model_seconds,
+        "resume must charge only the remaining steps: {} vs {}",
+        bulk_on.model_seconds,
+        bulk_off.model_seconds
+    );
+    // the interactive request finishes first and inside its deadline
+    assert_eq!(on.responses[0].id, 1, "interactive must complete before the preempted batch");
+    assert_eq!(on.metrics.deadline_misses_by_class[SloClass::Interactive.index()], 0);
+    // a preemption-free replay either rejects the interactive request at
+    // admission (deadline infeasible once the batch holds the engine) or
+    // serves it no sooner — and when it serves, the bits match too
+    match off.responses.iter().find(|r| r.id == 1) {
+        Some(u_off) => {
+            let u_on = on.responses.iter().find(|r| r.id == 1).unwrap();
+            assert_eq!(u_on.latent, u_off.latent);
+            assert!(u_off.latency >= u_on.latency, "preemption must not worsen the latency");
+        }
+        None => {
+            assert!(
+                off.rejected.iter().any(|r| r.id == 1 && r.reason.contains("deadline")),
+                "unserved interactive request must carry a deadline rejection"
+            );
+        }
+    }
+}
+
+#[test]
+fn cancellation_is_counted_split_by_phase_and_never_reaches_the_report() {
+    // four compatible requests plus an incompatible victim, with two
+    // Cancel events on the trace: one stamped at the targets' own arrival
+    // (arrivals win the tie, so it lands while the target still sits in
+    // the admission queue) and one just after (it fires on the next pass,
+    // after the first batch drained the queue — a mid-flight cancel)
+    let mk_trace = || {
+        let mut reqs: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest::new(i, "kept").with_steps(1).with_guidance(1.0))
+            .collect();
+        reqs.push(GenRequest::new(9, "victim").with_steps(2).with_guidance(1.0));
+        Trace::new(reqs).with_events(vec![
+            TraceEvent { at: 0.0, kind: TraceEventKind::Cancel(2) },
+            TraceEvent { at: 1e-9, kind: TraceEventKind::Cancel(9) },
+            // unknown id: a no-op, never a panic or a phantom counter
+            TraceEvent { at: 0.2, kind: TraceEventKind::Cancel(77) },
+        ])
+    };
+    let run = || {
+        let rt = Runtime::simulated();
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(4)
+            .build()
+            .unwrap();
+        pipe.serve_trace(&mk_trace()).unwrap()
+    };
+    let report = run();
+
+    // conservation with cancellation in the ledger
+    assert_eq!(report.submitted, 5);
+    assert_eq!(report.responses.len(), 3);
+    assert!(report.rejected.is_empty());
+    assert_eq!(report.cancelled(), 2);
+    assert_eq!(report.metrics.cancelled_queued, 1, "id 2 was still queued");
+    assert_eq!(report.metrics.cancelled_midflight, 1, "id 9 was waiting mid-flight");
+    // cancelled work never produces a response
+    for r in &report.responses {
+        assert!(r.id != 2 && r.id != 9, "cancelled request {} was served", r.id);
+    }
+    let s = report.summary();
+    assert!(s.contains("cancelled=1+1"), "{s}");
+
+    // cancellation is part of the deterministic replay surface
+    let again = run();
+    assert_eq!(report.responses.len(), again.responses.len());
+    for (x, y) in report.responses.iter().zip(&again.responses) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.latent, y.latent);
+    }
+    assert_eq!(checksum(&report), checksum(&again));
+}
+
+#[test]
+fn mid_trace_cluster_mutations_invalidate_the_plan_cache_once_each() {
+    // arrivals a megasecond apart with a mutation event between each pair:
+    // every event flips the cluster fingerprint, and the next planned
+    // batch detects it lazily — exactly one invalidation per event, and
+    // the post-mutation plan is what a cold planner would pick for the
+    // mutated topology
+    let mk_trace = || {
+        let reqs: Vec<GenRequest> = (0..5)
+            .map(|i| {
+                GenRequest::new(i, "epoch")
+                    .with_steps(1)
+                    .with_guidance(1.0)
+                    .with_arrival(i as f64 * 1e6)
+            })
+            .collect();
+        Trace::new(reqs).with_events(vec![
+            TraceEvent { at: 0.5e6, kind: TraceEventKind::Straggler(0.5) },
+            TraceEvent { at: 1.5e6, kind: TraceEventKind::RankFail },
+            TraceEvent { at: 2.5e6, kind: TraceEventKind::NodeShrink },
+        ])
+    };
+    let rt = Runtime::simulated();
+    let mut pipe =
+        Pipeline::builder().runtime(&rt).cluster(l40_cluster(1)).world(4).build().unwrap();
+    let report = pipe.serve_trace(&mk_trace()).unwrap();
+
+    assert_eq!(report.responses.len(), 5, "mutations must not lose requests");
+    assert_eq!(
+        report.metrics.plan_cache_invalidations, 3,
+        "one plan-cache invalidation per mutation event, no more"
+    );
+    // request 4 re-uses request 3's post-shrink plan: the fingerprint is
+    // stable between events, so the memo works again
+    assert!(report.metrics.plan_cache_hits >= 1);
+
+    // the final plan matches a cold plan for the mutated topology:
+    // tflops halved by the straggler, 8 - 1 - gpus_per_node ranks left
+    let mut mutated = l40_cluster(1);
+    mutated.gpu.tflops *= 0.5;
+    mutated.n_gpus = (mutated.n_gpus - 1).saturating_sub(mutated.gpus_per_node).max(1);
+    let world = 4usize.min(mutated.n_gpus);
+    let spec = ModelSpec::for_variant(BlockVariant::AdaLn).unwrap();
+    let oracle = Engine::new(&rt, mutated, world);
+    let expected = oracle.plan_for(&spec, 256, 1).config.describe();
+    let last = report.responses.iter().find(|r| r.id == 4).unwrap();
+    assert_eq!(
+        last.parallel_config, expected,
+        "post-mutation plan must fit the mutated topology"
+    );
 }
