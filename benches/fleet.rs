@@ -11,7 +11,11 @@
 //!   seeded sampler is on the path) produces identical digests;
 //! * **frontier crossover**: on l40x16 the fleet planner must pick the
 //!   deep 16-GPU hybrid at low arrival rates and >1 replicas near
-//!   saturation, each with a "why" citing the Ethernet-priced tier.
+//!   saturation, each with a "why" citing the Ethernet-priced tier;
+//! * **degraded fleet**: the same lightly-loaded trace with 1 of 4
+//!   replicas killed at t = horizon/4 must keep every request (failover
+//!   migrates the dead replica's backlog with step credit) and hold the
+//!   post-failover p99 within 2× the healthy fleet's p99.
 //!
 //! ```sh
 //! cargo bench --bench fleet
@@ -19,7 +23,7 @@
 
 use xdit::config::hardware::l40_cluster;
 use xdit::config::model::ModelSpec;
-use xdit::coordinator::Trace;
+use xdit::coordinator::{Trace, TraceEvent, TraceEventKind};
 use xdit::fleet::{frontier, DispatchPolicy};
 use xdit::pipeline::Pipeline;
 use xdit::runtime::Runtime;
@@ -37,6 +41,16 @@ const MIN_DP_SCALING: f64 = 1.8;
 const BIG_REQUESTS: usize = 100_000;
 /// Arrival rate of the determinism trace (requests per virtual second).
 const BIG_RATE: f64 = 32.0;
+/// Requests in the degraded-fleet trace (light load: queues stay short,
+/// so the p99 bound isolates the failover cost, not queueing).
+const FAULT_REQUESTS: usize = 64;
+/// Arrival rate of the degraded-fleet trace (requests per virtual second).
+const FAULT_RATE: f64 = 0.5;
+/// Which replica dies, and when (fraction of the trace horizon).
+const KILLED_REPLICA: usize = 1;
+const KILL_FRACTION: f64 = 0.25;
+/// Acceptance bound: post-failover p99 vs the healthy fleet's p99.
+const MAX_DEGRADED_P99_RATIO: f64 = 2.0;
 
 fn main() {
     let rt = Runtime::simulated();
@@ -103,6 +117,51 @@ fn main() {
         t0.elapsed(),
         first.served,
         first.digest
+    );
+
+    // --- degraded fleet: 1 of 4 replicas fails at t = horizon/4 ----------
+    let light = Trace::poisson(SEED, FAULT_REQUESTS, FAULT_RATE).steps(1).guidance(1.0).build();
+    let kill_at = KILL_FRACTION * light.last_arrival();
+    let wounded = light.clone().with_events(vec![TraceEvent::on_replica(
+        kill_at,
+        TraceEventKind::ReplicaFail,
+        KILLED_REPLICA,
+    )]);
+    let quad = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(4))
+        .world(32)
+        .replicas(4)
+        .dispatcher(DispatchPolicy::JoinShortestQueue)
+        .queue_capacity(FAULT_REQUESTS)
+        .build()
+        .expect("four-node fleet pipeline builds");
+    let healthy = quad.serve_fleet(&light).expect("healthy replay");
+    let degraded = quad.serve_fleet(&wounded).expect("degraded replay");
+    for (label, r) in [("healthy", &healthy), ("degraded", &degraded)] {
+        assert_eq!(
+            r.served + r.cancelled + r.rejected.len() as u64,
+            FAULT_REQUESTS as u64,
+            "{label} fleet lost work: {}",
+            r.summary()
+        );
+        assert_eq!(r.served, FAULT_REQUESTS as u64, "{label} fleet must serve everything");
+    }
+    assert_eq!(degraded.faults.failovers, 1, "exactly one replica failure fires");
+    let healthy_p99 = healthy.latency_quantile(0.99);
+    let degraded_p99 = degraded.latency_quantile(0.99);
+    let ratio = degraded_p99 / healthy_p99.max(1e-12);
+    assert!(
+        degraded_p99 <= MAX_DEGRADED_P99_RATIO * healthy_p99,
+        "failover latency regression: degraded p99 {degraded_p99:.3}s is {ratio:.2}x healthy \
+         p99 {healthy_p99:.3}s (bound {MAX_DEGRADED_P99_RATIO}x)"
+    );
+    println!(
+        "degraded-fleet: kill replica {KILLED_REPLICA} at {kill_at:.1}s, {} migrated \
+         ({} steps credited) | p99 {healthy_p99:.3}s -> {degraded_p99:.3}s = {ratio:.2}x \
+         (bound {MAX_DEGRADED_P99_RATIO}x) — PASS",
+        degraded.faults.migrated,
+        degraded.faults.steps_credited
     );
 
     // --- frontier crossover on the paper's 2x8xL40 two-tier cluster ------

@@ -25,7 +25,8 @@ use std::time::Duration;
 
 use xdit::config::hardware::{l40_cluster, ClusterSpec};
 use xdit::config::model::{BlockVariant, ModelSpec};
-use xdit::coordinator::{Engine, GenRequest, SloClass, Trace};
+use xdit::coordinator::{Engine, GenRequest, SloClass, Trace, TraceEvent, TraceEventKind};
+use xdit::fleet::DispatchPolicy;
 use xdit::pipeline::Pipeline;
 use xdit::runtime::Runtime;
 use xdit::tensor::pool;
@@ -53,6 +54,14 @@ const OVERLOAD: usize = 96;
 /// Batch-tier requests the degrade ladder must shed quality from: the
 /// `id % 3 == 2` admissions at backlog ≥ OVERLOAD/2 (ids 50, 53, …, 95).
 const EXPECTED_DEGRADED: u64 = 16;
+/// Requests in the degraded-fleet replay (light load, 4 replicas).
+const FLEET_REQUESTS: usize = 64;
+/// Arrival rate of the degraded-fleet trace (requests per virtual second).
+const FLEET_RATE: f64 = 0.5;
+/// The degraded-fleet replay kills replica 1 at this trace fraction.
+const FLEET_KILL_FRACTION: f64 = 0.25;
+/// Acceptance bound: post-failover p99 vs the healthy fleet's p99.
+const MAX_DEGRADED_P99_RATIO: f64 = 2.0;
 
 fn num(v: f64) -> Json {
     Json::Num(v)
@@ -175,6 +184,47 @@ fn main() {
     let p99_interactive = om.latency_quantile_class(SloClass::Interactive, 0.99);
     let p99_batch = om.latency_quantile_class(SloClass::Batch, 0.99);
 
+    // --- degraded fleet: healthy 4-replica replay vs 1 killed at h/4 ------
+    // the failover row of the trajectory: same light offered load, one
+    // replica dies a quarter of the way in, its backlog migrates with
+    // step credit, and the post-failover p99 must stay within 2x healthy
+    let fleet_trace =
+        Trace::poisson(SEED, FLEET_REQUESTS, FLEET_RATE).steps(1).guidance(1.0).build();
+    let fleet_kill_at = FLEET_KILL_FRACTION * fleet_trace.last_arrival();
+    let wounded_trace = fleet_trace.clone().with_events(vec![TraceEvent::on_replica(
+        fleet_kill_at,
+        TraceEventKind::ReplicaFail,
+        1,
+    )]);
+    let quad = Pipeline::builder()
+        .runtime(&rt)
+        .cluster(l40_cluster(4))
+        .world(32)
+        .replicas(4)
+        .dispatcher(DispatchPolicy::JoinShortestQueue)
+        .queue_capacity(FLEET_REQUESTS)
+        .build()
+        .expect("four-node fleet pipeline builds");
+    let healthy_fleet = quad.serve_fleet(&fleet_trace).expect("healthy fleet replay");
+    let degraded_fleet = quad.serve_fleet(&wounded_trace).expect("degraded fleet replay");
+    for (label, r) in [("healthy", &healthy_fleet), ("degraded", &degraded_fleet)] {
+        assert_eq!(
+            r.served + r.cancelled + r.rejected.len() as u64,
+            FLEET_REQUESTS as u64,
+            "{label} fleet lost work: {}",
+            r.summary()
+        );
+    }
+    assert_eq!(degraded_fleet.faults.failovers, 1, "exactly one replica failure fires");
+    let healthy_p99 = healthy_fleet.latency_quantile(0.99);
+    let degraded_p99 = degraded_fleet.latency_quantile(0.99);
+    let p99_ratio = degraded_p99 / healthy_p99.max(1e-12);
+    assert!(
+        degraded_p99 <= MAX_DEGRADED_P99_RATIO * healthy_p99,
+        "failover latency regression: degraded p99 {degraded_p99:.3}s is {p99_ratio:.2}x \
+         healthy p99 {healthy_p99:.3}s (bound {MAX_DEGRADED_P99_RATIO}x)"
+    );
+
     // --- plans/sec: cold sweep vs PlanCache hit ---------------------------
     // paper-scale cell with a big enumeration space (pixart @ 2048px on
     // 16 GPUs), so "cold" is the real per-batch cost the cache removes
@@ -207,7 +257,7 @@ fn main() {
         // only value-diffs deterministic counters once a measured
         // snapshot replaces it
         ("provenance", Json::Str("measured".into())),
-        ("schema_version", num(2.0)),
+        ("schema_version", num(3.0)),
         (
             "trace",
             obj(vec![
@@ -285,6 +335,21 @@ fn main() {
             ]),
         ),
         (
+            "fleet",
+            obj(vec![
+                ("replicas", num(4.0)),
+                ("requests", num(FLEET_REQUESTS as f64)),
+                ("kill_fraction", num(FLEET_KILL_FRACTION)),
+                ("served_degraded", num(degraded_fleet.served as f64)),
+                ("failovers", num(degraded_fleet.faults.failovers as f64)),
+                ("migrated", num(degraded_fleet.faults.migrated as f64)),
+                ("steps_credited", num(degraded_fleet.faults.steps_credited as f64)),
+                ("healthy_p99_s", num(healthy_p99)),
+                ("degraded_p99_s", num(degraded_p99)),
+                ("p99_ratio", num(p99_ratio)),
+            ]),
+        ),
+        (
             "pool",
             obj(vec![
                 ("hits", num(pool_stats.hits as f64)),
@@ -339,6 +404,13 @@ fn main() {
         p99_interactive,
         p99_batch,
         om.deadline_misses_by_class[SloClass::Interactive.index()]
+    );
+    println!(
+        "fleet: kill 1/4 replicas at {fleet_kill_at:.1}s, {} migrated ({} steps credited) | \
+         p99 {healthy_p99:.3}s -> {degraded_p99:.3}s = {p99_ratio:.2}x \
+         (bound {MAX_DEGRADED_P99_RATIO}x) — PASS",
+        degraded_fleet.faults.migrated,
+        degraded_fleet.faults.steps_credited
     );
     println!(
         "sessions: {} built / {} reused over {} batches — {}",

@@ -377,6 +377,26 @@ impl WaitingSet {
         Some(req)
     }
 
+    /// Take every waiting request out (failover evacuation): buckets
+    /// empty in `BatchKey` order, members in admission order within each
+    /// — deterministic, so migrated backlogs re-admit identically on
+    /// every replay.
+    pub fn drain(&mut self) -> Vec<GenRequest> {
+        let buckets = std::mem::take(&mut self.buckets);
+        self.len = 0;
+        let mut out = Vec::new();
+        for (_, bucket) in buckets {
+            out.extend(bucket.members);
+        }
+        out
+    }
+
+    /// Earliest declared deadline over the whole backlog (∞ when none
+    /// declared) — O(#groups) via the per-bucket aggregates.
+    pub fn min_deadline(&self) -> f64 {
+        self.buckets.values().fold(f64::INFINITY, |m, b| m.min(b.min_deadline))
+    }
+
     /// Rebuild the aggregates if the batcher's aging rate changed since
     /// they were computed (rare: a live engine keeps one rate).
     fn reindex_if_aging_changed(&mut self, aging: f64) {

@@ -487,6 +487,15 @@ impl<'a> Engine<'a> {
                 self.cancel(id);
                 return;
             }
+            TraceEventKind::ReplicaFail
+            | TraceEventKind::ReplicaDrain
+            | TraceEventKind::ReplicaRecover => {
+                // replica-lifecycle events only have meaning at fleet
+                // scope (health state machine + failover routing in
+                // `fleet::Fleet::replay`); a single engine has no replica
+                // identity, so they are harmless no-ops here
+                return;
+            }
         }
         self.world = self.world.min(self.cluster.n_gpus).max(1);
     }
@@ -712,6 +721,106 @@ impl<'a> Engine<'a> {
         self.now = arr;
         self.metrics.horizon = self.horizon();
         Ok(None)
+    }
+
+    /// Run the engine forward to the crash instant `at`, completing every
+    /// batch the cost model prices as finishing by then and checkpointing
+    /// the batch the crash lands in at its last whole step boundary:
+    /// members go back to the waiting set with `steps_done` credited
+    /// (capped one short of completion, exactly the [`Engine::tick`]
+    /// preemption slicer) and the credited work is charged to this
+    /// engine's ledger — the dying replica really did run those steps.
+    /// Returns the completed responses plus the steps credited.
+    ///
+    /// The fleet failover path calls this before evacuating the backlog
+    /// via [`Engine::drain_pending`]: because latents are always produced
+    /// from the original `(seed, steps, plan)` in one piece and execution
+    /// charges only the un-credited fraction, a migrated request's output
+    /// stays bit-identical to an undisturbed replay and its credited
+    /// compute is never redone on the surviving replica.
+    pub fn run_to_checkpoint(&mut self, at: f64) -> Result<(Vec<GenResponse>, u64)> {
+        let mut out = Vec::new();
+        let mut credited: u64 = 0;
+        while self.now < at {
+            self.waiting.extend(self.queue.drain_upto(usize::MAX));
+            let Some(batch) = self.batcher.next_batch_indexed(&mut self.waiting, self.now)
+            else {
+                break;
+            };
+            let first = &batch.requests[0];
+            let spec = ModelSpec::for_variant(first.variant)?;
+            let plan = self.plan_for(&spec, first.px, first.steps);
+            self.sync_cache_metrics();
+            let per_step = plan.per_step(first.steps);
+            let remaining: usize =
+                batch.requests.iter().map(|r| r.steps - r.steps_done.min(r.steps)).sum();
+            let est_finish = self.now + per_step * remaining as f64;
+            if per_step <= 0.0 || !per_step.is_finite() || est_finish <= at {
+                // finishes by the crash instant (or is unpriceable, in
+                // which case slicing is meaningless): run it whole
+                self.metrics.ticks += 1;
+                out.extend(self.execute_batch(batch)?);
+                continue;
+            }
+            // the crash lands mid-batch: credit each member the whole
+            // fair-share steps of the [now, at) window — the same
+            // arithmetic as maybe_preempt, but unconditional (a crash
+            // does not check SLO classes or preemption budgets)
+            let window = at - self.now;
+            let k = (window / (per_step * batch.len() as f64)).floor() as usize;
+            let mut charged = 0.0;
+            for mut r in batch.requests {
+                let rem = r.steps - r.steps_done.min(r.steps);
+                let credit = k.min(rem.saturating_sub(1));
+                charged += credit as f64 * per_step;
+                credited += credit as u64;
+                r.steps_done += credit;
+                self.waiting.push(r);
+            }
+            self.metrics.model_seconds += charged;
+            self.metrics.stages.denoise_busy += charged;
+            self.metrics.checkpoint_steps += credited;
+            self.now = at;
+            self.metrics.horizon = self.horizon();
+            break;
+        }
+        // an idle (or early-finished) replica still dies at `at`
+        self.advance_to(at);
+        Ok((out, credited))
+    }
+
+    /// Evacuate every admitted-but-unserved request (failover migration):
+    /// the admission queue and waiting set empty out, per-class pending
+    /// counters reset, and the orphans come back sorted by (arrival, id)
+    /// so surviving replicas admit them in a deterministic order.
+    /// Progress already credited (`steps_done`) rides along — the
+    /// checkpoint that makes migration resume instead of redo.
+    pub fn drain_pending(&mut self) -> Vec<GenRequest> {
+        let mut out = self.queue.drain_upto(usize::MAX);
+        out.extend(self.waiting.drain());
+        for r in &out {
+            let c = &mut self.pending_by_class[r.slo.index()];
+            *c = c.saturating_sub(1);
+        }
+        out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        out
+    }
+
+    /// Decode-stage backlog: queued decodes whose start lies past the
+    /// denoise clock (staged mode; always 0 in serial mode, where the
+    /// decode deque stays empty). The fleet folds this into
+    /// `ReplicaView` so dispatch can see a replica whose decoder is the
+    /// bottleneck even when its denoise queue looks short.
+    pub fn stage_backlog(&self) -> usize {
+        self.decode_starts.iter().filter(|&&s| s > self.now).count()
+    }
+
+    /// Earliest declared deadline over the admitted-but-unserved backlog
+    /// (∞ when nothing pending declares one) — O(#groups) through the
+    /// waiting set's bucket aggregates plus a scan of the short admission
+    /// queue. The fleet derives SLO deadline pressure from it.
+    pub fn min_pending_deadline(&self) -> f64 {
+        self.waiting.min_deadline().min(self.queue.min_deadline())
     }
 
     /// Serve exactly this window of requests to completion, bypassing the

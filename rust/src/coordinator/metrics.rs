@@ -129,6 +129,10 @@ pub struct Metrics {
     /// Batch-tier preemption slices taken to protect an interactive
     /// deadline (each slice re-enqueues the batch with progress credited).
     pub preemptions: u64,
+    /// Whole steps credited by crash checkpoints
+    /// (`Engine::run_to_checkpoint`) — work a dying replica completed
+    /// that failover migration will resume from, never redo.
+    pub checkpoint_steps: u64,
     /// Requests cancelled while still in the admission queue (capacity
     /// refunded immediately).
     pub cancelled_queued: u64,

@@ -102,6 +102,14 @@ impl RequestQueue {
         req
     }
 
+    /// Earliest declared deadline among queued requests (∞ when none
+    /// declare one). Linear in the queue length, which the leader drains
+    /// every tick — the fleet's deadline-pressure view reads this.
+    pub fn min_deadline(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        g.q.iter().fold(f64::INFINITY, |m, r| m.min(r.deadline.unwrap_or(f64::INFINITY)))
+    }
+
     /// Requests currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().q.len()

@@ -40,17 +40,36 @@ pub enum Scenario {
     /// Rank failure, node drain and node re-join mid-trace, plus two
     /// cancellations — every event forces a re-plan on the next batch.
     FailureReplan,
+    /// Fleet-scale: a replica dies mid-burst with requests in flight —
+    /// failover must checkpoint, migrate and credit its progress while
+    /// the herd keeps arriving.
+    ReplicaKill,
+    /// Fleet-scale: maintenance rolls a drain across replicas 0..2, one
+    /// at a time, each recovering before the next drains.
+    RollingDrain,
+    /// Fleet-scale: straggler slowdowns cascade across replicas 0..2,
+    /// then recover in order — the factors are powers of two netting
+    /// 1.0, so a single-engine replay restores its fingerprint exactly.
+    CascadingStragglers,
 }
 
 impl Scenario {
     /// Every scenario, in catalog order.
-    pub const ALL: [Scenario; 5] = [
+    pub const ALL: [Scenario; 8] = [
         Scenario::Burst,
         Scenario::Diurnal,
         Scenario::MixedMedia,
         Scenario::Straggler,
         Scenario::FailureReplan,
+        Scenario::ReplicaKill,
+        Scenario::RollingDrain,
+        Scenario::CascadingStragglers,
     ];
+
+    /// The fleet-scale variants (replica-targeted fault schedules) —
+    /// what the `fault-smoke` CI job replays through a 4-replica fleet.
+    pub const FLEET: [Scenario; 3] =
+        [Scenario::ReplicaKill, Scenario::RollingDrain, Scenario::CascadingStragglers];
 
     /// Stable CLI / report name.
     pub fn name(&self) -> &'static str {
@@ -60,6 +79,9 @@ impl Scenario {
             Scenario::MixedMedia => "mixed-media",
             Scenario::Straggler => "straggler",
             Scenario::FailureReplan => "failure-replan",
+            Scenario::ReplicaKill => "replica-kill",
+            Scenario::RollingDrain => "rolling-drain",
+            Scenario::CascadingStragglers => "cascading-stragglers",
         }
     }
 
@@ -76,6 +98,9 @@ impl Scenario {
             Scenario::MixedMedia => "image traffic plus CogVideoX-shaped video clips",
             Scenario::Straggler => "mid-trace straggler slowdown and recovery",
             Scenario::FailureReplan => "rank fail, node drain/re-join and cancellations",
+            Scenario::ReplicaKill => "a replica dies mid-burst; failover migrates its work",
+            Scenario::RollingDrain => "a maintenance drain rolls across the fleet, one at a time",
+            Scenario::CascadingStragglers => "slowdowns cascade across replicas, then recover",
         }
     }
 
@@ -91,6 +116,9 @@ impl Scenario {
             Scenario::MixedMedia => mixed_media(seed, n),
             Scenario::Straggler => straggler(seed, n),
             Scenario::FailureReplan => failure_replan(seed, n),
+            Scenario::ReplicaKill => replica_kill(seed, n),
+            Scenario::RollingDrain => rolling_drain(seed, n),
+            Scenario::CascadingStragglers => cascading_stragglers(seed, n),
         }
     }
 }
@@ -186,8 +214,8 @@ fn straggler(seed: u64, n: usize) -> Trace {
     // slowdown and recovery are powers of two, so the recovered cluster
     // fingerprint matches the original bit-exactly
     let events = vec![
-        TraceEvent { at: 0.25 * horizon, kind: TraceEventKind::Straggler(0.5) },
-        TraceEvent { at: 0.75 * horizon, kind: TraceEventKind::Straggler(2.0) },
+        TraceEvent::new(0.25 * horizon, TraceEventKind::Straggler(0.5)),
+        TraceEvent::new(0.75 * horizon, TraceEventKind::Straggler(2.0)),
     ];
     Trace::new(requests).with_events(events)
 }
@@ -207,11 +235,86 @@ fn failure_replan(seed: u64, n: usize) -> Trace {
     let c1 = &requests[n / 3];
     let c2 = &requests[2 * n / 3];
     let events = vec![
-        TraceEvent { at: c1.arrival, kind: TraceEventKind::Cancel(c1.id) },
-        TraceEvent { at: 0.2 * horizon, kind: TraceEventKind::RankFail },
-        TraceEvent { at: 0.4 * horizon, kind: TraceEventKind::NodeShrink },
-        TraceEvent { at: c2.arrival, kind: TraceEventKind::Cancel(c2.id) },
-        TraceEvent { at: 0.7 * horizon, kind: TraceEventKind::NodeGrow },
+        TraceEvent::new(c1.arrival, TraceEventKind::Cancel(c1.id)),
+        TraceEvent::new(0.2 * horizon, TraceEventKind::RankFail),
+        TraceEvent::new(0.4 * horizon, TraceEventKind::NodeShrink),
+        TraceEvent::new(c2.arrival, TraceEventKind::Cancel(c2.id)),
+        TraceEvent::new(0.7 * horizon, TraceEventKind::NodeGrow),
+    ];
+    Trace::new(requests).with_events(events)
+}
+
+fn replica_kill(seed: u64, n: usize) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(n);
+    let quiet = n / 2;
+    let mut t = 0.0;
+    let mut herd_start = 0.0;
+    for i in 0..n as u64 {
+        if i == quiet as u64 {
+            // a lull, then the herd — the kill lands inside the herd, so
+            // the dead replica has both queued and mid-flight work
+            t += 4.0;
+            herd_start = t;
+        }
+        t += if (i as usize) < quiet { rng.exp(0.9) } else { rng.exp(16.0) };
+        let slo = if (i as usize) >= quiet {
+            *rng.pick(&[SloClass::Interactive, SloClass::Standard, SloClass::Batch])
+        } else {
+            *rng.pick(&[SloClass::Standard, SloClass::Batch])
+        };
+        requests.push(request(&mut rng, seed, i, t, slo));
+    }
+    let horizon = t;
+    // a quarter of the way into the herd, replica 1 drops dead
+    let kill_at = herd_start + 0.25 * (horizon - herd_start);
+    let events = vec![TraceEvent::on_replica(kill_at, TraceEventKind::ReplicaFail, 1)];
+    Trace::new(requests).with_events(events)
+}
+
+fn rolling_drain(seed: u64, n: usize) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for i in 0..n as u64 {
+        t += rng.exp(2.5);
+        let slo = *rng.pick(&[SloClass::Interactive, SloClass::Standard, SloClass::Batch]);
+        requests.push(request(&mut rng, seed, i, t, slo));
+    }
+    let horizon = t;
+    // maintenance rolls across replicas 0..2: each drains, finishes its
+    // backlog, and recovers before the next one goes down
+    let events = vec![
+        TraceEvent::on_replica(0.15 * horizon, TraceEventKind::ReplicaDrain, 0),
+        TraceEvent::on_replica(0.40 * horizon, TraceEventKind::ReplicaRecover, 0),
+        TraceEvent::on_replica(0.40 * horizon, TraceEventKind::ReplicaDrain, 1),
+        TraceEvent::on_replica(0.65 * horizon, TraceEventKind::ReplicaRecover, 1),
+        TraceEvent::on_replica(0.65 * horizon, TraceEventKind::ReplicaDrain, 2),
+        TraceEvent::on_replica(0.90 * horizon, TraceEventKind::ReplicaRecover, 2),
+    ];
+    Trace::new(requests).with_events(events)
+}
+
+fn cascading_stragglers(seed: u64, n: usize) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for i in 0..n as u64 {
+        t += rng.exp(1.8);
+        let slo = *rng.pick(&[SloClass::Interactive, SloClass::Standard, SloClass::Batch]);
+        requests.push(request(&mut rng, seed, i, t, slo));
+    }
+    let horizon = t;
+    // the slowdown sweeps r0 -> r1 -> r2, then recovery sweeps in the
+    // same order; 0.5 * 2.0 = 1.0 so each replica's cluster fingerprint
+    // restores bit-exactly once its recovery lands
+    let events = vec![
+        TraceEvent::on_replica(0.20 * horizon, TraceEventKind::Straggler(0.5), 0),
+        TraceEvent::on_replica(0.35 * horizon, TraceEventKind::Straggler(0.5), 1),
+        TraceEvent::on_replica(0.50 * horizon, TraceEventKind::Straggler(0.5), 2),
+        TraceEvent::on_replica(0.65 * horizon, TraceEventKind::Straggler(2.0), 0),
+        TraceEvent::on_replica(0.75 * horizon, TraceEventKind::Straggler(2.0), 1),
+        TraceEvent::on_replica(0.85 * horizon, TraceEventKind::Straggler(2.0), 2),
     ];
     Trace::new(requests).with_events(events)
 }
@@ -309,6 +412,55 @@ mod tests {
         assert!(Scenario::Burst.trace(3, 32).events().is_empty());
         assert!(Scenario::Diurnal.trace(3, 32).events().is_empty());
         assert!(Scenario::MixedMedia.trace(3, 32).events().is_empty());
+    }
+
+    #[test]
+    fn fleet_scenarios_target_replicas_with_sorted_fault_schedules() {
+        for s in Scenario::FLEET {
+            let t = s.trace(3, 32);
+            assert!(!t.events().is_empty(), "{}: fleet scenarios carry events", s.name());
+            let mut prev = 0.0;
+            for e in t.events() {
+                assert!(e.at >= prev, "{}: events must be sorted", s.name());
+                prev = e.at;
+                assert!(e.replica.is_some(), "{}: every event targets a replica", s.name());
+            }
+        }
+        let kills: Vec<_> = Scenario::ReplicaKill
+            .trace(3, 32)
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, TraceEventKind::ReplicaFail))
+            .cloned()
+            .collect();
+        assert_eq!(kills.len(), 1, "replica-kill fires exactly one failure");
+        assert_eq!(kills[0].replica, Some(1));
+        // the kill lands inside the herd: after the lull that follows the
+        // last quiet-phase arrival (requests[15] for n = 32)
+        let t = Scenario::ReplicaKill.trace(3, 32);
+        let lull_end = t.requests()[15].arrival + 4.0;
+        assert!(kills[0].at > lull_end, "kill must land inside the herd");
+
+        let d = Scenario::RollingDrain.trace(3, 32);
+        let drains =
+            d.events().iter().filter(|e| matches!(e.kind, TraceEventKind::ReplicaDrain)).count();
+        let recovers =
+            d.events().iter().filter(|e| matches!(e.kind, TraceEventKind::ReplicaRecover)).count();
+        assert_eq!((drains, recovers), (3, 3), "each drained replica recovers");
+
+        let c = Scenario::CascadingStragglers.trace(3, 32);
+        for replica in 0..3usize {
+            let net: f64 = c
+                .events()
+                .iter()
+                .filter(|e| e.replica == Some(replica))
+                .map(|e| match e.kind {
+                    TraceEventKind::Straggler(f) => f,
+                    _ => panic!("cascading-stragglers only schedules slowdowns"),
+                })
+                .product();
+            assert_eq!(net, 1.0, "replica {replica}: slowdowns must net out");
+        }
     }
 
     #[test]

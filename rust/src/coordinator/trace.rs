@@ -6,6 +6,19 @@
 //! priorities and deadlines are all derived from one seeded [`Rng`], a
 //! whole Poisson workload replays bit-identically: same trace, same
 //! batches, same latencies, same latents.
+//!
+//! # Event/arrival tie-breaking (the unified rule)
+//!
+//! When a [`TraceEvent`] and a request arrival carry the *same*
+//! timestamp, **the arrival is applied first** — events fire strictly
+//! *before* the next-later arrival, never at-or-before. Both replay
+//! loops implement this one rule (`Pipeline::serve_trace` via its
+//! `at < arrival` cursor, `fleet::Fleet::replay` via its strict
+//! `at < t` pre-arrival sweep), so a cancel stamped at its target's own
+//! arrival finds the request already admitted, and a replica failure
+//! stamped at an arrival sees that request routed before the crash.
+//! Same-timestamp regression tests in `tests/serving.rs` and
+//! `tests/fleet.rs` pin the rule in both loops.
 
 use crate::config::model::BlockVariant;
 use crate::coordinator::request::{GenRequest, RequestId, SloClass, DEFAULT_PX};
@@ -30,15 +43,51 @@ pub enum TraceEventKind {
     /// Cancel the request with this id (queued or mid-flight; a no-op
     /// if it already completed).
     Cancel(RequestId),
+    /// A whole replica crashes with requests in flight. Fleet-scoped:
+    /// meaningful only with a [`TraceEvent::replica`] target, where the
+    /// fleet checkpoints the dying replica at the crash instant and
+    /// migrates its backlog (`fleet/failover.rs`); a single engine has
+    /// no replica identity, so this is a no-op under `serve_trace`.
+    ReplicaFail,
+    /// A replica is drained for maintenance: it finishes what it holds
+    /// but the dispatcher stops routing new work to it. Fleet-scoped
+    /// (see [`TraceEventKind::ReplicaFail`]).
+    ReplicaDrain,
+    /// A failed or draining replica is restored to service. Fleet-scoped
+    /// (see [`TraceEventKind::ReplicaFail`]).
+    ReplicaRecover,
 }
 
 /// A scheduled mid-trace event: at virtual time `at`, mutate the world.
+/// An event may target one fleet replica via `replica` (index modulo the
+/// fleet size); untargeted events hit every replica's cluster, exactly
+/// the pre-fleet semantics. Construct via [`TraceEvent::new`] /
+/// [`TraceEvent::on_replica`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceEvent {
     /// Virtual time the event fires (same clock as request arrivals).
     pub at: f64,
     /// What happens.
     pub kind: TraceEventKind,
+    /// Optional fleet-replica target. `None` = cluster-wide (every
+    /// replica under `serve_fleet`, the single engine under
+    /// `serve_trace`); `Some(i)` applies to replica `i % fleet_size`
+    /// only, and is ignored by the single-engine replay loop for the
+    /// replica-lifecycle kinds.
+    pub replica: Option<usize>,
+}
+
+impl TraceEvent {
+    /// A cluster-wide event (no replica target).
+    pub fn new(at: f64, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent { at, kind, replica: None }
+    }
+
+    /// An event targeting one fleet replica (index taken modulo the
+    /// fleet size at replay, so schedules survive `--replicas` changes).
+    pub fn on_replica(at: f64, kind: TraceEventKind, replica: usize) -> TraceEvent {
+        TraceEvent { at, kind, replica: Some(replica) }
+    }
 }
 
 /// A virtual-time request trace, sorted by (arrival, id), plus an
@@ -351,13 +400,15 @@ mod tests {
     #[test]
     fn events_sort_by_fire_time_and_coerce_nonfinite() {
         let t = Trace::new(vec![GenRequest::new(0, "a")]).with_events(vec![
-            TraceEvent { at: 5.0, kind: TraceEventKind::NodeShrink },
-            TraceEvent { at: f64::NAN, kind: TraceEventKind::Straggler(0.5) },
-            TraceEvent { at: 2.0, kind: TraceEventKind::Cancel(0) },
+            TraceEvent::new(5.0, TraceEventKind::NodeShrink),
+            TraceEvent::new(f64::NAN, TraceEventKind::Straggler(0.5)),
+            TraceEvent::on_replica(2.0, TraceEventKind::ReplicaFail, 1),
         ]);
         let fires: Vec<f64> = t.events().iter().map(|e| e.at).collect();
         assert_eq!(fires, vec![0.0, 2.0, 5.0], "NaN coerced to 0, schedule sorted");
         assert_eq!(t.events()[0].kind, TraceEventKind::Straggler(0.5));
+        assert_eq!(t.events()[0].replica, None, "TraceEvent::new carries no target");
+        assert_eq!(t.events()[1].replica, Some(1), "on_replica keeps its target");
         // a plain trace carries no events
         assert!(Trace::poisson(1, 4, 1.0).build().events().is_empty());
     }

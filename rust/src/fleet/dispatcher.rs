@@ -1,12 +1,22 @@
-//! The fleet front door: pluggable request-to-replica dispatch.
+//! The fleet front door: pluggable, health-aware request-to-replica
+//! dispatch.
 //!
 //! A [`Dispatcher`] owns no replica state — each pick consumes a slice of
-//! [`ReplicaView`] snapshots (pending depth + how far the replica's clock
-//! has run ahead) and returns an index. All three policies are
-//! deterministic: round-robin is a counter, join-shortest-queue is a pure
-//! argmin, and power-of-two-choices draws its two candidates from a seeded
-//! [`Rng`], so a seeded trace replays to the same routing every time.
+//! [`ReplicaView`] snapshots (pending depth, virtual clock, health,
+//! decode backlog, deadline pressure) and returns an index. All three
+//! policies are deterministic: round-robin is a counter, join-shortest-
+//! queue is a pure argmin, and power-of-two-choices draws its two
+//! candidates from a seeded [`Rng`], so a seeded trace replays to the
+//! same routing every time.
+//!
+//! Health awareness is a filter, not a new policy: replicas whose
+//! [`Health`] is not routable (`Failed`, `Draining`) are invisible to
+//! every policy, and [`Dispatcher::pick`] returns `None` only when *no*
+//! replica is routable. On an all-healthy fleet with equal backlogs and
+//! no deadline pressure, each policy behaves exactly as it did before
+//! the richer view existed (property-tested in `tests/fleet.rs`).
 
+use crate::fleet::health::Health;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
@@ -16,7 +26,8 @@ pub enum DispatchPolicy {
     /// Cycle through replicas in index order, ignoring load.
     RoundRobin,
     /// Route to the replica with the fewest pending requests (ties broken
-    /// by the earlier virtual clock, then the lower index).
+    /// by the earlier virtual clock, then the smaller decode backlog,
+    /// then the lower deadline pressure, then the lower index).
     JoinShortestQueue,
     /// Sample two replicas from a seeded RNG and keep the less loaded one
     /// — the classic O(1) approximation of JSQ. Deterministic per seed.
@@ -58,16 +69,46 @@ pub struct ReplicaView {
     /// time, the replica is busy until this instant (tie-breaker between
     /// equally-deep queues).
     pub busy_until: f64,
+    /// Health state — non-routable replicas are invisible to every
+    /// policy.
+    pub health: Health,
+    /// Decode-stage backlog (queued VAE decodes behind the denoise
+    /// clock); 0 for serial-mode replicas. Late tie-breaker.
+    pub backlog: usize,
+    /// SLO deadline pressure: the replica's clock minus the earliest
+    /// pending deadline (positive = already past a deadline;
+    /// `NEG_INFINITY` when nothing pending declares one). Late
+    /// tie-breaker — an equally-loaded replica with less pressure wins.
+    pub pressure: f64,
+}
+
+impl ReplicaView {
+    /// A healthy, backlog-free, pressure-free view — what every replica
+    /// looked like before the richer state existed. The extra fields are
+    /// *late* tie-breakers, so dispatch over such views is bit-identical
+    /// to the pre-health dispatcher.
+    pub fn healthy(pending: usize, busy_until: f64) -> ReplicaView {
+        ReplicaView {
+            pending,
+            busy_until,
+            health: Health::Healthy,
+            backlog: 0,
+            pressure: f64::NEG_INFINITY,
+        }
+    }
 }
 
 /// Lower key = better target: fewest pending, then the replica that frees
-/// up earliest, then the lowest index (total order, so argmin is unique).
+/// up earliest, then the smaller decode backlog, then the lower deadline
+/// pressure, then the lowest index (total order, so argmin is unique).
 fn better(views: &[ReplicaView], a: usize, b: usize) -> usize {
     let (va, vb) = (&views[a], &views[b]);
     match va
         .pending
         .cmp(&vb.pending)
         .then(va.busy_until.total_cmp(&vb.busy_until))
+        .then(va.backlog.cmp(&vb.backlog))
+        .then(va.pressure.total_cmp(&vb.pressure))
         .then(a.cmp(&b))
     {
         std::cmp::Ordering::Greater => b,
@@ -101,25 +142,55 @@ impl Dispatcher {
         self.policy
     }
 
-    /// Choose the replica for the next request. `views` must be non-empty
-    /// and indexed like the fleet's replica list.
-    pub fn pick(&mut self, views: &[ReplicaView]) -> usize {
+    /// Choose the replica for the next request, or `None` when no replica
+    /// is routable (all failed/draining). `views` must be non-empty and
+    /// indexed like the fleet's replica list. When every replica is
+    /// routable, each policy's choice — and, for po2, its RNG stream —
+    /// is identical to the health-blind dispatcher's.
+    pub fn pick(&mut self, views: &[ReplicaView]) -> Option<usize> {
         assert!(!views.is_empty(), "dispatcher needs at least one replica view");
-        match self.policy {
+        let routable: Vec<usize> =
+            (0..views.len()).filter(|&i| views[i].health.routable()).collect();
+        if routable.is_empty() {
+            return None;
+        }
+        Some(match self.policy {
             DispatchPolicy::RoundRobin => {
-                let k = self.rr_next % views.len();
-                self.rr_next = self.rr_next.wrapping_add(1);
+                // scan forward from the cursor to the next routable
+                // replica; with everyone routable this is exactly the old
+                // modular increment
+                let n = views.len();
+                let mut k = self.rr_next % n;
+                while !views[k].health.routable() {
+                    k = (k + 1) % n;
+                }
+                self.rr_next = k.wrapping_add(1);
                 k
             }
-            DispatchPolicy::JoinShortestQueue => {
-                (1..views.len()).fold(0, |best, i| better(views, best, i))
-            }
+            DispatchPolicy::JoinShortestQueue => routable
+                .iter()
+                .copied()
+                .reduce(|best, i| better(views, best, i))
+                .expect("routable is non-empty here"),
             DispatchPolicy::PowerOfTwo { .. } => {
-                let a = self.rng.below(views.len());
-                let b = self.rng.below(views.len());
+                // sample from the routable list: with everyone routable
+                // the list length equals the view count, so the RNG
+                // stream (and every draw) matches the health-blind path
+                let a = routable[self.rng.below(routable.len())];
+                let b = routable[self.rng.below(routable.len())];
                 better(views, a, b)
             }
-        }
+        })
+    }
+
+    /// The hedge target: the best routable replica *other than*
+    /// `primary`, under the same total order as JSQ — or `None` when the
+    /// primary is the only routable replica. Pure argmin, no RNG, so
+    /// hedging never perturbs the po2 sampling stream.
+    pub fn pick_hedge(&self, views: &[ReplicaView], primary: usize) -> Option<usize> {
+        (0..views.len())
+            .filter(|&i| i != primary && views[i].health.routable())
+            .reduce(|best, i| better(views, best, i))
     }
 }
 
@@ -128,7 +199,7 @@ mod tests {
     use super::*;
 
     fn views(pending: &[usize]) -> Vec<ReplicaView> {
-        pending.iter().map(|&p| ReplicaView { pending: p, busy_until: 0.0 }).collect()
+        pending.iter().map(|&p| ReplicaView::healthy(p, 0.0)).collect()
     }
 
     #[test]
@@ -136,24 +207,55 @@ mod tests {
         let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
         let v = views(&[5, 0, 0]);
         assert_eq!(
-            (0..6).map(|_| d.pick(&v)).collect::<Vec<_>>(),
+            (0..6).map(|_| d.pick(&v).unwrap()).collect::<Vec<_>>(),
             vec![0, 1, 2, 0, 1, 2],
             "round-robin ignores load"
         );
     }
 
     #[test]
+    fn round_robin_skips_unroutable_replicas() {
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let mut v = views(&[0, 0, 0]);
+        v[1].health = Health::Failed;
+        assert_eq!(
+            (0..4).map(|_| d.pick(&v).unwrap()).collect::<Vec<_>>(),
+            vec![0, 2, 0, 2],
+            "the cursor scans past failed replicas"
+        );
+        v[0].health = Health::Draining;
+        v[2].health = Health::Failed;
+        assert_eq!(d.pick(&v), None, "nothing routable");
+    }
+
+    #[test]
     fn jsq_is_argmin_with_total_tiebreak() {
         let mut d = Dispatcher::new(DispatchPolicy::JoinShortestQueue);
-        assert_eq!(d.pick(&views(&[3, 1, 2])), 1);
+        assert_eq!(d.pick(&views(&[3, 1, 2])), Some(1));
         // equal depth: earlier clock wins
-        let v = vec![
-            ReplicaView { pending: 2, busy_until: 7.0 },
-            ReplicaView { pending: 2, busy_until: 3.0 },
-        ];
-        assert_eq!(d.pick(&v), 1);
+        let v = vec![ReplicaView::healthy(2, 7.0), ReplicaView::healthy(2, 3.0)];
+        assert_eq!(d.pick(&v), Some(1));
         // fully tied: lowest index
-        assert_eq!(d.pick(&views(&[2, 2, 2])), 0);
+        assert_eq!(d.pick(&views(&[2, 2, 2])), Some(0));
+        // depth+clock tied: the smaller decode backlog, then the lower
+        // deadline pressure, break the tie before the index does
+        let mut v = views(&[2, 2]);
+        v[0].backlog = 3;
+        assert_eq!(d.pick(&v), Some(1));
+        let mut v = views(&[2, 2]);
+        v[0].pressure = 1.5;
+        v[1].pressure = -0.5;
+        assert_eq!(d.pick(&v), Some(1));
+    }
+
+    #[test]
+    fn jsq_never_routes_to_a_failed_replica() {
+        let mut d = Dispatcher::new(DispatchPolicy::JoinShortestQueue);
+        let mut v = views(&[0, 9]);
+        v[0].health = Health::Failed;
+        assert_eq!(d.pick(&v), Some(1), "an empty-but-dead replica is invisible");
+        v[1].health = Health::Draining;
+        assert_eq!(d.pick(&v), None);
     }
 
     #[test]
@@ -161,7 +263,7 @@ mod tests {
         let v = views(&[4, 0, 3, 1, 2, 0, 5, 1]);
         let run = |seed: u64| {
             let mut d = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed });
-            (0..64).map(|_| d.pick(&v)).collect::<Vec<_>>()
+            (0..64).map(|_| d.pick(&v).unwrap()).collect::<Vec<_>>()
         };
         assert_eq!(run(7), run(7), "same seed must replay identically");
         assert_ne!(run(7), run(8), "distinct seeds must sample differently");
@@ -174,9 +276,45 @@ mod tests {
         let mut d = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed: 3 });
         let v = views(&[9, 2]);
         for _ in 0..32 {
-            let k = d.pick(&v);
+            let k = d.pick(&v).unwrap();
             assert!(k == 1 || v[k].pending == v[1].pending, "picked the deeper queue");
         }
+    }
+
+    #[test]
+    fn po2_samples_only_routable_replicas() {
+        let mut d = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed: 11 });
+        let mut v = views(&[0, 0, 0, 0]);
+        v[0].health = Health::Failed;
+        v[3].health = Health::Draining;
+        for _ in 0..64 {
+            let k = d.pick(&v).unwrap();
+            assert!(k == 1 || k == 2, "sampled an unroutable replica: {k}");
+        }
+    }
+
+    #[test]
+    fn hedge_pick_is_second_best_and_rng_free() {
+        let d = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed: 5 });
+        let v = views(&[1, 0, 2]);
+        assert_eq!(d.pick_hedge(&v, 1), Some(0), "best excluding the primary");
+        assert_eq!(d.pick_hedge(&v, 0), Some(1));
+        let mut v = views(&[0, 5]);
+        v[1].health = Health::Failed;
+        assert_eq!(d.pick_hedge(&v, 0), None, "no routable second replica");
+        // immutable receiver: hedging cannot advance the po2 stream
+        let mut d2 = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed: 5 });
+        let v8 = views(&[4, 0, 3, 1]);
+        let before: Vec<usize> = (0..8).map(|_| d2.pick(&v8).unwrap()).collect();
+        let mut d3 = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed: 5 });
+        let after: Vec<usize> = (0..8)
+            .map(|_| {
+                let k = d3.pick(&v8).unwrap();
+                let _ = d3.pick_hedge(&v8, k);
+                k
+            })
+            .collect();
+        assert_eq!(before, after, "pick_hedge must not consume RNG draws");
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Failover bookkeeping: the fault ledger, the deterministic retry
+//! backoff policy, and the deferred-submission record the fleet replay
+//! loop re-dispatches.
+//!
+//! The mechanism itself lives in `fleet::Fleet::replay`: on a targeted
+//! `ReplicaFail` the dying engine is run to the crash instant with
+//! `Engine::run_to_checkpoint` (completing batches that finish first,
+//! checkpointing the one the crash lands in at its last whole step
+//! boundary), its backlog is evacuated with `Engine::drain_pending`, and
+//! every orphan is re-routed to a surviving replica with `steps_done`
+//! credited — resume, not redo. This module holds the plain-data pieces
+//! so the policy (retry caps, backoff shape, ledger fields) is visible
+//! and testable without a fleet.
+
+use crate::coordinator::request::GenRequest;
+
+/// Submission attempts after the first before a rejection becomes final
+/// (so a request is offered to the fleet at most `1 + MAX_RETRIES`
+/// times).
+pub const MAX_RETRIES: u32 = 3;
+
+/// Base of the exponential virtual-time backoff between retries.
+pub const RETRY_BACKOFF_S: f64 = 0.25;
+
+/// Deterministic capped exponential backoff: the delay before retry
+/// number `tries + 1` (0.25 s, 0.5 s, 1.0 s, ... virtual).
+pub fn backoff(tries: u32) -> f64 {
+    RETRY_BACKOFF_S * (1u64 << tries.min(16)) as f64
+}
+
+/// A rejected submission parked for a later attempt, in virtual time.
+#[derive(Debug, Clone)]
+pub(crate) struct Deferred {
+    /// Virtual instant the retry fires.
+    pub due: f64,
+    /// Attempts already made (caps at [`MAX_RETRIES`]).
+    pub tries: u32,
+    /// The request itself, progress credits and all.
+    pub req: GenRequest,
+}
+
+/// The fleet's fault ledger: everything the fault-tolerance layer did
+/// during a replay, folded into `FleetReport`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultLedger {
+    /// Replica failures handled (checkpoint + migration).
+    pub failovers: u64,
+    /// Requests evacuated from dead replicas and re-routed.
+    pub migrated: u64,
+    /// Whole denoising steps migrated requests carried as credit — work
+    /// the dead replica completed that survivors never redo.
+    pub steps_credited: u64,
+    /// Steps a migrated request re-ran because its credit was lost.
+    /// Checkpoint-resume keeps this at zero by construction; the ledger
+    /// carries it so tests can pin "resume, not redo" explicitly.
+    pub steps_redone: u64,
+    /// Rejected submissions re-attempted after virtual-time backoff.
+    pub retries: u64,
+    /// Requests whose retry budget ran out (final rejection).
+    pub retries_exhausted: u64,
+    /// Interactive requests submitted twice (hedged dispatch).
+    pub hedges: u64,
+    /// Hedges where the *secondary* replica finished first.
+    pub hedges_won: u64,
+    /// Hedges where the primary finished first (the duplicate is reaped).
+    pub hedges_lost: u64,
+    /// Per-failure recovery time: virtual seconds from the crash until
+    /// the last migrated request landed on a survivor (0 when the dead
+    /// replica held nothing).
+    pub recovery: Vec<f64>,
+}
+
+impl FaultLedger {
+    /// Did the fault layer do anything this replay?
+    pub fn any(&self) -> bool {
+        self.failovers + self.migrated + self.retries + self.retries_exhausted + self.hedges > 0
+    }
+
+    /// Mean per-failure recovery time (0 when no failures completed).
+    pub fn mean_recovery(&self) -> f64 {
+        if self.recovery.is_empty() {
+            return 0.0;
+        }
+        self.recovery.iter().sum::<f64>() / self.recovery.len() as f64
+    }
+
+    /// One-line ledger for CLI output and logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "faults: failovers={} migrated={} steps credited={} redone={} | \
+             retries={} (exhausted {}) | hedges={} won={} lost={} | mean recovery {:.3}s",
+            self.failovers,
+            self.migrated,
+            self.steps_credited,
+            self.steps_redone,
+            self.retries,
+            self.retries_exhausted,
+            self.hedges,
+            self.hedges_won,
+            self.hedges_lost,
+            self.mean_recovery(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        assert_eq!(backoff(0), 0.25);
+        assert_eq!(backoff(1), 0.5);
+        assert_eq!(backoff(2), 1.0);
+        // the shift clamp keeps absurd counters finite
+        assert!(backoff(60).is_finite());
+        assert_eq!(backoff(60), backoff(16));
+    }
+
+    #[test]
+    fn ledger_summary_and_recovery_mean() {
+        let mut ledger = FaultLedger::default();
+        assert!(!ledger.any());
+        assert_eq!(ledger.mean_recovery(), 0.0);
+        ledger.failovers = 1;
+        ledger.migrated = 3;
+        ledger.steps_credited = 12;
+        ledger.recovery = vec![0.5, 1.5];
+        assert!(ledger.any());
+        assert_eq!(ledger.mean_recovery(), 1.0);
+        let s = ledger.summary();
+        assert!(s.contains("failovers=1"), "{s}");
+        assert!(s.contains("migrated=3"), "{s}");
+        assert!(s.contains("steps credited=12 redone=0"), "{s}");
+        assert!(s.contains("mean recovery 1.000s"), "{s}");
+    }
+}

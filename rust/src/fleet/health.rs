@@ -1,0 +1,197 @@
+//! Per-replica health state machine (fault-tolerance layer L5.75).
+//!
+//! The fleet tracks one [`Health`] state per replica, driven by
+//! replica-targeted trace events during replay:
+//!
+//! ```text
+//!                 Straggler(f < 1) targeted
+//!   Healthy ────────────────────────────────▶ Degraded{slowdown}
+//!      ▲  ▲                                       │
+//!      │  └──── cumulative factor back ≥ 1 ◀──────┘
+//!      │
+//!      │ ReplicaRecover              ReplicaDrain
+//!      ├──────────────── Draining ◀──────────────── Healthy/Degraded
+//!      │                     │
+//!      │ ReplicaRecover      │ ReplicaFail (from any state)
+//!      └───────── Failed ◀───┴───────────────────────────────────────
+//! ```
+//!
+//! Routing reads one bit from this machine — [`Health::routable`]:
+//! `Healthy` and `Degraded` replicas accept new work (a slow replica is
+//! still a replica; JSQ naturally shifts load off it as its queue
+//! grows), `Draining` and `Failed` replicas never do. Failure
+//! additionally triggers checkpoint-resume migration in
+//! `fleet/failover.rs`; draining just lets the backlog run dry.
+
+/// Health of one fleet replica, as seen by the dispatcher.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Health {
+    /// Serving normally.
+    Healthy,
+    /// Serving, but slowed to `slowdown` × nominal throughput by one or
+    /// more targeted straggler events (cumulative factor < 1).
+    Degraded {
+        /// Cumulative throughput factor (product of targeted straggler
+        /// factors since the replica was last healthy; always < 1 here).
+        slowdown: f64,
+    },
+    /// Finishing its backlog for maintenance; accepts no new work.
+    Draining,
+    /// Crashed. Its backlog was migrated; accepts no new work.
+    Failed,
+}
+
+impl Health {
+    /// May the dispatcher route *new* work here?
+    pub fn routable(&self) -> bool {
+        matches!(self, Health::Healthy | Health::Degraded { .. })
+    }
+
+    /// Short human label for tables and summaries.
+    pub fn label(&self) -> String {
+        match self {
+            Health::Healthy => "healthy".into(),
+            Health::Degraded { slowdown } => format!("degraded({slowdown:.2}x)"),
+            Health::Draining => "draining".into(),
+            Health::Failed => "failed".into(),
+        }
+    }
+}
+
+/// The fleet's replica health ledger: current state per replica plus the
+/// failure timestamp failover uses to measure recovery time.
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    states: Vec<Health>,
+    failed_at: Vec<Option<f64>>,
+}
+
+impl HealthTracker {
+    /// All `n` replicas start healthy.
+    pub fn new(n: usize) -> HealthTracker {
+        HealthTracker { states: vec![Health::Healthy; n], failed_at: vec![None; n] }
+    }
+
+    /// Current state of replica `i`.
+    pub fn state(&self, i: usize) -> Health {
+        self.states[i]
+    }
+
+    /// True when replica `i` is `Failed`.
+    pub fn failed(&self, i: usize) -> bool {
+        self.states[i] == Health::Failed
+    }
+
+    /// Replicas the dispatcher may currently route to.
+    pub fn routable_count(&self) -> usize {
+        self.states.iter().filter(|h| h.routable()).count()
+    }
+
+    /// True when every replica is plain `Healthy`.
+    pub fn all_healthy(&self) -> bool {
+        self.states.iter().all(|h| *h == Health::Healthy)
+    }
+
+    /// Replica `i` crashes at virtual time `at` (idempotent).
+    pub fn fail(&mut self, i: usize, at: f64) {
+        if self.states[i] != Health::Failed {
+            self.states[i] = Health::Failed;
+            self.failed_at[i] = Some(at);
+        }
+    }
+
+    /// Replica `i` starts draining (no-op when already failed: a crash
+    /// outranks maintenance).
+    pub fn drain(&mut self, i: usize) {
+        if self.states[i] != Health::Failed {
+            self.states[i] = Health::Draining;
+        }
+    }
+
+    /// Replica `i` is restored to `Healthy`. Returns the downtime when it
+    /// was recovering from a crash (`at` − failure time), `None` for a
+    /// drain or straggler recovery.
+    pub fn recover(&mut self, i: usize, at: f64) -> Option<f64> {
+        let down = match self.states[i] {
+            Health::Failed => self.failed_at[i].map(|t| (at - t).max(0.0)),
+            _ => None,
+        };
+        self.states[i] = Health::Healthy;
+        self.failed_at[i] = None;
+        down
+    }
+
+    /// Fold a targeted straggler factor into replica `i`'s state: factors
+    /// multiply (two 0.5× events make a 0.25× replica) and a cumulative
+    /// factor back at or above 1 restores `Healthy`. Draining and failed
+    /// replicas keep their (stronger) state — the engine-side throughput
+    /// change still applies, but routing already avoids them.
+    pub fn note_slowdown(&mut self, i: usize, factor: f64) {
+        if !factor.is_finite() || factor <= 0.0 {
+            return;
+        }
+        let current = match self.states[i] {
+            Health::Healthy => 1.0,
+            Health::Degraded { slowdown } => slowdown,
+            Health::Draining | Health::Failed => return,
+        };
+        let cumulative = current * factor;
+        self.states[i] = if cumulative >= 1.0 {
+            Health::Healthy
+        } else {
+            Health::Degraded { slowdown: cumulative }
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_bit_tracks_the_state_machine() {
+        let mut h = HealthTracker::new(3);
+        assert!(h.all_healthy());
+        assert_eq!(h.routable_count(), 3);
+
+        h.note_slowdown(0, 0.5);
+        assert_eq!(h.state(0), Health::Degraded { slowdown: 0.5 });
+        assert!(h.state(0).routable(), "a slow replica still serves");
+
+        h.drain(1);
+        assert!(!h.state(1).routable());
+        h.fail(2, 4.0);
+        assert!(h.failed(2));
+        assert_eq!(h.routable_count(), 1);
+        assert!(!h.all_healthy());
+    }
+
+    #[test]
+    fn slowdowns_multiply_and_restore_at_unity() {
+        let mut h = HealthTracker::new(1);
+        h.note_slowdown(0, 0.5);
+        h.note_slowdown(0, 0.5);
+        assert_eq!(h.state(0), Health::Degraded { slowdown: 0.25 });
+        h.note_slowdown(0, 4.0);
+        assert_eq!(h.state(0), Health::Healthy, "cumulative factor 1.0 restores");
+        // junk factors are ignored
+        h.note_slowdown(0, f64::NAN);
+        h.note_slowdown(0, 0.0);
+        assert_eq!(h.state(0), Health::Healthy);
+    }
+
+    #[test]
+    fn fail_outranks_drain_and_recover_measures_downtime() {
+        let mut h = HealthTracker::new(1);
+        h.fail(0, 2.0);
+        h.drain(0);
+        assert!(h.failed(0), "a crash outranks maintenance");
+        h.fail(0, 9.0);
+        assert_eq!(h.recover(0, 5.0), Some(3.0), "idempotent fail keeps the first stamp");
+        assert_eq!(h.state(0), Health::Healthy);
+        // recovering a draining replica reports no downtime
+        h.drain(0);
+        assert_eq!(h.recover(0, 6.0), None);
+        assert!(h.state(0).routable());
+    }
+}

@@ -1,5 +1,5 @@
 //! Fleet layer (L5): multi-replica Data Parallel serving over the
-//! two-tier cluster model.
+//! two-tier cluster model, with fault tolerance (L5.75).
 //!
 //! xDiT's fourth parallel axis — Data Parallel — lives here, layered
 //! *above* `coordinator`: a [`Fleet`] is N independent replica
@@ -19,6 +19,32 @@
 //! `serve_trace` bit-identically — that degenerate case is pinned by a
 //! regression test.
 //!
+//! # Fault tolerance
+//!
+//! Replica-targeted trace events drive a per-replica [`Health`] state
+//! machine (`fleet/health.rs`). A targeted `ReplicaFail` checkpoints the
+//! dying engine at the crash instant (`Engine::run_to_checkpoint`:
+//! batches the cost model prices as finishing first complete, the one
+//! the crash lands in is sliced at its last whole step boundary),
+//! evacuates its backlog (`Engine::drain_pending`) and re-routes every
+//! orphan to a survivor with `steps_done` credited — because latents are
+//! always produced from the original `(seed, steps, plan)` in one piece
+//! and execution charges only the un-credited fraction, migrated outputs
+//! are bit-identical to an undisturbed replay and credited steps are
+//! never redone. Rejected submissions retry with capped deterministic
+//! virtual-time backoff (`fleet/failover.rs`), interactive-tier arrivals
+//! may be *hedged* (duplicate submit to the second-best replica; first
+//! completion wins, the loser is reaped through two-phase
+//! `Engine::cancel`), and everything the fault layer does lands in the
+//! report's [`FaultLedger`]. Conservation holds across every fault
+//! schedule: `served + cancelled + rejected == offered`.
+//!
+//! Within one inter-arrival window the replay applies events first (in
+//! fire order), then due retries (in due order) — both deterministic,
+//! so a fault schedule replays to the same digest every run. Event vs
+//! *arrival* ties follow the unified rule in `coordinator/trace.rs`:
+//! arrivals first.
+//!
 //! Sizing the fleet is [`planner::frontier`]'s job: sweep (replica count
 //! × intra-replica hybrid), price each cell's collectives on the tier
 //! they actually traverse (cross-node cells pay Ethernet), and rank the
@@ -27,39 +53,131 @@
 //! [`ClusterSpec`]: crate::config::hardware::ClusterSpec
 
 pub mod dispatcher;
+pub mod failover;
+pub mod health;
 pub mod planner;
 pub mod report;
 
 pub use dispatcher::{DispatchPolicy, Dispatcher, ReplicaView};
+pub use failover::{backoff, FaultLedger, MAX_RETRIES};
+pub use health::{Health, HealthTracker};
 pub use planner::{frontier, FleetCell, FleetFrontier, RatePoint};
 pub use report::{FleetReport, ReplicaStat};
 
-use crate::coordinator::engine::{CancelOutcome, Engine};
+use crate::coordinator::engine::{CancelOutcome, Engine, Rejection};
 use crate::coordinator::metrics::Histogram;
-use crate::coordinator::request::GenResponse;
-use crate::coordinator::trace::{Trace, TraceEventKind};
+use crate::coordinator::request::{GenRequest, GenResponse, SloClass};
+use crate::coordinator::trace::{Trace, TraceEvent, TraceEventKind};
 use crate::{Error, Result};
+use failover::Deferred;
 use report::{fold, FNV_BASIS};
+use std::collections::BTreeMap;
+
+/// One in-flight hedge: the duplicate-submitted replica pair and, once
+/// either copy completes, the winner.
+#[derive(Debug, Clone, Copy)]
+struct Hedge {
+    primary: usize,
+    secondary: usize,
+    winner: Option<usize>,
+}
+
+/// Mutable replay state threaded through one [`Fleet::replay`] run.
+struct Replay {
+    keep: bool,
+    kept: Vec<GenResponse>,
+    digest: u64,
+    latency: Histogram,
+    served: u64,
+    cancelled: u64,
+    routed: Vec<usize>,
+    rejected: Vec<Rejection>,
+    ledger: FaultLedger,
+    /// Unresolved + resolved hedges by request id.
+    hedges: BTreeMap<u64, Hedge>,
+    /// Parked retries, sorted by (due, id).
+    deferred: Vec<Deferred>,
+    /// Per-failure outstanding migrated ids: recovery time is measured
+    /// when the last one lands (submits, re-defers to a final verdict,
+    /// or is rejected).
+    migrating: Vec<(f64, std::collections::BTreeSet<u64>)>,
+}
+
+impl Replay {
+    fn new(n: usize, keep: bool) -> Replay {
+        Replay {
+            keep,
+            kept: Vec::new(),
+            digest: FNV_BASIS,
+            latency: Histogram::new(),
+            served: 0,
+            cancelled: 0,
+            routed: vec![0; n],
+            rejected: Vec::new(),
+            ledger: FaultLedger::default(),
+            hedges: BTreeMap::new(),
+            deferred: Vec::new(),
+            migrating: Vec::new(),
+        }
+    }
+
+    /// A migrated id reached a final per-submission verdict at `now`
+    /// (admitted or rejected); when it was a failure's last outstanding
+    /// orphan, close that failure's recovery clock.
+    fn note_landed(&mut self, id: u64, now: f64) {
+        for (at, outstanding) in &mut self.migrating {
+            if outstanding.remove(&id) && outstanding.is_empty() {
+                self.ledger.recovery.push((now - *at).max(0.0));
+            }
+        }
+        self.migrating.retain(|(_, o)| !o.is_empty());
+    }
+
+    /// Park a retry, keeping the schedule sorted by (due, id).
+    fn defer(&mut self, d: Deferred) {
+        let pos = self.deferred.partition_point(|x| {
+            x.due.total_cmp(&d.due).then(x.req.id.cmp(&d.req.id)) != std::cmp::Ordering::Greater
+        });
+        self.deferred.insert(pos, d);
+    }
+}
 
 /// N independent replica engines behind one dispatcher.
 ///
 /// Replicas share nothing: each engine owns its queue, batcher, plan
 /// cache and session cache, exactly as N separate `Pipeline`s would —
 /// that is what makes Data Parallel capacity scale linearly. The fleet
-/// only adds the routing decision and the aggregate report.
+/// adds the routing decision, the health/failover machinery, and the
+/// aggregate report.
 pub struct Fleet<'a> {
     engines: Vec<Engine<'a>>,
     dispatcher: Dispatcher,
+    health: HealthTracker,
+    hedging: bool,
 }
 
 impl<'a> Fleet<'a> {
     /// A fleet over `engines` (one per replica) dispatching under
-    /// `policy`. Fails on an empty replica list.
+    /// `policy`, every replica healthy, hedging enabled. Fails on an
+    /// empty replica list.
     pub fn new(engines: Vec<Engine<'a>>, policy: DispatchPolicy) -> Result<Fleet<'a>> {
         if engines.is_empty() {
             return Err(Error::config("a fleet needs at least one replica engine"));
         }
-        Ok(Fleet { engines, dispatcher: Dispatcher::new(policy) })
+        let health = HealthTracker::new(engines.len());
+        Ok(Fleet { engines, dispatcher: Dispatcher::new(policy), health, hedging: true })
+    }
+
+    /// Enable/disable hedged dispatch for interactive-tier requests
+    /// (default on). With a single replica hedging never triggers — the
+    /// hedge pick needs a second routable replica.
+    pub fn set_hedging(&mut self, enabled: bool) {
+        self.hedging = enabled;
+    }
+
+    /// Is hedged interactive dispatch enabled?
+    pub fn hedging(&self) -> bool {
+        self.hedging
     }
 
     /// Number of replicas.
@@ -70,6 +188,11 @@ impl<'a> Fleet<'a> {
     /// The replica engines, indexed like the dispatcher's views.
     pub fn engines(&self) -> &[Engine<'a>] {
         &self.engines
+    }
+
+    /// Current health of replica `i`.
+    pub fn replica_health(&self, i: usize) -> Health {
+        self.health.state(i)
     }
 
     /// The dispatch policy this fleet routes under.
@@ -83,8 +206,8 @@ impl<'a> Fleet<'a> {
     /// [`Fleet::replay_collect`] when the responses themselves matter.
     ///
     /// Replay on a *fresh* fleet is deterministic (equal digests across
-    /// runs); reusing a fleet continues its clocks and cumulative
-    /// metrics.
+    /// runs); reusing a fleet continues its clocks, health states and
+    /// cumulative metrics.
     pub fn replay(&mut self, trace: &Trace) -> Result<FleetReport> {
         Ok(self.replay_impl(trace, false)?.0)
     }
@@ -105,81 +228,64 @@ impl<'a> Fleet<'a> {
         let events = trace.events();
         let mut next_event = 0;
         let n = self.engines.len();
-        let mut routed = vec![0usize; n];
-        let mut rejected = Vec::new();
-        let mut latency = Histogram::new();
-        let mut digest = FNV_BASIS;
-        let mut served: u64 = 0;
-        let mut kept = Vec::new();
-        let mut record = |replica: usize, resp: GenResponse| {
-            fold(&mut digest, replica as u64);
-            fold(&mut digest, resp.id);
-            fold(&mut digest, resp.latency.to_bits());
-            fold(&mut digest, resp.model_seconds.to_bits());
-            fold(&mut digest, resp.comm_bytes as u64);
-            latency.observe(resp.latency);
-            served += 1;
-            if keep {
-                kept.push(resp);
-            }
-        };
+        let mut st = Replay::new(n, keep);
 
         for req in reqs {
             let t = req.arrival;
             // fire every mid-trace event scheduled strictly before this
-            // arrival (strict, so a cancel stamped at its target's own
-            // arrival fires after the submission): cluster mutations hit
-            // all replicas (the fleet shares the physical cluster),
-            // cancels find whichever replica holds the target — a
-            // cancelled request never reaches the digest
+            // arrival (strict: the unified tie-break rule — arrivals
+            // first), then every retry due by now
             while next_event < events.len() && events[next_event].at < t {
-                self.apply_event(events[next_event].kind);
+                let ev = events[next_event];
                 next_event += 1;
+                self.apply_trace_event(ev, &mut st)?;
             }
-            // run every replica forward to the arrival instant: busy
-            // replicas tick (possibly overshooting t, exactly like
+            self.flush_retries(t, &mut st)?;
+            // run every live replica forward to the arrival instant:
+            // busy replicas tick (possibly overshooting t, exactly like
             // serve_trace), idle replicas jump their clock
-            for (i, engine) in self.engines.iter_mut().enumerate() {
-                while engine.pending() > 0 && engine.virtual_now() < t {
-                    for resp in engine.tick()? {
-                        record(i, resp);
-                    }
+            for i in 0..n {
+                self.run_replica_to(i, t, &mut st)?;
+            }
+            self.route_and_submit(req.clone(), t, 0, true, &mut st)?;
+        }
+        // tail: interleave the remaining events and parked retries in
+        // fire order (each runs the replicas it touches forward itself),
+        // then drain every live replica to empty
+        loop {
+            let ev_at = events.get(next_event).map(|e| e.at);
+            let retry_at = st.deferred.first().map(|d| d.due);
+            match (ev_at, retry_at) {
+                (None, None) => break,
+                (Some(ea), ra) if ra.map_or(true, |r| ea <= r) => {
+                    let ev = events[next_event];
+                    next_event += 1;
+                    self.apply_trace_event(ev, &mut st)?;
                 }
-                engine.advance_to(t);
-            }
-            let views: Vec<ReplicaView> = self
-                .engines
-                .iter()
-                .map(|e| ReplicaView { pending: e.pending(), busy_until: e.virtual_now() })
-                .collect();
-            let k = self.dispatcher.pick(&views);
-            routed[k] += 1;
-            if let Err(rej) = self.engines[k].submit(req.clone()) {
-                rejected.push(rej);
+                (_, Some(ra)) => self.flush_retries(ra, &mut st)?,
             }
         }
-        // events scheduled past the last arrival fire before the drain
-        while next_event < events.len() {
-            self.apply_event(events[next_event].kind);
-            next_event += 1;
-        }
-        // drain: every replica runs to empty
-        for (i, engine) in self.engines.iter_mut().enumerate() {
-            while engine.pending() > 0 {
-                for resp in engine.tick()? {
-                    record(i, resp);
-                }
+        loop {
+            for i in 0..n {
+                self.drain_replica(i, &mut st)?;
+            }
+            // a drain can strand nothing, but a rejected drain-time
+            // retry may have re-deferred — keep going until the retry
+            // schedule is empty (tries cap at MAX_RETRIES, so this
+            // terminates)
+            match st.deferred.first().map(|d| d.due) {
+                Some(due) => self.flush_retries(due, &mut st)?,
+                None => break,
             }
         }
-        drop(record);
-        for rej in &rejected {
-            fold(&mut digest, rej.id);
+        for rej in &st.rejected {
+            fold(&mut st.digest, rej.id);
         }
 
         let replicas: Vec<ReplicaStat> = self
             .engines
             .iter()
-            .zip(&routed)
+            .zip(&st.routed)
             .map(|(e, &routed)| ReplicaStat {
                 routed,
                 horizon: e.horizon(),
@@ -190,32 +296,301 @@ impl<'a> Fleet<'a> {
         let report = FleetReport {
             policy: self.dispatcher.policy().label(),
             submitted: reqs.len(),
-            served,
-            rejected,
+            served: st.served,
+            cancelled: st.cancelled,
+            rejected: st.rejected,
             makespan,
-            latency,
+            latency: st.latency,
             replicas,
-            digest,
+            digest: st.digest,
+            faults: st.ledger,
         };
-        Ok((report, kept))
+        Ok((report, st.kept))
     }
 
-    /// Fire one mid-trace event against the fleet: cancels probe the
-    /// replicas until one holds the target (at most one can — requests
-    /// are dispatched to exactly one replica); every other event mutates
-    /// each replica's carved cluster, so all of them re-plan.
-    fn apply_event(&mut self, kind: TraceEventKind) {
-        if let TraceEventKind::Cancel(id) = kind {
-            for e in &mut self.engines {
-                if e.cancel(id) != CancelOutcome::NotFound {
-                    return;
+    /// Record completions from replica `i`: hedge winners dedup (the
+    /// first copy to complete wins, the duplicate is reaped via
+    /// two-phase cancel on the losing replica), everything else folds
+    /// into the digest/latency/served exactly as before.
+    fn absorb(&mut self, replica: usize, resps: Vec<GenResponse>, st: &mut Replay) {
+        for resp in resps {
+            let mut reap: Option<usize> = None;
+            if let Some(h) = st.hedges.get_mut(&resp.id) {
+                if h.winner.is_some() {
+                    // the losing copy completed before the reap landed
+                    // (same-tick finish): drop it, the winner was counted
+                    continue;
                 }
+                h.winner = Some(replica);
+                if replica == h.secondary {
+                    st.ledger.hedges_won += 1;
+                } else {
+                    st.ledger.hedges_lost += 1;
+                }
+                reap = Some(if replica == h.primary { h.secondary } else { h.primary });
             }
-        } else {
-            for e in &mut self.engines {
-                e.apply_cluster_event(kind);
+            fold(&mut st.digest, replica as u64);
+            fold(&mut st.digest, resp.id);
+            fold(&mut st.digest, resp.latency.to_bits());
+            fold(&mut st.digest, resp.model_seconds.to_bits());
+            fold(&mut st.digest, resp.comm_bytes as u64);
+            st.latency.observe(resp.latency);
+            st.served += 1;
+            let id = resp.id;
+            if st.keep {
+                st.kept.push(resp);
+            }
+            if let Some(loser) = reap {
+                // NotFound is fine: the duplicate may have completed in
+                // the same tick (dropped by the winner check above)
+                self.engines[loser].cancel(id);
             }
         }
+    }
+
+    /// Run replica `i` forward to virtual time `t` (tick while busy,
+    /// then jump the idle clock). Failed replicas stay frozen at their
+    /// crash instant.
+    fn run_replica_to(&mut self, i: usize, t: f64, st: &mut Replay) -> Result<()> {
+        if self.health.failed(i) {
+            return Ok(());
+        }
+        while self.engines[i].pending() > 0 && self.engines[i].virtual_now() < t {
+            let resps = self.engines[i].tick()?;
+            self.absorb(i, resps, st);
+        }
+        self.engines[i].advance_to(t);
+        Ok(())
+    }
+
+    /// Run replica `i` to empty (the end-of-trace drain).
+    fn drain_replica(&mut self, i: usize, st: &mut Replay) -> Result<()> {
+        if self.health.failed(i) {
+            return Ok(());
+        }
+        while self.engines[i].pending() > 0 {
+            let resps = self.engines[i].tick()?;
+            self.absorb(i, resps, st);
+        }
+        Ok(())
+    }
+
+    /// Snapshot the dispatcher's view of every replica: load, clock,
+    /// health, decode backlog, and SLO deadline pressure.
+    fn views(&self) -> Vec<ReplicaView> {
+        self.engines
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let deadline = e.min_pending_deadline();
+                ReplicaView {
+                    pending: e.pending(),
+                    busy_until: e.virtual_now(),
+                    health: self.health.state(i),
+                    backlog: e.stage_backlog(),
+                    pressure: if deadline.is_finite() {
+                        e.virtual_now() - deadline
+                    } else {
+                        f64::NEG_INFINITY
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// Route one request through the dispatcher and submit it at virtual
+    /// time `now`. A rejection parks the request for a deterministic
+    /// backoff retry until the attempt budget (`MAX_RETRIES`) is spent;
+    /// `hedge` additionally duplicates interactive-tier submissions to
+    /// the second-best replica (fresh arrivals only — retries and
+    /// migrations never hedge).
+    fn route_and_submit(
+        &mut self,
+        req: GenRequest,
+        now: f64,
+        tries: u32,
+        hedge: bool,
+        st: &mut Replay,
+    ) -> Result<()> {
+        let views = self.views();
+        let Some(k) = self.dispatcher.pick(&views) else {
+            st.note_landed(req.id, now);
+            st.rejected.push(Rejection {
+                id: req.id,
+                reason: "no routable replica (all failed or draining)".into(),
+            });
+            return Ok(());
+        };
+        st.routed[k] += 1;
+        let id = req.id;
+        let slo = req.slo;
+        match self.engines[k].submit(req.clone()) {
+            Ok(()) => {
+                st.note_landed(id, now);
+                if hedge && self.hedging && slo == SloClass::Interactive {
+                    if let Some(j) = self.dispatcher.pick_hedge(&views, k) {
+                        if self.engines[j].submit(req).is_ok() {
+                            st.routed[j] += 1;
+                            st.ledger.hedges += 1;
+                            st.hedges
+                                .insert(id, Hedge { primary: k, secondary: j, winner: None });
+                        }
+                    }
+                }
+            }
+            Err(rej) => {
+                if tries >= MAX_RETRIES {
+                    st.ledger.retries_exhausted += 1;
+                    st.note_landed(id, now);
+                    st.rejected.push(rej);
+                } else {
+                    st.ledger.retries += 1;
+                    st.defer(Deferred { due: now + backoff(tries), tries: tries + 1, req });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-dispatch every parked retry due by `t`, in (due, id) order.
+    /// Each retry first runs the fleet to its due instant so admission
+    /// sees current queues.
+    fn flush_retries(&mut self, t: f64, st: &mut Replay) -> Result<()> {
+        while st.deferred.first().is_some_and(|d| d.due <= t) {
+            let d = st.deferred.remove(0);
+            for i in 0..self.engines.len() {
+                self.run_replica_to(i, d.due, st)?;
+            }
+            self.route_and_submit(d.req, d.due, d.tries, false, st)?;
+        }
+        Ok(())
+    }
+
+    /// Fire one mid-trace event against the fleet.
+    ///
+    /// * `Cancel` probes every replica (a hedged request holds a copy on
+    ///   two) and counts at most one fleet-level cancellation.
+    /// * Replica-targeted events resolve their target modulo the fleet
+    ///   size, run that replica forward to the fire instant, and drive
+    ///   the health machine — `ReplicaFail` additionally checkpoints and
+    ///   migrates (see [`Fleet::fail_replica`]).
+    /// * Untargeted cluster mutations hit every replica's carved cluster
+    ///   instantly (the pre-fault semantics), so all of them re-plan.
+    fn apply_trace_event(&mut self, ev: TraceEvent, st: &mut Replay) -> Result<()> {
+        if let TraceEventKind::Cancel(id) = ev.kind {
+            let resolved_hedge = st.hedges.get(&id).map(|h| h.winner.is_some()).unwrap_or(false);
+            let mut hit = false;
+            for e in &mut self.engines {
+                if e.cancel(id) != CancelOutcome::NotFound {
+                    hit = true;
+                }
+            }
+            if hit && !resolved_hedge {
+                st.cancelled += 1;
+            }
+            st.hedges.remove(&id);
+            return Ok(());
+        }
+        let target = ev.replica.map(|r| r % self.engines.len());
+        match (ev.kind, target) {
+            (TraceEventKind::ReplicaFail, Some(i)) => self.fail_replica(i, ev.at, st)?,
+            (TraceEventKind::ReplicaDrain, Some(i)) => {
+                self.run_replica_to(i, ev.at, st)?;
+                self.health.drain(i);
+            }
+            (TraceEventKind::ReplicaRecover, Some(i)) => {
+                self.run_replica_to(i, ev.at, st)?;
+                if self.health.failed(i) {
+                    // the crashed replica's clock froze at the crash;
+                    // it re-enters service at the recovery instant
+                    self.engines[i].advance_to(ev.at);
+                }
+                self.health.recover(i, ev.at);
+            }
+            (TraceEventKind::Straggler(f), Some(i)) => {
+                self.run_replica_to(i, ev.at, st)?;
+                self.engines[i].apply_cluster_event(TraceEventKind::Straggler(f));
+                self.health.note_slowdown(i, f);
+            }
+            (kind, Some(i)) => {
+                // a targeted RankFail/NodeShrink/NodeGrow mutates one
+                // replica's carve only
+                self.run_replica_to(i, ev.at, st)?;
+                self.engines[i].apply_cluster_event(kind);
+            }
+            (
+                TraceEventKind::ReplicaFail
+                | TraceEventKind::ReplicaDrain
+                | TraceEventKind::ReplicaRecover,
+                None,
+            ) => {
+                // replica-lifecycle kinds without a target: documented
+                // no-op (nothing to fail)
+            }
+            (kind, None) => {
+                for e in &mut self.engines {
+                    e.apply_cluster_event(kind);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Replica `i` crashes at virtual time `at`: checkpoint it there,
+    /// mark it failed, evacuate its backlog and re-route every orphan to
+    /// the survivors with progress credited. Unresolved hedge copies
+    /// whose twin lives on a surviving replica simply collapse to that
+    /// copy; resolved (already-served) stale copies are dropped.
+    fn fail_replica(&mut self, i: usize, at: f64, st: &mut Replay) -> Result<()> {
+        if self.health.failed(i) {
+            return Ok(());
+        }
+        let (resps, _credited) = self.engines[i].run_to_checkpoint(at)?;
+        self.absorb(i, resps, st);
+        self.health.fail(i, at);
+        st.ledger.failovers += 1;
+        // survivors run forward to the crash instant so migration routes
+        // against their queues as of `at`, not a stale earlier snapshot
+        for j in 0..self.engines.len() {
+            if j != i {
+                self.run_replica_to(j, at, st)?;
+            }
+        }
+        let orphans = self.engines[i].drain_pending();
+        let mut to_migrate = Vec::new();
+        for req in orphans {
+            if let Some(h) = st.hedges.get(&req.id).copied() {
+                if h.winner.is_some() {
+                    // already served by the winner: drop the stale copy
+                    continue;
+                }
+                let twin = if h.primary == i { h.secondary } else { h.primary };
+                if twin != i && !self.health.failed(twin) {
+                    // the race is void, the surviving copy just becomes
+                    // the request — no migration needed
+                    st.hedges.remove(&req.id);
+                    continue;
+                }
+                st.hedges.remove(&req.id);
+            }
+            to_migrate.push(req);
+        }
+        let mut outstanding = std::collections::BTreeSet::new();
+        for req in &to_migrate {
+            st.ledger.migrated += 1;
+            st.ledger.steps_credited += req.steps_done.min(req.steps) as u64;
+            outstanding.insert(req.id);
+        }
+        if outstanding.is_empty() {
+            // nothing to migrate: the failure recovers instantly
+            st.ledger.recovery.push(0.0);
+        } else {
+            st.migrating.push((at, outstanding));
+        }
+        for req in to_migrate {
+            self.route_and_submit(req, at, 0, false, st)?;
+        }
+        Ok(())
     }
 }
 
@@ -251,6 +626,7 @@ mod tests {
         assert!((r.imbalance() - 1.0).abs() < 1e-12);
         assert!(r.makespan > 0.0);
         assert_eq!(r.latency.count, r.served);
+        assert!(!r.faults.any(), "a healthy replay leaves an empty fault ledger");
     }
 
     #[test]
@@ -272,19 +648,18 @@ mod tests {
 
     #[test]
     fn cancelled_requests_never_reach_the_digest() {
-        use crate::coordinator::trace::TraceEvent;
         let rt = Runtime::simulated();
         let base = trace(12);
         let victim = base.requests().iter().find(|r| r.id == 5).unwrap();
-        let with_cancel = base.clone().with_events(vec![TraceEvent {
-            at: victim.arrival,
-            kind: TraceEventKind::Cancel(5),
-        }]);
+        let with_cancel = base
+            .clone()
+            .with_events(vec![TraceEvent::new(victim.arrival, TraceEventKind::Cancel(5))]);
         let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::RoundRobin).unwrap();
         let (report, responses) = fleet.replay_collect(&with_cancel).unwrap();
         assert!(responses.iter().all(|r| r.id != 5), "cancelled request must never be served");
         let cancelled: u64 = report.replicas.iter().map(|r| r.metrics.cancelled()).sum();
         assert_eq!(cancelled, 1);
+        assert_eq!(report.cancelled, 1, "the fleet ledger counts the cancel once");
         assert_eq!(report.served + cancelled + report.rejected.len() as u64, 12);
         // the digest of the cancelled replay differs from the plain one
         // (one fewer response folded in), but replays deterministically
@@ -298,10 +673,9 @@ mod tests {
     fn cluster_events_hit_every_replica() {
         let rt = Runtime::simulated();
         let t = trace(8);
-        let shaken = t.clone().with_events(vec![TraceEvent {
-            at: 0.5 * t.last_arrival(),
-            kind: TraceEventKind::RankFail,
-        }]);
+        let shaken = t
+            .clone()
+            .with_events(vec![TraceEvent::new(0.5 * t.last_arrival(), TraceEventKind::RankFail)]);
         let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::RoundRobin).unwrap();
         fleet.replay(&shaken).unwrap();
         for e in fleet.engines() {
@@ -319,5 +693,51 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), responses.len(), "each request answered once");
+    }
+
+    #[test]
+    fn a_replica_kill_migrates_the_backlog_and_serves_everyone() {
+        let rt = Runtime::simulated();
+        let t = trace(16);
+        let killed = t.clone().with_events(vec![TraceEvent::on_replica(
+            0.5 * t.last_arrival(),
+            TraceEventKind::ReplicaFail,
+            1,
+        )]);
+        let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::RoundRobin).unwrap();
+        let r = fleet.replay(&killed).unwrap();
+        assert_eq!(fleet.replica_health(1), Health::Failed);
+        assert_eq!(r.faults.failovers, 1);
+        assert_eq!(
+            r.served + r.cancelled + r.rejected.len() as u64,
+            16,
+            "conservation must hold across the failure"
+        );
+        assert_eq!(r.faults.steps_redone, 0, "checkpoint-resume never redoes credited work");
+        assert_eq!(r.faults.recovery.len(), 1, "one failure, one recovery measurement");
+        // the survivor froze nothing: replica 0 served the whole backlog
+        assert!(r.replicas[0].metrics.served > r.replicas[1].metrics.served);
+    }
+
+    #[test]
+    fn draining_a_replica_stops_new_routing_but_finishes_its_backlog() {
+        let rt = Runtime::simulated();
+        let t = trace(16);
+        let drained = t.clone().with_events(vec![TraceEvent::on_replica(
+            0.25 * t.last_arrival(),
+            TraceEventKind::ReplicaDrain,
+            0,
+        )]);
+        let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::JoinShortestQueue).unwrap();
+        let r = fleet.replay(&drained).unwrap();
+        assert_eq!(fleet.replica_health(0), Health::Draining);
+        assert_eq!(r.served + r.rejected.len() as u64, 16, "nothing is lost in a drain");
+        // replica 0 still served what it held before the drain
+        assert_eq!(
+            r.replicas[0].metrics.served + r.replicas[1].metrics.served,
+            r.served,
+            "both replicas' ledgers add up"
+        );
+        assert!(r.replicas[1].routed > r.replicas[0].routed, "post-drain arrivals all go to 1");
     }
 }

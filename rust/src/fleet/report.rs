@@ -9,6 +9,7 @@
 
 use crate::coordinator::engine::Rejection;
 use crate::coordinator::metrics::{Histogram, Metrics};
+use crate::fleet::failover::FaultLedger;
 
 /// FNV-1a offset basis (same constants as `plan_cache::fingerprint`).
 pub(crate) const FNV_BASIS: u64 = 0xCBF2_9CE4_8422_2325;
@@ -60,7 +61,13 @@ pub struct FleetReport {
     pub submitted: usize,
     /// Requests served to completion across all replicas.
     pub served: u64,
-    /// Every admission refusal, in arrival order.
+    /// Requests cancelled by trace events (queued or mid-flight) — the
+    /// third leg of the conservation invariant
+    /// `served + cancelled + rejected == offered`.
+    pub cancelled: u64,
+    /// Every admission refusal, in arrival order (post-retry: a request
+    /// appears here only after its retry budget ran out, or when no
+    /// replica was routable).
     pub rejected: Vec<Rejection>,
     /// Fleet makespan: the latest replica clock after draining.
     pub makespan: f64,
@@ -71,6 +78,9 @@ pub struct FleetReport {
     /// FNV-1a fold of every (replica, response) and rejection — equal
     /// digests mean bit-identical replays (see module docs).
     pub digest: u64,
+    /// Everything the fault-tolerance layer did: failovers, migrations,
+    /// step credits, retries, hedges, recovery times.
+    pub faults: FaultLedger,
 }
 
 impl FleetReport {
@@ -104,13 +114,14 @@ impl FleetReport {
     /// table).
     pub fn summary(&self) -> String {
         format!(
-            "fleet[{}] x{}: submitted={} served={} rejected={} | makespan {:.3}s virtual, \
-             {:.2} img/s | latency p50/p95/p99 {:.3}/{:.3}/{:.3}s | imbalance {:.3} | \
-             digest {:016x}",
+            "fleet[{}] x{}: submitted={} served={} cancelled={} rejected={} | \
+             makespan {:.3}s virtual, {:.2} img/s | latency p50/p95/p99 \
+             {:.3}/{:.3}/{:.3}s | imbalance {:.3} | digest {:016x}",
             self.policy,
             self.replicas.len(),
             self.submitted,
             self.served,
+            self.cancelled,
             self.rejected.len(),
             self.makespan,
             self.throughput(),
@@ -148,11 +159,13 @@ mod tests {
             policy: "round-robin".into(),
             submitted: 4,
             served: 4,
+            cancelled: 0,
             rejected: vec![],
             makespan: 10.0,
             latency: Histogram::new(),
             replicas: vec![stat(3, 3), stat(1, 1)],
             digest: 0,
+            faults: FaultLedger::default(),
         };
         // max 3, mean 2 -> 1.5
         assert!((r.imbalance() - 1.5).abs() < 1e-12);
@@ -171,14 +184,17 @@ mod tests {
             policy: "join-shortest-queue".into(),
             submitted: 2,
             served: 2,
+            cancelled: 1,
             rejected: vec![],
             makespan: 4.0,
             latency,
             replicas: vec![stat(1, 1), stat(1, 1)],
             digest: 0xDEAD,
+            faults: FaultLedger::default(),
         };
         let s = r.summary();
         assert!(s.contains("fleet[join-shortest-queue] x2"), "{s}");
+        assert!(s.contains("cancelled=1"), "{s}");
         assert!(s.contains("0.50 img/s"), "{s}");
         assert!(s.contains("digest 000000000000dead"), "{s}");
         assert_eq!(r.table().lines().count(), 2);

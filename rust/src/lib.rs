@@ -59,6 +59,6 @@ pub mod vae;
 
 pub use coordinator::{Fidelity, Plan, Planner, Rejection, RoutePolicy, Trace};
 pub use error::{Error, Result};
-pub use fleet::{DispatchPolicy, Fleet, FleetFrontier, FleetReport};
+pub use fleet::{DispatchPolicy, FaultLedger, Fleet, FleetFrontier, FleetReport, Health};
 pub use perf::simulator::Timeline;
 pub use pipeline::{ParallelPolicy, Pipeline, PipelineBuilder, ServeReport};

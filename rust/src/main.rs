@@ -67,11 +67,22 @@ commands:
             --rate 2.0 --steps 2 --px 256 [--model tiny-adaln]
             [--policy rr|jsq|po2 (default: jsq)] [--seed 0]
             [--max-batch 4 --capacity 64]
+            [--scenario replica-kill|rolling-drain|
+             cascading-stragglers|... (any catalog name)]
+            [--kill-replica i@t,...] [--no-hedge]
             (Data Parallel serving: carve the cluster into N replica
              engines behind a dispatcher and replay a seeded Poisson
              trace in virtual time; prints the aggregate latency
              percentiles, the per-replica table, dispatcher imbalance
-             and the determinism digest)
+             and the determinism digest. --scenario swaps in a seeded
+             adversarial trace — the fleet-scale variants schedule
+             replica kills, rolling drains and cascading stragglers;
+             --kill-replica injects extra replica failures at virtual
+             times, exercising checkpoint-resume failover (migrated
+             requests resume with completed steps credited, and the
+             fault ledger prints under the summary); --no-hedge turns
+             off interactive-tier hedged dispatch for an overhead
+             control run)
   fleet     --frontier --model pixart --cluster l40x16 --px 2048
             [--rates 0.05,0.2,0.4,0.6]
             (sweep replica count x intra-replica hybrid, pricing
@@ -287,8 +298,33 @@ fn parse_cancellations(s: &str) -> xdit::Result<Vec<TraceEvent>> {
             .trim()
             .parse()
             .map_err(|_| xdit::Error::config(format!("bad fire time in --cancel '{tok}'")))?;
-        events.push(TraceEvent { at, kind: TraceEventKind::Cancel(id) });
+        events.push(TraceEvent::new(at, TraceEventKind::Cancel(id)));
     }
+    Ok(events)
+}
+
+/// `--kill-replica i@t,i@t`: replica-failure events at virtual time `t`
+/// for replica index `i`, merged into the fleet trace's event schedule.
+fn parse_kill_replicas(s: &str) -> xdit::Result<Vec<TraceEvent>> {
+    let mut events = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let (idx, at) = tok.split_once('@').ok_or_else(|| {
+            xdit::Error::config(format!("bad --kill-replica entry '{tok}' (expected i@t)"))
+        })?;
+        let idx: usize = idx.trim().parse().map_err(|_| {
+            xdit::Error::config(format!("bad replica index in --kill-replica '{tok}'"))
+        })?;
+        let at: f64 = at.trim().parse().map_err(|_| {
+            xdit::Error::config(format!("bad fire time in --kill-replica '{tok}'"))
+        })?;
+        events.push(TraceEvent::on_replica(at, TraceEventKind::ReplicaFail, idx));
+    }
+    // keep the merged schedule sorted: the replay fires events in order
+    events.sort_by(|a, b| a.at.total_cmp(&b.at));
     Ok(events)
 }
 
@@ -412,19 +448,45 @@ fn fleet_cmd(args: &Args) -> xdit::Result<()> {
         .world(gpus)
         .replicas(args.usize_or("replicas", 2)?)
         .dispatcher(policy)
+        .hedging(!args.bool("no-hedge"))
         .max_batch(args.usize_or("max-batch", 4)?)
         .queue_capacity(args.usize_or("capacity", 64)?)
         .build()?;
 
-    let trace = Trace::poisson(seed, n, rate)
-        .steps(args.usize_or("steps", 2)?)
-        .variants(&[variant])
-        .resolutions(&[args.usize_or("px", 256)?])
-        .build();
+    let trace = if args.has("scenario") {
+        let name = args.str_or("scenario", "replica-kill");
+        let scenario = Scenario::by_name(name).ok_or_else(|| {
+            let names: Vec<&str> = Scenario::ALL.iter().map(|s| s.name()).collect();
+            xdit::Error::config(format!(
+                "unknown scenario '{name}' (available: {})",
+                names.join(", ")
+            ))
+        })?;
+        println!("scenario {} — {}", scenario.name(), scenario.describe());
+        scenario.trace(seed, n)
+    } else {
+        Trace::poisson(seed, n, rate)
+            .steps(args.usize_or("steps", 2)?)
+            .variants(&[variant])
+            .resolutions(&[args.usize_or("px", 256)?])
+            .build()
+    };
+    let trace = match parse_kill_replicas(args.str_or("kill-replica", ""))? {
+        kills if kills.is_empty() => trace,
+        kills => {
+            let mut events = trace.events().to_vec();
+            events.extend(kills);
+            events.sort_by(|a, b| a.at.total_cmp(&b.at));
+            trace.with_events(events)
+        }
+    };
 
     let t0 = std::time::Instant::now();
     let report = pipe.serve_fleet(&trace)?;
     println!("{}", report.summary());
+    if report.faults.any() {
+        println!("{}", report.faults.summary());
+    }
     println!("{}", report.table());
     for rej in report.rejected.iter().take(8) {
         println!("  {rej}");

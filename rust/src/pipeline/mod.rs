@@ -192,6 +192,7 @@ pub struct PipelineBuilder<'a> {
     session_cache_capacity: usize,
     replicas: usize,
     dispatch: DispatchPolicy,
+    hedge: bool,
     stage_overlap: bool,
     vae_parallelism: Option<usize>,
     stage_queue_capacity: usize,
@@ -221,6 +222,7 @@ impl<'a> Default for PipelineBuilder<'a> {
             session_cache_capacity: DEFAULT_SESSION_CACHE_CAPACITY,
             replicas: 1,
             dispatch: DispatchPolicy::JoinShortestQueue,
+            hedge: true,
             stage_overlap: false,
             vae_parallelism: None,
             stage_queue_capacity: DEFAULT_STAGE_QUEUE_CAPACITY,
@@ -368,6 +370,15 @@ impl<'a> PipelineBuilder<'a> {
     /// join-shortest-queue).
     pub fn dispatcher(mut self, policy: DispatchPolicy) -> Self {
         self.dispatch = policy;
+        self
+    }
+
+    /// Hedge interactive-tier fleet requests (default on): fresh
+    /// interactive arrivals are duplicated onto the second-best routable
+    /// replica, the first completion wins and the loser is cancelled.
+    /// Turn off to measure the hedging overhead (`fleet --no-hedge`).
+    pub fn hedging(mut self, enabled: bool) -> Self {
+        self.hedge = enabled;
         self
     }
 
@@ -572,6 +583,7 @@ impl<'a> PipelineBuilder<'a> {
             policy: self.parallel,
             replicas: self.replicas,
             dispatch: self.dispatch,
+            hedge: self.hedge,
         })
     }
 }
@@ -584,6 +596,7 @@ pub struct Pipeline<'a> {
     policy: ParallelPolicy,
     replicas: usize,
     dispatch: DispatchPolicy,
+    hedge: bool,
 }
 
 impl<'a> Pipeline<'a> {
@@ -735,6 +748,7 @@ impl<'a> Pipeline<'a> {
     /// returned [`FleetReport`].
     pub fn serve_fleet(&self, trace: &Trace) -> Result<FleetReport> {
         let mut fleet = Fleet::new(self.replica_engines()?, self.dispatch)?;
+        fleet.set_hedging(self.hedge);
         fleet.replay(trace)
     }
 

@@ -196,6 +196,42 @@ fn slo_elasticity_is_documented() {
 }
 
 #[test]
+fn fault_tolerance_is_documented() {
+    // the fleet fault-tolerance layer must stay documented in both
+    // top-level docs: the DESIGN L5.75 chapter (health state machine,
+    // checkpoint-resume migration and its credit semantics, hedging,
+    // retry backoff, the conservation invariant) and the README fleet
+    // guide (the new flags, the fault ledger, the scenario names)
+    let design = read("DESIGN.md");
+    assert!(
+        design.contains("Fault tolerance (L5.75)"),
+        "DESIGN.md lost its 'Fault tolerance (L5.75)' chapter"
+    );
+    for needle in [
+        "fleet/health.rs",            // the health state machine module
+        "fleet/failover.rs",          // retry/backoff + the fault ledger
+        "run_to_checkpoint",          // the crash-instant checkpoint seam
+        "drain_pending",              // backlog evacuation
+        "steps_done",                 // the migration credit
+        "pick_hedge",                 // RNG-free hedge selection
+        "served + cancelled + rejected == offered", // conservation
+    ] {
+        assert!(design.contains(needle), "DESIGN.md fault chapter lost '{needle}'");
+    }
+    let readme = read("README.md");
+    assert!(
+        readme.contains("Fleet faults"),
+        "README.md lost its 'Fleet faults' section"
+    );
+    for needle in ["--kill-replica", "--no-hedge", "faults:"] {
+        assert!(readme.contains(needle), "README.md fleet-faults docs lost '{needle}'");
+    }
+    for name in ["replica-kill", "rolling-drain", "cascading-stragglers"] {
+        assert!(readme.contains(name), "README.md lost the '{name}' fleet scenario");
+    }
+}
+
+#[test]
 fn docs_exist_and_are_nonempty() {
     for doc in DOCS {
         let text = read(doc);

@@ -1,0 +1,281 @@
+//! Fault-tolerance tests — hermetic (`Runtime::simulated()`): the
+//! checkpoint-resume failover bit-identity guarantee, migration credit
+//! accounting, hedged dispatch (served exactly once, loser reaped),
+//! retry backoff determinism, interactive-tier starvation freedom under
+//! a single failure, and the conservation invariant
+//! `served + cancelled + rejected == offered` across every fleet-scale
+//! adversarial scenario, with and without hedging.
+
+use std::collections::HashSet;
+
+use xdit::config::hardware::l40_cluster;
+use xdit::config::model::{BlockVariant, ModelSpec};
+use xdit::coordinator::{Engine, GenRequest, Scenario, SloClass, Trace, TraceEvent, TraceEventKind};
+use xdit::fleet::{DispatchPolicy, Fleet, Health};
+use xdit::runtime::Runtime;
+
+/// `n` fresh single-node replica engines with the default serving knobs.
+fn engines(rt: &Runtime, n: usize) -> Vec<Engine<'_>> {
+    (0..n).map(|_| Engine::new(rt, l40_cluster(1), 4)).collect()
+}
+
+/// The denoise cost of one step of the default request shape (AdaLn at
+/// the default resolution) on the test replica — the unit the failover
+/// tests place their kill instants in.
+fn per_step(rt: &Runtime, steps: usize) -> f64 {
+    let oracle = Engine::new(rt, l40_cluster(1), 4);
+    let spec = ModelSpec::for_variant(BlockVariant::AdaLn).unwrap();
+    oracle.plan_for(&spec, 256, steps).per_step(steps)
+}
+
+#[test]
+fn conservation_holds_across_every_fleet_scenario_with_and_without_hedging() {
+    let rt = Runtime::simulated();
+    for scenario in Scenario::FLEET {
+        let trace = scenario.trace(0xFA17, 64);
+        let offered = trace.len() as u64;
+        for hedging in [true, false] {
+            let mut fleet =
+                Fleet::new(engines(&rt, 4), DispatchPolicy::JoinShortestQueue).unwrap();
+            fleet.set_hedging(hedging);
+            let report = fleet.replay(&trace).unwrap();
+            assert_eq!(
+                report.served + report.cancelled + report.rejected.len() as u64,
+                offered,
+                "{} (hedging {hedging}): served + cancelled + rejected == offered",
+                scenario.name()
+            );
+            if !hedging {
+                assert_eq!(report.faults.hedges, 0, "{}", scenario.name());
+            }
+            // replays are digest-stable under every fault schedule
+            let mut again =
+                Fleet::new(engines(&rt, 4), DispatchPolicy::JoinShortestQueue).unwrap();
+            again.set_hedging(hedging);
+            assert_eq!(
+                report.digest,
+                again.replay(&trace).unwrap().digest,
+                "{} (hedging {hedging}): fault replays must be deterministic",
+                scenario.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn failover_resumes_from_the_checkpoint_bit_identically() {
+    // six standard requests, all at t = 0, round-robin across two
+    // replicas: ids 0,2,4 land on replica 0 and ids 1,3,5 on replica 1.
+    // Replica 1 dies mid-batch at 13 step-costs in: its batch of three
+    // has credited 4 of 8 steps each, so failover migrates three
+    // requests carrying steps_done = 4 and the resumed outputs must be
+    // the bits the undisturbed fleet would have produced.
+    let rt = Runtime::simulated();
+    let steps = 8;
+    let p = per_step(&rt, steps);
+    assert!(p > 0.0 && p.is_finite());
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| GenRequest::new(i, "pinned").with_steps(steps).with_guidance(1.0))
+        .collect();
+    let undisturbed = Trace::new(reqs.clone());
+    let kill_at = 13.0 * p;
+    let disturbed = Trace::new(reqs)
+        .with_events(vec![TraceEvent::on_replica(kill_at, TraceEventKind::ReplicaFail, 1)]);
+
+    let run = |trace: &Trace| {
+        let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::RoundRobin).unwrap();
+        fleet.replay_collect(trace).unwrap()
+    };
+    let (base_report, base) = run(&undisturbed);
+    let (report, resps) = run(&disturbed);
+
+    assert_eq!(base_report.served, 6);
+    assert_eq!(report.served, 6, "failover loses nobody");
+    assert_eq!(report.faults.failovers, 1);
+    assert_eq!(report.faults.migrated, 3, "replica 1's whole batch migrates");
+    assert_eq!(
+        report.faults.steps_credited, 12,
+        "3 requests x 4 completed steps ride along as credit"
+    );
+    assert_eq!(report.faults.steps_redone, 0, "no completed step is ever re-run");
+    assert_eq!(report.faults.recovery.len(), 1);
+
+    // bit-identity: the migrated requests' latents equal the undisturbed
+    // fleet's, byte for byte — resumption changes where and when, never
+    // what
+    for id in 0..6u64 {
+        let a = base.iter().find(|r| r.id == id).unwrap();
+        let b = resps.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(a.latent, b.latent, "request {id}: latents must be bit-identical");
+    }
+    // the credit is also an accounting guarantee: a migrated request is
+    // charged only its remaining 4 of 8 steps on the surviving replica
+    for id in [1u64, 3, 5] {
+        let a = base.iter().find(|r| r.id == id).unwrap();
+        let b = resps.iter().find(|r| r.id == id).unwrap();
+        assert!(
+            (b.model_seconds - 0.5 * a.model_seconds).abs() < 1e-9 * a.model_seconds.max(1.0),
+            "request {id}: resumed charge {} must be half the full charge {}",
+            b.model_seconds,
+            a.model_seconds
+        );
+    }
+}
+
+#[test]
+fn hedged_interactive_requests_are_served_exactly_once() {
+    // two idle replicas, eight spaced interactive arrivals: every fresh
+    // arrival is hedged onto the second replica, one copy wins, the
+    // loser is reaped — nobody is served twice and nothing leaks into
+    // the cancelled ledger
+    let rt = Runtime::simulated();
+    let reqs: Vec<GenRequest> = (0..8)
+        .map(|i| {
+            GenRequest::new(i, "urgent")
+                .with_steps(1)
+                .with_guidance(1.0)
+                .with_arrival(i as f64 * 3.0)
+                .with_slo(SloClass::Interactive)
+        })
+        .collect();
+    let trace = Trace::new(reqs);
+    let mut fleet = Fleet::new(engines(&rt, 2), DispatchPolicy::JoinShortestQueue).unwrap();
+    assert!(fleet.hedging(), "hedging defaults on");
+    let (report, resps) = fleet.replay_collect(&trace).unwrap();
+
+    assert_eq!(report.faults.hedges, 8, "every fresh interactive arrival hedges");
+    assert_eq!(report.served, 8);
+    assert_eq!(report.cancelled, 0, "reaped hedge losers are not user-visible cancels");
+    let ids: HashSet<u64> = resps.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), 8, "each request is served exactly once");
+    assert_eq!(
+        report.faults.hedges_won + report.faults.hedges_lost,
+        8,
+        "every hedge resolves with a winner"
+    );
+    assert_eq!(report.served + report.cancelled + report.rejected.len() as u64, 8);
+
+    // a single-replica fleet has no second-best to hedge onto
+    let mut solo = Fleet::new(engines(&rt, 1), DispatchPolicy::JoinShortestQueue).unwrap();
+    let solo_report = solo.replay(&trace).unwrap();
+    assert_eq!(solo_report.faults.hedges, 0);
+    assert_eq!(solo_report.served, 8);
+}
+
+#[test]
+fn overloaded_submissions_retry_on_a_deterministic_backoff() {
+    // one replica with a 2-deep admission queue, six simultaneous
+    // arrivals: four bounce, defer on the virtual-time backoff, and all
+    // of them land on a later attempt — the retry ledger records the
+    // bounces and nobody exhausts the budget
+    let rt = Runtime::simulated();
+    let mk_fleet = || {
+        let mut e = Engine::new(&rt, l40_cluster(1), 4);
+        e.set_queue_capacity(2);
+        Fleet::new(vec![e], DispatchPolicy::RoundRobin).unwrap()
+    };
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| GenRequest::new(i, "thundering").with_steps(1).with_guidance(1.0))
+        .collect();
+    let trace = Trace::new(reqs);
+
+    let report = mk_fleet().replay(&trace).unwrap();
+    assert_eq!(report.served, 6, "every bounced request lands on retry");
+    assert!(report.rejected.is_empty());
+    assert!(
+        report.faults.retries >= 4,
+        "at least the four over-capacity arrivals must bounce (got {})",
+        report.faults.retries
+    );
+    assert_eq!(report.faults.retries_exhausted, 0);
+    assert_eq!(
+        report.digest,
+        mk_fleet().replay(&trace).unwrap().digest,
+        "the backoff schedule is part of the deterministic replay surface"
+    );
+}
+
+#[test]
+fn a_dead_fleet_rejects_instead_of_hanging() {
+    // the only replica dies with an empty backlog; a later arrival has
+    // nowhere to go and is rejected with the no-routable-replica reason
+    // — never queued forever, never a panic
+    let rt = Runtime::simulated();
+    let reqs = vec![
+        GenRequest::new(0, "served").with_steps(1).with_guidance(1.0),
+        GenRequest::new(1, "orphan").with_steps(1).with_guidance(1.0).with_arrival(10.0),
+    ];
+    let trace = Trace::new(reqs)
+        .with_events(vec![TraceEvent::on_replica(5.0, TraceEventKind::ReplicaFail, 0)]);
+    let mut fleet = Fleet::new(engines(&rt, 1), DispatchPolicy::JoinShortestQueue).unwrap();
+    let report = fleet.replay(&trace).unwrap();
+
+    assert_eq!(fleet.replica_health(0), Health::Failed);
+    assert_eq!(report.served, 1);
+    assert_eq!(report.rejected.len(), 1);
+    assert_eq!(report.rejected[0].id, 1);
+    assert!(
+        report.rejected[0].reason.contains("no routable replica"),
+        "{}",
+        report.rejected[0].reason
+    );
+    assert_eq!(report.served + report.cancelled + report.rejected.len() as u64, 2);
+    assert_eq!(report.faults.failovers, 1);
+    assert_eq!(report.faults.migrated, 0, "an empty backlog migrates nothing");
+    assert_eq!(report.faults.mean_recovery(), 0.0, "nothing waited on the dead replica");
+}
+
+#[test]
+fn interactive_tier_never_starves_under_a_single_replica_failure() {
+    // the replica-kill scenario drops a replica mid-herd; with three
+    // survivors every interactive request must still be served — with
+    // and without hedging
+    let rt = Runtime::simulated();
+    let trace = Scenario::ReplicaKill.trace(0xFA11, 64);
+    let interactive: HashSet<u64> = trace
+        .requests()
+        .iter()
+        .filter(|r| r.slo == SloClass::Interactive)
+        .map(|r| r.id)
+        .collect();
+    assert!(!interactive.is_empty(), "the herd must carry interactive work");
+
+    for hedging in [true, false] {
+        let mut fleet = Fleet::new(engines(&rt, 4), DispatchPolicy::JoinShortestQueue).unwrap();
+        fleet.set_hedging(hedging);
+        let (report, resps) = fleet.replay_collect(&trace).unwrap();
+        assert_eq!(report.faults.failovers, 1);
+        assert_eq!(fleet.replica_health(1), Health::Failed);
+        assert_eq!(report.served + report.cancelled + report.rejected.len() as u64, 64);
+        let served: HashSet<u64> = resps.iter().map(|r| r.id).collect();
+        assert_eq!(served.len(), report.served as usize, "nobody is served twice");
+        for id in &interactive {
+            assert!(
+                served.contains(id),
+                "interactive request {id} starved (hedging {hedging})"
+            );
+        }
+    }
+}
+
+#[test]
+fn a_drain_finishes_its_backlog_and_a_recover_restores_routing() {
+    // rolling-drain across a 4-replica fleet: drained replicas finish
+    // what they hold (nothing migrates, nothing is lost), recovered
+    // replicas take traffic again, and the fleet ends all-healthy
+    let rt = Runtime::simulated();
+    let trace = Scenario::RollingDrain.trace(0xD2A1, 64);
+    let mut fleet = Fleet::new(engines(&rt, 4), DispatchPolicy::JoinShortestQueue).unwrap();
+    let report = fleet.replay(&trace).unwrap();
+
+    assert_eq!(report.served + report.cancelled + report.rejected.len() as u64, 64);
+    assert_eq!(report.faults.failovers, 0, "a drain is not a failure");
+    assert_eq!(report.faults.migrated, 0, "drained backlogs finish in place");
+    for i in 0..4 {
+        assert_eq!(fleet.replica_health(i), Health::Healthy, "replica {i} recovered");
+    }
+    // routing kept flowing around the drains: replica 0 takes the early
+    // pending-ties, and its drain window pushes traffic onto replica 1
+    assert!(report.replicas[0].routed > 0, "{}", report.table());
+    assert!(report.replicas[1].routed > 0, "{}", report.table());
+}

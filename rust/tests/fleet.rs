@@ -1,13 +1,15 @@
 //! Fleet layer tests — hermetic (`Runtime::simulated()`): dispatcher
-//! properties over seeded random loads, the single-replica bit-identity
-//! equivalence with `Pipeline::serve_trace`, multi-replica replay
-//! determinism, and the frontier's replicas-vs-depth crossover on the
-//! paper's 2×8×L40 two-tier cluster.
+//! properties over seeded random loads (including health-aware routing),
+//! the single-replica bit-identity equivalence with
+//! `Pipeline::serve_trace`, multi-replica replay determinism, the
+//! fleet-side arrival/event tie-break, `#[ignore]`d 100k/1M replays the
+//! `fault-smoke` CI job runs in release mode, and the frontier's
+//! replicas-vs-depth crossover on the paper's 2×8×L40 two-tier cluster.
 
 use xdit::config::hardware::l40_cluster;
 use xdit::config::model::{BlockVariant, ModelSpec};
-use xdit::coordinator::{Engine, Trace};
-use xdit::fleet::{frontier, DispatchPolicy, Dispatcher, Fleet, ReplicaView};
+use xdit::coordinator::{Engine, GenRequest, Trace, TraceEvent, TraceEventKind};
+use xdit::fleet::{frontier, DispatchPolicy, Dispatcher, Fleet, Health, ReplicaView};
 use xdit::pipeline::Pipeline;
 use xdit::runtime::Runtime;
 use xdit::util::rng::Rng;
@@ -33,12 +35,9 @@ fn jsq_never_routes_to_a_strictly_longer_queue() {
     for _ in 0..500 {
         let n = 1 + rng.below(8);
         let views: Vec<ReplicaView> = (0..n)
-            .map(|_| ReplicaView {
-                pending: rng.below(16),
-                busy_until: rng.below(1000) as f64 / 10.0,
-            })
+            .map(|_| ReplicaView::healthy(rng.below(16), rng.below(1000) as f64 / 10.0))
             .collect();
-        let k = d.pick(&views);
+        let k = d.pick(&views).unwrap();
         let min = views.iter().map(|v| v.pending).min().unwrap();
         assert_eq!(
             views[k].pending, min,
@@ -52,11 +51,7 @@ fn jsq_never_routes_to_a_strictly_longer_queue() {
 fn power_of_two_is_deterministic_per_seed() {
     let mut rng = Rng::new(0x9A7);
     let loads: Vec<Vec<ReplicaView>> = (0..200)
-        .map(|_| {
-            (0..4)
-                .map(|_| ReplicaView { pending: rng.below(12), busy_until: 0.0 })
-                .collect()
-        })
+        .map(|_| (0..4).map(|_| ReplicaView::healthy(rng.below(12), 0.0)).collect())
         .collect();
     let run = |seed: u64| {
         let mut d = Dispatcher::new(DispatchPolicy::PowerOfTwo { seed });
@@ -71,11 +66,8 @@ fn power_of_two_is_deterministic_per_seed() {
     for _ in 0..200 {
         let a = rng.below(20);
         let b = rng.below(20);
-        let views = [
-            ReplicaView { pending: a, busy_until: 0.0 },
-            ReplicaView { pending: b, busy_until: 0.0 },
-        ];
-        let k = d.pick(&views);
+        let views = [ReplicaView::healthy(a, 0.0), ReplicaView::healthy(b, 0.0)];
+        let k = d.pick(&views).unwrap();
         assert!(views[k].pending <= a.min(b), "po2 with 2 replicas must pick the min");
     }
 }
@@ -150,6 +142,155 @@ fn two_replica_fleet_replays_deterministically() {
     ] {
         assert_eq!(run(policy), run(policy), "fleet replay must be deterministic ({policy:?})");
     }
+}
+
+#[test]
+fn health_aware_jsq_skips_unroutable_and_degrades_to_plain_jsq() {
+    // property, over seeded random view slices with random health: the
+    // pick is always routable, and on an all-healthy slice it is exactly
+    // the plain-JSQ argmin (health filtering is not a new policy)
+    let mut rng = Rng::new(0x4EA1);
+    let mut d = Dispatcher::new(DispatchPolicy::JoinShortestQueue);
+    for _ in 0..500 {
+        let n = 1 + rng.below(8);
+        let views: Vec<ReplicaView> = (0..n)
+            .map(|_| {
+                let health = match rng.below(5) {
+                    0 => Health::Failed,
+                    1 => Health::Draining,
+                    2 => Health::Degraded { slowdown: 0.5 },
+                    _ => Health::Healthy,
+                };
+                ReplicaView {
+                    pending: rng.below(16),
+                    busy_until: rng.below(1000) as f64 / 10.0,
+                    health,
+                    backlog: rng.below(4),
+                    pressure: rng.below(100) as f64 - 50.0,
+                }
+            })
+            .collect();
+        match d.pick(&views) {
+            Some(k) => assert!(
+                views[k].health.routable(),
+                "picked replica {k} in state {:?}",
+                views[k].health
+            ),
+            None => assert!(
+                views.iter().all(|v| !v.health.routable()),
+                "None is only legal when every replica is unroutable"
+            ),
+        }
+    }
+    // all-healthy slices: the health-aware pick IS the plain argmin
+    for _ in 0..200 {
+        let n = 1 + rng.below(8);
+        let views: Vec<ReplicaView> = (0..n)
+            .map(|_| ReplicaView::healthy(rng.below(16), rng.below(1000) as f64 / 10.0))
+            .collect();
+        let k = d.pick(&views).unwrap();
+        let min = views.iter().map(|v| v.pending).min().unwrap();
+        assert_eq!(views[k].pending, min, "all-healthy fleets degrade to plain JSQ");
+    }
+}
+
+#[test]
+fn fleet_cancel_tied_with_its_targets_arrival_lands() {
+    // the fleet replay honors the same tie-break rule as serve_trace
+    // (coordinator/trace.rs): at a shared timestamp the arrival is
+    // admitted first, then the event fires — so a cancel stamped at
+    // exactly the victim's arrival always finds it queued on whichever
+    // replica it was routed to
+    let run = || {
+        let rt = Runtime::simulated();
+        let mut reqs: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest::new(i, "kept").with_steps(1).with_guidance(1.0))
+            .collect();
+        reqs.push(
+            GenRequest::new(9, "victim").with_steps(2).with_guidance(1.0).with_arrival(0.5),
+        );
+        let trace = Trace::new(reqs)
+            .with_events(vec![TraceEvent::new(0.5, TraceEventKind::Cancel(9))]);
+        let engines = vec![
+            Engine::new(&rt, l40_cluster(1), 4),
+            Engine::new(&rt, l40_cluster(1), 4),
+        ];
+        let mut fleet = Fleet::new(engines, DispatchPolicy::RoundRobin).unwrap();
+        fleet.replay(&trace).unwrap()
+    };
+    let report = run();
+    assert_eq!(report.cancelled, 1, "a tied cancel must see its target queued");
+    assert_eq!(report.served, 4);
+    assert_eq!(
+        report.served + report.cancelled + report.rejected.len() as u64,
+        5,
+        "conservation: served + cancelled + rejected == offered"
+    );
+    // the tie-break is part of the deterministic replay surface
+    assert_eq!(report.digest, run().digest);
+}
+
+/// 4 fresh single-node replica engines (the shape the `#[ignore]`d
+/// replays and the fault tests use).
+fn quad(rt: &Runtime) -> Vec<Engine<'_>> {
+    (0..4).map(|_| Engine::new(rt, l40_cluster(1), 4)).collect()
+}
+
+#[test]
+#[ignore = "100k-request fleet replay with a mid-trace replica kill; the fault-smoke CI \
+            job runs it in release mode"]
+fn hundred_k_replay_with_a_mid_trace_kill_conserves_and_repeats() {
+    let base = Trace::poisson(0xACE5, 100_000, 2.0).steps(1).guidance(1.0).build();
+    let kill_at = 0.5 * base.requests().last().unwrap().arrival;
+    let trace = base
+        .with_events(vec![TraceEvent::on_replica(kill_at, TraceEventKind::ReplicaFail, 1)]);
+    let rt = Runtime::simulated();
+    let run = || {
+        let mut fleet = Fleet::new(quad(&rt), DispatchPolicy::JoinShortestQueue).unwrap();
+        let report = fleet.replay(&trace).unwrap();
+        (report, fleet.replica_health(1))
+    };
+    let (a, health) = run();
+    assert_eq!(
+        a.served + a.cancelled + a.rejected.len() as u64,
+        100_000,
+        "conservation across the kill"
+    );
+    assert_eq!(a.faults.failovers, 1);
+    assert_eq!(health, Health::Failed);
+    assert_eq!(a.faults.steps_redone, 0, "checkpoint-resume never re-runs completed steps");
+    let (b, _) = run();
+    assert_eq!(a.digest, b.digest, "fault replays are digest-stable");
+}
+
+#[test]
+#[ignore = "1M-request fleet replay; asserts digest stability and near-linear tick cost"]
+fn million_request_replay_is_digest_stable_with_linear_tick_cost() {
+    let rt = Runtime::simulated();
+    let ticks = |report: &xdit::FleetReport| -> u64 {
+        report.replicas.iter().map(|r| r.metrics.ticks).sum()
+    };
+    let run = |n: usize| {
+        let trace = Trace::poisson(0xACE5, n, 2.0).steps(1).guidance(1.0).build();
+        let mut fleet = Fleet::new(quad(&rt), DispatchPolicy::JoinShortestQueue).unwrap();
+        fleet.replay(&trace).unwrap()
+    };
+    let small = run(100_000);
+    let big = run(1_000_000);
+    assert_eq!(
+        big.served + big.cancelled + big.rejected.len() as u64,
+        1_000_000,
+        "conservation at the million scale"
+    );
+    // 10x the requests must cost ~10x the batches, not quadratic blowup
+    assert!(
+        ticks(&big) <= 12 * ticks(&small).max(1),
+        "tick cost must stay O(#groups): {} ticks at 1M vs {} at 100k",
+        ticks(&big),
+        ticks(&small)
+    );
+    let again = run(1_000_000);
+    assert_eq!(big.digest, again.digest, "the 1M replay is digest-stable");
 }
 
 #[test]

@@ -479,10 +479,10 @@ fn cancellation_is_counted_split_by_phase_and_never_reaches_the_report() {
             .collect();
         reqs.push(GenRequest::new(9, "victim").with_steps(2).with_guidance(1.0));
         Trace::new(reqs).with_events(vec![
-            TraceEvent { at: 0.0, kind: TraceEventKind::Cancel(2) },
-            TraceEvent { at: 1e-9, kind: TraceEventKind::Cancel(9) },
+            TraceEvent::new(0.0, TraceEventKind::Cancel(2)),
+            TraceEvent::new(1e-9, TraceEventKind::Cancel(9)),
             // unknown id: a no-op, never a panic or a phantom counter
-            TraceEvent { at: 0.2, kind: TraceEventKind::Cancel(77) },
+            TraceEvent::new(0.2, TraceEventKind::Cancel(77)),
         ])
     };
     let run = || {
@@ -538,9 +538,9 @@ fn mid_trace_cluster_mutations_invalidate_the_plan_cache_once_each() {
             })
             .collect();
         Trace::new(reqs).with_events(vec![
-            TraceEvent { at: 0.5e6, kind: TraceEventKind::Straggler(0.5) },
-            TraceEvent { at: 1.5e6, kind: TraceEventKind::RankFail },
-            TraceEvent { at: 2.5e6, kind: TraceEventKind::NodeShrink },
+            TraceEvent::new(0.5e6, TraceEventKind::Straggler(0.5)),
+            TraceEvent::new(1.5e6, TraceEventKind::RankFail),
+            TraceEvent::new(2.5e6, TraceEventKind::NodeShrink),
         ])
     };
     let rt = Runtime::simulated();
@@ -570,5 +570,58 @@ fn mid_trace_cluster_mutations_invalidate_the_plan_cache_once_each() {
     assert_eq!(
         last.parallel_config, expected,
         "post-mutation plan must fit the mutated topology"
+    );
+}
+
+#[test]
+fn same_timestamp_ties_land_arrivals_before_events() {
+    // the unified tie-break rule (coordinator/trace.rs module docs):
+    // at a shared timestamp the arrival is admitted first, then the
+    // event fires. A cancel stamped at exactly its target's arrival
+    // must therefore find the request queued — never miss it as
+    // not-yet-submitted — and a straggler stamped at an arrival must
+    // not slow down the batch that arrival joins (events fire strictly
+    // before the *next* tick's arrivals, `at < t`).
+    let arrival = 3.25;
+    let mk_trace = |events: Vec<TraceEvent>| {
+        let reqs = vec![
+            GenRequest::new(0, "early").with_steps(1).with_guidance(1.0),
+            GenRequest::new(1, "tied").with_steps(1).with_guidance(1.0).with_arrival(arrival),
+        ];
+        Trace::new(reqs).with_events(events)
+    };
+    let run = |events: Vec<TraceEvent>| {
+        let rt = Runtime::simulated();
+        let mut pipe = Pipeline::builder()
+            .runtime(&rt)
+            .cluster(l40_cluster(1))
+            .world(4)
+            .build()
+            .unwrap();
+        pipe.serve_trace(&mk_trace(events)).unwrap()
+    };
+
+    // cancel tied with the victim's arrival: arrival first, so the
+    // cancel always lands (queued, not a no-op on an unknown id)
+    let cancelled = run(vec![TraceEvent::new(arrival, TraceEventKind::Cancel(1))]);
+    assert_eq!(cancelled.cancelled(), 1, "a tied cancel must see its target queued");
+    assert!(cancelled.responses.iter().all(|r| r.id != 1));
+
+    // straggler tied with the arrival: the event fires after the
+    // arrival is admitted but before its batch executes on the next
+    // pass, so the served request is priced on the slowed cluster —
+    // and replaying twice agrees bit-exactly (the tie-break is part of
+    // the deterministic surface, not a float coincidence)
+    let slowed = run(vec![TraceEvent::new(arrival, TraceEventKind::Straggler(0.5))]);
+    assert_eq!(slowed.responses.len(), 2);
+    let slowed_again = run(vec![TraceEvent::new(arrival, TraceEventKind::Straggler(0.5))]);
+    assert_eq!(checksum(&slowed), checksum(&slowed_again));
+    let baseline = run(vec![]);
+    let pick = |r: &xdit::pipeline::ServeReport, id: u64| {
+        r.responses.iter().find(|x| x.id == id).unwrap().model_seconds
+    };
+    assert!(
+        pick(&slowed, 1) > pick(&baseline, 1),
+        "the tied straggler must price request 1's batch on the slowed cluster"
     );
 }
